@@ -1,0 +1,56 @@
+//! Compression sweep on one benchmark: quantizer × k grid (a single-
+//! benchmark slice of Table III / S4), printing Δperf and occupancy for
+//! HAC storage — the "which quantizer should I use?" decision table a
+//! downstream user needs.
+//!
+//!     cargo run --release --example compression_sweep [-- kiba]
+
+use std::path::PathBuf;
+
+use sham::harness::experiments::Ctx;
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::ModelKind;
+use sham::quant::Kind;
+
+fn main() -> anyhow::Result<()> {
+    let art = PathBuf::from("artifacts");
+    anyhow::ensure!(
+        art.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    let kind = std::env::args()
+        .nth(1)
+        .and_then(|s| ModelKind::parse(&s))
+        .unwrap_or(ModelKind::VggMnist);
+
+    let mut ctx = Ctx::new(art, 4)?;
+    let base = ctx.baseline(kind)?;
+    println!(
+        "benchmark {} — baseline {base}\n",
+        kind.name()
+    );
+    println!(
+        "{:<6} {:>4} {:>9} {:>9} {:>9}",
+        "method", "k", "perf", "Δperf", "ψ(hac)"
+    );
+    for qkind in Kind::ALL {
+        for k in [2usize, 16, 64, 256] {
+            let cfg = CompressionCfg {
+                fc_quant: Some((qkind, k)),
+                fc_format: FcFormat::Hac,
+                ..Default::default()
+            };
+            let (m, psi, _) = ctx.eval(kind, &cfg, 0xE0 + k as u64)?;
+            println!(
+                "{:<6} {:>4} {:>9.4} {:>+9.4} {:>9.4}",
+                format!("u{}", qkind.name().to_uppercase()),
+                k,
+                m.value(),
+                m.delta_vs(&base),
+                psi
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

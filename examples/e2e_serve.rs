@@ -1,0 +1,142 @@
+//! End-to-end driver (the repo's headline validation, recorded in
+//! EXPERIMENTS.md): load the trained VGG-mini, build three variants —
+//! dense baseline, compressed-without-retraining, and the build-time
+//! *fine-tuned* Pr90+uCWS32 variant — serve the full synthetic-MNIST
+//! test set through the batching TCP coordinator, and report accuracy,
+//! occupancy, throughput and latency percentiles per variant.
+//!
+//!     make artifacts && cargo run --release --example e2e_serve
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use sham::coordinator::server::request_from_test_set;
+use sham::coordinator::{tcp, Policy, Server, ServerConfig};
+use sham::io::{read_archive, TestSet};
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::env::var("SHAM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    anyhow::ensure!(
+        art.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let kind = ModelKind::VggMnist;
+    let params = kind.load_weights(&art)?;
+    let test = kind.load_test_set(&art)?;
+    let hlo = kind.features_hlo(&art, 32);
+
+    let mut server = Server::new(ServerConfig {
+        policy: Policy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(2),
+            queue_cap: 4096,
+        },
+        fc_threads: 1,
+    });
+
+    // 1) dense baseline
+    let baseline = CompressedModel::baseline(kind, &params)?;
+    println!("baseline       : psi_total=1.0000");
+    server.add_variant("baseline", baseline, hlo.clone())?;
+
+    // 2) compressed, no retraining (pure Rust-side pipeline)
+    let cfg = CompressionCfg {
+        fc_prune: Some(90.0),
+        fc_quant: Some((Kind::Cws, 32)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    let mut rng = Prng::seeded(7);
+    let compressed = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
+    println!(
+        "compressed     : psi_fc={:.4} psi_total={:.4} ({}x smaller FC block)",
+        compressed.psi_fc(),
+        compressed.psi_total(),
+        (1.0 / compressed.psi_fc()) as u32
+    );
+    server.add_variant("compressed", compressed, hlo.clone())?;
+
+    // 3) the fine-tuned artifact (paper's retraining pipeline, built by
+    //    `make artifacts`): already pruned+shared; store via Auto format.
+    let ft_path = art.join("weights/vgg_mnist_pr90_ucws32.wbin");
+    if ft_path.exists() {
+        let ft_params = read_archive(&ft_path)?;
+        let ft_cfg = CompressionCfg {
+            fc_format: FcFormat::Auto, // weights already pruned+quantized
+            ..Default::default()
+        };
+        let ft = CompressedModel::build(kind, &ft_params, &ft_cfg, &mut rng)?;
+        println!(
+            "fine-tuned     : psi_fc={:.4} psi_total={:.4}",
+            ft.psi_fc(),
+            ft.psi_total()
+        );
+        server.add_variant("finetuned", ft, hlo.clone())?;
+    }
+
+    // Serve over TCP; drive the whole test set through each variant.
+    let server = Arc::new(server);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let stop2 = stop.clone();
+    let tcp_thread = std::thread::spawn(move || {
+        tcp::serve("127.0.0.1:0", srv, stop2, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv()?.to_string();
+    println!("\nserving on {addr}; driving {} test examples/variant", test.len());
+
+    let TestSet::Cls { ref y, .. } = test else { anyhow::bail!("wrong set") };
+    for variant in server.variant_names() {
+        let n = test.len();
+        let clients = 8;
+        let start = Instant::now();
+        let correct = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let addr = addr.clone();
+                let variant = variant.clone();
+                let test = &test;
+                let correct = &correct;
+                scope.spawn(move || {
+                    let mut client = tcp::Client::connect(&addr).unwrap();
+                    for i in (c..n).step_by(clients) {
+                        let input = request_from_test_set(test, i).unwrap();
+                        let out = client.infer(&variant, &input).unwrap();
+                        let pred = out
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        let TestSet::Cls { y, .. } = test else { unreachable!() };
+                        if pred == y[i] as usize {
+                            correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let secs = start.elapsed().as_secs_f64();
+        let acc = correct.load(Ordering::Relaxed) as f64 / n as f64;
+        println!(
+            "{variant:<12} accuracy={acc:.4}  throughput={:.0} req/s  total={secs:.2}s",
+            n as f64 / secs
+        );
+    }
+    let _ = y;
+    println!("\nserver metrics: {}", server.metrics.render());
+    stop.store(true, Ordering::Relaxed);
+    tcp_thread.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Hybrid whole-network compression (the paper's Sect. V-K headline):
+//! conv layers quantized and stored as index maps, FC layers pruned +
+//! quantized and stored as HAC/sHAC — reporting whole-net occupancy and
+//! performance for one benchmark, plus the fine-tuned variant.
+//!
+//!     cargo run --release --example hybrid_full_net [-- davis]
+
+use std::path::PathBuf;
+
+use sham::harness::experiments::{s8_prune_grid, Ctx};
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::ModelKind;
+use sham::quant::Kind;
+
+fn main() -> anyhow::Result<()> {
+    let art = PathBuf::from("artifacts");
+    anyhow::ensure!(
+        art.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    let kind = std::env::args()
+        .nth(1)
+        .and_then(|s| ModelKind::parse(&s))
+        .unwrap_or(ModelKind::DtaDavis);
+
+    let mut ctx = Ctx::new(art, 4)?;
+    let base = ctx.baseline(kind)?;
+    println!("benchmark {} — baseline {base}", kind.name());
+    println!(
+        "\nhybrid grids: conv=uCWS(k) via index map, FC=Pr(p)+uCWS(k) via \
+         HAC/sHAC (auto)\n"
+    );
+    println!(
+        "{:>4} {:>4} {:>9} {:>+9} {:>10} {:>9}",
+        "k", "p", "perf", 0.0, "ψ_total", "reduction"
+    );
+    let mut best: Option<(f64, String)> = None;
+    for k in [32usize, 128] {
+        for &p in &s8_prune_grid(kind) {
+            let cfg = CompressionCfg {
+                conv_quant: Some((Kind::Cws, k)),
+                fc_prune: Some(p),
+                fc_quant: Some((Kind::Cws, k)),
+                fc_format: FcFormat::Auto,
+                ..Default::default()
+            };
+            let (m, _, psi) = ctx.eval(kind, &cfg, 0xFF + k as u64)?;
+            let delta = m.delta_vs(&base);
+            println!(
+                "{k:>4} {p:>4.0} {:>9.4} {delta:>+9.4} {psi:>10.4} {:>8.1}x",
+                m.value(),
+                1.0 / psi
+            );
+            // best = smallest psi not degrading the baseline materially
+            let ok = delta >= -0.005;
+            if ok && best.as_ref().map_or(true, |(b, _)| psi < *b) {
+                best = Some((psi, format!("k={k},p={p:.0}")));
+            }
+        }
+    }
+    match best {
+        Some((psi, cfg)) => println!(
+            "\nbest whole-net occupancy at ≈baseline quality: ψ={psi:.4} \
+             ({:.1}× smaller) at {cfg}",
+            1.0 / psi
+        ),
+        None => println!("\nno configuration matched the baseline within tolerance"),
+    }
+    Ok(())
+}

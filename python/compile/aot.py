@@ -1,0 +1,300 @@
+"""AOT compile path (`make artifacts`): train/cache the baseline models,
+export datasets + weights as `.wbin`, and lower the inference graphs to
+**HLO text** for the Rust PJRT runtime.
+
+HLO text — NOT serialized protos — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` crate binds) rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Everything here is cached: re-running is a no-op unless inputs changed
+or --force is passed. Python never runs on the request path — the Rust
+binary is self-contained once `artifacts/` exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from .wbin import read_wbin, write_wbin
+
+BATCHES = [1, 32]
+WS_HEAD_K = 64  # codebook size baked into the ws-head artifact shapes
+
+DATASETS = {
+    "mnist": ("vgg", 1),
+    "cifar": ("vgg", 3),
+    "kiba": ("dta", None),
+    "davis": ("dta", None),
+}
+
+TRAIN_EPOCHS = {"mnist": 6, "cifar": 10, "kiba": 8, "davis": 10}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_order(params: dict) -> list[str]:
+    return sorted(params.keys())
+
+
+def export_hlo(path: str, fn, specs: list, param_names: list[str]) -> None:
+    lowered = jax.jit(fn).lower(*specs)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(path.replace(".hlo.txt", ".params"), "w") as f:
+        f.write("\n".join(param_names) + "\n")
+
+
+def ensure_dataset(name: str, out_dir: str, force: bool) -> dict:
+    """Generate the dataset (deterministic) and export the test split."""
+    ds = data_mod.make_dataset(name)
+    path = os.path.join(out_dir, "data", f"{name}_test.wbin")
+    if force or not os.path.exists(path):
+        test = {k: v for k, v in ds.items() if k.endswith("_test")}
+        write_wbin(path, test)
+        print(f"  wrote {path}")
+    return ds
+
+
+def ensure_weights(name: str, ds: dict, out_dir: str, force: bool) -> dict:
+    model_kind, in_ch = DATASETS[name]
+    path = os.path.join(out_dir, "weights", f"{model_kind}_{name}.wbin")
+    if not force and os.path.exists(path):
+        return read_wbin(path)
+    print(f"  training {model_kind} on synth-{name} ...")
+    if model_kind == "vgg":
+        p = model_mod.init_vgg(seed=42, in_ch=in_ch)
+        p = model_mod.train_vgg(p, ds, epochs=TRAIN_EPOCHS[name])
+        acc = model_mod.accuracy(p, ds["x_test"], ds["y_test"])
+        print(f"  {name}: baseline accuracy {acc:.4f}")
+    else:
+        p = model_mod.init_dta(seed=42)
+        p = model_mod.train_dta(p, ds, epochs=TRAIN_EPOCHS[name])
+        mse = model_mod.dta_mse(p, ds["lig_test"], ds["prot_test"], ds["y_test"])
+        print(f"  {name}: baseline MSE {mse:.4f}")
+    write_wbin(path, p)
+    print(f"  wrote {path}")
+    return p
+
+
+def export_graphs(name: str, params: dict, out_dir: str, force: bool) -> None:
+    model_kind, in_ch = DATASETS[name]
+    hlo_dir = os.path.join(out_dir, "hlo")
+    order = _param_order(params)
+    # jax prunes unused parameters during lowering, so each graph must be
+    # exported with exactly the parameter subset it uses (the sidecar
+    # tells the Rust runtime what to pass, positionally).
+    fc_prefixes = tuple(
+        f"{n}." for n in (model_mod.VGG_FC if model_kind == "vgg" else model_mod.DTA_FC)
+    )
+    feat_order = [k for k in order if not k.startswith(fc_prefixes)]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def spec(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    param_specs = [spec(params[k].shape, jnp.asarray(params[k]).dtype) for k in order]
+    feat_specs = [
+        spec(params[k].shape, jnp.asarray(params[k]).dtype) for k in feat_order
+    ]
+
+    for b in BATCHES:
+        if model_kind == "vgg":
+            feat_path = os.path.join(hlo_dir, f"vgg_{name}_features_b{b}.hlo.txt")
+            full_path = os.path.join(hlo_dir, f"vgg_{name}_full_b{b}.hlo.txt")
+            if force or not os.path.exists(feat_path):
+                def feat_fn(x, *flat):
+                    p = dict(zip(feat_order, flat))
+                    return (model_mod.vgg_features(p, x),)
+
+                export_hlo(
+                    feat_path,
+                    feat_fn,
+                    [spec((b, 32, 32, in_ch))] + feat_specs,
+                    ["x"] + feat_order,
+                )
+                print(f"  wrote {feat_path}")
+            if force or not os.path.exists(full_path):
+                def full_fn(x, *flat):
+                    p = dict(zip(order, flat))
+                    return (model_mod.vgg_logits(p, x),)
+
+                export_hlo(
+                    full_path,
+                    full_fn,
+                    [spec((b, 32, 32, in_ch))] + param_specs,
+                    ["x"] + order,
+                )
+                print(f"  wrote {full_path}")
+        else:
+            feat_path = os.path.join(hlo_dir, f"dta_{name}_features_b{b}.hlo.txt")
+            full_path = os.path.join(hlo_dir, f"dta_{name}_full_b{b}.hlo.txt")
+            lig_spec = spec((b, data_mod.LIGAND_LEN), i32)
+            prot_spec = spec((b, data_mod.PROTEIN_LEN), i32)
+            if force or not os.path.exists(feat_path):
+                def feat_fn(lig, prot, *flat):
+                    p = dict(zip(feat_order, flat))
+                    return (model_mod.dta_features(p, lig, prot),)
+
+                export_hlo(
+                    feat_path,
+                    feat_fn,
+                    [lig_spec, prot_spec] + feat_specs,
+                    ["lig", "prot"] + feat_order,
+                )
+                print(f"  wrote {feat_path}")
+            if force or not os.path.exists(full_path):
+                def full_fn(lig, prot, *flat):
+                    p = dict(zip(order, flat))
+                    return (model_mod.dta_predict(p, lig, prot),)
+
+                export_hlo(
+                    full_path,
+                    full_fn,
+                    [lig_spec, prot_spec] + param_specs,
+                    ["lig", "prot"] + order,
+                )
+                print(f"  wrote {full_path}")
+
+
+def export_ws_head(out_dir: str, force: bool) -> None:
+    """The quantized-FC serve graph built on the L1 Pallas ws_matmul
+    kernel: inputs are features + per-layer index maps (int32), codebooks
+    (K=WS_HEAD_K) and biases — the weight matrices never exist."""
+    hlo_dir = os.path.join(out_dir, "hlo")
+    b = 32
+    path = os.path.join(hlo_dir, f"vgg_ws_head_b{b}_k{WS_HEAD_K}.hlo.txt")
+    if not force and os.path.exists(path):
+        return
+    f32, i32 = jnp.float32, jnp.int32
+
+    def spec(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    dims = [
+        (model_mod.VGG_FEATURE_DIM, 1024),
+        (1024, 1024),
+        (1024, model_mod.N_CLASSES),
+    ]
+    specs = [spec((b, model_mod.VGG_FEATURE_DIM))]
+    names = ["feat"]
+    for li, (nin, nout) in enumerate(dims, start=1):
+        specs += [spec((nin, nout), i32), spec((WS_HEAD_K,)), spec((nout,))]
+        names += [f"idx{li}", f"cb{li}", f"b{li}"]
+
+    def fn(feat, idx1, cb1, b1, idx2, cb2, b2, idx3, cb3, b3):
+        return (
+            model_mod.vgg_ws_head(
+                feat, idx1, cb1, b1, idx2, cb2, b2, idx3, cb3, b3
+            ),
+        )
+
+    export_hlo(path, fn, specs, names)
+    print(f"  wrote {path}")
+
+
+def export_finetuned(name: str, ds: dict, params: dict, out_dir: str, force: bool):
+    """The paper's retraining pipeline on the headline config: prune FC
+    at p*, masked-retrain, unified-CWS quantize (k=32), fine-tune the
+    shared codebook with the cumulative gradient, and export the result.
+    Powers Table II headline rows and the e2e serving example."""
+    from . import quant as quant_mod
+
+    model_kind, _ = DATASETS[name]
+    p_star = 90 if model_kind == "vgg" else 60
+    k = 32
+    path = os.path.join(
+        out_dir, "weights", f"{model_kind}_{name}_pr{p_star}_ucws{k}.wbin"
+    )
+    if not force and os.path.exists(path):
+        return
+    print(f"  fine-tuning {name}: Pr{p_star} → uCWS{k} ...")
+    fc = model_mod.VGG_FC if model_kind == "vgg" else model_mod.DTA_FC
+    p = dict(params)
+    mask = {}
+    for n_ in fc:
+        p[f"{n_}.w"] = quant_mod.prune_percentile(p[f"{n_}.w"], p_star)
+        mask[f"{n_}.w"] = (p[f"{n_}.w"] != 0).astype(np.float32)
+    train = model_mod.train_vgg if model_kind == "vgg" else model_mod.train_dta
+    p = train(p, ds, epochs=2, lr=3e-4, mask=mask, log=lambda s: None)
+    _, cb, asn = quant_mod.quantize_unified(p, list(fc), "cws", k)
+    p, _cb = model_mod.finetune_shared(
+        p, cb, asn, ds, model_kind, epochs=2, log=lambda s: None
+    )
+    if model_kind == "vgg":
+        metric = model_mod.accuracy(p, ds["x_test"], ds["y_test"])
+        print(f"  {name} Pr{p_star}+uCWS{k} fine-tuned accuracy: {metric:.4f}")
+    else:
+        metric = model_mod.dta_mse(
+            p, ds["lig_test"], ds["prot_test"], ds["y_test"]
+        )
+        print(f"  {name} Pr{p_star}+uCWS{k} fine-tuned MSE: {metric:.4f}")
+    write_wbin(path, p)
+    print(f"  wrote {path}")
+    return metric
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--datasets",
+        default="mnist,cifar,kiba,davis",
+        help="comma-separated subset to build",
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    for sub in ("data", "weights", "hlo"):
+        os.makedirs(os.path.join(out_dir, sub), exist_ok=True)
+
+    manifest = []
+    for name in args.datasets.split(","):
+        name = name.strip()
+        if name not in DATASETS:
+            print(f"unknown dataset {name}", file=sys.stderr)
+            sys.exit(2)
+        print(f"[{name}]")
+        ds = ensure_dataset(name, out_dir, args.force)
+        params = ensure_weights(name, ds, out_dir, args.force)
+        export_graphs(name, params, out_dir, args.force)
+        export_finetuned(name, ds, params, out_dir, args.force)
+        model_kind, _ = DATASETS[name]
+        if model_kind == "vgg":
+            metric = model_mod.accuracy(params, ds["x_test"], ds["y_test"])
+            manifest.append(f"{name}: model=vgg accuracy={metric:.4f}")
+        else:
+            metric = model_mod.dta_mse(
+                params, ds["lig_test"], ds["prot_test"], ds["y_test"]
+            )
+            manifest.append(f"{name}: model=dta mse={metric:.4f}")
+
+    export_ws_head(out_dir, args.force)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("artifacts complete:")
+    for line in manifest:
+        print(" ", line)
+
+
+if __name__ == "__main__":
+    main()

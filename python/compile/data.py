@@ -1,0 +1,199 @@
+"""Synthetic stand-ins for the paper's four benchmarks (DESIGN.md §2).
+
+The real MNIST / CIFAR-10 / KIBA / DAVIS datasets are not available in
+this environment (repro gate), so we generate learnable synthetic
+equivalents that exercise the exact same model code paths:
+
+- `synth_mnist`  — 32×32×1 procedural seven-segment-style digit glyphs
+  with affine jitter and noise; 10 balanced classes.
+- `synth_cifar`  — 32×32×3 class-conditioned oriented gratings with
+  color priors and texture noise; 10 balanced classes (harder than the
+  digits, mirroring CIFAR's relative difficulty).
+- `synth_kiba` / `synth_davis` — drug–target affinity regression:
+  random ligand (SMILES-like, alphabet 64) and protein (alphabet 25)
+  token sequences with a planted smooth bilinear interaction plus
+  heteroscedastic noise; DAVIS-mini is smaller and noisier than
+  KIBA-mini, as in the real pair.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Sequence geometry shared with model.py / the Rust side.
+LIGAND_LEN = 64
+PROTEIN_LEN = 128
+LIGAND_ALPHABET = 64
+PROTEIN_ALPHABET = 25
+
+# ---------------------------------------------------------------------------
+# classification: digits
+# ---------------------------------------------------------------------------
+
+# Seven-segment layout: segments a..g as (row slice, col slice) in a 20×12
+# glyph box; classic digit encodings.
+_SEGS = {
+    "a": (slice(0, 2), slice(1, 11)),
+    "b": (slice(1, 10), slice(10, 12)),
+    "c": (slice(10, 19), slice(10, 12)),
+    "d": (slice(18, 20), slice(1, 11)),
+    "e": (slice(10, 19), slice(0, 2)),
+    "f": (slice(1, 10), slice(0, 2)),
+    "g": (slice(9, 11), slice(1, 11)),
+}
+_DIGIT_SEGS = [
+    "abcdef", "bc", "abged", "abgcd", "fgbc",
+    "afgcd", "afgedc", "abc", "abcdefg", "abcfgd",
+]
+
+
+def _digit_glyph(d: int) -> np.ndarray:
+    g = np.zeros((20, 12), dtype=np.float32)
+    for s in _DIGIT_SEGS[d]:
+        g[_SEGS[s]] = 1.0
+    return g
+
+
+def synth_mnist(n: int, rng: np.random.Generator):
+    """n samples of (32,32,1) float32 in [0,1] + int labels 0..9."""
+    xs = np.zeros((n, 32, 32, 1), dtype=np.float32)
+    ys = rng.integers(0, 10, size=n).astype(np.int32)
+    for i in range(n):
+        glyph = _digit_glyph(int(ys[i]))
+        # random scale/translate into the 32x32 canvas
+        sy = rng.uniform(0.8, 1.3)
+        sx = rng.uniform(0.8, 1.3)
+        h, w = int(20 * sy), int(12 * sx)
+        h, w = min(h, 30), min(w, 30)
+        rows = np.clip((np.arange(h) / sy).astype(int), 0, 19)
+        cols = np.clip((np.arange(w) / sx).astype(int), 0, 11)
+        scaled = glyph[np.ix_(rows, cols)]
+        oy = rng.integers(1, 32 - h)
+        ox = rng.integers(1, 32 - w)
+        xs[i, oy : oy + h, ox : ox + w, 0] = scaled
+        # stroke intensity jitter + blur-ish noise
+        xs[i] *= rng.uniform(0.7, 1.0)
+        xs[i] += rng.normal(0.0, 0.08, size=(32, 32, 1)).astype(np.float32)
+    return np.clip(xs, 0.0, 1.0), ys
+
+
+# ---------------------------------------------------------------------------
+# classification: textures
+# ---------------------------------------------------------------------------
+
+def synth_cifar(n: int, rng: np.random.Generator):
+    """n samples of (32,32,3) float32 in [0,1] + int labels 0..9.
+
+    Class c has an oriented grating with angle θ_c, frequency f_c and a
+    color prior; phase, contrast, and additive texture noise vary per
+    sample, so the class signal is learnable but not trivial.
+    """
+    ys = rng.integers(0, 10, size=n).astype(np.int32)
+    xs = np.zeros((n, 32, 32, 3), dtype=np.float32)
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32) / 32.0
+    # fixed per-class parameters (deterministic — class identities)
+    cls_rng = np.random.default_rng(1234)
+    thetas = cls_rng.uniform(0, np.pi, size=10)
+    freqs = cls_rng.uniform(2.0, 6.0, size=10)
+    colors = cls_rng.uniform(0.2, 1.0, size=(10, 3)).astype(np.float32)
+    for i in range(n):
+        c = int(ys[i])
+        phase = rng.uniform(0, 2 * np.pi)
+        contrast = rng.uniform(0.25, 0.6)
+        # orientation/frequency jitter keeps classes overlapping
+        theta = thetas[c] + rng.normal(0, 0.15)
+        freq = freqs[c] * rng.uniform(0.85, 1.15)
+        u = np.cos(theta) * xx + np.sin(theta) * yy
+        grating = 0.5 + 0.5 * contrast * np.sin(2 * np.pi * freq * u + phase)
+        color = np.clip(
+            colors[c] + rng.normal(0, 0.15, size=3).astype(np.float32), 0, 1
+        )
+        base = grating[..., None] * color[None, None, :]
+        noise = rng.normal(0.0, 0.3, size=(32, 32, 3))
+        xs[i] = np.clip(base + noise, 0.0, 1.0).astype(np.float32)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# regression: drug–target affinity
+# ---------------------------------------------------------------------------
+
+def _planted_affinity(lig, prot, rng_plant: np.random.Generator):
+    """Smooth planted interaction: fixed random token embeddings, mean
+    pooled per sequence, scored by a low-rank bilinear form + tanh
+    nonlinearity."""
+    d = 8
+    e_l = rng_plant.normal(0, 1, size=(LIGAND_ALPHABET, d)).astype(np.float32)
+    e_p = rng_plant.normal(0, 1, size=(PROTEIN_ALPHABET, d)).astype(np.float32)
+    a = rng_plant.normal(0, 1.0 / np.sqrt(d), size=(d, d)).astype(np.float32)
+    vl = e_l[lig].mean(axis=1)  # (n, d)
+    vp = e_p[prot].mean(axis=1)  # (n, d)
+    raw = np.einsum("nd,de,ne->n", vl, a, vp)
+    return np.tanh(2.0 * raw) + 0.3 * raw
+
+
+def _synth_dta(n: int, rng: np.random.Generator, noise: float, plant_seed: int):
+    lig = rng.integers(0, LIGAND_ALPHABET, size=(n, LIGAND_LEN)).astype(np.int32)
+    prot = rng.integers(0, PROTEIN_ALPHABET, size=(n, PROTEIN_LEN)).astype(
+        np.int32
+    )
+    plant = np.random.default_rng(plant_seed)
+    y = _planted_affinity(lig, prot, plant)
+    y = y + rng.normal(0, noise, size=n)
+    return lig, prot, y.astype(np.float32)
+
+
+def synth_kiba(n: int, rng: np.random.Generator):
+    """KIBA-mini: larger, lower-noise affinity set."""
+    return _synth_dta(n, rng, noise=0.10, plant_seed=7)
+
+
+def synth_davis(n: int, rng: np.random.Generator):
+    """DAVIS-mini: smaller and noisier than KIBA-mini (as in the real
+    pair, where DAVIS has far fewer ligands)."""
+    return _synth_dta(n, rng, noise=0.25, plant_seed=11)
+
+
+# ---------------------------------------------------------------------------
+# dataset registry used by aot.py
+# ---------------------------------------------------------------------------
+
+SIZES = {
+    # (train, test) — small enough for CPU build-time training, large
+    # enough that accuracy/MSE deltas under compression are meaningful.
+    "mnist": (6000, 1500),
+    "cifar": (6000, 1500),
+    "kiba": (6000, 1500),
+    "davis": (2500, 800),
+}
+
+
+def make_dataset(name: str, seed: int = 0):
+    """Returns dict of numpy arrays: classification {x_train, y_train,
+    x_test, y_test}; regression {lig_*, prot_*, y_*}."""
+    n_train, n_test = SIZES[name]
+    # NB: deterministic per-name offset — python's hash() is randomized
+    # per process and must never seed data generation.
+    name_seed = sum(name.encode()) * 131
+    rng = np.random.default_rng(seed + name_seed)
+    if name == "mnist":
+        xtr, ytr = synth_mnist(n_train, rng)
+        xte, yte = synth_mnist(n_test, rng)
+        return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}
+    if name == "cifar":
+        xtr, ytr = synth_cifar(n_train, rng)
+        xte, yte = synth_cifar(n_test, rng)
+        return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}
+    if name in ("kiba", "davis"):
+        fn = synth_kiba if name == "kiba" else synth_davis
+        ltr, ptr, ytr = fn(n_train, rng)
+        lte, pte, yte = fn(n_test, rng)
+        return {
+            "lig_train": ltr,
+            "prot_train": ptr,
+            "y_train": ytr,
+            "lig_test": lte,
+            "prot_test": pte,
+            "y_test": yte,
+        }
+    raise KeyError(name)

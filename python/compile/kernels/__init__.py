@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time): the paper's compute hot-spots,
+validated against the pure-jnp oracles in ref.py."""
+
+from .conv2d import conv2d
+from .ref import conv2d_ref, ws_matmul_ref
+from .ws_matmul import ws_matmul
+
+__all__ = ["conv2d", "conv2d_ref", "ws_matmul", "ws_matmul_ref"]

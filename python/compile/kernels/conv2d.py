@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: direct NHWC conv2d (stride 1, SAME padding).
+
+The conv front-end's hot loop, written as an output-row-parallel Pallas
+kernel: grid over output rows; each program computes one padded output
+row for the whole batch, accumulating the KH×KW taps with MXU-shaped
+`einsum`s over the channel axes. The input stays a full-array block
+(rows are re-read by adjacent programs — on TPU this is the overlapping
+halo the BlockSpec pipeline would stream; in interpret mode it is a
+plain load).
+
+interpret=True throughout — see ws_matmul.py for the rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(kh: int, kw: int, w_out: int):
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        j = pl.program_id(0)  # output row
+        acc = None
+        for dh in range(kh):
+            # padded input row j+dh: (B, W+kw-1, Cin)
+            row = x_ref[:, j + dh]
+            for dw in range(kw):
+                seg = row[:, dw : dw + w_out]  # (B, W, Cin)
+                tap = jnp.einsum(
+                    "bwc,cd->bwd",
+                    seg,
+                    w_ref[dh, dw],
+                    preferred_element_type=jnp.float32,
+                )
+                acc = tap if acc is None else acc + tap
+        o_ref[0] = acc + b_ref[...][None, None, :]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=())
+def conv2d(x, w, b):
+    """SAME conv2d via the Pallas kernel.
+
+    x: (B, H, W, Cin) f32; w: (KH, KW, Cin, Cout); b: (Cout,)
+    → (B, H, W, Cout) f32.
+    """
+    B, H, W, Cin = x.shape
+    KH, KW, Cin2, Cout = w.shape
+    assert Cin == Cin2, f"channel mismatch {x.shape} vs {w.shape}"
+    ph, pw = KH // 2, KW // 2
+    xp = jnp.pad(x, ((0, 0), (ph, KH - 1 - ph), (pw, KW - 1 - pw), (0, 0)))
+
+    kernel = _make_kernel(KH, KW, W)
+    # out laid out (H, B, W, Cout): one grid program per output row, then
+    # transposed back — keeps the out BlockSpec a contiguous leading-dim
+    # block.
+    out = pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, B, W, Cout), lambda j: (j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, B, W, Cout), jnp.float32),
+        interpret=True,
+    )(xp, w, b)
+    return jnp.transpose(out, (1, 0, 2, 3))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (pytest + hypothesis sweep kernels against these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ws_matmul_ref(x, idx, cb):
+    """Weight-shared dense layer without materializing W in the caller:
+    y = x @ cb[idx].
+
+    x:   (B, N) float32
+    idx: (N, M) integer index map Pi into the codebook
+    cb:  (K,)   float32 codebook r
+    """
+    w = jnp.take(cb, idx, axis=0)  # (N, M)
+    return x @ w
+
+
+def conv2d_ref(x, w, b):
+    """SAME-padded stride-1 NHWC conv2d with HWIO weights + bias."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: weight-shared (index-map) dense layer.
+
+This is the paper's quantized-inference hot-spot rethought for TPU
+(DESIGN.md §Hardware-Adaptation): the weight matrix never exists in
+HBM — only the int index map Π (1–4 bytes/entry) is streamed tile by
+tile into VMEM, the tiny codebook r (k ≤ 256 floats) is VMEM-resident
+for the whole kernel, and dequantization is a VMEM gather fused ahead
+of the MXU matmul:
+
+    y[b, m] = Σ_n x[b, n] · r[Π[n, m]]
+
+BlockSpec expresses the HBM↔VMEM schedule: grid (B/bb, M/bm, N/bn) with
+the N axis innermost so each output tile accumulates across the
+reduction without leaving VMEM.
+
+Pallas runs `interpret=True` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and real-TPU performance is *estimated* from the VMEM
+footprint (see EXPERIMENTS.md §Perf-L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes: multiples of the MXU's 128-lane geometry.
+BLOCK_B = 128
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref):
+    """One (bb × bm) output tile; accumulates over the N grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # VMEM gather: dequantize the Π tile against the resident codebook,
+    # then feed the MXU. f32 here; bf16 halves VMEM on real TPUs.
+    w = cb_ref[idx_ref[...]]  # (bn, bm)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` not exceeding `pref` (prefers the MXU
+    tile when the dimension allows it)."""
+    if dim == 0:
+        return 1
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m", "block_n"))
+def ws_matmul(
+    x,
+    idx,
+    cb,
+    *,
+    block_b: int = BLOCK_B,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+):
+    """y = x @ cb[idx] via the Pallas kernel.
+
+    x: (B, N) f32; idx: (N, M) int32; cb: (K,) f32 → (B, M) f32.
+    Shapes need not be tile-aligned; the wrapper clamps block sizes to
+    divisors of each dimension.
+    """
+    B, N = x.shape
+    N2, M = idx.shape
+    assert N == N2, f"x/idx mismatch: {x.shape} vs {idx.shape}"
+    (K,) = cb.shape
+    if B == 0 or M == 0 or N == 0:
+        return jnp.zeros((B, M), jnp.float32)
+
+    bb = _pick_block(B, block_b)
+    bm = _pick_block(M, block_m)
+    bn = _pick_block(N, block_n)
+    grid = (B // bb, M // bm, N // bn)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, j)),
+            pl.BlockSpec((K,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        interpret=True,
+    )(x, idx.astype(jnp.int32), cb)
+
+
+def vmem_footprint_bytes(
+    block_b: int = BLOCK_B,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    k: int = 256,
+    idx_bytes: int = 4,
+) -> int:
+    """Estimated VMEM working set of one grid step — the L1 §Perf
+    metric reported in EXPERIMENTS.md (must stay well under the ~16 MiB
+    of a TPU core's VMEM, with headroom for double buffering)."""
+    x_tile = block_b * block_n * 4
+    idx_tile = block_n * block_m * idx_bytes
+    w_tile = block_n * block_m * 4  # dequantized gather result
+    out_tile = block_b * block_m * 4
+    codebook = k * 4
+    # ×2 for double buffering of the streamed operands.
+    return 2 * (x_tile + idx_tile) + w_tile + out_tile + codebook

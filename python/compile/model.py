@@ -1,0 +1,420 @@
+"""L2 — the two benchmark models in pure JAX (no flax/optax offline):
+
+- **VGG-mini** (stand-in for VGG19, DESIGN.md §2): five 3×3 conv layers
+  in VGG-style blocks + the paper's FC head shape 512→1024→1024→10.
+- **DeepDTA-mini**: per-branch embedding + three conv1d layers + global
+  max pool, merged into the paper's exact FC dims 1024→1024→512→1.
+
+Includes init, forward passes (with a `use_pallas` switch that routes
+the conv/WS layers through the L1 kernels for the AOT serve graphs),
+Adam training, and the paper's two fine-tuning modes:
+
+- pruning fine-tune: gradients masked so only surviving weights move
+  (Sect. III-B);
+- weight-sharing fine-tune: quantized layers are parameterized by their
+  codebook; the chain rule through `W = cb[Π]` yields exactly the
+  paper's cumulative gradient ∂L/∂c_l = Σ_{ij} ∂L/∂w_ij·1(π_ij = l)
+  (Sect. III-C1).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+
+N_CLASSES = 10
+VGG_FEATURE_DIM = 512
+DTA_FEATURE_DIM = 96
+
+# FC layer names (the matrices the compression experiments target).
+VGG_FC = ["fc1", "fc2", "fc3"]
+DTA_FC = ["fc1", "fc2", "fc3", "out"]
+# Conv tensor names (weight tensors for conv-layer compression).
+VGG_CONV = ["c1a", "c1b", "c2a", "c2b", "c3a"]
+DTA_CONV = ["lig_c1", "lig_c2", "lig_c3", "prot_c1", "prot_c2", "prot_c3"]
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def _he(rng, shape, fan_in):
+    return (rng.normal(size=shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def init_vgg(seed: int = 0, in_ch: int = 1) -> dict[str, np.ndarray]:
+    """VGG-mini parameters. Conv weights are HWIO."""
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+
+    def conv(name, cin, cout):
+        p[f"{name}.w"] = _he(rng, (3, 3, cin, cout), 9 * cin)
+        p[f"{name}.b"] = np.zeros(cout, np.float32)
+
+    conv("c1a", in_ch, 16)
+    conv("c1b", 16, 16)
+    conv("c2a", 16, 32)
+    conv("c2b", 32, 32)
+    conv("c3a", 32, 32)
+
+    def dense(name, nin, nout):
+        p[f"{name}.w"] = _he(rng, (nin, nout), nin)
+        p[f"{name}.b"] = np.zeros(nout, np.float32)
+
+    dense("fc1", VGG_FEATURE_DIM, 1024)
+    dense("fc2", 1024, 1024)
+    dense("fc3", 1024, N_CLASSES)
+    return p
+
+
+def init_dta(seed: int = 0) -> dict[str, np.ndarray]:
+    """DeepDTA-mini parameters. Conv1d weights are WIO (width, in, out)."""
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    emb_dim = 32
+    p["lig_embed"] = _he(rng, (data_mod.LIGAND_ALPHABET, emb_dim), emb_dim)
+    p["prot_embed"] = _he(rng, (data_mod.PROTEIN_ALPHABET, emb_dim), emb_dim)
+
+    def conv1(name, cin, cout, k=5):
+        p[f"{name}.w"] = _he(rng, (k, cin, cout), k * cin)
+        p[f"{name}.b"] = np.zeros(cout, np.float32)
+
+    for branch in ("lig", "prot"):
+        conv1(f"{branch}_c1", emb_dim, 16)
+        conv1(f"{branch}_c2", 16, 32)
+        conv1(f"{branch}_c3", 32, 48)
+
+    def dense(name, nin, nout):
+        p[f"{name}.w"] = _he(rng, (nin, nout), nin)
+        p[f"{name}.b"] = np.zeros(nout, np.float32)
+
+    dense("fc1", DTA_FEATURE_DIM, 1024)
+    dense("fc2", 1024, 1024)
+    dense("fc3", 1024, 512)
+    dense("out", 512, 1)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _conv2d(x, w, b, use_pallas=False):
+    if use_pallas:
+        from .kernels import conv2d as pallas_conv2d
+
+        return pallas_conv2d(x, w, b)
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b[None, None, None, :]
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def vgg_features(p, x, use_pallas: bool = False):
+    """Conv front-end: (B, 32, 32, C) → (B, 512)."""
+    h = jax.nn.relu(_conv2d(x, p["c1a.w"], p["c1a.b"], use_pallas))
+    h = jax.nn.relu(_conv2d(h, p["c1b.w"], p["c1b.b"], use_pallas))
+    h = _pool2(h)
+    h = jax.nn.relu(_conv2d(h, p["c2a.w"], p["c2a.b"], use_pallas))
+    h = jax.nn.relu(_conv2d(h, p["c2b.w"], p["c2b.b"], use_pallas))
+    h = _pool2(h)
+    h = jax.nn.relu(_conv2d(h, p["c3a.w"], p["c3a.b"], use_pallas))
+    h = _pool2(h)
+    return h.reshape(h.shape[0], -1)  # (B, 4*4*32 = 512)
+
+
+def vgg_logits(p, x, use_pallas: bool = False):
+    f = vgg_features(p, x, use_pallas)
+    h = jax.nn.relu(f @ p["fc1.w"] + p["fc1.b"])
+    h = jax.nn.relu(h @ p["fc2.w"] + p["fc2.b"])
+    return h @ p["fc3.w"] + p["fc3.b"]
+
+
+def _conv1d(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return y + b[None, None, :]
+
+
+def _dta_branch(p, tokens, branch):
+    h = jnp.take(p[f"{branch}_embed"], tokens, axis=0)  # (B, L, emb)
+    h = jax.nn.relu(_conv1d(h, p[f"{branch}_c1.w"], p[f"{branch}_c1.b"]))
+    h = jax.nn.relu(_conv1d(h, p[f"{branch}_c2.w"], p[f"{branch}_c2.b"]))
+    h = jax.nn.relu(_conv1d(h, p[f"{branch}_c3.w"], p[f"{branch}_c3.b"]))
+    return jnp.max(h, axis=1)  # global max pool → (B, 48)
+
+
+def dta_features(p, lig, prot):
+    """Two-branch encoder: token ids → (B, 96)."""
+    return jnp.concatenate(
+        [_dta_branch(p, lig, "lig"), _dta_branch(p, prot, "prot")], axis=1
+    )
+
+
+def dta_predict(p, lig, prot):
+    f = dta_features(p, lig, prot)
+    h = jax.nn.relu(f @ p["fc1.w"] + p["fc1.b"])
+    h = jax.nn.relu(h @ p["fc2.w"] + p["fc2.b"])
+    h = jax.nn.relu(h @ p["fc3.w"] + p["fc3.b"])
+    return (h @ p["out.w"] + p["out.b"])[:, 0]
+
+
+def vgg_ws_head(feat, idx1, cb1, b1, idx2, cb2, b2, idx3, cb3, b3):
+    """The quantized FC head computed with the L1 ws_matmul kernel —
+    lowered into the serve-path HLO artifact (weights never
+    materialized; only index maps + codebooks are inputs)."""
+    from .kernels import ws_matmul
+
+    h = jax.nn.relu(ws_matmul(feat, idx1, cb1) + b1)
+    h = jax.nn.relu(ws_matmul(h, idx2, cb2) + b2)
+    return ws_matmul(h, idx3, cb3) + b3
+
+
+# ---------------------------------------------------------------------------
+# losses & metrics
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(p, x, y, batch: int = 256) -> float:
+    jp = {k: jnp.asarray(v) for k, v in p.items()}
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = vgg_logits(jp, jnp.asarray(x[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == y[i : i + batch]))
+    return correct / x.shape[0]
+
+
+def dta_mse(p, lig, prot, y, batch: int = 256) -> float:
+    jp = {k: jnp.asarray(v) for k, v in p.items()}
+    se = 0.0
+    for i in range(0, lig.shape[0], batch):
+        pred = dta_predict(
+            jp, jnp.asarray(lig[i : i + batch]), jnp.asarray(prot[i : i + batch])
+        )
+        se += float(jnp.sum((pred - y[i : i + batch]) ** 2))
+    return se / lig.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Adam + training loops
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(jnp.asarray(v)) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in z.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m = b1 * state["m"][k] + (1 - b1) * g
+        v = b2 * state["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k] = m
+        new_v[k] = v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def _batches(n, batch, rng):
+    order = rng.permutation(n)
+    for i in range(0, n - batch + 1, batch):
+        yield order[i : i + batch]
+
+
+def train_vgg(
+    p,
+    ds,
+    epochs: int = 8,
+    batch: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    mask: dict | None = None,
+    log: Callable[[str], None] = print,
+):
+    """Train (or fine-tune) VGG-mini. With `mask` (name → 0/1 array),
+    gradients are masked — the paper's pruning retrain (Sect. III-B)."""
+    params = {k: jnp.asarray(v) for k, v in p.items()}
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+    x_train, y_train = ds["x_train"], ds["y_train"]
+    jmask = (
+        {k: jnp.asarray(v) for k, v in mask.items()} if mask is not None else None
+    )
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(q):
+            return xent_loss(vgg_logits(q, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if jmask is not None:
+            grads = {
+                k: g * jmask[k] if k in jmask else g for k, g in grads.items()
+            }
+        params, state = adam_step(params, grads, state, lr)
+        return params, state, loss
+
+    for epoch in range(epochs):
+        losses = []
+        for idx in _batches(x_train.shape[0], batch, rng):
+            params, state, loss = step(
+                params, state, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx])
+            )
+            losses.append(float(loss))
+        log(f"  vgg epoch {epoch + 1}/{epochs}: loss {np.mean(losses):.4f}")
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def train_dta(
+    p,
+    ds,
+    epochs: int = 8,
+    batch: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    mask: dict | None = None,
+    log: Callable[[str], None] = print,
+):
+    params = {k: jnp.asarray(v) for k, v in p.items()}
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+    lig, prot, y = ds["lig_train"], ds["prot_train"], ds["y_train"]
+    jmask = (
+        {k: jnp.asarray(v) for k, v in mask.items()} if mask is not None else None
+    )
+
+    @jax.jit
+    def step(params, state, lb, pb, yb):
+        def loss_fn(q):
+            pred = dta_predict(q, lb, pb)
+            return jnp.mean((pred - yb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if jmask is not None:
+            grads = {
+                k: g * jmask[k] if k in jmask else g for k, g in grads.items()
+            }
+        params, state = adam_step(params, grads, state, lr)
+        return params, state, loss
+
+    for epoch in range(epochs):
+        losses = []
+        for idx in _batches(lig.shape[0], batch, rng):
+            params, state, loss = step(
+                params,
+                state,
+                jnp.asarray(lig[idx]),
+                jnp.asarray(prot[idx]),
+                jnp.asarray(y[idx]),
+            )
+            losses.append(float(loss))
+        log(f"  dta epoch {epoch + 1}/{epochs}: loss {np.mean(losses):.4f}")
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# weight-sharing fine-tuning (cumulative gradient, paper Sect. III-C1)
+# ---------------------------------------------------------------------------
+
+def finetune_shared(
+    p: dict,
+    codebook: np.ndarray,
+    assignments: dict[str, np.ndarray],
+    ds: dict,
+    model: str,
+    epochs: int = 2,
+    batch: int = 128,
+    lr: float = 1e-4,
+    seed: int = 0,
+    log: Callable[[str], None] = print,
+):
+    """Fine-tune a weight-shared model: quantized layers are rebuilt as
+    W_l = cb[π_l] inside the forward pass, so jax autodiff delivers the
+    paper's cumulative centroid gradient. Entries with π = -1 are pruned
+    zeros and stay zero. Returns (params, codebook) after retraining.
+
+    `assignments` maps 'name.w' → int32 array of W's shape (-1 = pruned).
+    All non-quantized parameters keep training normally.
+    """
+    fixed = {k: jnp.asarray(v) for k, v in p.items() if k not in assignments}
+    idxs = {k: jnp.asarray(v) for k, v in assignments.items()}
+    cb = jnp.asarray(codebook)
+    state = adam_init({**fixed, "__cb__": cb})
+    rng = np.random.default_rng(seed)
+
+    def rebuild(fixed_params, cbv):
+        q = dict(fixed_params)
+        padded = jnp.concatenate([cbv, jnp.zeros(1, cbv.dtype)])  # -1 → 0
+        for k, idx in idxs.items():
+            q[k] = padded[idx]
+        return q
+
+    def make_step(loss_of):
+        @jax.jit
+        def step(fixed_params, cbv, state, *batch_args):
+            def loss_fn(fp, c):
+                return loss_of(rebuild(fp, c), *batch_args)
+
+            loss, (gf, gc) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                fixed_params, cbv
+            )
+            merged, state2 = adam_step(
+                {**fixed_params, "__cb__": cbv}, {**gf, "__cb__": gc}, state, lr
+            )
+            cb2 = merged.pop("__cb__")
+            return merged, cb2, state2, loss
+
+        return step
+
+    if model == "vgg":
+        xs, ys = ds["x_train"], ds["y_train"]
+        step = make_step(lambda q, xb, yb: xent_loss(vgg_logits(q, xb), yb))
+        batches = lambda: (
+            (jnp.asarray(xs[i]), jnp.asarray(ys[i]))
+            for i in _batches(xs.shape[0], batch, rng)
+        )
+    elif model == "dta":
+        lig, prot, y = ds["lig_train"], ds["prot_train"], ds["y_train"]
+        step = make_step(
+            lambda q, lb, pb, yb: jnp.mean((dta_predict(q, lb, pb) - yb) ** 2)
+        )
+        batches = lambda: (
+            (jnp.asarray(lig[i]), jnp.asarray(prot[i]), jnp.asarray(y[i]))
+            for i in _batches(lig.shape[0], batch, rng)
+        )
+    else:
+        raise ValueError(model)
+
+    for epoch in range(epochs):
+        losses = []
+        for args in batches():
+            fixed, cb, state, loss = step(fixed, cb, state, *args)
+            losses.append(float(loss))
+        log(f"  ws-ft epoch {epoch + 1}/{epochs}: loss {np.mean(losses):.4f}")
+
+    cb_np = np.asarray(cb)
+    out = {k: np.asarray(v) for k, v in fixed.items()}
+    padded = np.concatenate([cb_np, np.zeros(1, cb_np.dtype)])
+    for k, idx in assignments.items():
+        out[k] = padded[np.asarray(idx)]
+    return out, cb_np

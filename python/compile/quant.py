@@ -1,0 +1,270 @@
+"""Python mirrors of the Rust quantizers (`rust/src/quant/`) — needed on
+the build path because post-quantization *fine-tuning* (paper Sect. III)
+requires autodiff, which lives in JAX. Numerics are cross-checked
+against the Rust side through shared `.wbin` fixtures in
+`python/tests/test_quant.py` + `rust/tests/`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# pruning (Sect. III-B)
+# ---------------------------------------------------------------------------
+
+def prune_percentile(w: np.ndarray, p: float) -> np.ndarray:
+    """Zero entries with |w| ≤ the p-percentile of |w| (p in [0,100])."""
+    if p <= 0:
+        return w.copy()
+    thr = np.percentile(np.abs(w), p)
+    out = w.copy()
+    out[np.abs(out) <= thr] = 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# weight-sharing codebooks (Sect. III-C)
+# ---------------------------------------------------------------------------
+
+def cws_centroids(values: np.ndarray, k: int, iters: int = 60) -> np.ndarray:
+    """1-D k-means (quantile init, Lloyd on the sorted population)."""
+    v = np.sort(values.astype(np.float64).ravel())
+    if v.size == 0:
+        return np.zeros(0, np.float32)
+    distinct = np.unique(v)
+    if distinct.size <= k:
+        return distinct.astype(np.float32)
+    cents = np.array(
+        [v[min(int((i + 0.5) / k * v.size), v.size - 1)] for i in range(k)]
+    )
+    cents = np.unique(cents)
+    prefix = np.concatenate([[0.0], np.cumsum(v)])
+    for _ in range(iters):
+        mids = 0.5 * (cents[:-1] + cents[1:])
+        bounds = np.concatenate([[0], np.searchsorted(v, mids, "right"), [v.size]])
+        bounds = np.maximum.accumulate(bounds)
+        lo, hi = bounds[:-1], bounds[1:]
+        keep = hi > lo
+        nxt = (prefix[hi[keep]] - prefix[lo[keep]]) / (hi[keep] - lo[keep])
+        nxt = np.unique(nxt)
+        if nxt.size == cents.size and np.allclose(nxt, cents, atol=1e-12):
+            cents = nxt
+            break
+        cents = nxt
+    return cents.astype(np.float32)
+
+
+def pws_representatives(values: np.ndarray, k: int) -> np.ndarray:
+    """Quantile representatives χ_{i/(k−1)} (unbiased PWS intervals)."""
+    v = values.astype(np.float64).ravel()
+    if v.size == 0:
+        return np.zeros(0, np.float32)
+    if k == 1:
+        return np.array([np.median(v)], np.float32)
+    qs = np.linspace(0, 100, k)
+    return np.unique(np.percentile(v, qs).astype(np.float32))
+
+
+def pws_assign(codebook: np.ndarray, values: np.ndarray, rng) -> np.ndarray:
+    """Randomized unbiased interval assignment (E[W|w] = w)."""
+    cb = np.asarray(codebook, np.float32)
+    v = np.clip(values, cb[0], cb[-1])
+    hi_idx = np.clip(np.searchsorted(cb, v, "left"), 0, cb.size - 1)
+    lo_idx = np.clip(hi_idx - 1, 0, cb.size - 1)
+    exact = cb[hi_idx] == v
+    lo, hi = cb[lo_idx], cb[hi_idx]
+    span = np.where(hi > lo, hi - lo, 1.0)
+    p_hi = np.where(hi > lo, (v - lo) / span, 1.0)
+    take_hi = rng.random(size=v.shape) < p_hi
+    out = np.where(take_hi | exact, hi, lo)
+    return out.astype(np.float32)
+
+
+def uq_grid(values: np.ndarray, k: int) -> np.ndarray:
+    """δ bisection so the occupied uniform grid has ≤ k points (d = 0)."""
+    v = values.astype(np.float64).ravel()
+    if v.size == 0:
+        return np.zeros(0, np.float32)
+    lo, hi = v.min(), v.max()
+    rng_ = max(hi - lo, 1e-30)
+    distinct = np.unique(v.astype(np.float32))
+    if distinct.size <= k:
+        return distinct
+
+    def occupied(delta):
+        g = np.unique((delta * np.round(v / delta)).astype(np.float32))
+        g[g == 0.0] = 0.0
+        return np.unique(g)
+
+    d_lo, d_hi = rng_ / (4 * k), 2 * rng_
+    for _ in range(60):
+        if occupied(d_lo).size > k:
+            break
+        d_lo /= 2
+    best = None
+    for _ in range(80):
+        mid = 0.5 * (d_lo + d_hi)
+        g = occupied(mid)
+        if g.size <= k:
+            if best is None or g.size > best.size:
+                best = g
+            d_hi = mid
+        else:
+            d_lo = mid
+        if (d_hi - d_lo) / rng_ < 1e-9:
+            break
+    return best if best is not None else occupied(d_hi)
+
+
+def _ecsq_optimize(v: np.ndarray, lam: float, init: np.ndarray, iters: int):
+    """One Lagrangian descent at fixed λ. Returns (centroids, probs)."""
+    cents = init.copy()
+    probs = np.full(cents.size, 1.0 / cents.size)
+    for _ in range(iters):
+        logp = np.full(probs.shape, -np.inf)
+        np.log2(probs, out=logp, where=probs > 0)
+        pen = np.where(probs > 0, -lam * logp, np.inf)
+        cost = (v[:, None] - cents[None, :]) ** 2 + pen[None, :]
+        a = np.argmin(cost, axis=1)
+        cents2, probs2 = [], []
+        for l in range(cents.size):
+            sel = a == l
+            cnt = sel.sum()
+            if cnt:
+                cents2.append(v[sel].mean())
+                probs2.append(cnt / v.size)
+        order = np.argsort(cents2)
+        cents2 = np.asarray(cents2)[order]
+        probs2 = np.asarray(probs2)[order]
+        keep = np.concatenate([[True], np.diff(cents2) > 0])
+        cents2, probs2 = cents2[keep], probs2[keep]
+        converged = cents2.size == cents.size and np.allclose(cents2, cents)
+        cents, probs = cents2, probs2
+        if converged:
+            break
+    return cents, probs
+
+
+def ecsq_model(values: np.ndarray, k: int, iters: int = 30):
+    """Entropy-constrained SQ (paper Sect. III-C4): λ-bisection over the
+    Lagrangian D + λH frontier to the *largest* λ still keeping k levels
+    (strongest entropy shaping at the requested budget — what makes ECSQ
+    Huffman-compress better than CWS at equal k, paper Table III).
+
+    Returns (codebook f32, probs f64, λ). Assignment must use
+    `ecsq_assign` — the entropy-penalized decision levels, not nearest.
+    """
+    v = values.astype(np.float64).ravel()
+    if v.size == 0:
+        return np.zeros(0, np.float32), np.zeros(0), 0.0
+    # Descend from the k-means solution: at λ→0 ECSQ coincides with
+    # CWS, so the Lagrangian can only improve from there.
+    init = cws_centroids(values, k).astype(np.float64)
+    c0, p0 = _ecsq_optimize(v, 0.0, init, iters)
+    if c0.size < k or k == 1:
+        return c0.astype(np.float32), p0, 0.0
+    spread = max(v.max() - v.min(), 1e-12)
+    lam_lo, lam_hi = 0.0, spread**2
+    best = (c0, p0, 0.0)
+    for _ in range(25):
+        mid = 0.5 * (lam_lo + lam_hi)
+        cb, pr = _ecsq_optimize(v, mid, init, iters)
+        if cb.size >= k:
+            best = (cb, pr, mid)  # full budget: push λ higher
+            lam_lo = mid
+        else:
+            lam_hi = mid  # λ merged levels below budget
+    cb, pr, lam = best
+    return cb.astype(np.float32), pr, lam
+
+
+def ecsq_assign(
+    codebook: np.ndarray, probs: np.ndarray, lam: float, values: np.ndarray
+) -> np.ndarray:
+    """Entropy-penalized decision rule: argmin_l (v−c_l)² − λ·log2 p_l."""
+    cb = codebook.astype(np.float64)
+    logp = np.full(probs.shape, -np.inf)
+    np.log2(probs, out=logp, where=probs > 0)
+    pen = np.where(probs > 0, -lam * logp, np.inf)
+    cost = (values.astype(np.float64).ravel()[:, None] - cb[None, :]) ** 2
+    a = np.argmin(cost + pen[None, :], axis=1)
+    return codebook[a].reshape(values.shape).astype(np.float32)
+
+
+def ecsq_representatives(values: np.ndarray, k: int, iters: int = 30) -> np.ndarray:
+    """Codebook-only view of `ecsq_model` (kept for k-sweep tests)."""
+    return ecsq_model(values, k, iters)[0]
+
+
+def nearest_assign(codebook: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Snap values to the nearest codebook entry (CWS/UQ/ECSQ mapping)."""
+    cb = np.asarray(codebook, np.float32)
+    idx = np.clip(np.searchsorted(cb, values), 1, cb.size - 1)
+    lo, hi = cb[idx - 1], cb[idx]
+    pick_lo = (values - lo) <= (hi - values)
+    return np.where(pick_lo, lo, hi).astype(np.float32)
+
+
+KINDS = {
+    "cws": (cws_centroids, nearest_assign),
+    "pws": (pws_representatives, None),  # randomized assign
+    "uq": (uq_grid, nearest_assign),
+    "ecsq": (ecsq_representatives, nearest_assign),
+}
+
+
+def quantize_unified(
+    params: dict[str, np.ndarray],
+    layer_names: list[str],
+    kind: str,
+    k: int,
+    exclude_zeros: bool = True,
+    seed: int = 0,
+):
+    """Unified quantization of `<name>.w` tensors against one shared
+    codebook. Returns (new_params, codebook, assignments) where
+    assignments maps '<name>.w' → int32 index array (−1 = pruned zero),
+    ready for `model.finetune_shared`."""
+    keys = [f"{n}.w" for n in layer_names]
+    pool = np.concatenate(
+        [
+            params[key][params[key] != 0.0] if exclude_zeros else params[key].ravel()
+            for key in keys
+        ]
+    )
+    ecsq = None
+    if kind == "ecsq":
+        cb, probs, lam = ecsq_model(pool, k)
+        ecsq = (probs, lam)
+    else:
+        make_cb, _ = KINDS[kind]
+        cb = np.unique(np.asarray(make_cb(pool, k), np.float32))
+    rng = np.random.default_rng(seed)
+
+    out = dict(params)
+    assignments: dict[str, np.ndarray] = {}
+    for key in keys:
+        w = params[key]
+        if kind == "pws":
+            q = pws_assign(cb, w.ravel(), rng).reshape(w.shape)
+        elif ecsq is not None:
+            q = ecsq_assign(cb, ecsq[0], ecsq[1], w)
+        else:
+            q = nearest_assign(cb, w.ravel()).reshape(w.shape)
+        if exclude_zeros:
+            q = np.where(w == 0.0, 0.0, q)
+        # assignment indices for fine-tuning: −1 marks pruned zeros
+        flat = q.ravel()
+        idx = np.searchsorted(cb, flat).clip(0, cb.size - 1).astype(np.int32)
+        # exact-match fix-up (searchsorted gives left insert point)
+        wrong = cb[idx] != flat
+        idx[wrong] = np.clip(idx[wrong] - 1, 0, cb.size - 1)
+        still = cb[idx] != flat
+        if exclude_zeros:
+            idx[(w.ravel() == 0.0)] = -1
+            still &= w.ravel() != 0.0
+        assert not still.any(), "assignment failed to land on codebook"
+        out[key] = q.astype(np.float32)
+        assignments[key] = idx.reshape(w.shape)
+    return out, cb, assignments

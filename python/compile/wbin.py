@@ -1,0 +1,74 @@
+"""`.wbin` tensor archive — the build-time interchange format between the
+JAX compile path and the Rust runtime (see DESIGN.md §3).
+
+Layout (all little-endian):
+    magic   b"WBIN1\\0"
+    u32     tensor count
+    per tensor:
+        u16  name length, then name bytes (utf-8)
+        u8   dtype tag (0 = f32, 1 = i32, 2 = u8, 3 = i64)
+        u8   ndim
+        u32  per-dim sizes
+        raw  data bytes
+
+A deliberately trivial format: no compression, no alignment games, so the
+Rust reader (`rust/src/io/wbin.rs`) stays dependency-free.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"WBIN1\x00"
+
+_DTYPE_TAGS = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint8): 2,
+    np.dtype(np.int64): 3,
+}
+_TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
+
+
+def write_wbin(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named arrays to `path`. Dtypes outside the supported set are
+    cast to float32."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.asarray(arr)
+            if a.dtype not in _DTYPE_TAGS:
+                a = a.astype(np.float32)
+            a = np.ascontiguousarray(a)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TAGS[a.dtype], a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+
+
+def read_wbin(path: str) -> dict[str, np.ndarray]:
+    """Read a `.wbin` archive back into named numpy arrays."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            tag, ndim = struct.unpack("<BB", f.read(2))
+            shape = tuple(
+                struct.unpack("<I", f.read(4))[0] for _ in range(ndim)
+            )
+            dtype = _TAG_DTYPES[tag]
+            n = int(np.prod(shape)) if shape else 1
+            data = f.read(n * dtype.itemsize)
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+    return out

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in
+ref.py, including hypothesis sweeps over shapes and dtypes (the core
+correctness signal of the compile path)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv2d, conv2d_ref, ws_matmul, ws_matmul_ref
+from compile.kernels.ws_matmul import vmem_footprint_bytes
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def _ws_case(b, n, m, k, idx_dtype=np.int32):
+    x = RNG.normal(size=(b, n)).astype(np.float32)
+    idx = RNG.integers(0, k, size=(n, m)).astype(idx_dtype)
+    cb = RNG.normal(size=k).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(idx), jnp.asarray(cb)
+
+
+class TestWsMatmul:
+    def test_basic(self):
+        x, idx, cb = _ws_case(4, 96, 40, 16)
+        got = ws_matmul(x, idx, cb)
+        want = ws_matmul_ref(x, idx, cb)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_tile_aligned(self):
+        x, idx, cb = _ws_case(128, 256, 128, 64)
+        np.testing.assert_allclose(
+            ws_matmul(x, idx, cb), ws_matmul_ref(x, idx, cb), rtol=1e-4, atol=1e-4
+        )
+
+    def test_single_row_and_col(self):
+        x, idx, cb = _ws_case(1, 7, 1, 3)
+        np.testing.assert_allclose(
+            ws_matmul(x, idx, cb), ws_matmul_ref(x, idx, cb), rtol=1e-5, atol=1e-5
+        )
+
+    def test_k_one(self):
+        x, idx, cb = _ws_case(3, 10, 5, 1)
+        np.testing.assert_allclose(
+            ws_matmul(x, idx, cb), ws_matmul_ref(x, idx, cb), rtol=1e-5, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("idx_dtype", [np.int32, np.int64, np.uint8])
+    def test_index_dtypes(self, idx_dtype):
+        x, idx, cb = _ws_case(4, 32, 16, 8, idx_dtype=idx_dtype)
+        np.testing.assert_allclose(
+            ws_matmul(x, idx, cb), ws_matmul_ref(x, idx, cb), rtol=1e-5, atol=1e-5
+        )
+
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        b=st.integers(1, 17),
+        n=st.integers(1, 130),
+        m=st.integers(1, 70),
+        k=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, b, n, m, k, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, k, size=(n, m)).astype(np.int32))
+        cb = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        got = ws_matmul(x, idx, cb)
+        want = ws_matmul_ref(x, idx, cb)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_custom_blocks(self):
+        x, idx, cb = _ws_case(8, 64, 48, 32)
+        got = ws_matmul(x, idx, cb, block_b=4, block_m=16, block_n=8)
+        np.testing.assert_allclose(
+            got, ws_matmul_ref(x, idx, cb), rtol=1e-4, atol=1e-4
+        )
+
+    def test_vmem_footprint_under_budget(self):
+        # Default tiling must leave double-buffering headroom in ~16 MiB.
+        assert vmem_footprint_bytes() < 4 * 1024 * 1024
+
+
+def _conv_case(b, h, w, cin, cout, kh=3, kw=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, h, w, cin)).astype(np.float32)
+    wgt = rng.normal(size=(kh, kw, cin, cout)).astype(np.float32)
+    bias = rng.normal(size=cout).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(wgt), jnp.asarray(bias)
+
+
+class TestConv2d:
+    def test_basic(self):
+        x, w, b = _conv_case(2, 8, 8, 3, 5)
+        np.testing.assert_allclose(
+            conv2d(x, w, b), conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_1x1_kernel(self):
+        x, w, b = _conv_case(2, 6, 6, 4, 4, kh=1, kw=1)
+        np.testing.assert_allclose(
+            conv2d(x, w, b), conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_5x5_kernel(self):
+        x, w, b = _conv_case(1, 9, 9, 2, 3, kh=5, kw=5)
+        np.testing.assert_allclose(
+            conv2d(x, w, b), conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_model_shapes(self):
+        # The exact VGG-mini layer shapes.
+        for cin, cout, hw in [(1, 16, 32), (16, 16, 32), (16, 32, 16), (32, 32, 8)]:
+            x, w, b = _conv_case(2, hw, hw, cin, cout)
+            np.testing.assert_allclose(
+                conv2d(x, w, b), conv2d_ref(x, w, b), rtol=1e-3, atol=1e-3
+            )
+
+    @hypothesis.settings(max_examples=12, deadline=None)
+    @hypothesis.given(
+        b=st.integers(1, 4),
+        h=st.integers(3, 12),
+        w=st.integers(3, 12),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 6),
+        kh=st.sampled_from([1, 3, 5]),
+        kw=st.sampled_from([1, 3, 5]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, b, h, w, cin, cout, kh, kw, seed):
+        x, wgt, bias = _conv_case(b, h, w, cin, cout, kh, kw, seed)
+        np.testing.assert_allclose(
+            conv2d(x, wgt, bias), conv2d_ref(x, wgt, bias), rtol=2e-4, atol=2e-4
+        )

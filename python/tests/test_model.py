@@ -1,0 +1,141 @@
+"""Model-level tests: shapes, loss decrease under training, pruning-mask
+fine-tuning, and the weight-sharing fine-tune's cumulative gradient."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, quant
+
+
+def tiny_cls_ds(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    xtr, ytr = data.synth_mnist(n, rng)
+    xte, yte = data.synth_mnist(64, rng)
+    return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}
+
+
+def tiny_dta_ds(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    ltr, ptr, ytr = data.synth_kiba(n, rng)
+    lte, pte, yte = data.synth_kiba(64, rng)
+    return {
+        "lig_train": ltr, "prot_train": ptr, "y_train": ytr,
+        "lig_test": lte, "prot_test": pte, "y_test": yte,
+    }
+
+
+def test_vgg_shapes():
+    p = {k: jnp.asarray(v) for k, v in model.init_vgg(in_ch=3).items()}
+    x = jnp.zeros((5, 32, 32, 3))
+    feat = model.vgg_features(p, x)
+    assert feat.shape == (5, model.VGG_FEATURE_DIM)
+    assert model.vgg_logits(p, x).shape == (5, model.N_CLASSES)
+
+
+def test_dta_shapes():
+    p = {k: jnp.asarray(v) for k, v in model.init_dta().items()}
+    lig = jnp.zeros((4, data.LIGAND_LEN), jnp.int32)
+    prot = jnp.zeros((4, data.PROTEIN_LEN), jnp.int32)
+    assert model.dta_features(p, lig, prot).shape == (4, model.DTA_FEATURE_DIM)
+    assert model.dta_predict(p, lig, prot).shape == (4,)
+
+
+def test_vgg_fc_dims_match_paper_shape():
+    p = model.init_vgg()
+    assert p["fc1.w"].shape == (512, 1024)
+    assert p["fc2.w"].shape == (1024, 1024)
+    assert p["fc3.w"].shape == (1024, 10)
+
+
+def test_dta_fc_dims_match_paper():
+    p = model.init_dta()
+    assert p["fc1.w"].shape[1] == 1024
+    assert p["fc2.w"].shape == (1024, 1024)
+    assert p["fc3.w"].shape == (1024, 512)
+    assert p["out.w"].shape == (512, 1)
+
+
+def test_vgg_training_reduces_loss():
+    ds = tiny_cls_ds()
+    p = model.init_vgg(seed=1, in_ch=1)
+    acc0 = model.accuracy(p, ds["x_test"], ds["y_test"])
+    p = model.train_vgg(p, ds, epochs=2, batch=64, log=lambda s: None)
+    acc1 = model.accuracy(p, ds["x_test"], ds["y_test"])
+    assert acc1 > max(acc0, 0.2), f"{acc0} -> {acc1}"
+
+
+def test_dta_training_reduces_mse():
+    ds = tiny_dta_ds()
+    p = model.init_dta(seed=1)
+    mse0 = model.dta_mse(p, ds["lig_test"], ds["prot_test"], ds["y_test"])
+    p = model.train_dta(p, ds, epochs=3, batch=64, log=lambda s: None)
+    mse1 = model.dta_mse(p, ds["lig_test"], ds["prot_test"], ds["y_test"])
+    assert mse1 < mse0, f"{mse0} -> {mse1}"
+
+
+def test_masked_training_preserves_pruned_zeros():
+    ds = tiny_cls_ds(n=128)
+    p = model.init_vgg(seed=2, in_ch=1)
+    p["fc1.w"] = quant.prune_percentile(p["fc1.w"], 90)
+    mask = {"fc1.w": (p["fc1.w"] != 0).astype(np.float32)}
+    p2 = model.train_vgg(p, ds, epochs=1, batch=64, mask=mask, log=lambda s: None)
+    # pruned entries still exactly zero, survivors moved
+    zeros = p["fc1.w"] == 0
+    assert np.all(p2["fc1.w"][zeros] == 0.0)
+    assert np.any(p2["fc1.w"][~zeros] != p["fc1.w"][~zeros])
+
+
+def test_ws_finetune_keeps_weight_sharing():
+    ds = tiny_cls_ds(n=128)
+    p = model.init_vgg(seed=3, in_ch=1)
+    _, cb, asn = quant.quantize_unified(p, model.VGG_FC, "cws", 8)
+    p2, cb2 = model.finetune_shared(
+        p, cb, asn, ds, "vgg", epochs=1, batch=64, log=lambda s: None
+    )
+    # after fine-tuning, every FC weight is still one of ≤8 shared values
+    for name in model.VGG_FC:
+        w = p2[f"{name}.w"]
+        distinct = np.unique(w[w != 0.0])
+        assert len(distinct) <= 8
+        assert np.all(np.isin(distinct, cb2))
+    # the codebook actually moved (training had an effect)
+    assert not np.allclose(cb, cb2)
+
+
+def test_ws_finetune_preserves_pruned_zeros():
+    ds = tiny_cls_ds(n=128)
+    p = model.init_vgg(seed=4, in_ch=1)
+    for name in model.VGG_FC:
+        p[f"{name}.w"] = quant.prune_percentile(p[f"{name}.w"], 80)
+    _, cb, asn = quant.quantize_unified(p, model.VGG_FC, "cws", 8)
+    p2, _ = model.finetune_shared(
+        p, cb, asn, ds, "vgg", epochs=1, batch=64, log=lambda s: None
+    )
+    for name in model.VGG_FC:
+        zeros = p[f"{name}.w"] == 0
+        assert np.all(p2[f"{name}.w"][zeros] == 0.0)
+
+
+def test_ws_head_matches_dense_head():
+    # vgg_ws_head (pallas path) == dense FC head when the index map
+    # reconstructs the same matrices.
+    rng = np.random.default_rng(11)
+    p = model.init_vgg(seed=5, in_ch=1)
+    _, cb, asn = quant.quantize_unified(p, model.VGG_FC, "cws", 16,
+                                        exclude_zeros=False)
+    feat = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    # dense reference with quantized weights
+    q = dict(p)
+    for name in model.VGG_FC:
+        q[f"{name}.w"] = cb[asn[f"{name}.w"]]
+    h = jnp.maximum(feat @ q["fc1.w"] + q["fc1.b"], 0)
+    h = jnp.maximum(h @ q["fc2.w"] + q["fc2.b"], 0)
+    want = h @ q["fc3.w"] + q["fc3.b"]
+    got = model.vgg_ws_head(
+        feat,
+        jnp.asarray(asn["fc1.w"]), jnp.asarray(cb), jnp.asarray(p["fc1.b"]),
+        jnp.asarray(asn["fc2.w"]), jnp.asarray(cb), jnp.asarray(p["fc2.b"]),
+        jnp.asarray(asn["fc3.w"]), jnp.asarray(cb), jnp.asarray(p["fc3.b"]),
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,139 @@
+"""Python quantizer mirrors: invariants matching the Rust implementations
+(rust/src/quant/) — k budgets, zero preservation, PWS unbiasedness, UQ
+grid uniformity — plus the unified-assignment plumbing used by
+fine-tuning."""
+
+import numpy as np
+import pytest
+
+from compile import quant
+
+
+RNG = np.random.default_rng(0x5EED)
+
+
+def test_prune_percentile_sparsity():
+    w = RNG.normal(size=(100, 100)).astype(np.float32)
+    p = quant.prune_percentile(w, 90)
+    s = (p != 0).mean()
+    assert abs(s - 0.10) < 0.02
+    # survivors untouched
+    kept = p != 0
+    np.testing.assert_array_equal(p[kept], w[kept])
+    # p=0 identity
+    np.testing.assert_array_equal(quant.prune_percentile(w, 0), w)
+
+
+@pytest.mark.parametrize("kind", ["cws", "pws", "uq", "ecsq"])
+def test_codebook_respects_k(kind):
+    vals = RNG.normal(size=5000).astype(np.float32)
+    make_cb, _ = quant.KINDS[kind]
+    for k in [2, 8, 32]:
+        cb = make_cb(vals, k)
+        assert len(cb) <= k, f"{kind} k={k}: {len(cb)}"
+        assert len(cb) >= 1
+        assert np.all(np.diff(cb) > 0)
+
+
+def test_cws_two_clusters():
+    vals = np.concatenate(
+        [RNG.normal(-10, 0.1, 500), RNG.normal(10, 0.1, 500)]
+    ).astype(np.float32)
+    cb = quant.cws_centroids(vals, 2)
+    assert len(cb) == 2
+    assert abs(cb[0] + 10) < 0.5 and abs(cb[1] - 10) < 0.5
+
+
+def test_pws_assign_unbiased():
+    cb = np.array([0.0, 1.0], np.float32)
+    v = np.full(200_000, 0.3, np.float32)
+    out = quant.pws_assign(cb, v, np.random.default_rng(1))
+    assert abs(out.mean() - 0.3) < 0.01
+    assert set(np.unique(out)) <= {0.0, 1.0}
+
+
+def test_uq_grid_uniform():
+    vals = RNG.normal(size=3000).astype(np.float32)
+    g = quant.uq_grid(vals, 32)
+    assert len(g) <= 32
+    d = np.diff(g.astype(np.float64))
+    ratios = d / d.min()
+    assert np.all(np.abs(ratios - np.round(ratios)) < 1e-3)
+
+
+def test_nearest_assign():
+    cb = np.array([-1.0, 0.0, 2.0], np.float32)
+    v = np.array([-5.0, 0.9, 1.1, 3.0], np.float32)
+    out = quant.nearest_assign(cb, v)
+    np.testing.assert_array_equal(out, [-1.0, 0.0, 2.0, 2.0])
+
+
+def test_quantize_unified_shared_codebook_and_assignments():
+    params = {
+        "fc1.w": RNG.normal(size=(64, 32)).astype(np.float32),
+        "fc1.b": np.zeros(32, np.float32),
+        "fc2.w": RNG.normal(size=(32, 16)).astype(np.float32),
+        "fc2.b": np.zeros(16, np.float32),
+    }
+    # prune fc weights first (the Pr→X chain)
+    params["fc1.w"] = quant.prune_percentile(params["fc1.w"], 80)
+    out, cb, asn = quant.quantize_unified(params, ["fc1", "fc2"], "cws", 8)
+    assert len(cb) <= 8
+    for key in ("fc1.w", "fc2.w"):
+        w0, w1, idx = params[key], out[key], asn[key]
+        assert w1.shape == w0.shape and idx.shape == w0.shape
+        # zeros preserved and marked −1
+        np.testing.assert_array_equal(w1[w0 == 0.0], 0.0)
+        assert np.all(idx[w0 == 0.0] == -1)
+        # non-zeros land exactly on the codebook via their index
+        nz = w0 != 0.0
+        np.testing.assert_array_equal(cb[idx[nz]], w1[nz])
+    # biases untouched
+    np.testing.assert_array_equal(out["fc1.b"], params["fc1.b"])
+
+
+@pytest.mark.parametrize("kind", ["cws", "uq", "ecsq"])
+def test_quantization_error_decreases_with_k(kind):
+    vals = RNG.normal(size=4000).astype(np.float32)
+    make_cb, _ = quant.KINDS[kind]
+    errs = []
+    for k in [2, 8, 32, 128]:
+        cb = make_cb(vals, k)
+        q = quant.nearest_assign(cb, vals)
+        errs.append(float(((q - vals) ** 2).mean()))
+    assert errs == sorted(errs, reverse=True), f"{kind}: {errs}"
+
+
+def test_ecsq_improves_lagrangian_over_cws():
+    # The defining property (paper Sect. III-C4): at its chosen λ, ECSQ's
+    # D + λH is no worse than k-means' (which optimizes D alone).
+    vals = np.concatenate(
+        [RNG.normal(0, 0.05, 9000), RNG.normal(0, 3.0, 1000)]
+    ).astype(np.float32)
+    k = 16
+
+    def entropy(q):
+        _, counts = np.unique(q, return_counts=True)
+        p = counts / counts.sum()
+        return float(-(p * np.log2(p)).sum())
+
+    def lagrangian(q, lam):
+        return float(((q - vals) ** 2).mean()) + lam * entropy(q)
+
+    cb, probs, lam = quant.ecsq_model(vals, k)
+    assert lam > 0.0
+    q_ecsq = quant.ecsq_assign(cb, probs, lam, vals)
+    q_cws = quant.nearest_assign(quant.cws_centroids(vals, k), vals)
+    l_ecsq = lagrangian(q_ecsq, lam)
+    l_cws = lagrangian(q_cws, lam)
+    assert l_ecsq <= l_cws + 1e-9, f"ECSQ {l_ecsq} !<= CWS {l_cws}"
+    # and the entropy side specifically is shaped down
+    assert entropy(q_ecsq) <= entropy(q_cws) + 1e-9
+
+
+def test_ecsq_assign_lands_on_codebook():
+    vals = RNG.normal(size=2000).astype(np.float32)
+    cb, probs, lam = quant.ecsq_model(vals, 8)
+    q = quant.ecsq_assign(cb, probs, lam, vals.reshape(40, 50))
+    assert q.shape == (40, 50)
+    assert np.all(np.isin(q, cb))

@@ -1,0 +1,63 @@
+"""`.wbin` interchange format round-trip tests (the Rust reader is
+integration-tested against files written here via rust/tests/)."""
+
+import numpy as np
+import pytest
+
+from compile.wbin import MAGIC, read_wbin, write_wbin
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    path = str(tmp_path / "t.wbin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int32),
+        "c": np.arange(8, dtype=np.uint8).reshape(2, 2, 2),
+        "d": np.array([2**40], dtype=np.int64),
+        "scalarish": np.array([3.5], dtype=np.float32),
+    }
+    write_wbin(path, tensors)
+    back = read_wbin(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_unsupported_dtype_cast_to_f32(tmp_path):
+    path = str(tmp_path / "t.wbin")
+    write_wbin(path, {"x": np.array([1.0, 2.0], dtype=np.float64)})
+    back = read_wbin(path)
+    assert back["x"].dtype == np.float32
+
+
+def test_empty_archive(tmp_path):
+    path = str(tmp_path / "empty.wbin")
+    write_wbin(path, {})
+    assert read_wbin(path) == {}
+
+
+def test_zero_dim_tensor(tmp_path):
+    path = str(tmp_path / "z.wbin")
+    write_wbin(path, {"empty": np.zeros((0, 5), np.float32)})
+    back = read_wbin(path)
+    assert back["empty"].shape == (0, 5)
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.wbin")
+    with open(path, "wb") as f:
+        f.write(b"NOTWBIN" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="bad magic"):
+        read_wbin(path)
+
+
+def test_non_contiguous_input(tmp_path):
+    path = str(tmp_path / "nc.wbin")
+    a = np.arange(24, dtype=np.float32).reshape(4, 6)[:, ::2]
+    write_wbin(path, {"a": a})
+    np.testing.assert_array_equal(read_wbin(path)["a"], a)
+
+
+def test_magic_constant():
+    assert MAGIC == b"WBIN1\x00"

@@ -1,0 +1,98 @@
+//! Bench: serving throughput + latency of the coordinator under load
+//! (baseline vs compressed variants), exercising PJRT batching + the
+//! compressed FC hot path. Needs `make artifacts`; prints SKIP when
+//! absent.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use sham::coordinator::server::request_from_test_set;
+use sham::coordinator::{Policy, Server, ServerConfig};
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+
+fn main() {
+    let art = PathBuf::from("artifacts");
+    if !art.join("manifest.txt").exists() {
+        println!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let kind = ModelKind::VggMnist;
+    let params = kind.load_weights(&art).unwrap();
+    let test = kind.load_test_set(&art).unwrap();
+
+    for (label, cfg) in [
+        ("baseline-dense", None),
+        (
+            "pr90-cws32-auto",
+            Some(CompressionCfg {
+                fc_prune: Some(90.0),
+                fc_quant: Some((Kind::Cws, 32)),
+                fc_format: FcFormat::Auto,
+                ..Default::default()
+            }),
+        ),
+    ] {
+        let model = match cfg {
+            None => CompressedModel::baseline(kind, &params).unwrap(),
+            Some(c) => {
+                let mut rng = Prng::seeded(1);
+                CompressedModel::build(kind, &params, &c, &mut rng).unwrap()
+            }
+        };
+        let psi = model.psi_fc();
+        let mut server = Server::new(ServerConfig {
+            policy: Policy {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_millis(2),
+                queue_cap: 2048,
+            },
+            fc_threads: 1,
+        });
+        server
+            .add_variant("m", model, kind.features_hlo(&art, 32))
+            .unwrap();
+
+        // Warm up (engine compile happens on first batch).
+        let _ = server
+            .infer("m", request_from_test_set(&test, 0).unwrap())
+            .unwrap();
+
+        let n = 1024.min(test.len());
+        let clients = 8;
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let server = &server;
+                let test = &test;
+                scope.spawn(move || {
+                    for i in (c..n).step_by(clients) {
+                        let input = request_from_test_set(test, i).unwrap();
+                        // retry on backpressure
+                        loop {
+                            match server.submit("m", input.clone()) {
+                                Ok(rx) => {
+                                    rx.recv().unwrap().unwrap();
+                                    break;
+                                }
+                                Err(_) => std::thread::sleep(
+                                    std::time::Duration::from_micros(200),
+                                ),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let secs = start.elapsed().as_secs_f64();
+        println!(
+            "\n== {label} (psi_fc={psi:.4}) ==\n{n} requests, {clients} client threads: \
+             {:.0} req/s  ({:.2} ms/req amortized)",
+            n as f64 / secs,
+            secs * 1e3 / n as f64
+        );
+        println!("{}", server.metrics.render());
+    }
+}

@@ -1,0 +1,85 @@
+//! Bench: dot-product time on every compressed format (the timing half
+//! of Fig. 1), plus the HAC decode-strategy ablation that backs
+//! EXPERIMENTS.md §Perf: bit-serial NCW vs LUT decode vs §VI
+//! column-parallel.
+
+use sham::formats::{all_formats, par_matmul, Hac};
+use sham::formats::CompressedMatrix;
+use sham::mat::Mat;
+use sham::quant::{self, Kind, Options};
+use sham::util::prng::Prng;
+use sham::util::timer::{bench, black_box, fmt_ns};
+
+fn workload(p: f64, k: usize, rng: &mut Prng) -> Mat {
+    let m = Mat::gaussian(1024, 1024, 0.05, rng);
+    let pruned = quant::prune_percentile(&m, p);
+    quant::quantize(
+        &pruned,
+        Options { kind: Kind::Cws, k, exclude_zeros: true },
+        rng,
+    )
+    .mats
+    .remove(0)
+}
+
+fn main() {
+    let mut rng = Prng::seeded(0xBE7C);
+    println!("# dot_formats — 1024×1024, CWS k=32");
+    for p in [70.0, 90.0, 99.0] {
+        let w = workload(p, 32, &mut rng);
+        let x: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        println!("\n## pruning p={p:.0} (s={:.3})", w.nonzero_ratio());
+        println!(
+            "{:<8} {:>12} {:>12} {:>10}",
+            "format", "median", "p95", "size_KiB"
+        );
+        for f in all_formats(&w) {
+            let s = bench(3, 15, || {
+                black_box(f.vecmat(black_box(&x)));
+            });
+            println!(
+                "{:<8} {:>12} {:>12} {:>10.1}",
+                f.name(),
+                fmt_ns(s.p50),
+                fmt_ns(s.p95),
+                f.size_bytes() / 1024.0
+            );
+        }
+        // HAC decode ablation: bit-serial NCW vs single-probe LUT vs
+        // multi-symbol run LUT vs §VI column-parallel
+        let hac = Hac::compress(&w);
+        let s_serial = bench(3, 15, || {
+            black_box(hac.vecmat_serial_decode(black_box(&x)));
+        });
+        let s_single = bench(3, 15, || {
+            black_box(hac.vecmat_single_lut(black_box(&x)));
+        });
+        let s_multi = bench(3, 15, || {
+            black_box(hac.vecmat(black_box(&x)));
+        });
+        let hac_idx = Hac::compress(&w).with_column_index();
+        let s_par = bench(3, 15, || {
+            black_box(hac_idx.vecmat_par_cols(black_box(&x), 8));
+        });
+        println!(
+            "hac decode ablation: serial={} single-lut={} ({:.2}x) multi-lut={} \
+             ({:.2}x) col-par8={} ({:.2}x)",
+            fmt_ns(s_serial.p50),
+            fmt_ns(s_single.p50),
+            s_serial.p50 / s_single.p50,
+            fmt_ns(s_multi.p50),
+            s_serial.p50 / s_multi.p50,
+            fmt_ns(s_par.p50),
+            s_serial.p50 / s_par.p50,
+        );
+        // batched Alg. 3 (8 rows, 8 threads) across formats
+        let xb = Mat::gaussian(8, 1024, 1.0, &mut rng);
+        println!("{:<8} {:>14}", "format", "dot8(8thr)");
+        for f in all_formats(&w) {
+            let s = bench(2, 8, || {
+                black_box(par_matmul(f.as_ref(), black_box(&xb), 8));
+            });
+            println!("{:<8} {:>14}", f.name(), fmt_ns(s.p50));
+        }
+    }
+}

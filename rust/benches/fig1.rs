@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig. 1 (k=32) and Fig. S2 (k=256) — size + 8-dot
+//! time for every format over the VGG FC matrices (artifacts when
+//! present, otherwise paper-dimension synthetic weights).
+
+use sham::harness::fig1;
+use sham::nn::ModelKind;
+
+fn main() {
+    let art = std::path::PathBuf::from("artifacts");
+    let art_opt = art.join("manifest.txt").exists().then_some(art.as_path());
+    let threads = 8;
+    for (k, label) in [(32usize, "Fig. 1"), (256, "Fig. S2")] {
+        for kind in [ModelKind::VggCifar, ModelKind::VggMnist] {
+            println!(
+                "\n=== {label}: {} FC matrices, CWS k={k}, {threads} threads ===",
+                kind.name()
+            );
+            match fig1::run(art_opt, kind, k, threads, false) {
+                Ok(t) => println!("{}", t.render()),
+                Err(e) => eprintln!("fig1 failed: {e:#}"),
+            }
+        }
+    }
+}

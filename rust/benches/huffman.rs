@@ -1,0 +1,62 @@
+//! Bench: Huffman encode/decode throughput — the inner loop of the HAC
+//! and sHAC dot procedures (bit-serial vs LUT decode).
+
+use sham::huffman::Code;
+use sham::util::bits::BitReader;
+use sham::util::prng::Prng;
+use sham::util::timer::{bench, black_box, fmt_ns};
+
+fn main() {
+    let mut rng = Prng::seeded(0x48554646);
+    for &k in &[8usize, 32, 256] {
+        // Zipf-ish frequencies (realistic for quantized weights).
+        let freqs: Vec<u64> = (0..k).map(|i| 1000 / (i as u64 + 1) + 1).collect();
+        let total: u64 = freqs.iter().sum();
+        let n = 1_000_000usize;
+        let stream: Vec<u32> = (0..n)
+            .map(|_| {
+                let mut r = rng.gen_range(total as usize) as u64;
+                for (s, &f) in freqs.iter().enumerate() {
+                    if r < f {
+                        return s as u32;
+                    }
+                    r -= f;
+                }
+                (k - 1) as u32
+            })
+            .collect();
+        let code = Code::from_freqs(&freqs);
+        let enc = bench(1, 5, || {
+            black_box(code.encode(stream.iter().copied()));
+        });
+        let buf = code.encode(stream.iter().copied());
+        let dec_serial = bench(1, 5, || {
+            let mut r = BitReader::new(&buf);
+            let mut acc = 0u64;
+            while let Some(s) = code.decode_next_serial(&mut r) {
+                acc = acc.wrapping_add(s as u64);
+            }
+            black_box(acc);
+        });
+        let dec_lut = bench(1, 5, || {
+            let mut r = BitReader::new(&buf);
+            let mut acc = 0u64;
+            while let Some(s) = code.decode_next(&mut r) {
+                acc = acc.wrapping_add(s as u64);
+            }
+            black_box(acc);
+        });
+        let msym = n as f64 / 1e6;
+        println!(
+            "k={k:<4} encode={} ({:.1} Msym/s)  decode_serial={} ({:.1} Msym/s)  \
+             decode_lut={} ({:.1} Msym/s, {:.2}x)",
+            fmt_ns(enc.p50),
+            msym / (enc.p50 / 1e9),
+            fmt_ns(dec_serial.p50),
+            msym / (dec_serial.p50 / 1e9),
+            fmt_ns(dec_lut.p50),
+            msym / (dec_lut.p50 / 1e9),
+            dec_serial.p50 / dec_lut.p50,
+        );
+    }
+}

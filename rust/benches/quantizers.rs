@@ -1,0 +1,34 @@
+//! Bench: quantizer fitting cost (CWS/PWS/UQ/ECSQ) across population
+//! sizes and k — the compression-time side of the paper's pipeline.
+
+use sham::mat::Mat;
+use sham::quant::{quantize, Kind, Options};
+use sham::util::prng::Prng;
+use sham::util::timer::{bench, black_box, fmt_ns};
+
+fn main() {
+    let mut rng = Prng::seeded(0x9A9A);
+    for &numel in &[65_536usize, 1_048_576] {
+        let side = (numel as f64).sqrt() as usize;
+        let w = Mat::gaussian(side, side, 0.05, &mut rng);
+        println!("\n# population {}x{} ({} values)", side, side, w.numel());
+        println!("{:<6} {:>4} {:>14}", "method", "k", "median");
+        for kind in Kind::ALL {
+            for &k in &[32usize, 256] {
+                // ECSQ is O(iters·n·k); keep the big case bounded.
+                if kind == Kind::Ecsq && numel > 100_000 && k > 32 {
+                    continue;
+                }
+                let mut rng2 = Prng::seeded(1);
+                let s = bench(1, if numel > 100_000 { 3 } else { 6 }, || {
+                    black_box(quantize(
+                        &w,
+                        Options { kind, k, exclude_zeros: false },
+                        &mut rng2,
+                    ));
+                });
+                println!("{:<6} {:>4} {:>14}", kind.name(), k, fmt_ns(s.p50));
+            }
+        }
+    }
+}

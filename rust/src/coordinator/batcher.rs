@@ -1,0 +1,166 @@
+//! Dynamic batcher: the per-variant queue + batch-forming loop.
+//!
+//! Requests accumulate in a bounded queue; a batch is dispatched when
+//! either `max_batch` requests are waiting or the oldest request has
+//! waited `max_wait`. Admission control rejects on a full queue
+//! (backpressure to the caller) instead of queueing unboundedly.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+/// One inference request's input payload.
+#[derive(Debug, Clone)]
+pub enum Input {
+    /// Flattened image (H·W·C f32) for the VGG variants.
+    Image(Vec<f32>),
+    /// Token sequences for the DeepDTA variants.
+    Tokens { lig: Vec<i32>, prot: Vec<i32> },
+}
+
+/// A queued request: payload + response channel + enqueue timestamp.
+pub struct Request {
+    pub input: Input,
+    pub resp: SyncSender<anyhow::Result<Vec<f32>>>,
+    pub enqueued: Instant,
+}
+
+/// Handle used by frontends to submit work to one variant's queue.
+#[derive(Clone)]
+pub struct QueueHandle {
+    tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+}
+
+impl QueueHandle {
+    /// Submit a request; returns the response receiver, or `None` if the
+    /// queue is full (backpressure) or shut down.
+    pub fn submit(
+        &self,
+        input: Input,
+    ) -> Option<std::sync::mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+        use std::sync::atomic::Ordering;
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { input, resp: rtx, enqueued: Instant::now() };
+        match self.tx.try_send(req) {
+            Ok(()) => Some(rrx),
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Create the queue pair for one variant.
+pub fn queue(policy: Policy, metrics: Arc<Metrics>) -> (QueueHandle, Receiver<Request>) {
+    let (tx, rx) = sync_channel(policy.queue_cap);
+    (QueueHandle { tx, metrics }, rx)
+}
+
+/// Collect the next batch from `rx` under `policy`. Blocks for the first
+/// request; then fills up to `max_batch` until `max_wait` has elapsed
+/// since the batch opened. Returns `None` when the channel closed.
+pub fn next_batch(rx: &Receiver<Request>, policy: &Policy) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let opened = Instant::now();
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let left = policy.max_wait.checked_sub(opened.elapsed());
+        match left {
+            None => break,
+            Some(wait) => match rx.recv_timeout(wait) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_input() -> Input {
+        Input::Image(vec![0.0; 4])
+    }
+
+    #[test]
+    fn batches_fill_to_max() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy { max_batch: 3, ..Default::default() };
+        let (h, rx) = queue(policy, metrics);
+        let mut receivers = Vec::new();
+        for _ in 0..7 {
+            receivers.push(h.submit(dummy_input()).unwrap());
+        }
+        let b1 = next_batch(&rx, &policy).unwrap();
+        let b2 = next_batch(&rx, &policy).unwrap();
+        let b3 = next_batch(&rx, &policy).unwrap();
+        assert_eq!((b1.len(), b2.len(), b3.len()), (3, 3, 1));
+    }
+
+    #[test]
+    fn max_wait_bounds_batch_formation() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+        };
+        let (h, rx) = queue(policy, metrics);
+        let _r = h.submit(dummy_input()).unwrap();
+        let t = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy { queue_cap: 2, ..Default::default() };
+        let (h, _rx) = queue(policy, metrics.clone());
+        assert!(h.submit(dummy_input()).is_some());
+        assert!(h.submit(dummy_input()).is_some());
+        assert!(h.submit(dummy_input()).is_none(), "third submit must reject");
+        assert_eq!(
+            metrics
+                .rejected_total
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn closed_channel_ends_batching() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy::default();
+        let (h, rx) = queue(policy, metrics);
+        drop(h);
+        assert!(next_batch(&rx, &policy).is_none());
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving metrics: lock-free counters + a bounded latency reservoir,
+//! snapshotted for the CLI / bench reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+const RESERVOIR_CAP: usize = 65_536;
+
+/// Metrics shared across coordinator threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub responses_total: AtomicU64,
+    pub rejected_total: AtomicU64,
+    pub batches_total: AtomicU64,
+    pub batched_requests_total: AtomicU64,
+    /// Per-request end-to-end latency in ns (bounded reservoir).
+    latencies_ns: Mutex<Vec<f64>>,
+    /// Batch sizes (bounded reservoir).
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_latency_ns(&self, ns: f64) {
+        let mut l = self.latencies_ns.lock().unwrap();
+        if l.len() < RESERVOIR_CAP {
+            l.push(ns);
+        }
+    }
+
+    #[inline]
+    pub fn record_batch(&self, size: usize) {
+        self.batches_total.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests_total
+            .fetch_add(size as u64, Ordering::Relaxed);
+        let mut b = self.batch_sizes.lock().unwrap();
+        if b.len() < RESERVOIR_CAP {
+            b.push(size as f64);
+        }
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let l = self.latencies_ns.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::from(&l))
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batch_sizes.lock().unwrap();
+        if b.is_empty() {
+            0.0
+        } else {
+            b.iter().sum::<f64>() / b.len() as f64
+        }
+    }
+
+    /// Human-readable snapshot for logs and bench output.
+    pub fn render(&self) -> String {
+        use crate::util::timer::fmt_ns;
+        let req = self.requests_total.load(Ordering::Relaxed);
+        let resp = self.responses_total.load(Ordering::Relaxed);
+        let rej = self.rejected_total.load(Ordering::Relaxed);
+        let batches = self.batches_total.load(Ordering::Relaxed);
+        let mut s = format!(
+            "requests={req} responses={resp} rejected={rej} batches={batches} \
+             mean_batch={:.2}",
+            self.mean_batch_size()
+        );
+        if let Some(lat) = self.latency_summary() {
+            s.push_str(&format!(
+                " latency[p50={} p95={} p99={} max={}]",
+                fmt_ns(lat.p50),
+                fmt_ns(lat.p95),
+                fmt_ns(lat.p99),
+                fmt_ns(lat.max),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_reservoirs() {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(4);
+        m.record_batch(2);
+        m.record_latency_ns(1000.0);
+        m.record_latency_ns(3000.0);
+        assert_eq!(m.batches_total.load(Ordering::Relaxed), 2);
+        assert_eq!(m.batched_requests_total.load(Ordering::Relaxed), 6);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-9);
+        let lat = m.latency_summary().unwrap();
+        assert_eq!(lat.n, 2);
+        assert!(lat.max >= 3000.0);
+        let text = m.render();
+        assert!(text.contains("requests=3"));
+        assert!(text.contains("mean_batch=3.00"));
+    }
+
+    #[test]
+    fn empty_metrics_render() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert!(m.render().contains("requests=0"));
+    }
+}

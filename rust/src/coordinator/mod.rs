@@ -1,0 +1,13 @@
+//! L3 coordinator: the serving layer that runs compressed models behind
+//! a dynamic batcher — router over model variants, per-variant worker
+//! threads owning PJRT engines, admission control, metrics, and a
+//! std-net TCP front-end. Python never runs on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod tcp;
+
+pub use batcher::{Input, Policy};
+pub use metrics::Metrics;
+pub use server::{Server, ServerConfig};

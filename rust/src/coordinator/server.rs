@@ -1,0 +1,294 @@
+//! The inference server: a router over model variants, each with its own
+//! dynamic-batching worker thread that owns a PJRT engine (engines are
+//! not `Send`, so each worker constructs its own client + executable).
+//! Python never runs here — the artifacts are self-contained.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::batcher::{self, Input, Policy, QueueHandle, Request};
+use crate::coordinator::metrics::Metrics;
+use crate::mat::Mat;
+use crate::nn::compressed::CompressedModel;
+use crate::io::TestSet;
+use crate::runtime::{lit_f32, lit_i32, Engine};
+
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub policy: Policy,
+    /// Threads used inside each worker for the compressed FC matmul.
+    pub fc_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { policy: Policy::default(), fc_threads: 1 }
+    }
+}
+
+struct VariantHandle {
+    queue: QueueHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Multi-variant inference server.
+pub struct Server {
+    variants: HashMap<String, VariantHandle>,
+    pub metrics: Arc<Metrics>,
+    cfg: ServerConfig,
+}
+
+impl Server {
+    pub fn new(cfg: ServerConfig) -> Server {
+        Server { variants: HashMap::new(), metrics: Arc::new(Metrics::new()), cfg }
+    }
+
+    /// Register a model variant: the compressed model plus the HLO path
+    /// of its feature graph (compiled inside the worker thread at the
+    /// batch size of `cfg.policy.max_batch`).
+    pub fn add_variant(
+        &mut self,
+        name: &str,
+        model: CompressedModel,
+        features_hlo: PathBuf,
+    ) -> Result<()> {
+        if self.variants.contains_key(name) {
+            bail!("variant `{name}` already registered");
+        }
+        let (queue, rx) = batcher::queue(self.cfg.policy, self.metrics.clone());
+        let metrics = self.metrics.clone();
+        let policy = self.cfg.policy;
+        let fc_threads = self.cfg.fc_threads;
+        let vname = name.to_string();
+        let worker = std::thread::Builder::new()
+            .name(format!("sham-worker-{name}"))
+            .spawn(move || {
+                if let Err(e) =
+                    worker_loop(model, &features_hlo, rx, policy, metrics, fc_threads)
+                {
+                    eprintln!("worker `{vname}` exited with error: {e:#}");
+                }
+            })
+            .context("spawn worker")?;
+        self.variants
+            .insert(name.to_string(), VariantHandle { queue, worker: Some(worker) });
+        Ok(())
+    }
+
+    /// Route a request to a variant. Returns the response receiver or an
+    /// error when the variant is unknown / the queue is saturated.
+    pub fn submit(
+        &self,
+        variant: &str,
+        input: Input,
+    ) -> Result<std::sync::mpsc::Receiver<Result<Vec<f32>>>> {
+        let v = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant `{variant}`"))?;
+        v.queue
+            .submit(input)
+            .ok_or_else(|| anyhow!("variant `{variant}` saturated (backpressure)"))
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, variant: &str, input: Input) -> Result<Vec<f32>> {
+        let rx = self.submit(variant, input)?;
+        rx.recv().context("worker dropped response")?
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Closing the queues (dropping senders) ends the worker loops.
+        let workers: Vec<JoinHandle<()>> = self
+            .variants
+            .drain()
+            .filter_map(|(_, mut v)| v.worker.take())
+            .collect();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Per-variant worker: builds its own PJRT engine, then loops forming
+/// batches and answering requests.
+fn worker_loop(
+    model: CompressedModel,
+    features_hlo: &PathBuf,
+    rx: std::sync::mpsc::Receiver<Request>,
+    policy: Policy,
+    metrics: Arc<Metrics>,
+    fc_threads: usize,
+) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    let client = xla::PjRtClient::cpu().context("create PJRT client")?;
+    let engine = Engine::load(&client, features_hlo)?;
+    let feat_dim = model.kind.feature_dim();
+    let batch = policy.max_batch;
+
+    // Constant parameter literals, built once.
+    let mut const_inputs: Vec<Option<xla::Literal>> =
+        Vec::with_capacity(engine.param_names.len());
+    for name in &engine.param_names {
+        match name.as_str() {
+            "x" | "lig" | "prot" => const_inputs.push(None),
+            other => {
+                let t = model
+                    .params
+                    .get(other)
+                    .with_context(|| format!("missing param {other}"))?;
+                let shape: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = match t.dtype {
+                    crate::io::Dtype::F32 => lit_f32(&t.as_f32()?, &shape)?,
+                    _ => lit_i32(&t.as_i32()?, &shape)?,
+                };
+                const_inputs.push(Some(lit));
+            }
+        }
+    }
+
+    while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+        metrics.record_batch(reqs.len());
+        let result = run_batch(
+            &model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
+        );
+        match result {
+            Ok(outputs) => {
+                let out_dim = outputs.cols;
+                for (i, req) in reqs.iter().enumerate() {
+                    let row = outputs.row(i).to_vec();
+                    let _ = req.resp.send(Ok(row));
+                    metrics.responses_total.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency_ns(
+                        req.enqueued.elapsed().as_nanos() as f64,
+                    );
+                }
+                let _ = out_dim;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in &reqs {
+                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute one formed batch: assemble padded inputs → PJRT features →
+/// compressed FC stack → per-request rows.
+fn run_batch(
+    model: &CompressedModel,
+    engine: &Engine,
+    const_inputs: &[Option<xla::Literal>],
+    reqs: &[Request],
+    batch: usize,
+    feat_dim: usize,
+    fc_threads: usize,
+) -> Result<Mat> {
+    anyhow::ensure!(reqs.len() <= batch, "batch overflow");
+    // Per-batch example literals, keyed by positional slot; constant
+    // parameter literals are borrowed from `const_inputs` (built once at
+    // worker start — the §Perf "no per-batch re-upload" point).
+    let mut batch_lits: HashMap<usize, xla::Literal> = HashMap::new();
+    for (i, name) in engine.param_names.iter().enumerate() {
+        match name.as_str() {
+            "x" => {
+                let per: usize = match &reqs[0].input {
+                    Input::Image(v) => v.len(),
+                    _ => bail!("variant expects images"),
+                };
+                let mut buf = vec![0.0f32; batch * per];
+                for (r, req) in reqs.iter().enumerate() {
+                    match &req.input {
+                        Input::Image(v) => {
+                            anyhow::ensure!(v.len() == per, "ragged image input");
+                            buf[r * per..(r + 1) * per].copy_from_slice(v);
+                        }
+                        _ => bail!("mixed input kinds in batch"),
+                    }
+                }
+                // image shape from the engine: infer (32,32,C)
+                let c = per / (32 * 32);
+                batch_lits.insert(
+                    i,
+                    lit_f32(&buf, &[batch as i64, 32, 32, c as i64])?,
+                );
+            }
+            "lig" | "prot" => {
+                let pick = |inp: &Input| -> Result<Vec<i32>> {
+                    match inp {
+                        Input::Tokens { lig, prot } => Ok(if name == "lig" {
+                            lig.clone()
+                        } else {
+                            prot.clone()
+                        }),
+                        _ => bail!("variant expects token inputs"),
+                    }
+                };
+                let per = pick(&reqs[0].input)?.len();
+                let mut buf = vec![0i32; batch * per];
+                for (r, req) in reqs.iter().enumerate() {
+                    let v = pick(&req.input)?;
+                    anyhow::ensure!(v.len() == per, "ragged token input");
+                    buf[r * per..(r + 1) * per].copy_from_slice(&v);
+                }
+                batch_lits.insert(i, lit_i32(&buf, &[batch as i64, per as i64])?);
+            }
+            _ => {}
+        }
+    }
+    // Positional borrow list.
+    let ordered: Vec<&xla::Literal> = engine
+        .param_names
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            batch_lits
+                .get(&i)
+                .or_else(|| const_inputs[i].as_ref())
+                .expect("every input slot filled")
+        })
+        .collect();
+    let feats_flat = engine.run_borrowed(&ordered)?.to_vec::<f32>()?;
+    anyhow::ensure!(feats_flat.len() == batch * feat_dim, "feature shape mismatch");
+    let feats = Mat::from_vec(batch, feat_dim, feats_flat);
+    Ok(model.fc_forward(&feats, fc_threads))
+}
+
+/// Ground-truth helper for tests/examples: pull request inputs straight
+/// from a test set.
+pub fn request_from_test_set(test: &TestSet, idx: usize) -> Result<Input> {
+    match test {
+        TestSet::Cls { x, .. } => {
+            let per: usize = x.shape[1..].iter().product();
+            let data = x.as_f32()?;
+            Ok(Input::Image(data[idx * per..(idx + 1) * per].to_vec()))
+        }
+        TestSet::Reg { lig, prot, .. } => {
+            let lp: usize = lig.shape[1..].iter().product();
+            let pp: usize = prot.shape[1..].iter().product();
+            let l = lig.as_i32()?;
+            let p = prot.as_i32()?;
+            Ok(Input::Tokens {
+                lig: l[idx * lp..(idx + 1) * lp].to_vec(),
+                prot: p[idx * pp..(idx + 1) * pp].to_vec(),
+            })
+        }
+    }
+}

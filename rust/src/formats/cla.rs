@@ -1,0 +1,308 @@
+//! CLA-lite — a faithful simplification of Compressed Linear Algebra
+//! (Elgohary et al., VLDB J. 2018), the strongest external baseline in
+//! the paper's Fig. 1 comparison.
+//!
+//! Real CLA co-codes column *groups* with {RLE, OLE, DDC, UC} encodings
+//! chosen by a sampling-based compression planner. CLA-lite keeps the
+//! essential mechanics — per-column encoding selection among the same
+//! four schemes by exact size costing, and matrix-vector products
+//! executed directly on each encoding — and drops column grouping (our
+//! weight matrices have no cross-column value correlation to exploit).
+//! The qualitative position CLA occupies in Fig. 1 (between the Scipy
+//! formats and HAC/sHAC in size; competitive dot speed) is preserved.
+//! See DESIGN.md §2 for the substitution note.
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
+use crate::mat::Mat;
+
+/// One encoded column.
+#[derive(Debug, Clone)]
+enum ColEnc {
+    /// Run-length encoding: (value, run) pairs covering all n rows.
+    Rle(Vec<(f32, u32)>),
+    /// Offset-list encoding: per distinct non-zero value, the sorted row
+    /// offsets where it occurs (zeros implicit).
+    Ole { values: Vec<f32>, offsets: Vec<Vec<u32>> },
+    /// Dense dictionary coding: per-column codebook + one pointer per row.
+    Ddc { dict: Vec<f32>, idx: Vec<u16> },
+    /// Uncompressed column.
+    Uc(Vec<f32>),
+}
+
+impl ColEnc {
+    /// Exact storage cost in bits under the paper-style accounting
+    /// (values at b bits; OLE offsets at 16 bits as in CLA; DDC pointers
+    /// at the minimal byte width; +1 word per column of header).
+    fn size_bits(&self) -> u64 {
+        let header = WORD_BITS;
+        header
+            + match self {
+                ColEnc::Rle(runs) => runs.len() as u64 * (WORD_BITS + WORD_BITS),
+                ColEnc::Ole { values, offsets } => {
+                    values.len() as u64 * WORD_BITS
+                        + offsets.iter().map(|o| o.len() as u64 * 16 + 32).sum::<u64>()
+                }
+                ColEnc::Ddc { dict, idx } => {
+                    let ptr = index_map_pointer_bits(dict.len().max(1) as u64);
+                    dict.len() as u64 * WORD_BITS + idx.len() as u64 * ptr
+                }
+                ColEnc::Uc(vals) => vals.len() as u64 * WORD_BITS,
+            }
+    }
+
+    /// Column dot: Σ_i x[i]·col[i].
+    fn dot(&self, x: &[f32]) -> f32 {
+        match self {
+            ColEnc::Rle(runs) => {
+                let mut sum = 0.0f32;
+                let mut i = 0usize;
+                for &(v, run) in runs {
+                    if v != 0.0 {
+                        for &xi in &x[i..i + run as usize] {
+                            sum += xi * v;
+                        }
+                    }
+                    i += run as usize;
+                }
+                sum
+            }
+            ColEnc::Ole { values, offsets } => {
+                let mut sum = 0.0f32;
+                for (v, offs) in values.iter().zip(offsets.iter()) {
+                    let mut acc = 0.0f32;
+                    for &o in offs {
+                        acc += x[o as usize];
+                    }
+                    sum += acc * v;
+                }
+                sum
+            }
+            ColEnc::Ddc { dict, idx } => {
+                let mut sum = 0.0f32;
+                for (&p, &xi) in idx.iter().zip(x.iter()) {
+                    sum += xi * dict[p as usize];
+                }
+                sum
+            }
+            ColEnc::Uc(vals) => {
+                vals.iter().zip(x.iter()).map(|(&v, &xi)| v * xi).sum()
+            }
+        }
+    }
+
+    fn materialize(&self, out: &mut [f32]) {
+        match self {
+            ColEnc::Rle(runs) => {
+                let mut i = 0usize;
+                for &(v, run) in runs {
+                    for o in out[i..i + run as usize].iter_mut() {
+                        *o = v;
+                    }
+                    i += run as usize;
+                }
+            }
+            ColEnc::Ole { values, offsets } => {
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                for (v, offs) in values.iter().zip(offsets.iter()) {
+                    for &o in offs {
+                        out[o as usize] = *v;
+                    }
+                }
+            }
+            ColEnc::Ddc { dict, idx } => {
+                for (o, &p) in out.iter_mut().zip(idx.iter()) {
+                    *o = dict[p as usize];
+                }
+            }
+            ColEnc::Uc(vals) => out.copy_from_slice(vals),
+        }
+    }
+}
+
+/// Build each candidate encoding for a column and keep the smallest.
+fn encode_column(col: &[f32]) -> ColEnc {
+    // RLE
+    let mut runs: Vec<(f32, u32)> = Vec::new();
+    for &v in col {
+        match runs.last_mut() {
+            Some((rv, run)) if rv.to_bits() == v.to_bits() && *run < u32::MAX => {
+                *run += 1
+            }
+            _ => runs.push((v, 1)),
+        }
+    }
+    // distinct values, sorted (shared by OLE / DDC)
+    let mut distinct: Vec<f32> = col.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    // OLE over non-zero values
+    let nz_values: Vec<f32> = distinct.iter().copied().filter(|&v| v != 0.0).collect();
+    let mut offsets: Vec<Vec<u32>> = vec![Vec::new(); nz_values.len()];
+    for (i, &v) in col.iter().enumerate() {
+        if v != 0.0 {
+            let vi = nz_values
+                .binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                .unwrap();
+            offsets[vi].push(i as u32);
+        }
+    }
+    // DDC (u16 pointers; bail to UC if too many distinct values)
+    let ddc = if distinct.len() <= u16::MAX as usize + 1 {
+        let idx: Vec<u16> = col
+            .iter()
+            .map(|&v| {
+                distinct
+                    .binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                    .unwrap() as u16
+            })
+            .collect();
+        Some(ColEnc::Ddc { dict: distinct.clone(), idx })
+    } else {
+        None
+    };
+
+    let mut candidates: Vec<ColEnc> = vec![
+        ColEnc::Rle(runs),
+        ColEnc::Ole { values: nz_values, offsets },
+        ColEnc::Uc(col.to_vec()),
+    ];
+    if let Some(d) = ddc {
+        candidates.push(d);
+    }
+    candidates
+        .into_iter()
+        .min_by_key(|e| e.size_bits())
+        .expect("non-empty candidates")
+}
+
+#[derive(Debug, Clone)]
+pub struct Cla {
+    rows: usize,
+    cols: usize,
+    columns: Vec<ColEnc>,
+}
+
+impl Cla {
+    pub fn compress(w: &Mat) -> Self {
+        let mut columns = Vec::with_capacity(w.cols);
+        let mut col = vec![0.0f32; w.rows];
+        for j in 0..w.cols {
+            for i in 0..w.rows {
+                col[i] = w.get(i, j);
+            }
+            columns.push(encode_column(&col));
+        }
+        Cla { rows: w.rows, cols: w.cols, columns }
+    }
+
+    /// Distribution of chosen encodings (diagnostics for the bench logs).
+    pub fn scheme_histogram(&self) -> [usize; 4] {
+        let mut h = [0usize; 4];
+        for c in &self.columns {
+            match c {
+                ColEnc::Rle(_) => h[0] += 1,
+                ColEnc::Ole { .. } => h[1] += 1,
+                ColEnc::Ddc { .. } => h[2] += 1,
+                ColEnc::Uc(_) => h[3] += 1,
+            }
+        }
+        h
+    }
+}
+
+impl CompressedMatrix for Cla {
+    fn name(&self) -> &'static str {
+        "cla"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        self.columns.iter().map(|c| c.size_bits()).sum()
+    }
+
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        self.columns.iter().map(|c| c.dot(x)).collect()
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        let mut col = vec![0.0f32; self.rows];
+        for (j, enc) in self.columns.iter().enumerate() {
+            enc.materialize(&mut col);
+            for i in 0..self.rows {
+                m.set(i, j, col[i]);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::exercise_format;
+    use crate::formats::{Coo, Csc};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0xC1A);
+        exercise_format(Cla::compress, &mut rng);
+    }
+
+    #[test]
+    fn constant_column_prefers_rle() {
+        let m = Mat::from_vec(100, 1, vec![3.5; 100]);
+        let c = Cla::compress(&m);
+        assert_eq!(c.scheme_histogram(), [1, 0, 0, 0]);
+        assert!(c.size_bits() < 100 * 32);
+    }
+
+    #[test]
+    fn sparse_column_prefers_ole() {
+        // 1000 rows, 5 non-zeros of the same value: OLE ≈ 32+5·16+32 bits.
+        let mut data = vec![0.0f32; 1000];
+        for i in [10usize, 200, 400, 600, 900] {
+            data[i] = 1.25;
+        }
+        let m = Mat::from_vec(1000, 1, data);
+        let c = Cla::compress(&m);
+        let h = c.scheme_histogram();
+        // RLE also does well here (few runs... no: runs = 11), OLE wins.
+        assert_eq!(h[1], 1, "hist {h:?}");
+    }
+
+    #[test]
+    fn quantized_dense_column_prefers_ddc() {
+        let mut rng = Prng::seeded(0xDD);
+        // Dense column with 16 distinct shuffled values → many runs, DDC wins.
+        let data: Vec<f32> =
+            (0..512).map(|_| (rng.gen_range(16) as f32) * 0.1 + 0.05).collect();
+        let m = Mat::from_vec(512, 1, data);
+        let c = Cla::compress(&m);
+        assert_eq!(c.scheme_histogram()[2], 1);
+    }
+
+    #[test]
+    fn beats_scipy_formats_on_quantized_sparse() {
+        // The Fig. 1 ordering: CLA smaller than CSC/COO on pruned+quantized.
+        let mut rng = Prng::seeded(0xC1B);
+        let m = Mat::sparse_quantized(512, 256, 0.1, 32, &mut rng);
+        let cla = Cla::compress(&m);
+        let csc = Csc::compress(&m);
+        let coo = Coo::compress(&m);
+        assert!(cla.size_bits() < csc.size_bits());
+        assert!(cla.size_bits() < coo.size_bits());
+    }
+}

@@ -1,0 +1,134 @@
+//! Compressed Sparse Column (paper Sect. IV-A): arrays `nz` (values by
+//! column), `ri` (row indices), `cb` (column begin offsets, length m+1).
+//! Occupancy ψ_CSC = (2q + m + 1)/(nm) under b-bit-per-element accounting
+//! (the paper's footnote 1 charges `ri` at b bits as well).
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::WORD_BITS;
+use crate::mat::Mat;
+
+#[derive(Debug, Clone)]
+pub struct Csc {
+    rows: usize,
+    cols: usize,
+    /// Non-zero values, column-major order.
+    pub nz: Vec<f32>,
+    /// Row index of each entry of `nz`.
+    pub ri: Vec<u32>,
+    /// cb[j]..cb[j+1] is the nz-range of column j; len = cols + 1.
+    pub cb: Vec<u32>,
+}
+
+impl Csc {
+    pub fn compress(w: &Mat) -> Self {
+        let (n, m) = (w.rows, w.cols);
+        let mut nz = Vec::new();
+        let mut ri = Vec::new();
+        let mut cb = Vec::with_capacity(m + 1);
+        cb.push(0u32);
+        for j in 0..m {
+            for i in 0..n {
+                let v = w.get(i, j);
+                if v != 0.0 {
+                    nz.push(v);
+                    ri.push(i as u32);
+                }
+            }
+            cb.push(nz.len() as u32);
+        }
+        Csc { rows: n, cols: m, nz, ri, cb }
+    }
+
+    /// Number of stored non-zeros `q`.
+    pub fn nnz(&self) -> usize {
+        self.nz.len()
+    }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        nz: Vec<f32>,
+        ri: Vec<u32>,
+        cb: Vec<u32>,
+    ) -> Csc {
+        assert_eq!(cb.len(), cols + 1);
+        assert_eq!(ri.len(), nz.len());
+        Csc { rows, cols, nz, ri, cb }
+    }
+}
+
+impl CompressedMatrix for Csc {
+    fn name(&self) -> &'static str {
+        "csc"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        // (2q + m + 1) b-bit words (paper Sect. IV-A).
+        (2 * self.nz.len() as u64 + self.cols as u64 + 1) * WORD_BITS
+    }
+
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        for j in 0..self.cols {
+            let (lo, hi) = (self.cb[j] as usize, self.cb[j + 1] as usize);
+            let mut sum = 0.0f32;
+            for t in lo..hi {
+                sum += x[self.ri[t] as usize] * self.nz[t];
+            }
+            out[j] = sum;
+        }
+        out
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for t in self.cb[j] as usize..self.cb[j + 1] as usize {
+                m.set(self.ri[t] as usize, j, self.nz[t]);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::{example2, exercise_format};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0xC5C);
+        exercise_format(Csc::compress, &mut rng);
+    }
+
+    #[test]
+    fn paper_example2_arrays() {
+        // The paper's Example 2 (0-based indices here; the paper is 1-based):
+        // nz = (1,2,10,3,4,5,6), ri = (1,3,2,3,1,3,5)−1, cb = (1,3,5,6,6,8)−1.
+        let c = Csc::compress(&example2());
+        assert_eq!(c.nz, vec![1.0, 2.0, 10.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(c.ri, vec![0, 2, 1, 2, 0, 2, 4]);
+        assert_eq!(c.cb, vec![0, 2, 4, 5, 5, 7]);
+    }
+
+    #[test]
+    fn occupancy_matches_formula() {
+        let c = Csc::compress(&example2());
+        // q=7, m=5: (2·7 + 5 + 1)·32 bits
+        assert_eq!(c.size_bits(), 20 * 32);
+        let psi = c.psi();
+        assert!((psi - 20.0 / 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! Compressed Sparse Row — the CSC dual used as a Fig. 1 baseline
+//! (stores column indices of non-zeros, rows delimited by `rb`).
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::WORD_BITS;
+use crate::mat::Mat;
+
+#[derive(Debug, Clone)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Non-zero values, row-major order.
+    pub nz: Vec<f32>,
+    /// Column index of each entry of `nz`.
+    pub ci: Vec<u32>,
+    /// rb[i]..rb[i+1] is the nz-range of row i; len = rows + 1.
+    pub rb: Vec<u32>,
+}
+
+impl Csr {
+    pub fn compress(w: &Mat) -> Self {
+        let (n, m) = (w.rows, w.cols);
+        let mut nz = Vec::new();
+        let mut ci = Vec::new();
+        let mut rb = Vec::with_capacity(n + 1);
+        rb.push(0u32);
+        for i in 0..n {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    nz.push(v);
+                    ci.push(j as u32);
+                }
+            }
+            rb.push(nz.len() as u32);
+        }
+        Csr { rows: n, cols: m, nz, ci, rb }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nz.len()
+    }
+}
+
+impl CompressedMatrix for Csr {
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        // (2q + n + 1) b-bit words — symmetric to CSC accounting.
+        (2 * self.nz.len() as u64 + self.rows as u64 + 1) * WORD_BITS
+    }
+
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for t in self.rb[i] as usize..self.rb[i + 1] as usize {
+                out[self.ci[t] as usize] += xi * self.nz[t];
+            }
+        }
+        out
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for t in self.rb[i] as usize..self.rb[i + 1] as usize {
+                m.set(i, self.ci[t] as usize, self.nz[t]);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::{example2, exercise_format};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0xC52);
+        exercise_format(Csr::compress, &mut rng);
+    }
+
+    #[test]
+    fn example2_row_order() {
+        let c = Csr::compress(&example2());
+        assert_eq!(c.nz, vec![1.0, 4.0, 10.0, 2.0, 3.0, 5.0, 6.0]);
+        assert_eq!(c.ci, vec![0, 2, 1, 0, 1, 4, 4]);
+        assert_eq!(c.rb, vec![0, 2, 3, 6, 6, 7]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Uncompressed dense format — the `Numpy` baseline of Fig. 1: fastest
+//! dot, full b·n·m footprint.
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::WORD_BITS;
+use crate::mat::Mat;
+
+/// Dense FP32 storage (one b-bit word per entry).
+#[derive(Debug, Clone)]
+pub struct Dense {
+    mat: Mat,
+}
+
+impl Dense {
+    pub fn compress(w: &Mat) -> Self {
+        Dense { mat: w.clone() }
+    }
+
+    pub fn from_mat(mat: Mat) -> Self {
+        Dense { mat }
+    }
+}
+
+impl CompressedMatrix for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn rows(&self) -> usize {
+        self.mat.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.mat.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        (self.mat.numel() as u64) * WORD_BITS
+    }
+
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        self.mat.vecmat(x)
+    }
+
+    fn decompress(&self) -> Mat {
+        self.mat.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::exercise_format;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0xD0);
+        exercise_format(Dense::compress, &mut rng);
+    }
+
+    #[test]
+    fn psi_is_one() {
+        let m = Mat::zeros(10, 20);
+        let d = Dense::compress(&m);
+        assert!((d.psi() - 1.0).abs() < 1e-12);
+        assert_eq!(d.size_bits(), 200 * 32);
+    }
+}

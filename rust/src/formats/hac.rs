@@ -1,0 +1,432 @@
+//! HAC — Huffman Address Map compression (paper Sect. IV-B).
+//!
+//! The matrix is serialized in column order as one Huffman codeword per
+//! entry; the zero symbol is part of the code (the paper's "to get
+//! uniquely decodable strings we also include zeroes"), giving q+1
+//! codewords for a matrix with q distinct non-null values. The bit
+//! stream is stored as an array of b-bit memory words, and the dot
+//! product (Alg. 1) runs directly on the stream, keeping only one
+//! decoded weight in registers at a time.
+//!
+//! Beyond the paper: `with_column_index` materializes the bit offset of
+//! each column (the §VI "future work" extension), enabling the
+//! column-parallel dot [`Hac::vecmat_par_cols`]; the extra m words are
+//! charged in `size_bits` when the index is built.
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::{dict_bits, WORD_BITS};
+use crate::huffman::Code;
+use crate::mat::Mat;
+use crate::util::bits::{BitBuf, BitReader, BitWriter};
+
+#[derive(Debug, Clone)]
+pub struct Hac {
+    rows: usize,
+    cols: usize,
+    /// Sorted distinct values of W (including 0 when present) — the
+    /// decoding dictionary H_W^{-1}.
+    pub alphabet: Vec<f32>,
+    code: Code,
+    stream: BitBuf,
+    /// Bit offset of the start of each column (len = cols), present only
+    /// after `with_column_index`.
+    col_offsets: Option<Vec<u64>>,
+}
+
+/// Sorted distinct values of a slice (bit-pattern dedup after ordering).
+fn sorted_alphabet(data: &[f32]) -> Vec<f32> {
+    let mut v: Vec<f32> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    v
+}
+
+impl Hac {
+    pub fn compress(w: &Mat) -> Self {
+        let (n, m) = (w.rows, w.cols);
+        let alphabet = sorted_alphabet(&w.data);
+        let sym_of = |v: f32| -> u32 {
+            alphabet
+                .binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                .expect("value in alphabet") as u32
+        };
+        // Column-order frequency count, then encode.
+        let mut freqs = vec![0u64; alphabet.len()];
+        for &v in &w.data {
+            freqs[sym_of(v) as usize] += 1;
+        }
+        let code = Code::from_freqs(&freqs);
+        let mut writer = BitWriter::with_capacity_bits(
+            code.encoded_bits(&freqs) as usize,
+        );
+        let mut col_offsets = Vec::with_capacity(m);
+        for j in 0..m {
+            col_offsets.push(writer.len_bits() as u64);
+            for i in 0..n {
+                let s = sym_of(w.get(i, j));
+                let l = code.lengths[s as usize];
+                writer.write_bits(code.codes[s as usize], l);
+            }
+        }
+        let stream = writer.finish();
+        // Column index is opt-in (paper §VI extension); recompute cheaply
+        // later rather than holding it by default.
+        let _ = col_offsets;
+        Hac { rows: n, cols: m, alphabet, code, stream, col_offsets: None }
+    }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        alphabet: Vec<f32>,
+        code: Code,
+        stream: BitBuf,
+    ) -> Hac {
+        Hac { rows, cols, alphabet, code, stream, col_offsets: None }
+    }
+
+    /// Canonical code lengths per alphabet symbol (the only dictionary
+    /// state needed on disk).
+    pub fn code_lengths(&self) -> &[u32] {
+        &self.code.lengths
+    }
+
+    /// The encoded bit stream.
+    pub fn stream_ref(&self) -> &BitBuf {
+        &self.stream
+    }
+
+    /// Number of codewords (the paper's q+1 when W has q distinct
+    /// non-null values and at least one zero).
+    pub fn alphabet_size(&self) -> usize {
+        self.alphabet.len()
+    }
+
+    /// Length of the encoded stream in bits (before word padding).
+    pub fn stream_bits(&self) -> usize {
+        self.stream.len()
+    }
+
+    /// Number of b-bit memory words N = ceil(|HAC(W)|/b).
+    pub fn n_words(&self) -> u64 {
+        (self.stream.len() as u64 + WORD_BITS - 1) / WORD_BITS
+    }
+
+    /// Build the per-column bit-offset index (paper §VI), enabling
+    /// [`Hac::vecmat_par_cols`]. Costs one full decode pass.
+    pub fn with_column_index(mut self) -> Self {
+        let mut offsets = Vec::with_capacity(self.cols);
+        let mut r = BitReader::new(&self.stream);
+        for _j in 0..self.cols {
+            offsets.push(r.pos() as u64);
+            for _i in 0..self.rows {
+                self.code.decode_next(&mut r).expect("stream truncated");
+            }
+        }
+        self.col_offsets = Some(offsets);
+        self
+    }
+
+    pub fn has_column_index(&self) -> bool {
+        self.col_offsets.is_some()
+    }
+
+    /// Alg. 1 dot using the bit-serial NCW decoder — the paper's
+    /// unoptimized procedure; kept for the §Perf before/after comparison.
+    pub fn vecmat_serial_decode(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        let mut r = BitReader::new(&self.stream);
+        for oj in out.iter_mut() {
+            let mut sum = 0.0f32;
+            for xi in x.iter().take(self.rows) {
+                let s = self.code.decode_next_serial(&mut r).expect("truncated");
+                sum += xi * self.alphabet[s as usize];
+            }
+            *oj = sum;
+        }
+        out
+    }
+
+    /// Alg. 1 with the single-symbol LUT decoder (one probe per symbol)
+    /// — kept for the §Perf decode-strategy ablation.
+    pub fn vecmat_single_lut(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        let mut r = BitReader::new(&self.stream);
+        for oj in out.iter_mut() {
+            let mut sum = 0.0f32;
+            for &xi in x.iter() {
+                let s = self.code.decode_next(&mut r).expect("truncated");
+                sum += xi * self.alphabet[s as usize];
+            }
+            *oj = sum;
+        }
+        out
+    }
+
+    /// Column-parallel dot over the §VI offset index.
+    pub fn vecmat_par_cols(&self, x: &[f32], threads: usize) -> Vec<f32> {
+        let offsets = self
+            .col_offsets
+            .as_ref()
+            .expect("call with_column_index() before vecmat_par_cols");
+        assert_eq!(x.len(), self.rows);
+        let t = threads.max(1).min(self.cols.max(1));
+        let mut out = vec![0.0f32; self.cols];
+        if self.cols == 0 {
+            return out;
+        }
+        let chunk = (self.cols + t - 1) / t;
+        let mut slices: Vec<(usize, &mut [f32])> = Vec::new();
+        {
+            let mut rem: &mut [f32] = &mut out;
+            let mut start = 0usize;
+            while start < self.cols {
+                let here = chunk.min(self.cols - start);
+                let (head, tail) = rem.split_at_mut(here);
+                slices.push((start, head));
+                rem = tail;
+                start += here;
+            }
+        }
+        std::thread::scope(|scope| {
+            for (start, out_slice) in slices {
+                scope.spawn(move || {
+                    let mut r = BitReader::new(&self.stream);
+                    r.seek(offsets[start] as usize);
+                    for oj in out_slice.iter_mut() {
+                        let mut sum = 0.0f32;
+                        for &xi in x.iter() {
+                            let s = self.code.decode_next(&mut r).expect("truncated");
+                            sum += xi * self.alphabet[s as usize];
+                        }
+                        *oj = sum;
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+impl CompressedMatrix for Hac {
+    fn name(&self) -> &'static str {
+        "hac"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        let mut bits = self.n_words() * WORD_BITS
+            + dict_bits(self.alphabet.len() as u64, WORD_BITS);
+        if self.col_offsets.is_some() {
+            bits += self.cols as u64 * WORD_BITS; // §VI offset vector
+        }
+        bits
+    }
+
+    /// Alg. 1 (`Dot_HAC`) with the multi-symbol LUT decoder: one probe
+    /// can retire a whole run of short codewords (e.g. the 1-bit zero
+    /// symbol dominating a pruned stream) — see EXPERIMENTS.md §Perf.
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        if self.rows == 0 || self.cols == 0 {
+            return out;
+        }
+        let mut r = BitReader::new(&self.stream);
+        let total = self.rows * self.cols;
+        let mut run = [0u32; 8];
+        let mut t = 0usize; // flat symbol index (column-major)
+        let mut row = 0usize;
+        let mut col = 0usize;
+        let mut sum = 0.0f32;
+        while t < total {
+            // runs only while safely away from the zero-padded tail
+            let n = if t + 8 <= total {
+                self.code.decode_run(&mut r, &mut run)
+            } else {
+                0
+            };
+            let n = if n == 0 {
+                run[0] = self.code.decode_next(&mut r).expect("truncated");
+                1
+            } else {
+                n
+            };
+            for &s in &run[..n] {
+                sum += x[row] * self.alphabet[s as usize];
+                row += 1;
+                if row == self.rows {
+                    out[col] = sum;
+                    sum = 0.0;
+                    row = 0;
+                    col += 1;
+                }
+            }
+            t += n;
+        }
+        out
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        let mut r = BitReader::new(&self.stream);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                let s = self.code.decode_next(&mut r).expect("truncated");
+                m.set(i, j, self.alphabet[s as usize]);
+            }
+        }
+        m
+    }
+
+    /// Decode-once batched product: the stream is scanned a single time
+    /// and each decoded weight is applied to every batch row (an AXPY
+    /// over the batch), amortizing the Huffman decode B× (§Perf).
+    fn matmul_batch(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
+        let batch = x.rows;
+        let mut out = Mat::zeros(batch, self.cols);
+        if self.rows == 0 || self.cols == 0 || batch == 0 {
+            return out;
+        }
+        let mut r = BitReader::new(&self.stream);
+        let total = self.rows * self.cols;
+        let mut run = [0u32; 8];
+        let mut t = 0usize;
+        let mut row = 0usize;
+        let mut col = 0usize;
+        while t < total {
+            let n = if t + 8 <= total {
+                self.code.decode_run(&mut r, &mut run)
+            } else {
+                0
+            };
+            let n = if n == 0 {
+                run[0] = self.code.decode_next(&mut r).expect("truncated");
+                1
+            } else {
+                n
+            };
+            for &s in &run[..n] {
+                let v = self.alphabet[s as usize];
+                if v != 0.0 {
+                    for b in 0..batch {
+                        out.data[b * self.cols + col] +=
+                            v * x.data[b * self.rows + row];
+                    }
+                }
+                row += 1;
+                if row == self.rows {
+                    row = 0;
+                    col += 1;
+                }
+            }
+            t += n;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::{example2, exercise_format};
+    use crate::huffman::bounds::cor1_hac_bits;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0xAC);
+        exercise_format(Hac::compress, &mut rng);
+    }
+
+    #[test]
+    fn example2_alphabet_includes_zero() {
+        let h = Hac::compress(&example2());
+        // q = 7 distinct non-nulls + the zero symbol = 8 codewords.
+        assert_eq!(h.alphabet_size(), 8);
+        assert!(h.alphabet.contains(&0.0));
+    }
+
+    #[test]
+    fn serial_and_lut_dots_agree() {
+        let mut rng = Prng::seeded(0xA1);
+        for _ in 0..5 {
+            let m = Mat::sparse_quantized(30, 25, 0.3, 8, &mut rng);
+            let h = Hac::compress(&m);
+            let x: Vec<f32> = (0..30).map(|_| rng.normal() as f32).collect();
+            let a = h.vecmat(&x);
+            let b = h.vecmat_serial_decode(&x);
+            prop::assert_allclose(&a, &b, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn column_index_parallel_dot_matches() {
+        let mut rng = Prng::seeded(0xA2);
+        let m = Mat::sparse_quantized(40, 33, 0.2, 16, &mut rng);
+        let h = Hac::compress(&m).with_column_index();
+        let x: Vec<f32> = (0..40).map(|_| rng.normal() as f32).collect();
+        let seq = h.vecmat(&x);
+        for threads in [1, 2, 3, 8] {
+            let par = h.vecmat_par_cols(&x, threads);
+            prop::assert_allclose(&par, &seq, 1e-5, 1e-5).unwrap();
+        }
+        // index adds m words to the accounting
+        let plain = Hac::compress(&m);
+        assert_eq!(h.size_bits(), plain.size_bits() + 33 * WORD_BITS);
+    }
+
+    #[test]
+    fn prop_size_within_cor1_bound() {
+        prop::check("hac-cor1-bound", Config { cases: 30, seed: 0xB0B }, |rng| {
+            let rows = 4 + rng.gen_range(60);
+            let cols = 4 + rng.gen_range(60);
+            let k = 2 + rng.gen_range(30);
+            let m = Mat::sparse_quantized(rows, cols, 0.8, k, rng);
+            let h = Hac::compress(&m);
+            let k_total = h.alphabet_size() as u64;
+            let bound = cor1_hac_bits(rows as u64, cols as u64, k_total, WORD_BITS);
+            // +1 word of padding slack beyond the bound's exact count.
+            crate::prop_assert!(
+                (h.size_bits() as f64) <= bound + WORD_BITS as f64,
+                "size {} exceeds Cor.1 bound {bound}",
+                h.size_bits()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_matrix_compresses_well() {
+        // Dense k=32 quantized 256×256: ψ should be well below IM's 0.25
+        // plus overhead... HAC ψ ≤ (1+log2 k)/b + 6k/nm ≈ 0.19.
+        let mut rng = Prng::seeded(0xA3);
+        let m = Mat::sparse_quantized(256, 256, 1.0, 32, &mut rng);
+        let h = Hac::compress(&m);
+        assert!(h.psi() < 0.25, "psi {}", h.psi());
+    }
+
+    #[test]
+    fn empty_and_tiny_matrices() {
+        let m = Mat::zeros(0, 0);
+        let h = Hac::compress(&m);
+        assert_eq!(h.vecmat(&[]), Vec::<f32>::new());
+        assert_eq!(h.decompress(), m);
+
+        let m = Mat::from_vec(1, 1, vec![3.0]);
+        let h = Hac::compress(&m);
+        assert_eq!(h.vecmat(&[2.0]), vec![6.0]);
+    }
+}

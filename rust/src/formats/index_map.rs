@@ -1,0 +1,167 @@
+//! Index map (IM) — Han et al.'s weight-sharing storage (paper
+//! Sect. II-B / III-C1): the full n×m matrix of small integer pointers Π
+//! into a codebook `r` of the k representative values. ψ = b̄/b + k/(nm);
+//! the dot pays two memory accesses per weight. Zero (pruned) entries are
+//! just another codebook value — IM does not exploit sparsity, which is
+//! exactly why it loses to sHAC at high pruning in Fig. 1.
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
+use crate::mat::Mat;
+
+/// Pointer array, sized to the codebook (u8 for k ≤ 256, else u16).
+#[derive(Debug, Clone)]
+enum Pointers {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+#[derive(Debug, Clone)]
+pub struct IndexMap {
+    rows: usize,
+    cols: usize,
+    /// Codebook of representative values (includes 0.0 if present).
+    pub codebook: Vec<f32>,
+    idx: Pointers,
+}
+
+impl IndexMap {
+    pub fn compress(w: &Mat) -> Self {
+        // Codebook = sorted distinct values (deterministic layout).
+        let mut values: Vec<f32> = w.data.clone();
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        values.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        let codebook = values;
+        assert!(
+            codebook.len() <= u16::MAX as usize + 1,
+            "index map supports at most 65536 distinct values, got {}",
+            codebook.len()
+        );
+        let lookup = |v: f32| -> usize {
+            codebook
+                .binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                .expect("value must be in codebook")
+        };
+        let idx = if codebook.len() <= 256 {
+            Pointers::U8(w.data.iter().map(|&v| lookup(v) as u8).collect())
+        } else {
+            Pointers::U16(w.data.iter().map(|&v| lookup(v) as u16).collect())
+        };
+        IndexMap { rows: w.rows, cols: w.cols, codebook, idx }
+    }
+
+    pub fn k(&self) -> usize {
+        self.codebook.len()
+    }
+
+    #[inline]
+    fn index_at(&self, flat: usize) -> usize {
+        match &self.idx {
+            Pointers::U8(v) => v[flat] as usize,
+            Pointers::U16(v) => v[flat] as usize,
+        }
+    }
+}
+
+impl CompressedMatrix for IndexMap {
+    fn name(&self) -> &'static str {
+        "im"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        let nm = (self.rows * self.cols) as u64;
+        let bbar = index_map_pointer_bits(self.k().max(1) as u64);
+        bbar * nm + self.k() as u64 * WORD_BITS
+    }
+
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        // Row-major walk: two memory accesses per weight (Π then r),
+        // as the paper describes for IM.
+        match &self.idx {
+            Pointers::U8(idx) => {
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &idx[i * self.cols..(i + 1) * self.cols];
+                    for (o, &p) in out.iter_mut().zip(row.iter()) {
+                        *o += xi * self.codebook[p as usize];
+                    }
+                }
+            }
+            Pointers::U16(idx) => {
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &idx[i * self.cols..(i + 1) * self.cols];
+                    for (o, &p) in out.iter_mut().zip(row.iter()) {
+                        *o += xi * self.codebook[p as usize];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for flat in 0..self.rows * self.cols {
+            m.data[flat] = self.codebook[self.index_at(flat)];
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::{example2, exercise_format};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0x1317);
+        exercise_format(IndexMap::compress, &mut rng);
+    }
+
+    #[test]
+    fn codebook_contains_all_distinct_values() {
+        let im = IndexMap::compress(&example2());
+        assert_eq!(im.k(), 8); // 7 non-zeros + 0
+        assert!(im.codebook.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn occupancy_quarter_for_byte_pointers() {
+        // k ≤ 256 on a large FP32 matrix ⇒ ψ ≈ 1/4 (paper Sect. II-B).
+        let mut rng = Prng::seeded(1);
+        let m = Mat::sparse_quantized(128, 256, 0.9, 30, &mut rng);
+        let im = IndexMap::compress(&m);
+        assert!(im.k() <= 256);
+        let psi = im.psi();
+        assert!((psi - 0.25).abs() < 0.02, "psi {psi}");
+    }
+
+    #[test]
+    fn u16_pointer_path() {
+        // Force > 256 distinct values.
+        let data: Vec<f32> = (0..600).map(|i| i as f32 * 0.5 + 1.0).collect();
+        let m = Mat::from_vec(20, 30, data);
+        let im = IndexMap::compress(&m);
+        assert!(im.k() > 256);
+        assert_eq!(im.decompress(), m);
+        let nm = (20 * 30) as u64;
+        assert_eq!(im.size_bits(), 16 * nm + im.k() as u64 * 32);
+    }
+}

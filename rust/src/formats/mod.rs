@@ -1,0 +1,278 @@
+//! Compressed matrix representations (paper Sect. IV) and the baselines
+//! they are compared against in Fig. 1 / Fig. S2:
+//!
+//! - [`dense`]   — uncompressed reference (`Numpy` row in the figures)
+//! - [`csc`], [`csr`], [`coo`] — classical sparse formats (Scipy rows)
+//! - [`index_map`] — Han et al.'s pointer-into-codebook format (IM)
+//! - [`cla`]     — CLA-lite column co-coding baseline (Elgohary et al.)
+//! - [`hac`]     — Huffman Address Map compression (Sect. IV-B, Alg. 1)
+//! - [`shac`]    — sparse HAC (Sect. IV-C, Alg. 2)
+//!
+//! Every format implements [`CompressedMatrix`]: paper-faithful size
+//! accounting (`size_bits`, with `b = 32`-bit memory words), the
+//! sequential dot `x^T W` computed *directly on the compressed data*, and
+//! `decompress` for lossless round-trip checks. [`par_matmul`] is the
+//! paper's Alg. 3 (row-chunk parallel `X W`).
+
+pub mod cla;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod hac;
+pub mod index_map;
+pub mod lzw;
+pub mod relidx;
+pub mod shac;
+pub mod store;
+
+pub use cla::Cla;
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use hac::Hac;
+pub use index_map::IndexMap;
+pub use lzw::LzAc;
+pub use relidx::RelIdx;
+pub use shac::Shac;
+
+use crate::huffman::bounds::WORD_BITS;
+use crate::mat::Mat;
+
+/// A weight matrix stored in a compressed representation that supports
+/// linear algebra directly on the compressed data.
+pub trait CompressedMatrix: Send + Sync {
+    /// Short format name as used in the paper's figures.
+    fn name(&self) -> &'static str;
+
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+
+    /// Total storage footprint in bits under the paper's accounting
+    /// (b-bit memory words, dictionary overheads included).
+    fn size_bits(&self) -> u64;
+
+    /// `x^T W` computed on the compressed representation
+    /// (`x.len() == rows()`, output length `cols()`).
+    fn vecmat(&self, x: &[f32]) -> Vec<f32>;
+
+    /// Lossless reconstruction of the stored matrix.
+    fn decompress(&self) -> Mat;
+
+    /// Batched product `X W` (X is `batch × rows`). Default: one
+    /// sequential dot per row. Entropy-coded formats override this to
+    /// decode the bitstream ONCE for the whole batch (decode cost
+    /// amortized B×) — the coordinator's FC hot path
+    /// (EXPERIMENTS.md §Perf).
+    fn matmul_batch(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.rows(), "matmul_batch dimension mismatch");
+        let cols = self.cols();
+        let mut out = Mat::zeros(x.rows, cols);
+        for b in 0..x.rows {
+            let y = self.vecmat(x.row(b));
+            out.data[b * cols..(b + 1) * cols].copy_from_slice(&y);
+        }
+        out
+    }
+
+    /// Occupancy ratio ψ = size(W_compressed)/size(W°) for b-bit words.
+    fn psi(&self) -> f64 {
+        let dense_bits = (self.rows() * self.cols()) as u64 * WORD_BITS;
+        if dense_bits == 0 {
+            return 0.0;
+        }
+        self.size_bits() as f64 / dense_bits as f64
+    }
+
+    /// Size in bytes (for figure axes in KB).
+    fn size_bytes(&self) -> f64 {
+        self.size_bits() as f64 / 8.0
+    }
+}
+
+/// Paper Alg. 3 (`ParDot`): evaluate `X W` (X is `batch × rows`) by
+/// splitting the rows of `X` into `threads` chunks, each performing
+/// independent sequential dots on the shared compressed matrix.
+pub fn par_matmul<F: CompressedMatrix + ?Sized>(w: &F, x: &Mat, threads: usize) -> Mat {
+    assert_eq!(x.cols, w.rows(), "par_matmul dimension mismatch");
+    let t = threads.max(1).min(x.rows.max(1));
+    let cols = w.cols();
+    let mut out = Mat::zeros(x.rows, cols);
+    if x.rows == 0 {
+        return out;
+    }
+    let chunk = (x.rows + t - 1) / t; // ceil(n/q), paper line 1
+    let out_chunks: Vec<(usize, &mut [f32])> = {
+        let mut rem: &mut [f32] = &mut out.data;
+        let mut v = Vec::new();
+        let mut start = 0usize;
+        while start < x.rows {
+            let rows_here = chunk.min(x.rows - start);
+            let (head, tail) = rem.split_at_mut(rows_here * cols);
+            v.push((start, head));
+            rem = tail;
+            start += rows_here;
+        }
+        v
+    };
+    std::thread::scope(|scope| {
+        for (start, out_slice) in out_chunks {
+            scope.spawn(move || {
+                let rows_here = out_slice.len() / cols;
+                for r in 0..rows_here {
+                    let y = w.vecmat(x.row(start + r));
+                    out_slice[r * cols..(r + 1) * cols].copy_from_slice(&y);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// All comparison formats built from the same matrix — the Fig. 1 suite.
+pub fn all_formats(w: &Mat) -> Vec<Box<dyn CompressedMatrix>> {
+    vec![
+        Box::new(Dense::compress(w)),
+        Box::new(Csc::compress(w)),
+        Box::new(Csr::compress(w)),
+        Box::new(Coo::compress(w)),
+        Box::new(IndexMap::compress(w)),
+        Box::new(Cla::compress(w)),
+        Box::new(Hac::compress(w)),
+        Box::new(Shac::compress(w)),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// The matrix of the paper's Example 2.
+    pub fn example2() -> Mat {
+        Mat::from_rows(&[
+            &[1.0, 0.0, 4.0, 0.0, 0.0],
+            &[0.0, 10.0, 0.0, 0.0, 0.0],
+            &[2.0, 3.0, 0.0, 0.0, 5.0],
+            &[0.0, 0.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 6.0],
+        ])
+    }
+
+    /// Shared correctness battery every format must pass.
+    pub fn exercise_format<F, C>(compress: C, rng: &mut Prng)
+    where
+        F: CompressedMatrix,
+        C: Fn(&Mat) -> F,
+    {
+        // 1. Example-2 round-trip + dot.
+        let w = example2();
+        let f = compress(&w);
+        assert_eq!((f.rows(), f.cols()), (5, 5));
+        assert_eq!(f.decompress(), w, "{}: lossless round-trip", f.name());
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let got = f.vecmat(&x);
+        let want = w.vecmat(&x);
+        assert_eq!(got, want, "{}: dot on example2", f.name());
+
+        // 2. Degenerate matrices.
+        for m in [
+            Mat::zeros(3, 4),
+            Mat::from_vec(1, 1, vec![2.5]),
+            Mat::from_vec(1, 1, vec![0.0]),
+            Mat::from_vec(2, 3, vec![7.0; 6]), // single distinct value
+            Mat::from_vec(4, 1, vec![0.0, -1.0, 0.0, 3.0]),
+        ] {
+            let f = compress(&m);
+            assert_eq!(f.decompress(), m, "{}: degenerate round-trip", f.name());
+            let x: Vec<f32> = (0..m.rows).map(|i| i as f32 - 1.0).collect();
+            crate::util::proptest::assert_allclose(
+                &f.vecmat(&x),
+                &m.vecmat(&x),
+                1e-6,
+                1e-6,
+            )
+            .unwrap_or_else(|e| panic!("{}: degenerate dot: {e}", f.name()));
+        }
+
+        // 3. Randomized matrices across sparsity/quantization levels.
+        for _ in 0..10 {
+            let rows = 1 + rng.gen_range(60);
+            let cols = 1 + rng.gen_range(60);
+            let s = rng.next_f64();
+            let k = 1 + rng.gen_range(40);
+            let m = Mat::sparse_quantized(rows, cols, s, k, rng);
+            let f = compress(&m);
+            assert_eq!(f.decompress(), m, "{}: random round-trip", f.name());
+            let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+            crate::util::proptest::assert_allclose(
+                &f.vecmat(&x),
+                &m.vecmat(&x),
+                1e-4,
+                1e-4,
+            )
+            .unwrap_or_else(|e| panic!("{}: random dot: {e}", f.name()));
+            // par dot consistency
+            let xb = Mat::from_vec(3, rows, {
+                let mut v = Vec::with_capacity(3 * rows);
+                for _ in 0..3 * rows {
+                    v.push(rng.normal() as f32);
+                }
+                v
+            });
+            let par = par_matmul(&f, &xb, 2);
+            let seq = m.matmul(&xb);
+            assert!(
+                par.max_abs_diff(&seq) < 1e-3,
+                "{}: par_matmul mismatch",
+                f.name()
+            );
+            // decode-once batched path must agree too
+            let batched = f.matmul_batch(&xb);
+            assert!(
+                batched.max_abs_diff(&seq) < 1e-3,
+                "{}: matmul_batch mismatch",
+                f.name()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn par_matmul_empty_batch() {
+        let w = Dense::compress(&Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]));
+        let x = Mat::zeros(0, 2);
+        let out = par_matmul(&w, &x, 4);
+        assert_eq!((out.rows, out.cols), (0, 2));
+    }
+
+    #[test]
+    fn par_matmul_more_threads_than_rows() {
+        let mut rng = Prng::seeded(17);
+        let m = Mat::gaussian(6, 4, 1.0, &mut rng);
+        let w = Dense::compress(&m);
+        let x = Mat::gaussian(2, 6, 1.0, &mut rng);
+        let out = par_matmul(&w, &x, 16);
+        assert!(out.max_abs_diff(&m.matmul(&x)) < 1e-5);
+    }
+
+    #[test]
+    fn all_formats_agree_on_shared_matrix() {
+        let mut rng = Prng::seeded(0xF16);
+        let m = Mat::sparse_quantized(40, 30, 0.2, 16, &mut rng);
+        let x: Vec<f32> = (0..40).map(|_| rng.normal() as f32).collect();
+        let want = m.vecmat(&x);
+        for f in all_formats(&m) {
+            crate::util::proptest::assert_allclose(&f.vecmat(&x), &want, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", f.name()));
+            assert_eq!(f.decompress(), m, "{} lossless", f.name());
+            assert!(f.size_bits() > 0);
+        }
+    }
+}

@@ -1,0 +1,440 @@
+//! sHAC — sparse Huffman Address Map compression (paper Sect. IV-C).
+//!
+//! A bitwise CSC: the non-zero vector `nz` is Huffman-coded (zero is
+//! *excluded* from the code, unlike HAC), while `ri` and `cb` stay
+//! uncompressed at b bits per entry. The dot product (Alg. 2) walks the
+//! compressed `nz` stream once, using `cb` to skip empty columns and
+//! `ri` to address the input vector.
+
+use crate::formats::CompressedMatrix;
+use crate::huffman::bounds::{dict_bits, WORD_BITS};
+use crate::huffman::Code;
+use crate::mat::Mat;
+use crate::util::bits::{BitBuf, BitReader, BitWriter};
+
+#[derive(Debug, Clone)]
+pub struct Shac {
+    rows: usize,
+    cols: usize,
+    /// Sorted distinct non-zero values — the decoding dictionary H_nz^{-1}.
+    pub alphabet: Vec<f32>,
+    code: Code,
+    /// Huffman-coded `nz`, column-major.
+    stream: BitBuf,
+    /// Row index of each non-zero (column-major order), b bits each.
+    pub ri: Vec<u32>,
+    /// Column boundaries into nz; len = cols + 1.
+    pub cb: Vec<u32>,
+    /// Bit offset of each column's first codeword (len = cols) — the
+    /// paper's §VI offset-vector extension enabling column-parallel
+    /// dots; present only after [`Shac::with_column_index`].
+    col_offsets: Option<Vec<u64>>,
+}
+
+impl Shac {
+    pub fn compress(w: &Mat) -> Self {
+        let (n, m) = (w.rows, w.cols);
+        // CSC pass, collecting the non-zero alphabet.
+        let mut nz = Vec::new();
+        let mut ri = Vec::new();
+        let mut cb = Vec::with_capacity(m + 1);
+        cb.push(0u32);
+        for j in 0..m {
+            for i in 0..n {
+                let v = w.get(i, j);
+                if v != 0.0 {
+                    nz.push(v);
+                    ri.push(i as u32);
+                }
+            }
+            cb.push(nz.len() as u32);
+        }
+        let mut alphabet: Vec<f32> = nz.clone();
+        alphabet.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        alphabet.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        let sym_of = |v: f32| -> u32 {
+            alphabet
+                .binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                .expect("value in alphabet") as u32
+        };
+        let mut freqs = vec![0u64; alphabet.len()];
+        for &v in &nz {
+            freqs[sym_of(v) as usize] += 1;
+        }
+        let code = Code::from_freqs(&freqs);
+        let mut writer =
+            BitWriter::with_capacity_bits(code.encoded_bits(&freqs) as usize);
+        for &v in &nz {
+            let s = sym_of(v);
+            writer.write_bits(code.codes[s as usize], code.lengths[s as usize]);
+        }
+        Shac {
+            rows: n,
+            cols: m,
+            alphabet,
+            code,
+            stream: writer.finish(),
+            ri,
+            cb,
+            col_offsets: None,
+        }
+    }
+
+    /// Build the per-column bit-offset index (paper §VI), enabling
+    /// [`Shac::vecmat_par_cols`]. One decode pass.
+    pub fn with_column_index(mut self) -> Self {
+        let mut offsets = Vec::with_capacity(self.cols);
+        let mut r = BitReader::new(&self.stream);
+        let mut pos = 0usize;
+        for j in 0..self.cols {
+            offsets.push(r.pos() as u64);
+            let end = self.cb[j + 1] as usize;
+            while pos < end {
+                self.code.decode_next(&mut r).expect("truncated");
+                pos += 1;
+            }
+        }
+        self.col_offsets = Some(offsets);
+        self
+    }
+
+    pub fn has_column_index(&self) -> bool {
+        self.col_offsets.is_some()
+    }
+
+    /// Column-parallel Dot_sHAC over the §VI offset index: columns are
+    /// chunked across threads, each seeking into the compressed stream.
+    pub fn vecmat_par_cols(&self, x: &[f32], threads: usize) -> Vec<f32> {
+        let offsets = self
+            .col_offsets
+            .as_ref()
+            .expect("call with_column_index() before vecmat_par_cols");
+        assert_eq!(x.len(), self.rows);
+        let t = threads.max(1).min(self.cols.max(1));
+        let mut out = vec![0.0f32; self.cols];
+        if self.cols == 0 {
+            return out;
+        }
+        let chunk = (self.cols + t - 1) / t;
+        let mut slices: Vec<(usize, &mut [f32])> = Vec::new();
+        {
+            let mut rem: &mut [f32] = &mut out;
+            let mut start = 0usize;
+            while start < self.cols {
+                let here = chunk.min(self.cols - start);
+                let (head, tail) = rem.split_at_mut(here);
+                slices.push((start, head));
+                rem = tail;
+                start += here;
+            }
+        }
+        std::thread::scope(|scope| {
+            for (start, out_slice) in slices {
+                scope.spawn(move || {
+                    let mut r = BitReader::new(&self.stream);
+                    r.seek(offsets[start] as usize);
+                    let mut pos = self.cb[start] as usize;
+                    for (dj, oj) in out_slice.iter_mut().enumerate() {
+                        let end = self.cb[start + dj + 1] as usize;
+                        let mut sum = 0.0f32;
+                        while pos < end {
+                            let s =
+                                self.code.decode_next(&mut r).expect("truncated");
+                            sum += x[self.ri[pos] as usize]
+                                * self.alphabet[s as usize];
+                            pos += 1;
+                        }
+                        *oj = sum;
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        alphabet: Vec<f32>,
+        code: Code,
+        stream: BitBuf,
+        ri: Vec<u32>,
+        cb: Vec<u32>,
+    ) -> Shac {
+        Shac { rows, cols, alphabet, code, stream, ri, cb, col_offsets: None }
+    }
+
+    /// Canonical code lengths per alphabet symbol.
+    pub fn code_lengths(&self) -> &[u32] {
+        &self.code.lengths
+    }
+
+    /// The encoded bit stream.
+    pub fn stream_ref(&self) -> &BitBuf {
+        &self.stream
+    }
+
+    /// Number of stored non-zeros `q`.
+    pub fn nnz(&self) -> usize {
+        self.ri.len()
+    }
+
+    /// Distinct non-zero values `k`.
+    pub fn alphabet_size(&self) -> usize {
+        self.alphabet.len()
+    }
+
+    /// N1 = ceil(|HAC(nz)|/b) memory words of compressed stream.
+    pub fn n_words(&self) -> u64 {
+        (self.stream.len() as u64 + WORD_BITS - 1) / WORD_BITS
+    }
+}
+
+impl CompressedMatrix for Shac {
+    fn name(&self) -> &'static str {
+        "shac"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        // C_HAC(nz) words + dictionaries + ri (q words) + cb (m+1 words).
+        let mut bits = self.n_words() * WORD_BITS
+            + dict_bits(self.alphabet.len() as u64, WORD_BITS)
+            + (self.ri.len() as u64 + self.cols as u64 + 1) * WORD_BITS;
+        if self.col_offsets.is_some() {
+            bits += self.cols as u64 * WORD_BITS; // §VI offset vector
+        }
+        bits
+    }
+
+    /// Alg. 2 (`Dot_sHAC`): single pass over the compressed nz stream;
+    /// empty columns are skipped via `cb` (lines 5–7 of the paper).
+    /// Uses the multi-symbol LUT to retire runs of short codewords in
+    /// one probe (EXPERIMENTS.md §Perf).
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0f32; self.cols];
+        let q = self.ri.len();
+        if q == 0 || self.cols == 0 {
+            return out;
+        }
+        let mut r = BitReader::new(&self.stream);
+        let mut run = [0u32; 8];
+        let mut pos = 0usize; // index into nz, the paper's `pos`
+        let mut col = 0usize;
+        let mut end = self.cb[1] as usize;
+        let mut sum = 0.0f32;
+        while pos < q {
+            let n = if pos + 8 <= q {
+                self.code.decode_run(&mut r, &mut run)
+            } else {
+                0
+            };
+            let n = if n == 0 {
+                run[0] = self.code.decode_next(&mut r).expect("truncated");
+                1
+            } else {
+                n
+            };
+            for &s in &run[..n] {
+                while pos >= end {
+                    out[col] = sum;
+                    sum = 0.0;
+                    col += 1;
+                    end = self.cb[col + 1] as usize;
+                }
+                sum += x[self.ri[pos] as usize] * self.alphabet[s as usize];
+                pos += 1;
+            }
+        }
+        // flush the final non-empty column (empty tail columns are 0)
+        out[col] = sum;
+        out
+    }
+
+    fn decompress(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        let mut r = BitReader::new(&self.stream);
+        let mut pos = 0usize;
+        for j in 0..self.cols {
+            let end = self.cb[j + 1] as usize;
+            while pos < end {
+                let s = self.code.decode_next(&mut r).expect("truncated");
+                m.set(self.ri[pos] as usize, j, self.alphabet[s as usize]);
+                pos += 1;
+            }
+        }
+        m
+    }
+
+    /// Decode-once batched product (see `Hac::matmul_batch`): one pass
+    /// over the compressed nz stream, each non-zero applied across the
+    /// whole batch.
+    fn matmul_batch(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
+        let batch = x.rows;
+        let mut out = Mat::zeros(batch, self.cols);
+        let q = self.ri.len();
+        if q == 0 || self.cols == 0 || batch == 0 {
+            return out;
+        }
+        let mut r = BitReader::new(&self.stream);
+        let mut run = [0u32; 8];
+        let mut pos = 0usize;
+        let mut col = 0usize;
+        let mut end = self.cb[1] as usize;
+        while pos < q {
+            let n = if pos + 8 <= q {
+                self.code.decode_run(&mut r, &mut run)
+            } else {
+                0
+            };
+            let n = if n == 0 {
+                run[0] = self.code.decode_next(&mut r).expect("truncated");
+                1
+            } else {
+                n
+            };
+            for &s in &run[..n] {
+                while pos >= end {
+                    col += 1;
+                    end = self.cb[col + 1] as usize;
+                }
+                let v = self.alphabet[s as usize];
+                let row = self.ri[pos] as usize;
+                for b in 0..batch {
+                    out.data[b * self.cols + col] += v * x.data[b * self.rows + row];
+                }
+                pos += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::test_support::{example2, exercise_format};
+    use crate::formats::Hac;
+    use crate::huffman::bounds::{cor2_shac_bits, shac_beats_hac_threshold};
+    use crate::util::prng::Prng;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn battery() {
+        let mut rng = Prng::seeded(0x5AC);
+        exercise_format(Shac::compress, &mut rng);
+    }
+
+    #[test]
+    fn example2_structure() {
+        let s = Shac::compress(&example2());
+        assert_eq!(s.nnz(), 7);
+        assert_eq!(s.alphabet_size(), 7); // zero excluded
+        assert!(!s.alphabet.contains(&0.0));
+        assert_eq!(s.ri, vec![0, 2, 1, 2, 0, 2, 4]);
+        assert_eq!(s.cb, vec![0, 2, 4, 5, 5, 7]);
+    }
+
+    #[test]
+    fn all_zero_matrix() {
+        let m = Mat::zeros(6, 4);
+        let s = Shac::compress(&m);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.vecmat(&[1.0; 6]), vec![0.0; 4]);
+        assert_eq!(s.decompress(), m);
+        // only cb + empty dictionaries remain
+        assert_eq!(s.size_bits(), (4 + 1) * WORD_BITS);
+    }
+
+    #[test]
+    fn prop_size_within_cor2_bound() {
+        prop::check("shac-cor2-bound", Config { cases: 30, seed: 0x5B }, |rng| {
+            let rows = 4 + rng.gen_range(60);
+            let cols = 4 + rng.gen_range(60);
+            let k = 2 + rng.gen_range(20);
+            let s_target = 0.05 + 0.4 * rng.next_f64();
+            let m = Mat::sparse_quantized(rows, cols, s_target, k, rng);
+            let sh = Shac::compress(&m);
+            let s_actual = m.nonzero_ratio();
+            let bound = cor2_shac_bits(
+                rows as u64,
+                cols as u64,
+                s_actual,
+                sh.alphabet_size().max(1) as u64,
+                WORD_BITS,
+            );
+            crate::prop_assert!(
+                (sh.size_bits() as f64) <= bound + WORD_BITS as f64,
+                "size {} exceeds Cor.2 bound {bound}",
+                sh.size_bits()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shac_beats_hac_when_very_sparse() {
+        // p = 99% pruning: the paper's regime where sHAC wins (Fig. 1).
+        let mut rng = Prng::seeded(0x5C);
+        let m = Mat::sparse_quantized(256, 512, 0.01, 32, &mut rng);
+        let shac = Shac::compress(&m);
+        let hac = Hac::compress(&m);
+        assert!(
+            shac.size_bits() < hac.size_bits(),
+            "shac {} !< hac {}",
+            shac.size_bits(),
+            hac.size_bits()
+        );
+        // and the theoretical crossover confirms the direction
+        let thr = shac_beats_hac_threshold(256, 512, 33, WORD_BITS);
+        assert!(m.nonzero_ratio() < thr);
+    }
+
+    #[test]
+    fn column_index_parallel_dot_matches() {
+        let mut rng = Prng::seeded(0x5E);
+        let m = Mat::sparse_quantized(48, 37, 0.15, 12, &mut rng);
+        let s = Shac::compress(&m).with_column_index();
+        let x: Vec<f32> = (0..48).map(|_| rng.normal() as f32).collect();
+        let seq = s.vecmat(&x);
+        for threads in [1, 2, 5, 16] {
+            let par = s.vecmat_par_cols(&x, threads);
+            crate::util::proptest::assert_allclose(&par, &seq, 1e-5, 1e-5)
+                .unwrap();
+        }
+        // accounting grows by one word per column
+        let plain = Shac::compress(&m);
+        assert_eq!(s.size_bits(), plain.size_bits() + 37 * WORD_BITS);
+    }
+
+    #[test]
+    fn column_index_on_empty_columns() {
+        // matrix with entire empty columns must still index correctly
+        let mut m = Mat::zeros(10, 6);
+        m.set(3, 1, 2.0);
+        m.set(7, 4, -1.0);
+        m.set(9, 4, 3.0);
+        let s = Shac::compress(&m).with_column_index();
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(s.vecmat_par_cols(&x, 3), s.vecmat(&x));
+    }
+
+    #[test]
+    fn hac_beats_shac_when_dense() {
+        let mut rng = Prng::seeded(0x5D);
+        let m = Mat::sparse_quantized(128, 128, 0.95, 32, &mut rng);
+        let shac = Shac::compress(&m);
+        let hac = Hac::compress(&m);
+        assert!(hac.size_bits() < shac.size_bits());
+    }
+}

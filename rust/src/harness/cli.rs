@@ -1,0 +1,470 @@
+//! `sham` CLI: hand-rolled argument parsing (no clap offline).
+//!
+//! Subcommands regenerate every table/figure of the paper (DESIGN.md §4)
+//! and run the serving coordinator.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::harness::{experiments, fig1};
+use crate::nn::ModelKind;
+
+const HELP: &str = "\
+sham — compact CNN representations (HAC/sHAC) reproduction
+
+USAGE: sham <command> [options]
+
+Experiment commands (regenerate the paper's tables/figures):
+  table1              baseline performance + test time (Table I)
+  table2              unified vs non-unified quantization (Table II)
+  table3 [--net dta]  quantizer comparison across k (Table III / S4)
+  table4              conv-layer pruning sweep (Table IV)
+  s1 [--quick]        per-technique sweeps → grid CSV + S1/S2 best rows
+  s5 [--quick]        prune→quantize sweeps (Tables S5/S6)
+  s7                  conv-only weight sharing (Table S7)
+  s8 --net <bench> [--quick]
+                      full-net hybrid grids (Tables S8–S11)
+  fig1 [--k 32|256] [--paper-dims] [--net mnist|cifar]
+                      format size + dot-time comparison (Fig. 1 / S2)
+  timeratio [--net mnist] [--k 32]
+                      FC inference time per format vs dense (Fig. S1 row 2)
+  bounds              print the Fact/Corollary space bounds
+
+Single-configuration evaluation:
+  eval --net <mnist|cifar|kiba|davis> [--prune P] [--quant cws|pws|uq|ecsq]
+       [--k K] [--conv-quant <q>] [--conv-k K] [--conv-prune P]
+       [--format dense|csc|csr|coo|im|cla|hac|shac|auto] [--per-layer]
+                      compress one model and report perf + occupancy
+
+On-disk compressed models:
+  compress --net <bench> [--prune P] [--quant q --k K] [--format auto]
+           --out model.sham
+                      compress a trained model into a .sham container
+  inspect <file.sham> list container entries, formats, and sizes
+
+Serving:
+  serve [--addr 127.0.0.1:7410] [--variants baseline,compressed]
+                      run the batching inference server over TCP
+
+Common options:
+  --artifacts <dir>   artifacts directory (default: artifacts/ or $SHAM_ARTIFACTS)
+  --threads <n>       dot-product / FC threads (default 4)
+  --csv <path>        also write the table as CSV
+";
+
+/// Parsed flag set: everything after the subcommand.
+pub struct Flags {
+    raw: Vec<String>,
+}
+
+impl Flags {
+    pub fn new(args: &[String]) -> Flags {
+        Flags { raw: args.to_vec() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        let key = format!("--{name}");
+        self.raw
+            .iter()
+            .position(|a| *a == key)
+            .and_then(|i| self.raw.get(i + 1).cloned())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.raw.iter().any(|a| a == &format!("--{name}"))
+    }
+}
+
+fn artifacts_dir(flags: &Flags) -> PathBuf {
+    flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::nn::model::artifacts_dir)
+}
+
+fn emit(table: &crate::harness::tables::Table, flags: &Flags) -> Result<()> {
+    println!("{}", table.render());
+    if let Some(path) = flags.get("csv") {
+        table.write_csv(&path)?;
+        println!("(csv written to {path})");
+    }
+    Ok(())
+}
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    if args.is_empty() {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let cmd = args[0].as_str();
+    let flags = Flags::new(&args[1..]);
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "bounds" => {
+            print_bounds();
+            Ok(())
+        }
+        "fig1" => {
+            let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+            let kind = flags
+                .get("net")
+                .and_then(|s| ModelKind::parse(&s))
+                .unwrap_or(ModelKind::VggCifar);
+            let art = artifacts_dir(&flags);
+            let art_opt = art.join("manifest.txt").exists().then_some(art.as_path());
+            let t = fig1::run(art_opt, kind, k, threads, flags.has("paper-dims"))?;
+            emit(&t, &flags)
+        }
+        "table1" | "table2" | "table3" | "table4" | "s1" | "s5" | "s7" | "s8" => {
+            let art = artifacts_dir(&flags);
+            if !art.join("manifest.txt").exists() {
+                bail!(
+                    "artifacts not found at {} — run `make artifacts` first",
+                    art.display()
+                );
+            }
+            let mut ctx = experiments::Ctx::new(art, threads)?;
+            match cmd {
+                "table1" => emit(&experiments::table1(&mut ctx)?, &flags),
+                "table2" => emit(&experiments::table2(&mut ctx)?, &flags),
+                "table3" => {
+                    let vgg = flags.get("net").as_deref() != Some("dta");
+                    emit(&experiments::table3(&mut ctx, vgg)?, &flags)
+                }
+                "table4" => emit(&experiments::table4(&mut ctx)?, &flags),
+                "s1" => {
+                    let out = experiments::s1_sweep(&mut ctx, flags.has("quick"))?;
+                    println!("== sweep grid (Fig. S1 data) ==");
+                    emit(&out.grid, &flags)?;
+                    println!("== Table S1: best performance ==");
+                    println!("{}", out.best_perf.render());
+                    println!("== Table S2: best occupancy at ≥ baseline ==");
+                    println!("{}", out.best_psi.render());
+                    Ok(())
+                }
+                "s5" => {
+                    let (s5, s6) = experiments::s5_s6(&mut ctx, flags.has("quick"))?;
+                    println!("== Table S5: best performance ==");
+                    println!("{}", s5.render());
+                    println!("== Table S6: best occupancy ==");
+                    println!("{}", s6.render());
+                    Ok(())
+                }
+                "s7" => emit(&experiments::s7(&mut ctx)?, &flags),
+                "s8" => {
+                    let kind = flags
+                        .get("net")
+                        .and_then(|s| ModelKind::parse(&s))
+                        .unwrap_or(ModelKind::VggMnist);
+                    emit(
+                        &experiments::s8_11(&mut ctx, kind, flags.has("quick"))?,
+                        &flags,
+                    )
+                }
+                _ => unreachable!(),
+            }
+        }
+        "timeratio" => {
+            let art = artifacts_dir(&flags);
+            if !art.join("manifest.txt").exists() {
+                bail!("artifacts not found at {}", art.display());
+            }
+            let kind = flags
+                .get("net")
+                .and_then(|s| ModelKind::parse(&s))
+                .unwrap_or(ModelKind::VggMnist);
+            let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32);
+            let t = crate::harness::timeratio::run(
+                &art,
+                kind,
+                &[60.0, 80.0, 90.0, 95.0, 99.0],
+                k,
+                32,
+                threads,
+            )?;
+            emit(&t, &flags)
+        }
+        "eval" => eval_one(&flags, threads),
+        "compress" => compress_cmd(&flags),
+        "inspect" => inspect_cmd(&args),
+        "serve" => serve(&flags, threads),
+        other => {
+            bail!("unknown command `{other}` — try `sham help`")
+        }
+    }
+}
+
+fn print_bounds() {
+    use crate::huffman::bounds::*;
+    let mut t = crate::harness::tables::Table::new(&[
+        "n", "m", "s", "k", "psi_hac_bound", "psi_shac_bound", "crossover_s",
+    ]);
+    for (n, m) in [(512u64, 4096u64), (4096, 4096), (4096, 10)] {
+        for k in [32u64, 256] {
+            for s in [0.4, 0.1, 0.01] {
+                t.row(vec![
+                    n.to_string(),
+                    m.to_string(),
+                    format!("{s}"),
+                    k.to_string(),
+                    format!("{:.4}", psi_hac_bound(n, m, k, WORD_BITS)),
+                    format!("{:.4}", psi_shac_bound(n, m, s, k, WORD_BITS)),
+                    format!("{:.4}", shac_beats_hac_threshold(n, m, k, WORD_BITS)),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
+    use crate::nn::compressed::{CompressionCfg, FcFormat};
+    use crate::quant::Kind;
+
+    let art = artifacts_dir(flags);
+    if !art.join("manifest.txt").exists() {
+        bail!("artifacts not found at {}", art.display());
+    }
+    let kind = flags
+        .get("net")
+        .and_then(|s| ModelKind::parse(&s))
+        .ok_or_else(|| anyhow::anyhow!("--net is required (mnist|cifar|kiba|davis)"))?;
+    let parse_q = |name: &str, kname: &str| -> Result<Option<(Kind, usize)>> {
+        match flags.get(name) {
+            None => Ok(None),
+            Some(q) => {
+                let qk = Kind::parse(&q)
+                    .ok_or_else(|| anyhow::anyhow!("unknown quantizer `{q}`"))?;
+                let k = flags
+                    .get(kname)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(32usize);
+                Ok(Some((qk, k)))
+            }
+        }
+    };
+    let cfg = CompressionCfg {
+        fc_prune: flags.get("prune").and_then(|s| s.parse().ok()),
+        fc_quant: parse_q("quant", "k")?,
+        conv_quant: parse_q("conv-quant", "conv-k")?,
+        conv_prune: flags.get("conv-prune").and_then(|s| s.parse().ok()),
+        unified: !flags.has("per-layer"),
+        fc_format: flags
+            .get("format")
+            .and_then(|s| FcFormat::parse(&s))
+            .unwrap_or(FcFormat::Auto),
+    };
+    let mut ctx = experiments::Ctx::new(art, threads)?;
+    let base = ctx.baseline(kind)?;
+    let (m, psi_fc, psi_total) = ctx.eval(kind, &cfg, 0xE7A1)?;
+    println!("benchmark : {}", kind.name());
+    println!("baseline  : {base}");
+    println!("compressed: {m}  (Δ {:+.4})", m.delta_vs(&base));
+    println!("ψ_fc      : {psi_fc:.4}  ({:.1}× smaller FC block)", 1.0 / psi_fc);
+    println!(
+        "ψ_total   : {psi_total:.4}  ({:.1}× smaller whole net)",
+        1.0 / psi_total
+    );
+    Ok(())
+}
+
+fn compress_cmd(flags: &Flags) -> Result<()> {
+    use crate::formats::store::{save, to_stored, Stored};
+    use crate::formats::Dense;
+    use crate::nn::compressed::{CompressionCfg, FcFormat};
+    use crate::nn::CompressedModel;
+    use crate::quant::Kind;
+    use crate::util::prng::Prng;
+
+    let art = artifacts_dir(flags);
+    let kind = flags
+        .get("net")
+        .and_then(|s| ModelKind::parse(&s))
+        .ok_or_else(|| anyhow::anyhow!("--net is required"))?;
+    let out = flags
+        .get("out")
+        .unwrap_or_else(|| format!("{}.sham", kind.name()));
+    let cfg = CompressionCfg {
+        fc_prune: flags.get("prune").and_then(|s| s.parse().ok()),
+        fc_quant: flags.get("quant").and_then(|q| {
+            Kind::parse(&q).map(|qk| {
+                (qk, flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32))
+            })
+        }),
+        fc_format: flags
+            .get("format")
+            .and_then(|s| FcFormat::parse(&s))
+            .unwrap_or(FcFormat::Auto),
+        ..Default::default()
+    };
+    let params = kind.load_weights(&art)?;
+    let mut rng = Prng::seeded(0xC0);
+    let model = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
+    let mut entries: Vec<(String, Stored)> = Vec::new();
+    for layer in &model.fc {
+        let w = layer.w.decompress();
+        entries.push((format!("{}.w", layer.name), to_stored(&w, layer.w.as_ref())));
+        entries.push((
+            format!("{}.b", layer.name),
+            Stored::Dense(Dense::from_mat(crate::Mat::from_vec(
+                1,
+                layer.b.len(),
+                layer.b.clone(),
+            ))),
+        ));
+    }
+    // conv + remaining tensors stay dense in the container
+    for (name, t) in model.params.iter() {
+        if model.fc.iter().any(|l| name.starts_with(&format!("{}.", l.name))) {
+            continue;
+        }
+        if t.shape.len() >= 1 && t.dtype == crate::io::Dtype::F32 {
+            let flat = t.as_f32()?;
+            entries.push((
+                name.clone(),
+                Stored::Dense(Dense::from_mat(crate::Mat::from_vec(
+                    1,
+                    flat.len(),
+                    flat,
+                ))),
+            ));
+        }
+    }
+    save(&out, &entries)?;
+    let disk = std::fs::metadata(&out)?.len();
+    let dense_bytes: u64 = model
+        .params
+        .values()
+        .map(|t| t.numel() as u64 * 4)
+        .sum();
+    println!(
+        "wrote {out}: {} entries, {} on disk vs {} dense ({:.1}x smaller), ψ_fc={:.4}",
+        entries.len(),
+        crate::util::timer::fmt_bytes(disk as f64),
+        crate::util::timer::fmt_bytes(dense_bytes as f64),
+        dense_bytes as f64 / disk as f64,
+        model.psi_fc(),
+    );
+    Ok(())
+}
+
+fn inspect_cmd(args: &[String]) -> Result<()> {
+    use crate::formats::store::load;
+    let path = args
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: sham inspect <file.sham>"))?;
+    let entries = load(path)?;
+    let mut t = crate::harness::tables::Table::new(&[
+        "entry", "format", "rows", "cols", "psi",
+    ]);
+    for (name, s) in &entries {
+        let c = s.as_compressed();
+        t.row(vec![
+            name.clone(),
+            c.name().to_string(),
+            c.rows().to_string(),
+            c.cols().to_string(),
+            format!("{:.4}", c.psi()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn serve(flags: &Flags, threads: usize) -> Result<()> {
+    use crate::coordinator::{tcp, Policy, Server, ServerConfig};
+    use crate::nn::compressed::{CompressionCfg, FcFormat};
+    use crate::nn::CompressedModel;
+    use crate::quant::Kind;
+    use crate::util::prng::Prng;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let art = artifacts_dir(flags);
+    if !art.join("manifest.txt").exists() {
+        bail!("artifacts not found at {}", art.display());
+    }
+    let addr = flags
+        .get("addr")
+        .unwrap_or_else(|| "127.0.0.1:7410".to_string());
+    let cfg = ServerConfig {
+        policy: Policy::default(),
+        fc_threads: threads,
+    };
+    let mut server = Server::new(cfg);
+    for kind in ModelKind::ALL {
+        let params = kind.load_weights(&art)?;
+        let baseline = CompressedModel::baseline(kind, &params)?;
+        server.add_variant(
+            &format!("{}-baseline", kind.dataset()),
+            baseline,
+            kind.features_hlo(&art, 32),
+        )?;
+        let ccfg = CompressionCfg {
+            fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
+            fc_quant: Some((Kind::Cws, 32)),
+            fc_format: FcFormat::Auto,
+            ..Default::default()
+        };
+        let mut rng = Prng::seeded(42);
+        let compressed = CompressedModel::build(kind, &params, &ccfg, &mut rng)?;
+        server.add_variant(
+            &format!("{}-compressed", kind.dataset()),
+            compressed,
+            kind.features_hlo(&art, 32),
+        )?;
+    }
+    println!("variants: {:?}", server.variant_names());
+    let server = Arc::new(server);
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("serving on {addr} (ctrl-c to stop)");
+    tcp::serve(&addr, server.clone(), stop, |a| {
+        println!("listening on {a}");
+    })?;
+    println!("{}", server.metrics.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parsing() {
+        let f = Flags::new(&[
+            "--k".into(),
+            "256".into(),
+            "--quick".into(),
+            "--net".into(),
+            "dta".into(),
+        ]);
+        assert_eq!(f.get("k").as_deref(), Some("256"));
+        assert!(f.has("quick"));
+        assert!(!f.has("paper-dims"));
+        assert_eq!(f.get("net").as_deref(), Some("dta"));
+        assert_eq!(f.get("missing"), None);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        run(vec!["help".into()]).unwrap();
+    }
+
+    #[test]
+    fn bounds_runs() {
+        run(vec!["bounds".into()]).unwrap();
+    }
+}

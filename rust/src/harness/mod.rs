@@ -1,0 +1,8 @@
+//! Experiment harness: drivers for every table and figure of the paper
+//! (see DESIGN.md §4), table/CSV rendering, and the CLI surface.
+
+pub mod cli;
+pub mod experiments;
+pub mod fig1;
+pub mod tables;
+pub mod timeratio;

@@ -1,0 +1,104 @@
+//! Time-ratio driver — the paper's evaluation metric 2 ("ratio time
+//! between evaluation times of uncompressed and compressed model") and
+//! the data behind Fig. S1's middle row: FC-stack inference time on
+//! each compressed format relative to the dense baseline, on the real
+//! trained matrices.
+
+use anyhow::Result;
+
+use crate::harness::tables::Table;
+use crate::mat::Mat;
+use crate::nn::compressed::{CompressionCfg, FcFormat};
+use crate::nn::ModelKind;
+use crate::nn::CompressedModel;
+use crate::quant::Kind;
+use crate::util::prng::Prng;
+use crate::util::timer::{bench, black_box};
+
+/// Formats compared (dense is the denominator).
+const FORMATS: [FcFormat; 7] = [
+    FcFormat::Csc,
+    FcFormat::Im,
+    FcFormat::Cla,
+    FcFormat::Hac,
+    FcFormat::Shac,
+    FcFormat::Auto,
+    FcFormat::Dense,
+];
+
+fn fmt_name(f: FcFormat) -> &'static str {
+    match f {
+        FcFormat::Dense => "dense",
+        FcFormat::Csc => "csc",
+        FcFormat::Csr => "csr",
+        FcFormat::Coo => "coo",
+        FcFormat::Im => "im",
+        FcFormat::Cla => "cla",
+        FcFormat::Hac => "hac",
+        FcFormat::Shac => "shac",
+        FcFormat::Auto => "auto",
+    }
+}
+
+/// Build the compressed model at (p, k) and time `fc_forward` over a
+/// `batch`-row feature block; report time ratios vs dense.
+pub fn run(
+    art: &std::path::Path,
+    kind: ModelKind,
+    ps: &[f64],
+    k: usize,
+    batch: usize,
+    threads: usize,
+) -> Result<Table> {
+    let weights = kind.load_weights(art)?;
+    let mut table = Table::new(&[
+        "p", "format", "fc_ms", "ratio_vs_dense", "psi_fc",
+    ]);
+    let mut rng = Prng::seeded(0x7143);
+    let feats = Mat::gaussian(batch, kind.feature_dim(), 1.0, &mut rng);
+    for &p in ps {
+        // dense reference time at this p (pruned weights, dense storage)
+        let mut times = Vec::new();
+        for &fmt in FORMATS.iter() {
+            let cfg = CompressionCfg {
+                fc_prune: Some(p),
+                fc_quant: Some((Kind::Cws, k)),
+                fc_format: fmt,
+                ..Default::default()
+            };
+            let model = CompressedModel::build(kind, &weights, &cfg, &mut rng)?;
+            let s = bench(1, 5, || {
+                black_box(model.fc_forward(black_box(&feats), threads));
+            });
+            times.push((fmt, s.p50, model.psi_fc()));
+        }
+        let dense_t = times
+            .iter()
+            .find(|(f, _, _)| *f == FcFormat::Dense)
+            .map(|(_, t, _)| *t)
+            .unwrap();
+        for (fmt, t, psi) in times {
+            table.row(vec![
+                format!("{p:.0}"),
+                fmt_name(fmt).to_string(),
+                format!("{:.2}", t / 1e6),
+                format!("{:.2}", t / dense_t),
+                format!("{psi:.4}"),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_names_cover_table() {
+        for f in FORMATS {
+            assert!(!fmt_name(f).is_empty());
+        }
+        assert_eq!(fmt_name(FcFormat::Auto), "auto");
+    }
+}

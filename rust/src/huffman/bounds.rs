@@ -1,0 +1,173 @@
+//! The paper's space upper bounds: Fact 1 / Fact 2 and Corollaries 1 / 2
+//! (Sect. IV-B, IV-C), plus the occupancy-ratio bounds ψ_HAC (Eq. 2) and
+//! ψ_sHAC (Eq. 3) and the crossover condition under which sHAC beats HAC.
+//!
+//! All bounds are in **bits**; `b` is the memory-word width used by the
+//! paper's accounting (32 for FP32 models).
+
+/// Word width used throughout the paper's experiments (FP32).
+pub const WORD_BITS: u64 = 32;
+
+/// Size in bits charged for the two dictionaries H and H^{-1} holding `k`
+/// codewords: 3·b bits per entry per dictionary (pair + B-tree pointer),
+/// i.e. 6·k·b (proof of Fact 1).
+pub fn dict_bits(k: u64, b: u64) -> u64 {
+    6 * k * b
+}
+
+/// Fact 1 — HAC worst case for a dense matrix with all-distinct entries:
+/// |HAC(W)| ≤ nm(1 + log2(nm)) + 6·nm·b.
+pub fn fact1_hac_dense_distinct(n: u64, m: u64, b: u64) -> f64 {
+    let nm = (n * m) as f64;
+    nm * (1.0 + nm.log2()) + (6 * n * m * b) as f64
+}
+
+/// Corollary 1 — HAC with k < nm distinct values:
+/// |HAC(W)| ≤ nm(1 + log2 k) + 6·k·b.
+pub fn cor1_hac_bits(n: u64, m: u64, k: u64, b: u64) -> f64 {
+    let nm = (n * m) as f64;
+    nm * (1.0 + (k as f64).log2()) + dict_bits(k, b) as f64
+}
+
+/// Eq. (2) — occupancy-ratio bound ψ_HAC ≤ (1 + log2 k)/b + 6k/(nm).
+pub fn psi_hac_bound(n: u64, m: u64, k: u64, b: u64) -> f64 {
+    let nm = (n * m) as f64;
+    (1.0 + (k as f64).log2()) / b as f64 + (6 * k) as f64 / nm
+}
+
+/// Fact 2 — sHAC worst case with s·nm distinct non-null entries:
+/// |sHAC(W)| ≤ snm(1 + log2(snm)) + b(7snm + m + 1).
+pub fn fact2_shac_distinct(n: u64, m: u64, s: f64, b: u64) -> f64 {
+    let snm = s * (n * m) as f64;
+    if snm < 1.0 {
+        // No non-zeros: only cb remains.
+        return (b * (m + 1)) as f64;
+    }
+    snm * (1.0 + snm.log2()) + b as f64 * (7.0 * snm + (m + 1) as f64)
+}
+
+/// Corollary 2 — sHAC with k distinct non-null values:
+/// |sHAC(W)| ≤ snm(1 + log2 k) + b(6k + snm + m + 1).
+pub fn cor2_shac_bits(n: u64, m: u64, s: f64, k: u64, b: u64) -> f64 {
+    let snm = s * (n * m) as f64;
+    snm * (1.0 + (k as f64).log2())
+        + b as f64 * ((6 * k) as f64 + snm + (m + 1) as f64)
+}
+
+/// Eq. (3) — ψ_sHAC ≤ s(1 + log2 k)/b + (6k + m + 1)/(nm) + s.
+pub fn psi_shac_bound(n: u64, m: u64, s: f64, k: u64, b: u64) -> f64 {
+    let nm = (n * m) as f64;
+    s * (1.0 + (k as f64).log2()) / b as f64 + ((6 * k + m + 1) as f64) / nm + s
+}
+
+/// The paper's crossover: ψ_sHAC < ψ_HAC when
+/// s < ((1+log2 k)/b − (m+1)/nm) / (1 + (1+log2 k)/b).
+pub fn shac_beats_hac_threshold(n: u64, m: u64, k: u64, b: u64) -> f64 {
+    let nm = (n * m) as f64;
+    let t = (1.0 + (k as f64).log2()) / b as f64;
+    (t - (m + 1) as f64 / nm) / (1.0 + t)
+}
+
+/// CSC occupancy ψ_CSC = (2q + m + 1)/(nm), q = s·nm (Sect. IV-A).
+pub fn psi_csc(n: u64, m: u64, s: f64) -> f64 {
+    let nm = (n * m) as f64;
+    (2.0 * s * nm + (m + 1) as f64) / nm
+}
+
+/// Index-map occupancy ψ_IM = b̄/b + k/(nm) (Sect. II-B), with b̄ the
+/// pointer width (8 when k ≤ 256, else ceil(log2 k) rounded up to a byte).
+pub fn psi_index_map(n: u64, m: u64, k: u64, b: u64) -> f64 {
+    let bbar = index_map_pointer_bits(k);
+    let nm = (n * m) as f64;
+    bbar as f64 / b as f64 + k as f64 / nm
+}
+
+/// Pointer width the index map uses for k categories (whole bytes, as the
+/// paper's IM stores Π with 1 byte for k ≤ 256).
+pub fn index_map_pointer_bits(k: u64) -> u64 {
+    let bits = (64 - (k.max(2) - 1).leading_zeros()) as u64; // ceil(log2 k)
+    ((bits + 7) / 8) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fact1_exceeds_uncompressed_for_dense_distinct() {
+        // The paper remarks the Fact-1 bound is *larger* than b·nm.
+        let (n, m, b) = (100, 100, WORD_BITS);
+        assert!(fact1_hac_dense_distinct(n, m, b) > (n * m * b) as f64);
+    }
+
+    #[test]
+    fn cor1_beats_uncompressed_for_small_k() {
+        // k=32 on a 512×1024 FP32 matrix: bound must be << b·nm.
+        let (n, m, k, b) = (512, 1024, 32, WORD_BITS);
+        let bound = cor1_hac_bits(n, m, k, b);
+        let dense = (n * m * b) as f64;
+        assert!(bound < 0.25 * dense, "bound {bound} dense {dense}");
+        // and matches Eq. (2) scaled by dense size
+        let psi = psi_hac_bound(n, m, k, b);
+        assert!((bound / dense - psi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psi_hac_monotone_in_k() {
+        let mut prev = 0.0;
+        for k in [2u64, 16, 32, 64, 128, 256] {
+            let psi = psi_hac_bound(512, 1024, k, WORD_BITS);
+            assert!(psi > prev, "psi not increasing at k={k}");
+            prev = psi;
+        }
+    }
+
+    #[test]
+    fn cor2_consistent_with_eq3() {
+        let (n, m, k, b, s) = (4096u64, 4096u64, 32u64, WORD_BITS, 0.05);
+        let bound = cor2_shac_bits(n, m, s, k, b);
+        let dense = (n * m * b) as f64;
+        let psi = psi_shac_bound(n, m, s, k, b);
+        assert!((bound / dense - psi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shac_wins_when_sparse() {
+        let (n, m, k, b) = (4096u64, 4096u64, 32u64, WORD_BITS);
+        let thr = shac_beats_hac_threshold(n, m, k, b);
+        assert!(thr > 0.0 && thr < 1.0);
+        // Just below threshold: sHAC bound < HAC bound.
+        let s = thr * 0.9;
+        assert!(psi_shac_bound(n, m, s, k, b) < psi_hac_bound(n, m, k, b));
+        // Well above: HAC bound wins.
+        let s = (thr * 3.0).min(0.9);
+        assert!(psi_shac_bound(n, m, s, k, b) > psi_hac_bound(n, m, k, b));
+    }
+
+    #[test]
+    fn csc_break_even_matches_paper() {
+        // ψ_CSC < 1 iff s < 1/2 − (m+1)/(2nm) (Sect. IV-A).
+        let (n, m) = (1000u64, 500u64);
+        let s_star = 0.5 - (m + 1) as f64 / (2.0 * (n * m) as f64);
+        assert!(psi_csc(n, m, s_star - 1e-4) < 1.0);
+        assert!(psi_csc(n, m, s_star + 1e-4) > 1.0);
+    }
+
+    #[test]
+    fn index_map_pointer_widths() {
+        assert_eq!(index_map_pointer_bits(2), 8);
+        assert_eq!(index_map_pointer_bits(256), 8);
+        assert_eq!(index_map_pointer_bits(257), 16);
+        assert_eq!(index_map_pointer_bits(65536), 16);
+        assert_eq!(index_map_pointer_bits(65537), 24);
+        // paper: k ≤ 256 ⇒ ψ ≈ 1/4 for FP32
+        let psi = psi_index_map(4096, 4096, 256, WORD_BITS);
+        assert!((psi - 0.25).abs() < 0.01, "psi {psi}");
+    }
+
+    #[test]
+    fn fact2_degenerate_empty_matrix() {
+        let bits = fact2_shac_distinct(100, 50, 0.0, WORD_BITS);
+        assert_eq!(bits, (WORD_BITS * 51) as f64);
+    }
+}

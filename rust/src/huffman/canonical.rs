@@ -1,0 +1,454 @@
+//! Canonical Huffman codes: encoder table + two decoders (bit-serial and
+//! LUT-accelerated). Canonical assignment keeps only code lengths as the
+//! stored dictionary, which is how we realize the paper's H_W / H_W^{-1}
+//! mappings; the space accounting still charges the paper's conservative
+//! B-tree model (see [`super::bounds`]).
+
+use crate::util::bits::{BitBuf, BitReader, BitWriter};
+
+/// Width of the fast-decode lookup table in bits. Codes no longer than
+/// this decode in a single table probe; longer codes fall back to the
+/// canonical first-code scan. 11 bits covers k=256 alphabets generously
+/// while keeping the LUT (2^11 u32 entries = 8 KiB) cache-resident —
+/// this mirrors the paper's premise that the dictionaries stay in cache.
+pub const LUT_BITS: u32 = 11;
+
+/// A canonical Huffman code over symbols `0..n` (symbol = alphabet index).
+#[derive(Debug, Clone)]
+pub struct Code {
+    /// lengths[sym] — 0 means the symbol is absent.
+    pub lengths: Vec<u32>,
+    /// codes[sym] — canonical codeword, valid in the low `lengths[sym]` bits.
+    pub codes: Vec<u64>,
+    max_len: u32,
+    // Canonical decoding tables, indexed by length 1..=max_len:
+    first_code: Vec<u64>,   // first canonical code of each length
+    first_index: Vec<usize>, // index into `by_order` of that code
+    count: Vec<usize>,      // number of codes of each length
+    /// Symbols sorted by (length, symbol) — canonical order.
+    by_order: Vec<u32>,
+    /// Fast decode LUT: for each LUT_BITS-bit prefix, packed
+    /// (symbol << 8 | len) when len ≤ LUT_BITS, else u32::MAX.
+    lut: Vec<u32>,
+    /// Multi-symbol LUT (alphabets ≤ 255 symbols only): for each
+    /// LUT_BITS-bit window, all codewords that fit entirely inside it.
+    /// Decodes whole runs of short codes (e.g. the 1-bit zero symbol of
+    /// a 90%-pruned HAC stream) in a single probe. `None` for larger
+    /// alphabets.
+    multi: Option<Vec<MultiEntry>>,
+}
+
+/// One multi-LUT entry: up to 8 symbols fully contained in the window.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiEntry {
+    /// number of symbols decoded (0 → fall back to single decode)
+    pub count: u8,
+    /// total bits consumed by those symbols
+    pub bits: u8,
+    /// the decoded symbols (alphabet index, < 255)
+    pub syms: [u8; 8],
+}
+
+impl Code {
+    /// Build a canonical code from per-symbol frequencies.
+    pub fn from_freqs(freqs: &[u64]) -> Self {
+        let lengths = super::tree::code_lengths(freqs);
+        Self::from_lengths(lengths)
+    }
+
+    /// Build from known code lengths (0 = absent symbol).
+    pub fn from_lengths(lengths: Vec<u32>) -> Self {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        assert!(max_len <= 57, "code length {max_len} too large for u64 peeking");
+        let mut by_order: Vec<u32> = (0..lengths.len() as u32)
+            .filter(|&s| lengths[s as usize] > 0)
+            .collect();
+        by_order.sort_by_key(|&s| (lengths[s as usize], s));
+
+        let mut count = vec![0usize; (max_len + 1) as usize];
+        for &s in &by_order {
+            count[lengths[s as usize] as usize] += 1;
+        }
+
+        // Canonical code assignment.
+        let mut first_code = vec![0u64; (max_len + 1) as usize];
+        let mut first_index = vec![0usize; (max_len + 1) as usize];
+        let mut code = 0u64;
+        let mut idx = 0usize;
+        for l in 1..=max_len as usize {
+            first_code[l] = code;
+            first_index[l] = idx;
+            code = (code + count[l] as u64) << 1;
+            idx += count[l];
+        }
+
+        let mut codes = vec![0u64; lengths.len()];
+        {
+            let mut next = first_code.clone();
+            for &s in &by_order {
+                let l = lengths[s as usize] as usize;
+                codes[s as usize] = next[l];
+                next[l] += 1;
+            }
+        }
+
+        // Fast LUT covering codes of length ≤ LUT_BITS.
+        let lut_bits = LUT_BITS.min(max_len.max(1));
+        let mut lut = vec![u32::MAX; 1usize << lut_bits];
+        for &s in &by_order {
+            let l = lengths[s as usize];
+            if l <= lut_bits {
+                let c = codes[s as usize];
+                let shift = lut_bits - l;
+                let base = (c << shift) as usize;
+                for fill in 0..(1usize << shift) {
+                    lut[base + fill] = (s << 8) | l;
+                }
+            }
+        }
+
+        let mut code = Code {
+            lengths,
+            codes,
+            max_len,
+            first_code,
+            first_index,
+            count,
+            by_order,
+            lut,
+            multi: None,
+        };
+        if code.by_order.len() <= 255 && max_len > 0 {
+            code.multi = Some(code.build_multi_lut());
+        }
+        code
+    }
+
+    /// Build the multi-symbol LUT by greedily decoding each LUT_BITS-bit
+    /// window with the single-symbol LUT.
+    fn build_multi_lut(&self) -> Vec<MultiEntry> {
+        let lut_bits = LUT_BITS.min(self.max_len.max(1));
+        let n = 1usize << lut_bits;
+        let mut table = Vec::with_capacity(n);
+        for window in 0..n as u64 {
+            let mut entry = MultiEntry { count: 0, bits: 0, syms: [0; 8] };
+            let mut used = 0u32;
+            while (entry.count as usize) < 8 {
+                let rem = lut_bits - used;
+                if rem == 0 {
+                    break;
+                }
+                // remaining window bits, left-aligned to lut_bits width
+                let probe =
+                    ((window << used) & ((1u64 << lut_bits) - 1)) as usize;
+                let e = self.lut[probe];
+                if e == u32::MAX {
+                    break;
+                }
+                let l = e & 0xFF;
+                if l > rem {
+                    break; // codeword spills past the window
+                }
+                entry.syms[entry.count as usize] = (e >> 8) as u8;
+                entry.count += 1;
+                used += l;
+                entry.bits = used as u8;
+            }
+            table.push(entry);
+        }
+        table
+    }
+
+    /// Decode up to 8 symbols in one probe (only complete codewords that
+    /// fit in the remaining stream). Returns the number decoded; 0 means
+    /// the caller must fall back to [`Self::decode_next`].
+    #[inline]
+    pub fn decode_run(&self, r: &mut BitReader, out: &mut [u32; 8]) -> usize {
+        let Some(multi) = &self.multi else { return 0 };
+        let lut_bits = LUT_BITS.min(self.max_len.max(1));
+        if r.remaining() < lut_bits as usize {
+            return 0; // tail: let the single decoder handle padding
+        }
+        let probe = r.peek_bits(lut_bits) as usize;
+        let e = &multi[probe];
+        if e.count == 0 {
+            return 0;
+        }
+        r.consume(e.bits as usize);
+        for i in 0..e.count as usize {
+            out[i] = e.syms[i] as u32;
+        }
+        e.count as usize
+    }
+
+    /// Whether the multi-symbol fast path is available (alphabet ≤ 255).
+    pub fn has_multi_lut(&self) -> bool {
+        self.multi.is_some()
+    }
+
+    #[inline]
+    pub fn max_len(&self) -> u32 {
+        self.max_len
+    }
+
+    /// Number of symbols with a codeword.
+    pub fn alphabet_size(&self) -> usize {
+        self.by_order.len()
+    }
+
+    /// Encode an iterator of symbols into a bit buffer.
+    pub fn encode<I: IntoIterator<Item = u32>>(&self, symbols: I) -> BitBuf {
+        let mut w = BitWriter::new();
+        for s in symbols {
+            let l = self.lengths[s as usize];
+            debug_assert!(l > 0, "encoding absent symbol {s}");
+            w.write_bits(self.codes[s as usize], l);
+        }
+        w.finish()
+    }
+
+    /// Total encoded length in bits of a symbol stream described by freqs.
+    pub fn encoded_bits(&self, freqs: &[u64]) -> u64 {
+        freqs
+            .iter()
+            .zip(self.lengths.iter())
+            .map(|(&f, &l)| f * l as u64)
+            .sum()
+    }
+
+    /// Bit-serial canonical decode of the next symbol — the paper's NCW
+    /// procedure reading one bit at a time (Alg. 1 line 4 cost model).
+    /// Returns `None` at end of stream or if the stream is exhausted
+    /// mid-codeword (zero padding tail).
+    #[inline]
+    pub fn decode_next_serial(&self, r: &mut BitReader) -> Option<u32> {
+        let mut code = 0u64;
+        let mut len = 0u32;
+        loop {
+            let bit = r.read_bit()?;
+            code = (code << 1) | bit as u64;
+            len += 1;
+            if len > self.max_len {
+                return None;
+            }
+            let l = len as usize;
+            let cnt = self.count[l];
+            if cnt > 0 && code >= self.first_code[l] && code < self.first_code[l] + cnt as u64 {
+                let off = (code - self.first_code[l]) as usize;
+                return Some(self.by_order[self.first_index[l] + off]);
+            }
+        }
+    }
+
+    /// LUT-accelerated decode (single probe for codes ≤ LUT_BITS, canonical
+    /// scan fallback for longer ones). Semantics identical to
+    /// [`Self::decode_next_serial`]; used by the optimized dot (see
+    /// EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn decode_next(&self, r: &mut BitReader) -> Option<u32> {
+        if r.remaining() == 0 {
+            return None;
+        }
+        let lut_bits = LUT_BITS.min(self.max_len.max(1));
+        let probe = r.peek_bits(lut_bits) as usize;
+        let e = self.lut[probe];
+        if e != u32::MAX {
+            let l = e & 0xFF;
+            if (l as usize) <= r.remaining() {
+                r.consume(l as usize);
+                return Some(e >> 8);
+            }
+            return None; // zero-padding tail shorter than the codeword
+        }
+        // Long code: canonical scan starting from the peeked prefix.
+        let avail = r.remaining().min(self.max_len as usize) as u32;
+        let window = r.peek_bits(avail);
+        let mut len = lut_bits;
+        while len <= avail {
+            let code = window >> (avail - len);
+            let l = len as usize;
+            let cnt = self.count[l];
+            if cnt > 0 && code >= self.first_code[l] && code < self.first_code[l] + cnt as u64 {
+                let off = (code - self.first_code[l]) as usize;
+                r.consume(l);
+                return Some(self.by_order[self.first_index[l] + off]);
+            }
+            len += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self as prop, Config};
+
+    fn roundtrip(freqs: &[u64], stream: &[u32]) {
+        let code = Code::from_freqs(freqs);
+        let buf = code.encode(stream.iter().copied());
+        // serial decoder
+        let mut r = BitReader::new(&buf);
+        let mut out = Vec::new();
+        while let Some(s) = code.decode_next_serial(&mut r) {
+            out.push(s);
+        }
+        assert_eq!(out, stream, "serial decode");
+        // LUT decoder
+        let mut r = BitReader::new(&buf);
+        let mut out2 = Vec::new();
+        while let Some(s) = code.decode_next(&mut r) {
+            out2.push(s);
+        }
+        assert_eq!(out2, stream, "lut decode");
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        roundtrip(&[5, 2, 1, 1], &[0, 1, 2, 3, 0, 0, 1]);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        roundtrip(&[9], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn canonical_order_is_lexicographic() {
+        // Canonical property: shorter codes are numerically-prefixed
+        // before longer ones; same-length codes increase with symbol id.
+        let code = Code::from_freqs(&[10, 10, 3, 3, 3, 3]);
+        for s in 0..6u32 {
+            assert!(code.lengths[s as usize] > 0);
+        }
+        let (l0, l2) = (code.lengths[0], code.lengths[2]);
+        assert!(l0 <= l2);
+        // same length ⇒ increasing codes by symbol id
+        for a in 0..5usize {
+            for b in (a + 1)..6 {
+                if code.lengths[a] == code.lengths[b] {
+                    assert!(code.codes[a] < code.codes[b]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_bits_accounting() {
+        let freqs = [4u64, 2, 1, 1];
+        let code = Code::from_freqs(&freqs);
+        let stream: Vec<u32> = (0..4u32)
+            .flat_map(|s| std::iter::repeat(s).take(freqs[s as usize] as usize))
+            .collect();
+        let buf = code.encode(stream.iter().copied());
+        assert_eq!(buf.len() as u64, code.encoded_bits(&freqs));
+    }
+
+    #[test]
+    fn decoder_stops_on_zero_padding() {
+        // Encode symbols, then read from a buffer that is zero-padded to a
+        // word boundary (as C_HAC stores it): the decoders must not invent
+        // trailing symbols unless 0-bits happen to decode; we verify via
+        // exact count when the all-zeros code belongs to the most frequent
+        // symbol — the realistic HAC case is handled at the format layer
+        // (which knows nm / q counts and stops by count, as Alg. 1 does
+        // via `row`/`col` counters). Here: decode exactly len(stream).
+        let freqs = [100u64, 1, 1];
+        let code = Code::from_freqs(&freqs);
+        let stream = [1u32, 2, 0, 0, 1];
+        let buf = code.encode(stream.iter().copied());
+        let mut padded_words = buf.words.clone();
+        padded_words.push(0); // extra zero word, like the paper's padding
+        let mut r = BitReader::from_words(&padded_words, padded_words.len() * 64);
+        let mut out = Vec::new();
+        for _ in 0..stream.len() {
+            out.push(code.decode_next(&mut r).unwrap());
+        }
+        assert_eq!(out, stream);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_alphabets() {
+        prop::check("huffman-roundtrip", Config { cases: 60, seed: 0x1234 }, |rng| {
+            let k = 1 + rng.gen_range(300);
+            let freqs: Vec<u64> = (0..k)
+                .map(|_| if rng.bernoulli(0.1) { 0 } else { 1 + rng.next_u64() % 500 })
+                .collect();
+            let present: Vec<u32> =
+                (0..k as u32).filter(|&s| freqs[s as usize] > 0).collect();
+            if present.is_empty() {
+                return Ok(());
+            }
+            let stream: Vec<u32> = (0..1 + rng.gen_range(400))
+                .map(|_| present[rng.gen_range(present.len())])
+                .collect();
+            let code = Code::from_freqs(&freqs);
+            let buf = code.encode(stream.iter().copied());
+            let mut r = BitReader::new(&buf);
+            let mut out = Vec::with_capacity(stream.len());
+            for _ in 0..stream.len() {
+                match code.decode_next(&mut r) {
+                    Some(s) => out.push(s),
+                    None => return Err("premature end".into()),
+                }
+            }
+            crate::prop_assert!(out == stream, "decode mismatch");
+            crate::prop_assert!(r.remaining() == 0, "leftover bits");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_serial_and_lut_agree() {
+        prop::check("serial-vs-lut", Config { cases: 40, seed: 0x77 }, |rng| {
+            let k = 2 + rng.gen_range(600); // large alphabets exercise >LUT_BITS codes
+            // Exponential-ish skew to create long codes.
+            let freqs: Vec<u64> =
+                (0..k).map(|i| 1 + (rng.next_u64() % (1 + i as u64 * 7))).collect();
+            let stream: Vec<u32> =
+                (0..500).map(|_| rng.gen_range(k) as u32).collect();
+            let code = Code::from_freqs(&freqs);
+            let buf = code.encode(stream.iter().copied());
+            let mut r1 = BitReader::new(&buf);
+            let mut r2 = BitReader::new(&buf);
+            loop {
+                let a = code.decode_next_serial(&mut r1);
+                let b = code.decode_next(&mut r2);
+                crate::prop_assert!(a == b, "decoders disagree: {a:?} vs {b:?}");
+                if a.is_none() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn long_tail_codes_beyond_lut_width() {
+        // Fibonacci-like frequencies force code lengths > LUT_BITS.
+        let mut freqs = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let code = Code::from_freqs(&freqs);
+        assert!(code.max_len() > LUT_BITS, "need codes longer than LUT");
+        let stream: Vec<u32> = (0..40u32).chain((0..40u32).rev()).collect();
+        let buf = code.encode(stream.iter().copied());
+        let mut r = BitReader::new(&buf);
+        let mut out = Vec::new();
+        while let Some(s) = code.decode_next(&mut r) {
+            out.push(s);
+        }
+        assert_eq!(out, stream);
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn rejects_absurd_code_lengths() {
+        let _ = Code::from_lengths(vec![60, 60]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Huffman coding machinery for the HAC / sHAC formats (paper Sect. IV):
+//! code-length construction, canonical encode/decode, and the paper's
+//! space upper bounds.
+
+pub mod bounds;
+pub mod canonical;
+pub mod tree;
+
+pub use canonical::Code;

@@ -1,0 +1,153 @@
+//! Huffman code-length computation (Huffman 1952, the paper's H_W).
+//!
+//! We only need code *lengths* here: codes themselves are assigned
+//! canonically in [`super::canonical`], which makes the decoder a small
+//! table instead of a pointer tree (the paper charges B-tree dictionaries
+//! at 6·k·b bits; our accounting keeps the same model, see
+//! [`super::bounds::dict_bits`]).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Compute Huffman code lengths for `freqs[i]` (count of symbol i).
+/// Zero-frequency symbols get length 0 (absent from the code).
+/// Special cases: 0 present symbols → all zero; 1 present symbol → that
+/// symbol gets length 1 (a code must emit at least one bit per symbol to
+/// be uniquely decodable in a stream).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
+    let n = freqs.len();
+    let mut lengths = vec![0u32; n];
+    let present: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Node arena: leaves then internal nodes. parent[i] links upward.
+    #[derive(Clone, Copy)]
+    struct Node {
+        parent: usize,
+    }
+    const NONE: usize = usize::MAX;
+    let mut nodes: Vec<Node> = present.iter().map(|_| Node { parent: NONE }).collect();
+
+    // Min-heap keyed by (weight, creation order) for deterministic ties.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = present
+        .iter()
+        .enumerate()
+        .map(|(slot, &sym)| Reverse((freqs[sym], slot)))
+        .collect();
+
+    while heap.len() > 1 {
+        let Reverse((w1, a)) = heap.pop().unwrap();
+        let Reverse((w2, b)) = heap.pop().unwrap();
+        let id = nodes.len();
+        nodes.push(Node { parent: NONE });
+        nodes[a].parent = id;
+        nodes[b].parent = id;
+        heap.push(Reverse((w1 + w2, id)));
+    }
+
+    // Depth of each leaf = code length.
+    for (slot, &sym) in present.iter().enumerate() {
+        let mut depth = 0u32;
+        let mut cur = slot;
+        while nodes[cur].parent != NONE {
+            cur = nodes[cur].parent;
+            depth += 1;
+        }
+        lengths[sym] = depth;
+    }
+    lengths
+}
+
+/// Average codeword length Σ p_i·len_i (bits/symbol) — the paper's H̄_W.
+pub fn avg_code_len(freqs: &[u64], lengths: &[u32]) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    freqs
+        .iter()
+        .zip(lengths.iter())
+        .map(|(&f, &l)| f as f64 * l as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+/// Verify the Kraft inequality Σ 2^-len ≤ 1 holds (with equality for a
+/// complete code of ≥2 symbols).
+pub fn kraft_sum(lengths: &[u32]) -> f64 {
+    lengths
+        .iter()
+        .filter(|&&l| l > 0)
+        .map(|&l| 2f64.powi(-(l as i32)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats::entropy_bits;
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(code_lengths(&[]), Vec::<u32>::new());
+        assert_eq!(code_lengths(&[0, 0]), vec![0, 0]);
+        assert_eq!(code_lengths(&[0, 7, 0]), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn two_symbols_get_one_bit_each() {
+        assert_eq!(code_lengths(&[3, 5]), vec![1, 1]);
+    }
+
+    #[test]
+    fn classic_example() {
+        // freqs 5,9,12,13,16,45 → standard example; lengths 4,4,3,3,3,1
+        let l = code_lengths(&[5, 9, 12, 13, 16, 45]);
+        assert_eq!(l, vec![4, 4, 3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn uniform_freqs_power_of_two() {
+        // 8 equally likely symbols → all length 3 (= log2 k exactly)
+        let l = code_lengths(&[10; 8]);
+        assert!(l.iter().all(|&x| x == 3));
+    }
+
+    #[test]
+    fn kraft_equality_for_complete_codes() {
+        for freqs in [vec![1u64, 1], vec![5, 9, 12, 13, 16, 45], vec![3; 17]] {
+            let l = code_lengths(&freqs);
+            assert!((kraft_sum(&l) - 1.0).abs() < 1e-12, "freqs {freqs:?}");
+        }
+    }
+
+    #[test]
+    fn shannon_bound_holds() {
+        // H ≤ avg_len ≤ H+1 (paper Sect. IV-B)
+        let mut rng = Prng::seeded(21);
+        for _ in 0..50 {
+            let k = 2 + rng.gen_range(64);
+            let freqs: Vec<u64> = (0..k).map(|_| 1 + rng.next_u64() % 1000).collect();
+            let l = code_lengths(&freqs);
+            let h = entropy_bits(&freqs);
+            let avg = avg_code_len(&freqs, &l);
+            assert!(avg + 1e-9 >= h, "avg {avg} < H {h}");
+            assert!(avg <= h + 1.0 + 1e-9, "avg {avg} > H+1 {}", h + 1.0);
+        }
+    }
+
+    #[test]
+    fn skewed_source_gets_short_code_for_frequent_symbol() {
+        let l = code_lengths(&[1000, 1, 1, 1]);
+        assert_eq!(l[0], 1);
+        assert!(l[1..].iter().all(|&x| x >= 2));
+    }
+}

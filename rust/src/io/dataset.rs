@@ -1,0 +1,113 @@
+//! Evaluation datasets (test splits exported by `make artifacts`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::io::wbin::{read_archive, Tensor};
+
+/// A loaded test split.
+#[derive(Debug, Clone)]
+pub enum TestSet {
+    /// Image classification: `x` is (N, H, W, C) f32, labels 0..10.
+    Cls { x: Tensor, y: Vec<i32> },
+    /// Drug–target affinity regression: token tensors + f32 targets.
+    Reg { lig: Tensor, prot: Tensor, y: Vec<f32> },
+}
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<TestSet> {
+        let a = read_archive(path)?;
+        if let (Some(x), Some(y)) = (a.get("x_test"), a.get("y_test")) {
+            if x.shape.len() == 4 {
+                return Ok(TestSet::Cls { x: x.clone(), y: y.as_i32()? });
+            }
+        }
+        if let (Some(lig), Some(prot), Some(y)) =
+            (a.get("lig_test"), a.get("prot_test"), a.get("y_test"))
+        {
+            return Ok(TestSet::Reg {
+                lig: lig.clone(),
+                prot: prot.clone(),
+                y: y.as_f32()?,
+            });
+        }
+        bail!("archive holds neither a classification nor a regression test split")
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        match self {
+            TestSet::Cls { y, .. } => y.len(),
+            TestSet::Reg { y, .. } => y.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-example feature count of the primary input.
+    pub fn example_numel(&self) -> usize {
+        match self {
+            TestSet::Cls { x, .. } => x.shape[1..].iter().product(),
+            TestSet::Reg { lig, .. } => lig.shape[1..].iter().product(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::wbin::{write_archive, Archive};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sham_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn loads_classification_split() {
+        let path = tmpfile("cls.wbin");
+        let mut a = Archive::new();
+        a.insert(
+            "x_test".into(),
+            Tensor::from_f32(vec![2, 4, 4, 1], &vec![0.5; 32]),
+        );
+        a.insert("y_test".into(), Tensor::from_i32(vec![2], &[3, 7]));
+        write_archive(&path, &a).unwrap();
+        match TestSet::load(&path).unwrap() {
+            TestSet::Cls { x, y } => {
+                assert_eq!(x.shape, vec![2, 4, 4, 1]);
+                assert_eq!(y, vec![3, 7]);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn loads_regression_split() {
+        let path = tmpfile("reg.wbin");
+        let mut a = Archive::new();
+        a.insert("lig_test".into(), Tensor::from_i32(vec![3, 5], &[1; 15]));
+        a.insert("prot_test".into(), Tensor::from_i32(vec![3, 7], &[2; 21]));
+        a.insert(
+            "y_test".into(),
+            Tensor::from_f32(vec![3], &[0.1, 0.2, 0.3]),
+        );
+        write_archive(&path, &a).unwrap();
+        let ts = TestSet::load(&path).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.example_numel(), 5);
+    }
+
+    #[test]
+    fn rejects_unknown_archive() {
+        let path = tmpfile("junk.wbin");
+        let mut a = Archive::new();
+        a.insert("foo".into(), Tensor::from_f32(vec![1], &[1.0]));
+        write_archive(&path, &a).unwrap();
+        assert!(TestSet::load(&path).is_err());
+    }
+}

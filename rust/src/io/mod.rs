@@ -1,0 +1,8 @@
+//! Build-path interchange: `.wbin` tensor archives (weights, datasets)
+//! shared with `python/compile/` and the evaluation dataset container.
+
+pub mod dataset;
+pub mod wbin;
+
+pub use dataset::TestSet;
+pub use wbin::{read_archive, write_archive, Archive, Dtype, Tensor};

@@ -1,0 +1,257 @@
+//! `.wbin` tensor-archive reader/writer — the interchange with the JAX
+//! compile path (python/compile/wbin.py defines the format; DESIGN.md §3).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 6] = b"WBIN1\x00";
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U8,
+    I64,
+}
+
+impl Dtype {
+    fn tag(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I32 => 1,
+            Dtype::U8 => 2,
+            Dtype::I64 => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Dtype> {
+        Ok(match t {
+            0 => Dtype::F32,
+            1 => Dtype::I32,
+            2 => Dtype::U8,
+            3 => Dtype::I64,
+            _ => bail!("unknown dtype tag {t}"),
+        })
+    }
+
+    pub fn item_size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+            Dtype::I64 => 8,
+        }
+    }
+}
+
+/// A named n-dimensional tensor with raw little-endian storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Raw bytes, little-endian, C order.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Tensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Tensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::I32, shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, expected F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        match self.dtype {
+            Dtype::I32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            Dtype::I64 => Ok(self
+                .data
+                .chunks_exact(8)
+                .map(|c| {
+                    i64::from_le_bytes([
+                        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                    ]) as i32
+                })
+                .collect()),
+            Dtype::U8 => Ok(self.data.iter().map(|&b| b as i32).collect()),
+            _ => bail!("tensor is {:?}, expected integer", self.dtype),
+        }
+    }
+
+    /// View a 2-D f32 tensor as a [`crate::Mat`].
+    pub fn as_mat(&self) -> Result<crate::Mat> {
+        if self.shape.len() != 2 {
+            bail!("expected 2-D tensor, got shape {:?}", self.shape);
+        }
+        Ok(crate::Mat::from_vec(self.shape[0], self.shape[1], self.as_f32()?))
+    }
+}
+
+/// An ordered collection of named tensors.
+pub type Archive = BTreeMap<String, Tensor>;
+
+/// Read a `.wbin` archive.
+pub fn read_archive(path: impl AsRef<Path>) -> Result<Archive> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_archive(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+fn parse_archive(buf: &[u8]) -> Result<Archive> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated archive at offset {}", *pos);
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 6)? != MAGIC {
+        bail!("bad magic");
+    }
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let mut out = Archive::new();
+    for _ in 0..count {
+        let nlen =
+            u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let tag = take(&mut pos, 1)?[0];
+        let ndim = take(&mut pos, 1)?[0] as usize;
+        let dtype = Dtype::from_tag(tag)?;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(
+                u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize,
+            );
+        }
+        let n: usize = shape.iter().product();
+        let data = take(&mut pos, n * dtype.item_size())?.to_vec();
+        out.insert(name, Tensor { dtype, shape, data });
+    }
+    Ok(out)
+}
+
+/// Write a `.wbin` archive.
+pub fn write_archive(path: impl AsRef<Path>, tensors: &Archive) -> Result<()> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype.tag(), t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_archive() {
+        let dir = std::env::temp_dir().join("sham_wbin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.wbin");
+        let mut a = Archive::new();
+        a.insert(
+            "weights".into(),
+            Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+        );
+        a.insert("ids".into(), Tensor::from_i32(vec![4], &[1, -2, 3, 4]));
+        write_archive(&path, &a).unwrap();
+        let b = read_archive(&path).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b["weights"].as_f32().unwrap()[4], 5.0);
+        assert_eq!(b["ids"].as_i32().unwrap(), vec![1, -2, 3, 4]);
+    }
+
+    #[test]
+    fn as_mat_view() {
+        let t = Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let m = t.as_mat().unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+        let t3 = Tensor::from_f32(vec![1, 2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t3.as_mat().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_archive(b"NOTWBIN\x00\x00\x00\x00").is_err());
+        // valid magic but truncated header
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        assert!(parse_archive(&buf).is_err());
+    }
+
+    #[test]
+    fn dtype_conversions() {
+        let t = Tensor {
+            dtype: Dtype::U8,
+            shape: vec![3],
+            data: vec![7, 8, 9],
+        };
+        assert_eq!(t.as_i32().unwrap(), vec![7, 8, 9]);
+        assert!(t.as_f32().is_err());
+        let t64 = Tensor {
+            dtype: Dtype::I64,
+            shape: vec![1],
+            data: 42i64.to_le_bytes().to_vec(),
+        };
+        assert_eq!(t64.as_i32().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn empty_archive() {
+        let dir = std::env::temp_dir().join("sham_wbin_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("e.wbin");
+        write_archive(&path, &Archive::new()).unwrap();
+        assert!(read_archive(&path).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,36 @@
+//! # sHAM-rs
+//!
+//! Production-grade reproduction of *"Compact representations of
+//! convolutional neural networks via weight pruning and quantization"*
+//! (Marinò et al., 2021): the HAC / sHAC compressed weight-matrix formats,
+//! the weight-sharing quantizers they build on (CWS, PWS, UQ, ECSQ),
+//! dot products that run directly on the compressed bitstream, and a Rust
+//! serving coordinator that evaluates compressed CNNs end-to-end with the
+//! conv front-ends executed as AOT-compiled XLA (PJRT) artifacts.
+//!
+//! Layering (see DESIGN.md):
+//! - `util`, `mat`, `huffman` — substrates (bitstreams, PRNG, coding).
+//! - `formats` — the paper's contribution: CSC/CSR/COO/IM/CLA baselines,
+//!   HAC (Alg. 1), sHAC (Alg. 2), parallel dot (Alg. 3).
+//! - `quant` — pruning + the four weight-sharing quantizers, unified and
+//!   per-layer.
+//! - `io`, `nn`, `runtime` — model/dataset interchange with the JAX build
+//!   path, compressed inference, PJRT execution.
+//! - `coordinator` — batching inference server + CLI surface.
+//! - `formats::store` — the on-disk `.sham` container for compressed
+//!   models; `formats::{LzAc, RelIdx}` and the §VI column-parallel dots
+//!   extend the paper's future-work directions.
+//! - `harness` — drivers that regenerate every table and figure.
+
+pub mod coordinator;
+pub mod formats;
+pub mod harness;
+pub mod huffman;
+pub mod io;
+pub mod nn;
+pub mod runtime;
+pub mod mat;
+pub mod quant;
+pub mod util;
+
+pub use mat::Mat;

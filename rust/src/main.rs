@@ -1,0 +1,9 @@
+//! `sham` CLI — leader entrypoint; see `harness::cli` for commands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = sham::harness::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

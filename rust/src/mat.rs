@@ -1,0 +1,266 @@
+//! Dense row-major f32 matrix — the uncompressed reference representation
+//! `W°` of the paper (Sect. III-A), plus generators for synthetic weight
+//! matrices used by tests and the Fig-1 benchmark workloads.
+
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// Dense row-major matrix, `rows × cols` (the paper's `n × m`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from row slices (test convenience).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Number of non-zero entries `q`.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Ratio of non-zero entries `s ∈ [0,1]` (paper Sect. III-A).
+    pub fn nonzero_ratio(&self) -> f64 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.numel() as f64
+    }
+
+    /// Number of distinct values (including 0 if present) — the paper's k
+    /// is the count of distinct *non-null* values after quantization.
+    pub fn distinct_values(&self) -> usize {
+        stats::distinct_count(&self.data)
+    }
+
+    /// Number of distinct non-zero values.
+    pub fn distinct_nonzero(&self) -> usize {
+        let nz: Vec<f32> = self.data.iter().copied().filter(|&x| x != 0.0).collect();
+        stats::distinct_count(&nz)
+    }
+
+    /// Dense vector–matrix product `x^T W` (x.len() == rows), the paper's
+    /// reference dot the compressed formats are checked/benched against.
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "vecmat dimension mismatch");
+        let mut out = vec![0.0f32; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (o, &w) in out.iter_mut().zip(row.iter()) {
+                *o += xi * w;
+            }
+        }
+        out
+    }
+
+    /// Dense matrix product `X W` where `X` is `batch × rows`; output is
+    /// `batch × cols` (the paper's Alg. 3 computes this row-parallel).
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.rows, "matmul dimension mismatch");
+        let mut out = Mat::zeros(x.rows, self.cols);
+        for b in 0..x.rows {
+            let y = self.vecmat(x.row(b));
+            out.data[b * self.cols..(b + 1) * self.cols].copy_from_slice(&y);
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Max |a - b| over entries; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    // ---- synthetic generators -------------------------------------------
+
+    /// i.i.d. N(0, sigma²) entries — mimics a trained FC weight matrix.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f32, rng: &mut Prng) -> Self {
+        let data = (0..rows * cols).map(|_| sigma * rng.normal() as f32).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian matrix pruned to `nonzero_ratio` s and quantized to `k`
+    /// distinct non-zero values (uniform grid over the value range) — the
+    /// Fig-1 workload: "pruning level p = 1-s, CWS with k values".
+    pub fn sparse_quantized(
+        rows: usize,
+        cols: usize,
+        s: f64,
+        k: usize,
+        rng: &mut Prng,
+    ) -> Self {
+        assert!(k >= 1);
+        let mut m = Self::gaussian(rows, cols, 0.05, rng);
+        // Prune: keep the s·nm entries largest in magnitude (threshold at
+        // the (1-s)-quantile of |w|, as the paper's magnitude pruning).
+        let mut mags: Vec<f32> = m.data.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = stats::quantile_sorted(&mags, 1.0 - s);
+        for w in m.data.iter_mut() {
+            if w.abs() <= thr {
+                *w = 0.0;
+            }
+        }
+        // Quantize survivors onto a k-point grid.
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &w in m.data.iter().filter(|&&w| w != 0.0) {
+            lo = lo.min(w);
+            hi = hi.max(w);
+        }
+        if lo.is_finite() && hi > lo {
+            let step = (hi - lo) / (k.max(2) - 1) as f32;
+            for w in m.data.iter_mut() {
+                if *w != 0.0 {
+                    let mut q = lo + ((*w - lo) / step).round() * step;
+                    if q == 0.0 {
+                        // keep pruned-vs-quantized zero distinct
+                        q = step.max(f32::MIN_POSITIVE);
+                    }
+                    *w = q;
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn construction_and_accessors() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.get(2, 1), 6.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.numel(), 6);
+    }
+
+    #[test]
+    fn nnz_and_ratio() {
+        let m = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 0.0]]);
+        assert_eq!(m.nnz(), 1);
+        assert!((m.nonzero_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(Mat::zeros(0, 0).nonzero_ratio(), 0.0);
+    }
+
+    #[test]
+    fn paper_example2_matrix_stats() {
+        // The matrix of Example 2 in the paper.
+        let w = Mat::from_rows(&[
+            &[1.0, 0.0, 4.0, 0.0, 0.0],
+            &[0.0, 10.0, 0.0, 0.0, 0.0],
+            &[2.0, 3.0, 0.0, 0.0, 5.0],
+            &[0.0, 0.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 6.0],
+        ]);
+        assert_eq!(w.nnz(), 7);
+        assert_eq!(w.distinct_nonzero(), 7);
+        assert_eq!(w.distinct_values(), 8); // + the zero symbol
+    }
+
+    #[test]
+    fn vecmat_known_result() {
+        let w = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let y = w.vecmat(&[1.0, 1.0]);
+        assert_eq!(y, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_matches_vecmat_rows() {
+        let mut rng = Prng::seeded(3);
+        let w = Mat::gaussian(8, 5, 1.0, &mut rng);
+        let x = Mat::gaussian(4, 8, 1.0, &mut rng);
+        let out = w.matmul(&x);
+        for b in 0..4 {
+            assert_eq!(out.row(b), w.vecmat(x.row(b)).as_slice());
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Prng::seeded(9);
+        let m = Mat::gaussian(7, 3, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn sparse_quantized_hits_targets() {
+        prop::check("sparse_quantized", Config { cases: 24, seed: 0xAB }, |rng| {
+            let rows = 8 + rng.gen_range(40);
+            let cols = 8 + rng.gen_range(40);
+            let s = 0.05 + 0.5 * rng.next_f64();
+            let k = 2 + rng.gen_range(30);
+            let m = Mat::sparse_quantized(rows, cols, s, k, rng);
+            let got_s = m.nonzero_ratio();
+            crate::prop_assert!(
+                (got_s - s).abs() < 0.15,
+                "sparsity target {s} got {got_s}"
+            );
+            let kk = m.distinct_nonzero();
+            crate::prop_assert!(kk <= k.max(2), "distinct {kk} > k {k}");
+            Ok(())
+        });
+    }
+
+    use crate::util::prng::Prng;
+}

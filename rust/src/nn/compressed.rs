@@ -1,0 +1,440 @@
+//! Compressed model container: conv tensors stored under index-map
+//! accounting (the paper's choice for conv layers, Sect. V-K), FC
+//! matrices under any [`CompressedMatrix`] format, and the full
+//! compression pipeline (prune → quantize → store) as a reusable
+//! configuration ([`CompressionCfg`]).
+
+use anyhow::{Context, Result};
+
+use crate::formats::{
+    par_matmul, Cla, Coo, CompressedMatrix, Csc, Csr, Dense, Hac, IndexMap, Shac,
+};
+use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
+use crate::io::{Archive, Tensor};
+use crate::mat::Mat;
+use crate::nn::model::ModelKind;
+use crate::quant::{self, Kind, Options};
+use crate::util::prng::Prng;
+
+/// Storage format choice for FC matrices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FcFormat {
+    Dense,
+    Csc,
+    Csr,
+    Coo,
+    Im,
+    Cla,
+    Hac,
+    /// sHAC
+    Shac,
+    /// Whichever of HAC / sHAC is smaller for the given matrix — the
+    /// paper's `*`-marked per-configuration choice.
+    Auto,
+}
+
+impl FcFormat {
+    pub fn parse(s: &str) -> Option<FcFormat> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dense" => FcFormat::Dense,
+            "csc" => FcFormat::Csc,
+            "csr" => FcFormat::Csr,
+            "coo" => FcFormat::Coo,
+            "im" => FcFormat::Im,
+            "cla" => FcFormat::Cla,
+            "hac" => FcFormat::Hac,
+            "shac" => FcFormat::Shac,
+            "auto" => FcFormat::Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn build(&self, w: &Mat) -> Box<dyn CompressedMatrix> {
+        match self {
+            FcFormat::Dense => Box::new(Dense::compress(w)),
+            FcFormat::Csc => Box::new(Csc::compress(w)),
+            FcFormat::Csr => Box::new(Csr::compress(w)),
+            FcFormat::Coo => Box::new(Coo::compress(w)),
+            FcFormat::Im => Box::new(IndexMap::compress(w)),
+            FcFormat::Cla => Box::new(Cla::compress(w)),
+            FcFormat::Hac => Box::new(Hac::compress(w)),
+            FcFormat::Shac => Box::new(Shac::compress(w)),
+            FcFormat::Auto => {
+                let hac = Hac::compress(w);
+                let shac = Shac::compress(w);
+                if shac.size_bits() < hac.size_bits() {
+                    Box::new(shac)
+                } else {
+                    Box::new(hac)
+                }
+            }
+        }
+    }
+}
+
+/// One compressed FC layer.
+pub struct FcLayer {
+    pub name: String,
+    pub w: Box<dyn CompressedMatrix>,
+    pub b: Vec<f32>,
+}
+
+/// A full compression experiment configuration (one cell of the paper's
+/// grids).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionCfg {
+    /// Pruning percentile for FC layers (None = no pruning).
+    pub fc_prune: Option<f64>,
+    /// Weight-sharing quantizer + k for FC layers.
+    pub fc_quant: Option<(Kind, usize)>,
+    /// Quantizer + k for conv tensors (stored as index map).
+    pub conv_quant: Option<(Kind, usize)>,
+    /// Pruning percentile for conv tensors (Table IV experiment).
+    pub conv_prune: Option<f64>,
+    /// Unified (one codebook across layers) vs per-layer quantization.
+    pub unified: bool,
+    /// Storage format for FC matrices.
+    pub fc_format: FcFormat,
+}
+
+impl Default for CompressionCfg {
+    fn default() -> Self {
+        CompressionCfg {
+            fc_prune: None,
+            fc_quant: None,
+            conv_quant: None,
+            conv_prune: None,
+            unified: true,
+            fc_format: FcFormat::Auto,
+        }
+    }
+}
+
+/// A model ready for compressed inference + occupancy accounting.
+pub struct CompressedModel {
+    pub kind: ModelKind,
+    /// Full parameter archive for the PJRT feature graph (conv tensors
+    /// possibly pruned/quantized; FC entries present but unused there).
+    pub params: Archive,
+    pub fc: Vec<FcLayer>,
+    /// Storage bits charged for the conv tensors (index map when
+    /// quantized, dense otherwise) + all non-FC parameters.
+    pub conv_bits: u64,
+    conv_dense_bits: u64,
+    fc_dense_bits: u64,
+}
+
+impl CompressedModel {
+    /// Uncompressed baseline (dense FC, dense conv).
+    pub fn baseline(kind: ModelKind, params: &Archive) -> Result<CompressedModel> {
+        Self::build(kind, params, &CompressionCfg {
+            fc_format: FcFormat::Dense,
+            ..Default::default()
+        }, &mut Prng::seeded(0))
+    }
+
+    /// Apply a compression configuration to baseline weights.
+    pub fn build(
+        kind: ModelKind,
+        base: &Archive,
+        cfg: &CompressionCfg,
+        rng: &mut Prng,
+    ) -> Result<CompressedModel> {
+        let mut params = base.clone();
+
+        // --- FC pipeline: prune → quantize (unified or per-layer) → store
+        let fc_names = kind.fc_names();
+        let mut fc_mats: Vec<Mat> = Vec::with_capacity(fc_names.len());
+        for name in fc_names {
+            let t = base
+                .get(&format!("{name}.w"))
+                .with_context(|| format!("missing {name}.w"))?;
+            let mut m = t.as_mat()?;
+            if let Some(p) = cfg.fc_prune {
+                m = quant::prune_percentile(&m, p);
+            }
+            fc_mats.push(m);
+        }
+        if let Some((qkind, k)) = cfg.fc_quant {
+            let opts = Options {
+                kind: qkind,
+                k,
+                exclude_zeros: cfg.fc_prune.is_some(),
+            };
+            if cfg.unified {
+                let refs: Vec<&Mat> = fc_mats.iter().collect();
+                fc_mats = quant::quantize_unified(&refs, opts, rng).mats;
+            } else {
+                fc_mats = fc_mats
+                    .iter()
+                    .map(|m| quant::quantize(m, opts, rng).mats.remove(0))
+                    .collect();
+            }
+        }
+        let mut fc = Vec::with_capacity(fc_names.len());
+        let mut fc_dense_bits = 0u64;
+        for (name, m) in fc_names.iter().zip(fc_mats.iter()) {
+            let b = base
+                .get(&format!("{name}.b"))
+                .with_context(|| format!("missing {name}.b"))?
+                .as_f32()?;
+            fc_dense_bits += (m.numel() as u64 + b.len() as u64) * WORD_BITS;
+            // keep quantized values in the archive too (full graph uses them)
+            params.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![m.rows, m.cols], &m.data),
+            );
+            fc.push(FcLayer {
+                name: name.to_string(),
+                w: cfg.fc_format.build(m),
+                b,
+            });
+        }
+        // biases stay dense: charge them at word size on top of the
+        // format's matrix bits (done in fc_bits()).
+
+        // --- conv pipeline: prune and/or quantize; stored as index map
+        let conv_names = kind.conv_names();
+        let mut conv_bits = 0u64;
+        let mut conv_dense_bits = 0u64;
+        // First collect (possibly pruned) conv weight tensors.
+        let mut conv_vals: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+        for name in conv_names {
+            let key = format!("{name}.w");
+            let t = base.get(&key).with_context(|| format!("missing {key}"))?;
+            let mut vals = t.as_f32()?;
+            if let Some(p) = cfg.conv_prune {
+                let flat = Mat::from_vec(vals.len(), 1, vals.clone());
+                vals = quant::prune_percentile(&flat, p).data;
+            }
+            conv_vals.push((key, t.shape.clone(), vals));
+        }
+        if let Some((qkind, k)) = cfg.conv_quant {
+            // unified across conv tensors (paper Sect. V-J2 uses the
+            // unified variant on conv blocks)
+            let mats: Vec<Mat> = conv_vals
+                .iter()
+                .map(|(_, _, v)| Mat::from_vec(v.len(), 1, v.clone()))
+                .collect();
+            let refs: Vec<&Mat> = mats.iter().collect();
+            let opts = Options {
+                kind: qkind,
+                k,
+                exclude_zeros: cfg.conv_prune.is_some(),
+            };
+            let q = quant::quantize_unified(&refs, opts, rng);
+            for ((_, _, vals), qm) in conv_vals.iter_mut().zip(q.mats.into_iter()) {
+                *vals = qm.data;
+            }
+        }
+        for (key, shape, vals) in conv_vals {
+            let numel = vals.len() as u64;
+            conv_dense_bits += numel * WORD_BITS;
+            conv_bits += if cfg.conv_quant.is_some() {
+                // index-map accounting: b̄ bits/entry + codebook
+                let distinct = crate::util::stats::distinct_count(&vals).max(1) as u64;
+                index_map_pointer_bits(distinct) * numel + distinct * WORD_BITS
+            } else if cfg.conv_prune.is_some() {
+                // CSC accounting on the flattened tensor
+                let q = vals.iter().filter(|&&v| v != 0.0).count() as u64;
+                (2 * q + 2) * WORD_BITS
+            } else {
+                numel * WORD_BITS
+            };
+            params.insert(key, Tensor::from_f32(shape, &vals));
+        }
+        // All remaining parameters (conv biases, embeddings) stay dense.
+        for (name, t) in base.iter() {
+            let is_fc = fc_names.iter().any(|n| name.starts_with(&format!("{n}.")));
+            let is_conv_w =
+                conv_names.iter().any(|n| *name == format!("{n}.w"));
+            if !is_fc && !is_conv_w {
+                let bits = t.numel() as u64 * WORD_BITS;
+                conv_bits += bits;
+                conv_dense_bits += bits;
+            }
+        }
+
+        Ok(CompressedModel { kind, params, fc, conv_bits, conv_dense_bits, fc_dense_bits })
+    }
+
+    /// FC forward: features (B × feat_dim) → outputs (B × last_dim).
+    /// ReLU between layers, none after the last. Uses the decode-once
+    /// `matmul_batch` (the entropy formats amortize their bitstream
+    /// decode across the batch); `threads > 1` switches to the paper's
+    /// row-parallel Alg. 3 (pays decode per row — better only when
+    /// cores outnumber the amortization factor).
+    pub fn fc_forward(&self, feats: &Mat, threads: usize) -> Mat {
+        let mut h = feats.clone();
+        let last = self.fc.len() - 1;
+        for (li, layer) in self.fc.iter().enumerate() {
+            let mut y = if threads > 1 && h.rows > 1 {
+                par_matmul(layer.w.as_ref(), &h, threads)
+            } else {
+                layer.w.matmul_batch(&h)
+            };
+            for r in 0..y.rows {
+                for (c, bias) in layer.b.iter().enumerate() {
+                    let v = y.get(r, c) + bias;
+                    y.set(r, c, if li < last { v.max(0.0) } else { v });
+                }
+            }
+            h = y;
+        }
+        h
+    }
+
+    /// Replace every FC matrix with its dense decompression. Outputs are
+    /// bit-identical (the formats are lossless); used by accuracy-table
+    /// drivers where the dot's *speed* is not under measurement — call
+    /// after capturing `psi_fc`/`psi_total`, which reflect the original
+    /// formats' storage.
+    pub fn densify_for_eval(&mut self) {
+        for layer in self.fc.iter_mut() {
+            let dense = layer.w.decompress();
+            layer.w = Box::new(crate::formats::Dense::from_mat(dense));
+        }
+    }
+
+    /// Bits charged for the FC block (matrices in their format + dense
+    /// biases).
+    pub fn fc_bits(&self) -> u64 {
+        self.fc
+            .iter()
+            .map(|l| l.w.size_bits() + l.b.len() as u64 * WORD_BITS)
+            .sum()
+    }
+
+    /// Occupancy ratio of the FC block only (the paper's FC-only ψ).
+    pub fn psi_fc(&self) -> f64 {
+        self.fc_bits() as f64 / self.fc_dense_bits as f64
+    }
+
+    /// Whole-network occupancy ratio (paper Sect. V-K).
+    pub fn psi_total(&self) -> f64 {
+        (self.fc_bits() + self.conv_bits) as f64
+            / (self.fc_dense_bits + self.conv_dense_bits) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::Tensor;
+
+    /// Tiny synthetic "model" archive compatible with VggMnist metadata
+    /// except for layer dims (metadata only fixes names).
+    fn tiny_archive(rng: &mut Prng) -> Archive {
+        let mut a = Archive::new();
+        let dims = [(24usize, 16usize), (16, 16), (16, 8)];
+        for (name, &(nin, nout)) in
+            ModelKind::VggMnist.fc_names().iter().zip(dims.iter())
+        {
+            let w = Mat::gaussian(nin, nout, 0.1, rng);
+            a.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![nin, nout], &w.data),
+            );
+            a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+        }
+        for name in ModelKind::VggMnist.conv_names() {
+            let w = Mat::gaussian(3 * 3 * 4, 8, 0.1, rng);
+            a.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![3, 3, 4, 8], &w.data),
+            );
+            a.insert(format!("{name}.b"), Tensor::from_f32(vec![8], &vec![0.0; 8]));
+        }
+        a
+    }
+
+    #[test]
+    fn baseline_psi_is_one() {
+        let mut rng = Prng::seeded(1);
+        let a = tiny_archive(&mut rng);
+        let m = CompressedModel::baseline(ModelKind::VggMnist, &a).unwrap();
+        assert!((m.psi_total() - 1.0).abs() < 1e-9);
+        assert!((m.psi_fc() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_quantize_reduces_occupancy() {
+        let mut rng = Prng::seeded(2);
+        let a = tiny_archive(&mut rng);
+        let cfg = CompressionCfg {
+            fc_prune: Some(90.0),
+            fc_quant: Some((Kind::Cws, 8)),
+            conv_quant: Some((Kind::Cws, 32)),
+            ..Default::default()
+        };
+        let m = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
+        assert!(m.psi_fc() < 0.6, "psi_fc {}", m.psi_fc());
+        assert!(m.psi_total() < 1.0, "psi_total {}", m.psi_total());
+        // quantized FC matrices have ≤ 8 distinct non-zeros (shared)
+        for l in &m.fc {
+            let d = l.w.decompress();
+            assert!(d.distinct_nonzero() <= 8);
+        }
+    }
+
+    #[test]
+    fn fc_forward_matches_dense_reference() {
+        let mut rng = Prng::seeded(3);
+        let a = tiny_archive(&mut rng);
+        for fmt in [FcFormat::Dense, FcFormat::Hac, FcFormat::Shac, FcFormat::Auto] {
+            let cfg = CompressionCfg { fc_format: fmt, ..Default::default() };
+            let m =
+                CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
+            let x = Mat::gaussian(5, 24, 1.0, &mut rng);
+            let got = m.fc_forward(&x, 1);
+            let got_par = m.fc_forward(&x, 4);
+
+            // dense reference
+            let mut h = x.clone();
+            for (li, name) in ModelKind::VggMnist.fc_names().iter().enumerate() {
+                let w = a[&format!("{name}.w")].as_mat().unwrap();
+                let b = a[&format!("{name}.b")].as_f32().unwrap();
+                let mut y = w.matmul(&h);
+                for r in 0..y.rows {
+                    for c in 0..y.cols {
+                        let v = y.get(r, c) + b[c];
+                        y.set(r, c, if li < 2 { v.max(0.0) } else { v });
+                    }
+                }
+                h = y;
+            }
+            assert!(got.max_abs_diff(&h) < 1e-3, "{fmt:?} mismatch");
+            assert!(got_par.max_abs_diff(&h) < 1e-3, "{fmt:?} par mismatch");
+        }
+    }
+
+    #[test]
+    fn non_unified_quantization_gives_per_layer_codebooks() {
+        let mut rng = Prng::seeded(4);
+        let a = tiny_archive(&mut rng);
+        let cfg = CompressionCfg {
+            fc_quant: Some((Kind::Cws, 4)),
+            unified: false,
+            fc_format: FcFormat::Dense,
+            ..Default::default()
+        };
+        let m = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
+        // per-layer: each layer ≤ 4 distinct, but union is larger than 4
+        let mut union = std::collections::HashSet::new();
+        for l in &m.fc {
+            let d = l.w.decompress();
+            assert!(d.distinct_values() <= 4 + 1);
+            for v in d.data {
+                union.insert(v.to_bits());
+            }
+        }
+        assert!(union.len() > 4);
+    }
+
+    #[test]
+    fn fcformat_parse() {
+        assert_eq!(FcFormat::parse("shac"), Some(FcFormat::Shac));
+        assert_eq!(FcFormat::parse("AUTO"), Some(FcFormat::Auto));
+        assert_eq!(FcFormat::parse("zzz"), None);
+    }
+}

@@ -1,0 +1,283 @@
+//! Evaluation of (compressed) models over the exported test splits:
+//! conv front-end through the PJRT engine, FC stack on the compressed
+//! formats, metric = accuracy (classification) or MSE (regression).
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::io::{Archive, TestSet};
+use crate::mat::Mat;
+use crate::nn::compressed::CompressedModel;
+use crate::runtime::{lit_f32, lit_i32, Engine};
+use crate::util::timer::Stopwatch;
+
+/// Evaluation metric (paper Sect. V-C).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    Accuracy(f64),
+    Mse(f64),
+}
+
+impl Metric {
+    pub fn value(&self) -> f64 {
+        match self {
+            Metric::Accuracy(v) | Metric::Mse(v) => *v,
+        }
+    }
+
+    /// Δperf vs a baseline: positive = better (sign-flipped for MSE).
+    pub fn delta_vs(&self, baseline: &Metric) -> f64 {
+        match (self, baseline) {
+            (Metric::Accuracy(a), Metric::Accuracy(b)) => a - b,
+            (Metric::Mse(a), Metric::Mse(b)) => b - a,
+            _ => panic!("metric kind mismatch"),
+        }
+    }
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Metric::Accuracy(v) => write!(f, "acc={v:.4}"),
+            Metric::Mse(v) => write!(f, "mse={v:.4}"),
+        }
+    }
+}
+
+/// Build the literal for a named engine input from the parameter
+/// archive (everything except the example inputs).
+fn param_literal(params: &Archive, name: &str) -> Result<Literal> {
+    let t = params
+        .get(name)
+        .with_context(|| format!("engine input `{name}` missing from params"))?;
+    let shape: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    match t.dtype {
+        crate::io::Dtype::F32 => lit_f32(&t.as_f32()?, &shape),
+        _ => lit_i32(&t.as_i32()?, &shape),
+    }
+}
+
+/// Slice + zero-pad one input batch out of a flat example tensor.
+fn batch_slice_f32(
+    data: &[f32],
+    per_example: usize,
+    start: usize,
+    n_total: usize,
+    batch: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * per_example];
+    let here = batch.min(n_total - start);
+    out[..here * per_example].copy_from_slice(
+        &data[start * per_example..(start + here) * per_example],
+    );
+    out
+}
+
+fn batch_slice_i32(
+    data: &[i32],
+    per_example: usize,
+    start: usize,
+    n_total: usize,
+    batch: usize,
+) -> Vec<i32> {
+    let mut out = vec![0i32; batch * per_example];
+    let here = batch.min(n_total - start);
+    out[..here * per_example].copy_from_slice(
+        &data[start * per_example..(start + here) * per_example],
+    );
+    out
+}
+
+/// Compute features for every test example through the PJRT engine
+/// (batched, last batch zero-padded), returning an (N × feat_dim) Mat.
+pub fn compute_features(
+    engine: &Engine,
+    params: &Archive,
+    test: &TestSet,
+    batch: usize,
+    feat_dim: usize,
+) -> Result<Mat> {
+    let n = test.len();
+    let mut feats = Mat::zeros(n, feat_dim);
+    // Pre-build the (constant) parameter literals once.
+    let mut fixed: Vec<(usize, Literal)> = Vec::new();
+    let mut input_slots: Vec<&str> = Vec::new();
+    for (i, name) in engine.param_names.iter().enumerate() {
+        match name.as_str() {
+            "x" | "lig" | "prot" => input_slots.push(name),
+            _ => fixed.push((i, param_literal(params, name)?)),
+        }
+    }
+    let _ = input_slots;
+
+    let mut start = 0usize;
+    while start < n {
+        let mut inputs: Vec<Literal> = Vec::with_capacity(engine.param_names.len());
+        for name in &engine.param_names {
+            match name.as_str() {
+                "x" => {
+                    let (data, shape) = match test {
+                        TestSet::Cls { x, .. } => (x.as_f32()?, &x.shape),
+                        _ => bail!("engine expects images, test set is regression"),
+                    };
+                    let per = shape[1..].iter().product::<usize>();
+                    let b = batch_slice_f32(&data, per, start, n, batch);
+                    let mut bshape: Vec<i64> =
+                        shape.iter().map(|&d| d as i64).collect();
+                    bshape[0] = batch as i64;
+                    inputs.push(lit_f32(&b, &bshape)?);
+                }
+                "lig" | "prot" => {
+                    let (t,) = match test {
+                        TestSet::Reg { lig, prot, .. } => {
+                            if name == "lig" {
+                                (lig,)
+                            } else {
+                                (prot,)
+                            }
+                        }
+                        _ => bail!("engine expects tokens, test set is classification"),
+                    };
+                    let per = t.shape[1..].iter().product::<usize>();
+                    let b = batch_slice_i32(&t.as_i32()?, per, start, n, batch);
+                    inputs.push(lit_i32(&b, &[batch as i64, per as i64])?);
+                }
+                other => inputs.push(param_literal(params, other)?),
+            }
+        }
+        let out = engine.run_f32(&inputs)?;
+        anyhow::ensure!(out.len() == batch * feat_dim, "feature shape mismatch");
+        let here = batch.min(n - start);
+        feats.data[start * feat_dim..(start + here) * feat_dim]
+            .copy_from_slice(&out[..here * feat_dim]);
+        start += batch;
+    }
+    Ok(feats)
+}
+
+/// Metric from FC outputs.
+pub fn metric_from_outputs(outputs: &Mat, test: &TestSet) -> Metric {
+    match test {
+        TestSet::Cls { y, .. } => {
+            let mut correct = 0usize;
+            for (i, &label) in y.iter().enumerate() {
+                let row = outputs.row(i);
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                if pred == label as usize {
+                    correct += 1;
+                }
+            }
+            Metric::Accuracy(correct as f64 / y.len() as f64)
+        }
+        TestSet::Reg { y, .. } => {
+            let mut se = 0.0f64;
+            for (i, &target) in y.iter().enumerate() {
+                let pred = outputs.get(i, 0) as f64;
+                se += (pred - target as f64) * (pred - target as f64);
+            }
+            Metric::Mse(se / y.len() as f64)
+        }
+    }
+}
+
+/// Full evaluation of a compressed model: PJRT conv features + Rust FC
+/// on compressed matrices. Returns (metric, fc_seconds, total_seconds).
+pub fn evaluate(
+    model: &CompressedModel,
+    engine: &Engine,
+    test: &TestSet,
+    batch: usize,
+    threads: usize,
+) -> Result<(Metric, f64, f64)> {
+    let total = Stopwatch::start();
+    let feats = compute_features(
+        engine,
+        &model.params,
+        test,
+        batch,
+        model.kind.feature_dim(),
+    )?;
+    let fc_t = Stopwatch::start();
+    let outputs = model.fc_forward(&feats, threads);
+    let fc_secs = fc_t.elapsed_secs();
+    Ok((metric_from_outputs(&outputs, test), fc_secs, total.elapsed_secs()))
+}
+
+/// Evaluate the *full* uncompressed graph end-to-end through PJRT (the
+/// Table I baseline timing path).
+pub fn evaluate_full(
+    engine: &Engine,
+    params: &Archive,
+    test: &TestSet,
+    batch: usize,
+) -> Result<(Metric, f64)> {
+    let sw = Stopwatch::start();
+    let n = test.len();
+    let out_dim = match test {
+        TestSet::Cls { .. } => 10,
+        TestSet::Reg { .. } => 1,
+    };
+    let outputs = compute_features(engine, params, test, batch, out_dim)
+        .context("full-graph execution")?;
+    let _ = n;
+    Ok((metric_from_outputs(&outputs, test), sw.elapsed_secs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::Tensor;
+
+    #[test]
+    fn metric_display_and_delta() {
+        let a = Metric::Accuracy(0.95);
+        let b = Metric::Accuracy(0.90);
+        assert!((a.delta_vs(&b) - 0.05).abs() < 1e-12);
+        let m1 = Metric::Mse(0.2);
+        let m2 = Metric::Mse(0.3);
+        assert!(m1.delta_vs(&m2) > 0.0); // lower MSE = improvement
+        assert_eq!(format!("{a}"), "acc=0.9500");
+        assert_eq!(format!("{m1}"), "mse=0.2000");
+    }
+
+    #[test]
+    fn batch_slicing_pads_with_zeros() {
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let b = batch_slice_f32(&data, 2, 4, 5, 4);
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b[..2], &[8.0, 9.0]);
+        assert!(b[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn metric_from_outputs_classification() {
+        let outputs = Mat::from_rows(&[&[0.1, 0.9], &[0.8, 0.2], &[0.3, 0.7]]);
+        let test = TestSet::Cls {
+            x: Tensor::from_f32(vec![3, 1, 1, 1], &[0.0; 3]),
+            y: vec![1, 0, 0],
+        };
+        match metric_from_outputs(&outputs, &test) {
+            Metric::Accuracy(a) => assert!((a - 2.0 / 3.0).abs() < 1e-9),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn metric_from_outputs_regression() {
+        let outputs = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let test = TestSet::Reg {
+            lig: Tensor::from_i32(vec![2, 1], &[0, 0]),
+            prot: Tensor::from_i32(vec![2, 1], &[0, 0]),
+            y: vec![0.0, 0.0],
+        };
+        match metric_from_outputs(&outputs, &test) {
+            Metric::Mse(m) => assert!((m - 2.5).abs() < 1e-9),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Compressed neural-network evaluation: model metadata, FC-stack
+//! inference over any [`crate::formats::CompressedMatrix`], hybrid
+//! conv(IM)+FC(HAC/sHAC) models (paper Sect. V-K), and accuracy/MSE
+//! evaluation against the exported test splits.
+
+pub mod compressed;
+pub mod eval;
+pub mod model;
+pub mod reference;
+
+pub use compressed::{CompressedModel, FcLayer, FcFormat};
+pub use eval::{evaluate, Metric};
+pub use model::ModelKind;

@@ -1,0 +1,179 @@
+//! Model/benchmark metadata: the four (network, dataset) pairs of the
+//! paper's evaluation, their artifact paths and layer inventories.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::io::{read_archive, Archive, TestSet};
+
+/// The paper's four benchmark configurations (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    VggMnist,
+    VggCifar,
+    DtaKiba,
+    DtaDavis,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] = [
+        ModelKind::VggMnist,
+        ModelKind::VggCifar,
+        ModelKind::DtaKiba,
+        ModelKind::DtaDavis,
+    ];
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "vgg-mnist" | "mnist" => Some(ModelKind::VggMnist),
+            "vgg-cifar" | "cifar" => Some(ModelKind::VggCifar),
+            "dta-kiba" | "kiba" => Some(ModelKind::DtaKiba),
+            "dta-davis" | "davis" => Some(ModelKind::DtaDavis),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::VggMnist => "vgg-mnist",
+            ModelKind::VggCifar => "vgg-cifar",
+            ModelKind::DtaKiba => "dta-kiba",
+            ModelKind::DtaDavis => "dta-davis",
+        }
+    }
+
+    pub fn is_vgg(&self) -> bool {
+        matches!(self, ModelKind::VggMnist | ModelKind::VggCifar)
+    }
+
+    /// Higher-is-better metric? (accuracy vs MSE)
+    pub fn higher_is_better(&self) -> bool {
+        self.is_vgg()
+    }
+
+    pub fn dataset(&self) -> &'static str {
+        match self {
+            ModelKind::VggMnist => "mnist",
+            ModelKind::VggCifar => "cifar",
+            ModelKind::DtaKiba => "kiba",
+            ModelKind::DtaDavis => "davis",
+        }
+    }
+
+    fn model_prefix(&self) -> &'static str {
+        if self.is_vgg() {
+            "vgg"
+        } else {
+            "dta"
+        }
+    }
+
+    /// FC layer names in forward order (weights are `<name>.w`, biases
+    /// `<name>.b`). ReLU between all but the last.
+    pub fn fc_names(&self) -> &'static [&'static str] {
+        if self.is_vgg() {
+            &["fc1", "fc2", "fc3"]
+        } else {
+            &["fc1", "fc2", "fc3", "out"]
+        }
+    }
+
+    /// Conv weight-tensor names (the targets of conv-layer compression).
+    pub fn conv_names(&self) -> &'static [&'static str] {
+        if self.is_vgg() {
+            &["c1a", "c1b", "c2a", "c2b", "c3a"]
+        } else {
+            &["lig_c1", "lig_c2", "lig_c3", "prot_c1", "prot_c2", "prot_c3"]
+        }
+    }
+
+    /// Feature dimension entering the FC stack.
+    pub fn feature_dim(&self) -> usize {
+        if self.is_vgg() {
+            512
+        } else {
+            96
+        }
+    }
+
+    pub fn weights_path(&self, artifacts: &Path) -> PathBuf {
+        artifacts
+            .join("weights")
+            .join(format!("{}_{}.wbin", self.model_prefix(), self.dataset()))
+    }
+
+    pub fn dataset_path(&self, artifacts: &Path) -> PathBuf {
+        artifacts
+            .join("data")
+            .join(format!("{}_test.wbin", self.dataset()))
+    }
+
+    pub fn features_hlo(&self, artifacts: &Path, batch: usize) -> PathBuf {
+        artifacts.join("hlo").join(format!(
+            "{}_{}_features_b{batch}.hlo.txt",
+            self.model_prefix(),
+            self.dataset()
+        ))
+    }
+
+    pub fn full_hlo(&self, artifacts: &Path, batch: usize) -> PathBuf {
+        artifacts.join("hlo").join(format!(
+            "{}_{}_full_b{batch}.hlo.txt",
+            self.model_prefix(),
+            self.dataset()
+        ))
+    }
+
+    pub fn load_weights(&self, artifacts: &Path) -> Result<Archive> {
+        read_archive(self.weights_path(artifacts))
+    }
+
+    pub fn load_test_set(&self, artifacts: &Path) -> Result<TestSet> {
+        TestSet::load(self.dataset_path(artifacts))
+    }
+}
+
+/// Default artifacts directory (overridable via SHAM_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SHAM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ModelKind::parse("KIBA"), Some(ModelKind::DtaKiba));
+        assert_eq!(ModelKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn layer_inventories() {
+        assert_eq!(ModelKind::VggMnist.fc_names().len(), 3);
+        assert_eq!(ModelKind::DtaKiba.fc_names().len(), 4);
+        assert_eq!(ModelKind::VggCifar.conv_names().len(), 5);
+        assert_eq!(ModelKind::DtaDavis.conv_names().len(), 6);
+        assert_eq!(ModelKind::VggMnist.feature_dim(), 512);
+        assert_eq!(ModelKind::DtaKiba.feature_dim(), 96);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let a = Path::new("/tmp/art");
+        assert_eq!(
+            ModelKind::VggMnist.weights_path(a),
+            Path::new("/tmp/art/weights/vgg_mnist.wbin")
+        );
+        assert_eq!(
+            ModelKind::DtaDavis.features_hlo(a, 32),
+            Path::new("/tmp/art/hlo/dta_davis_features_b32.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! Pure-Rust reference implementation of the two benchmark models'
+//! conv front-ends — a second, independent implementation of the same
+//! math the JAX-lowered HLO artifacts compute. Used to (a) cross-check
+//! the AOT bridge numerically in integration tests and (b) run the
+//! whole system without PJRT (degraded speed, zero dependencies).
+//!
+//! Layouts match the JAX side exactly: images NHWC, conv2d weights
+//! HWIO, conv1d weights WIO (width, in, out), SAME padding, stride 1.
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::Archive;
+use crate::mat::Mat;
+use crate::nn::model::ModelKind;
+
+/// A dense NHWC activation tensor.
+#[derive(Debug, Clone)]
+pub struct Act4 {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Act4 {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Act4 {
+        Act4 { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    #[inline]
+    fn idx(&self, b: usize, y: usize, x: usize, ch: usize) -> usize {
+        ((b * self.h + y) * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, b: usize, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.idx(b, y, x, ch)]
+    }
+}
+
+/// SAME-padded stride-1 conv2d (HWIO weights) + bias + optional ReLU.
+pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -> Act4 {
+    let (kh, kw, cin, cout) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+    assert_eq!(cin, x.c, "conv2d channel mismatch");
+    assert_eq!(bias.len(), cout);
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = Act4::zeros(x.n, x.h, x.w, cout);
+    for b in 0..x.n {
+        for oy in 0..x.h {
+            for ox in 0..x.w {
+                let out_base = out.idx(b, oy, ox, 0);
+                for dy in 0..kh {
+                    let iy = oy as isize + dy as isize - ph as isize;
+                    if iy < 0 || iy >= x.h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let ix = ox as isize + dx as isize - pw as isize;
+                        if ix < 0 || ix >= x.w as isize {
+                            continue;
+                        }
+                        let in_base = x.idx(b, iy as usize, ix as usize, 0);
+                        let w_base = (dy * kw + dx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[in_base + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = w_base + ci * cout;
+                            for co in 0..cout {
+                                out.data[out_base + co] += xv * w[wrow + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for b in 0..x.n {
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                let base = out.idx(b, y, xx, 0);
+                for co in 0..cout {
+                    let v = out.data[base + co] + bias[co];
+                    out.data[base + co] = if relu { v.max(0.0) } else { v };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 max pool, stride 2 (VALID).
+pub fn maxpool2(x: &Act4) -> Act4 {
+    let (oh, ow) = (x.h / 2, x.w / 2);
+    let mut out = Act4::zeros(x.n, oh, ow, x.c);
+    for b in 0..x.n {
+        for y in 0..oh {
+            for xx in 0..ow {
+                for c in 0..x.c {
+                    let m = x
+                        .get(b, 2 * y, 2 * xx, c)
+                        .max(x.get(b, 2 * y, 2 * xx + 1, c))
+                        .max(x.get(b, 2 * y + 1, 2 * xx, c))
+                        .max(x.get(b, 2 * y + 1, 2 * xx + 1, c));
+                    let i = out.idx(b, y, xx, c);
+                    out.data[i] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// SAME-padded stride-1 conv1d (WIO weights) + bias + ReLU over an
+/// (n, len, c) activation stored flat.
+fn conv1d_relu(
+    x: &[f32],
+    n: usize,
+    len: usize,
+    cin: usize,
+    w: &[f32],
+    wshape: &[usize],
+    bias: &[f32],
+) -> Vec<f32> {
+    let (kw, wcin, cout) = (wshape[0], wshape[1], wshape[2]);
+    assert_eq!(wcin, cin);
+    let pad = kw / 2;
+    let mut out = vec![0.0f32; n * len * cout];
+    for b in 0..n {
+        for t in 0..len {
+            let obase = (b * len + t) * cout;
+            for dk in 0..kw {
+                let it = t as isize + dk as isize - pad as isize;
+                if it < 0 || it >= len as isize {
+                    continue;
+                }
+                let ibase = (b * len + it as usize) * cin;
+                let wbase = dk * cin * cout;
+                for ci in 0..cin {
+                    let xv = x[ibase + ci];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        out[obase + co] += xv * w[wrow + co];
+                    }
+                }
+            }
+            for co in 0..cout {
+                out[obase + co] = (out[obase + co] + bias[co]).max(0.0);
+            }
+        }
+    }
+    out
+}
+
+fn tensor<'a>(params: &'a Archive, name: &str) -> Result<(&'a Vec<usize>, Vec<f32>)> {
+    let t = params.get(name).with_context(|| format!("missing {name}"))?;
+    Ok((&t.shape, t.as_f32()?))
+}
+
+/// VGG-mini conv front-end: (B,32,32,C) images → (B,512) features.
+pub fn vgg_features(params: &Archive, images: &Act4) -> Result<Mat> {
+    let mut h = images.clone();
+    for (name, pool) in [
+        ("c1a", false),
+        ("c1b", true),
+        ("c2a", false),
+        ("c2b", true),
+        ("c3a", true),
+    ] {
+        let (wshape, w) = tensor(params, &format!("{name}.w"))?;
+        let (_, b) = tensor(params, &format!("{name}.b"))?;
+        h = conv2d(&h, &w, wshape, &b, true);
+        if pool {
+            h = maxpool2(&h);
+        }
+    }
+    // flatten (B, 4,4,32) → (B, 512); NHWC flatten matches jax reshape
+    if h.h * h.w * h.c != 512 {
+        bail!("unexpected feature dim {}", h.h * h.w * h.c);
+    }
+    Ok(Mat::from_vec(h.n, 512, h.data))
+}
+
+/// DeepDTA-mini front-end: token ids → (B, 96) features.
+pub fn dta_features(
+    params: &Archive,
+    lig: &[i32],
+    prot: &[i32],
+    batch: usize,
+) -> Result<Mat> {
+    let lig_len = lig.len() / batch;
+    let prot_len = prot.len() / batch;
+    let mut feats = Mat::zeros(batch, 96);
+    for (branch, tokens, len, off) in
+        [("lig", lig, lig_len, 0usize), ("prot", prot, prot_len, 48)]
+    {
+        let (eshape, emb) = tensor(params, &format!("{branch}_embed"))?;
+        let edim = eshape[1];
+        // embed
+        let mut h: Vec<f32> = Vec::with_capacity(batch * len * edim);
+        for &tok in &tokens[..batch * len] {
+            let t = tok as usize;
+            h.extend_from_slice(&emb[t * edim..(t + 1) * edim]);
+        }
+        let mut cin = edim;
+        for conv in ["c1", "c2", "c3"] {
+            let (wshape, w) = tensor(params, &format!("{branch}_{conv}.w"))?;
+            let (_, b) = tensor(params, &format!("{branch}_{conv}.b"))?;
+            h = conv1d_relu(&h, batch, len, cin, &w, wshape, &b);
+            cin = wshape[2];
+        }
+        // global max pool over time
+        for bi in 0..batch {
+            for c in 0..cin {
+                let mut m = f32::NEG_INFINITY;
+                for t in 0..len {
+                    m = m.max(h[(bi * len + t) * cin + c]);
+                }
+                feats.set(bi, off + c, m);
+            }
+        }
+    }
+    Ok(feats)
+}
+
+/// Features for a whole test set, dispatching on model kind.
+pub fn features_for_test_set(
+    kind: ModelKind,
+    params: &Archive,
+    test: &crate::io::TestSet,
+) -> Result<Mat> {
+    match test {
+        crate::io::TestSet::Cls { x, y } => {
+            let n = y.len();
+            let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+            let act = Act4 { n, h, w, c, data: x.as_f32()? };
+            vgg_features(params, &act)
+        }
+        crate::io::TestSet::Reg { lig, prot, y } => {
+            let _ = kind;
+            dta_features(params, &lig.as_i32()?, &prot.as_i32()?, y.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::Tensor;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1×1 identity kernel: output == input (+bias, relu off)
+        let mut rng = Prng::seeded(1);
+        let x = Act4 {
+            n: 2,
+            h: 4,
+            w: 4,
+            c: 3,
+            data: (0..96).map(|_| rng.normal() as f32).collect(),
+        };
+        let mut w = vec![0.0f32; 3 * 3];
+        for c in 0..3 {
+            w[c * 3 + c] = 1.0; // (1,1,3,3) identity
+        }
+        let out = conv2d(&x, &w, &[1, 1, 3, 3], &[0.0; 3], false);
+        for (a, b) in out.data.iter().zip(x.data.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv2d_same_padding_edges() {
+        // all-ones 3×3 kernel on all-ones input: interior = 9, corner = 4
+        let x = Act4 { n: 1, h: 4, w: 4, c: 1, data: vec![1.0; 16] };
+        let w = vec![1.0f32; 9];
+        let out = conv2d(&x, &w, &[3, 3, 1, 1], &[0.0], false);
+        assert!((out.get(0, 1, 1, 0) - 9.0).abs() < 1e-6);
+        assert!((out.get(0, 0, 0, 0) - 4.0).abs() < 1e-6);
+        assert!((out.get(0, 0, 1, 0) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn maxpool_takes_window_max() {
+        let x = Act4 {
+            n: 1,
+            h: 2,
+            w: 2,
+            c: 1,
+            data: vec![1.0, 5.0, 3.0, 2.0],
+        };
+        let out = maxpool2(&x);
+        assert_eq!(out.data, vec![5.0]);
+    }
+
+    #[test]
+    fn vgg_features_shape_on_synthetic_weights() {
+        let mut rng = Prng::seeded(2);
+        let mut params = Archive::new();
+        let dims = [("c1a", 1, 16), ("c1b", 16, 16), ("c2a", 16, 32), ("c2b", 32, 32), ("c3a", 32, 32)];
+        for (name, cin, cout) in dims {
+            let w: Vec<f32> =
+                (0..3 * 3 * cin * cout).map(|_| 0.05 * rng.normal() as f32).collect();
+            params.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![3, 3, cin, cout], &w),
+            );
+            params.insert(
+                format!("{name}.b"),
+                Tensor::from_f32(vec![cout], &vec![0.0; cout]),
+            );
+        }
+        let x = Act4 {
+            n: 2,
+            h: 32,
+            w: 32,
+            c: 1,
+            data: (0..2 * 32 * 32).map(|_| rng.next_f32()).collect(),
+        };
+        let f = vgg_features(&params, &x).unwrap();
+        assert_eq!((f.rows, f.cols), (2, 512));
+        assert!(f.data.iter().any(|&v| v != 0.0));
+    }
+}

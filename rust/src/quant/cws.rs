@@ -1,0 +1,168 @@
+//! CWS — clustering-based weight sharing (paper Sect. III-C1): k-means
+//! over the scalar weight population; each weight is replaced by its
+//! cluster centroid (Han et al.'s "deep compression" quantizer).
+//!
+//! Because the population is 1-D, Lloyd iterations run on the *sorted*
+//! population: cluster boundaries are midpoints between consecutive
+//! centroids, so assignment is a binary-search partition and the update
+//! is a prefix-sum mean — O(nm log nm) total instead of the naive
+//! O(k (nm)²) the paper quotes for generic k-means.
+
+const MAX_ITERS: usize = 60;
+
+/// Compute ≤ k centroids of `values` by 1-D k-means (quantile init).
+pub fn centroids(values: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    let mut sorted: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Distinct-value short-circuit: fewer distinct values than k.
+    let mut distinct = sorted.clone();
+    distinct.dedup();
+    if distinct.len() <= k {
+        return distinct.into_iter().map(|v| v as f32).collect();
+    }
+
+    // Prefix sums for O(1) range means.
+    let mut prefix = Vec::with_capacity(n + 1);
+    prefix.push(0.0f64);
+    for &v in &sorted {
+        prefix.push(prefix.last().unwrap() + v);
+    }
+    let range_mean = |lo: usize, hi: usize| -> f64 {
+        debug_assert!(lo < hi);
+        (prefix[hi] - prefix[lo]) / (hi - lo) as f64
+    };
+
+    // Quantile initialization (deterministic; k-means++ adds nothing in
+    // 1-D with quantile spread).
+    let mut cents: Vec<f64> = (0..k)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / k as f64;
+            sorted[((q * n as f64) as usize).min(n - 1)]
+        })
+        .collect();
+    cents.dedup();
+
+    for _ in 0..MAX_ITERS {
+        // Boundaries = midpoints; partition indices into sorted[].
+        let mut bounds = Vec::with_capacity(cents.len() + 1);
+        bounds.push(0usize);
+        for w in cents.windows(2) {
+            let mid = 0.5 * (w[0] + w[1]);
+            let idx = sorted.partition_point(|&v| v <= mid);
+            bounds.push(idx.max(*bounds.last().unwrap()));
+        }
+        bounds.push(n);
+        // Update: mean of each non-empty segment.
+        let mut next: Vec<f64> = Vec::with_capacity(cents.len());
+        for s in bounds.windows(2) {
+            if s[0] < s[1] {
+                next.push(range_mean(s[0], s[1]));
+            }
+        }
+        next.dedup();
+        let converged = next.len() == cents.len()
+            && next
+                .iter()
+                .zip(cents.iter())
+                .all(|(a, b)| (a - b).abs() < 1e-12);
+        cents = next;
+        if converged {
+            break;
+        }
+    }
+    cents.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn fewer_distinct_than_k_returns_distinct() {
+        let c = centroids(&[1.0, 1.0, 2.0, 2.0, 2.0], 8);
+        assert_eq!(c, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn k1_returns_mean() {
+        let c = centroids(&[1.0, 2.0, 3.0, 6.0], 1);
+        assert_eq!(c.len(), 1);
+        assert!((c[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn separates_two_obvious_clusters() {
+        let mut vals = vec![];
+        for i in 0..50 {
+            vals.push(-10.0 + 0.01 * i as f32);
+            vals.push(10.0 + 0.01 * i as f32);
+        }
+        let c = centroids(&vals, 2);
+        assert_eq!(c.len(), 2);
+        assert!((c[0] + 9.75).abs() < 0.1, "{c:?}");
+        assert!((c[1] - 10.25).abs() < 0.1, "{c:?}");
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(centroids(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn prop_centroid_count_and_ordering() {
+        prop::check("cws-invariants", Config { cases: 40, seed: 0xCC }, |rng| {
+            let n = 10 + rng.gen_range(2000);
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.gen_range(40);
+            let c = centroids(&vals, k);
+            crate::prop_assert!(c.len() <= k, "len {} > k {k}", c.len());
+            crate::prop_assert!(!c.is_empty(), "no centroids");
+            crate::prop_assert!(
+                c.windows(2).all(|w| w[0] < w[1]),
+                "not strictly increasing: {c:?}"
+            );
+            // Centroids lie within the data range.
+            let (lo, hi) = vals.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+            crate::prop_assert!(
+                c.iter().all(|&x| x >= lo && x <= hi),
+                "centroid escapes data range"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lloyd_reduces_distortion_vs_init() {
+        // Distortion of final centroids ≤ distortion of quantile init.
+        let mut rng = Prng::seeded(0xCD);
+        let vals: Vec<f32> = (0..3000).map(|_| rng.normal() as f32).collect();
+        let k = 16;
+        let fin = centroids(&vals, k);
+        let mut init: Vec<f32> = {
+            let mut s = vals.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (0..k)
+                .map(|i| s[(((i as f64 + 0.5) / k as f64) * 3000.0) as usize])
+                .collect()
+        };
+        init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let distortion = |cents: &[f32]| -> f64 {
+            vals.iter()
+                .map(|&v| {
+                    let c = crate::quant::nearest(cents, v);
+                    ((v - c) as f64).powi(2)
+                })
+                .sum()
+        };
+        assert!(distortion(&fin) <= distortion(&init) + 1e-9);
+    }
+}

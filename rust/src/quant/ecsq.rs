@@ -1,0 +1,294 @@
+//! ECSQ — entropy-constrained scalar quantization (paper Sect. III-C4,
+//! after Chou–Lookabaugh–Gray): decision and representation levels are
+//! chosen to minimize the Lagrangian cost D + λH, i.e. per-sample
+//!   |w − c_l|² + λ·(−log2 p_l),
+//! iterating (entropy-penalized assignment) ↔ (centroid/probability
+//! update). The optimization *descends from the k-means solution* (at
+//! λ→0 ECSQ coincides with CWS, so the Lagrangian can only improve),
+//! and λ is bisected to the largest value that still keeps k levels —
+//! the strongest entropy shaping at the requested budget, which is what
+//! lets HAC compress ECSQ-quantized matrices better than CWS ones at
+//! equal k (paper Table III). Assignment must use the penalized
+//! decision rule ([`Model::assign`]), not nearest-neighbour.
+
+use crate::util::prng::Prng;
+
+const LLOYD_ITERS: usize = 40;
+
+/// A fitted ECSQ quantizer: codebook + level probabilities + λ.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub codebook: Vec<f32>,
+    pub probs: Vec<f64>,
+    pub lambda: f64,
+}
+
+impl Model {
+    /// Entropy-penalized decision rule: argmin_l (v−c_l)² − λ·log2 p_l.
+    pub fn assign(&self, v: f32) -> f32 {
+        debug_assert!(!self.codebook.is_empty());
+        let v = v as f64;
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for (l, (&c, &p)) in self.codebook.iter().zip(self.probs.iter()).enumerate() {
+            let pen = if p > 0.0 { -self.lambda * p.log2() } else { f64::INFINITY };
+            let cost = (v - c as f64) * (v - c as f64) + pen;
+            if cost < best_cost {
+                best_cost = cost;
+                best = l;
+            }
+        }
+        self.codebook[best]
+    }
+}
+
+/// One Lagrangian descent at fixed λ from `init` centroids.
+fn optimize_lambda(values: &[f32], init: &[f64], lambda: f64) -> (Vec<f64>, Vec<f64>) {
+    let n = values.len();
+    let mut cents: Vec<f64> = init.to_vec();
+    let mut probs: Vec<f64> = vec![1.0 / cents.len() as f64; cents.len()];
+    for _ in 0..LLOYD_ITERS {
+        let penal: Vec<f64> = probs
+            .iter()
+            .map(|&p| if p > 0.0 { -lambda * p.log2() } else { f64::INFINITY })
+            .collect();
+        let mut sums = vec![0.0f64; cents.len()];
+        let mut counts = vec![0u64; cents.len()];
+        for &v in values {
+            let v = v as f64;
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for (l, (&c, &pen)) in cents.iter().zip(penal.iter()).enumerate() {
+                let cst = (v - c) * (v - c) + pen;
+                if cst < best_cost {
+                    best_cost = cst;
+                    best = l;
+                }
+            }
+            sums[best] += v;
+            counts[best] += 1;
+        }
+        let mut next_c = Vec::with_capacity(cents.len());
+        let mut next_p = Vec::with_capacity(cents.len());
+        for l in 0..cents.len() {
+            if counts[l] > 0 {
+                next_c.push(sums[l] / counts[l] as f64);
+                next_p.push(counts[l] as f64 / n as f64);
+            }
+        }
+        // sort + merge identical centroids, keeping probability mass
+        let mut order: Vec<usize> = (0..next_c.len()).collect();
+        order.sort_by(|&a, &b| next_c[a].partial_cmp(&next_c[b]).unwrap());
+        let mut merged_c: Vec<f64> = Vec::with_capacity(next_c.len());
+        let mut merged_p: Vec<f64> = Vec::with_capacity(next_p.len());
+        for &i in &order {
+            if let Some(last) = merged_c.last() {
+                if (next_c[i] - last).abs() < 1e-15 {
+                    *merged_p.last_mut().unwrap() += next_p[i];
+                    continue;
+                }
+            }
+            merged_c.push(next_c[i]);
+            merged_p.push(next_p[i]);
+        }
+        let converged = merged_c.len() == cents.len()
+            && merged_c
+                .iter()
+                .zip(cents.iter())
+                .all(|(a, b)| (a - b).abs() < 1e-12);
+        cents = merged_c;
+        probs = merged_p;
+        if converged {
+            break;
+        }
+    }
+    (cents, probs)
+}
+
+/// Maximum population used to *fit* the ECSQ model. The Lagrangian
+/// descent is O(iters·n·k) per λ probe; fitting on a uniform subsample
+/// keeps the λ-bisection tractable on multi-million-entry FC pools
+/// while leaving the final (per-weight) assignment exact.
+const FIT_SAMPLE_MAX: usize = 50_000;
+
+/// Fit an ECSQ model with a budget of ≤ k levels.
+pub fn model(values: &[f32], k: usize, rng: &mut Prng) -> Model {
+    assert!(k >= 1);
+    if values.is_empty() {
+        return Model { codebook: Vec::new(), probs: Vec::new(), lambda: 0.0 };
+    }
+    let sampled: Vec<f32>;
+    let values: &[f32] = if values.len() > FIT_SAMPLE_MAX {
+        sampled = (0..FIT_SAMPLE_MAX)
+            .map(|_| values[rng.gen_range(values.len())])
+            .collect();
+        &sampled
+    } else {
+        values
+    };
+    let init: Vec<f64> = super::cws::centroids(values, k)
+        .into_iter()
+        .map(|c| c as f64)
+        .collect();
+    let (c0, p0) = optimize_lambda(values, &init, 0.0);
+    let to_model = |c: Vec<f64>, p: Vec<f64>, lam: f64| Model {
+        codebook: c.into_iter().map(|x| x as f32).collect(),
+        probs: p,
+        lambda: lam,
+    };
+    if c0.len() < k || k == 1 {
+        return to_model(c0, p0, 0.0);
+    }
+    let (lo, hi) = values
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v as f64), h.max(v as f64)));
+    let spread = (hi - lo).max(1e-12);
+    // Bracket λ*: start at the quantization-cell scale (λ comparable to
+    // (spread/k)²) and grow geometrically until levels merge below k,
+    // then bisect inside the bracket.
+    let cell = spread / k as f64;
+    let mut lam_lo = 0.0f64;
+    let mut lam_hi = cell * cell;
+    let mut best = (c0, p0, 0.0f64);
+    for _ in 0..20 {
+        let (cb, pr) = optimize_lambda(values, &init, lam_hi);
+        if cb.len() >= k {
+            best = (cb, pr, lam_hi);
+            lam_lo = lam_hi;
+            lam_hi *= 8.0;
+            if lam_hi > spread * spread * 4.0 {
+                break;
+            }
+        } else {
+            break;
+        }
+    }
+    for _ in 0..12 {
+        let mid = 0.5 * (lam_lo + lam_hi);
+        let (cb, pr) = optimize_lambda(values, &init, mid);
+        if cb.len() >= k {
+            best = (cb, pr, mid); // full budget: push λ higher
+            lam_lo = mid;
+        } else {
+            lam_hi = mid; // λ merged levels below budget
+        }
+    }
+    to_model(best.0, best.1, best.2)
+}
+
+/// Codebook-only view (used by the shared quantizer dispatch for size
+/// accounting; assignment still goes through [`Model::assign`]).
+pub fn representatives(values: &[f32], k: usize, rng: &mut Prng) -> Vec<f32> {
+    model(values, k, rng).codebook
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self as prop, Config};
+    use crate::util::stats::entropy_bits;
+
+    fn heavy_tailed(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                if i % 10 == 0 {
+                    (3.0 * rng.normal()) as f32
+                } else {
+                    (0.05 * rng.normal()) as f32
+                }
+            })
+            .collect()
+    }
+
+    fn entropy_of(vals: &[f32], assigned: &[f32]) -> f64 {
+        let _ = vals;
+        let mut h = std::collections::HashMap::new();
+        for &q in assigned {
+            *h.entry(q.to_bits()).or_insert(0u64) += 1;
+        }
+        let counts: Vec<u64> = h.values().copied().collect();
+        entropy_bits(&counts)
+    }
+
+    #[test]
+    fn respects_k_budget() {
+        let mut rng = Prng::seeded(0xEC);
+        let vals: Vec<f32> = (0..4000).map(|_| rng.normal() as f32).collect();
+        for k in [2usize, 8, 32, 100] {
+            let m = model(&vals, k, &mut rng);
+            assert!(m.codebook.len() <= k, "k={k}: got {}", m.codebook.len());
+            assert!(!m.codebook.is_empty());
+            assert!(m.codebook.windows(2).all(|w| w[0] < w[1]));
+            assert!((m.probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn degenerate_populations() {
+        let mut rng = Prng::seeded(0xED);
+        assert!(model(&[], 4, &mut rng).codebook.is_empty());
+        let m = model(&[2.0; 100], 4, &mut rng);
+        assert_eq!(m.codebook, vec![2.0]);
+        let m = model(&[1.0, 5.0], 4, &mut rng);
+        assert_eq!(m.codebook, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn improves_lagrangian_over_cws() {
+        // D + λH at ECSQ's λ must be ≤ k-means' (descent from that init).
+        let mut rng = Prng::seeded(0xEE);
+        let vals = heavy_tailed(&mut rng, 8000);
+        let k = 16;
+        let m = model(&vals, k, &mut rng);
+        assert!(m.lambda > 0.0);
+        let q_ecsq: Vec<f32> = vals.iter().map(|&v| m.assign(v)).collect();
+        let cws = crate::quant::cws::centroids(&vals, k);
+        let q_cws: Vec<f32> =
+            vals.iter().map(|&v| crate::quant::nearest(&cws, v)).collect();
+        let dist = |q: &[f32]| -> f64 {
+            q.iter()
+                .zip(vals.iter())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / vals.len() as f64
+        };
+        let l_ecsq = dist(&q_ecsq) + m.lambda * entropy_of(&vals, &q_ecsq);
+        let l_cws = dist(&q_cws) + m.lambda * entropy_of(&vals, &q_cws);
+        assert!(l_ecsq <= l_cws + 1e-9, "ECSQ {l_ecsq} !<= CWS {l_cws}");
+        assert!(
+            entropy_of(&vals, &q_ecsq) <= entropy_of(&vals, &q_cws) + 1e-9,
+            "entropy not shaped down"
+        );
+    }
+
+    #[test]
+    fn assign_lands_on_codebook() {
+        let mut rng = Prng::seeded(0xEF);
+        let vals: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let m = model(&vals, 8, &mut rng);
+        for &v in vals.iter().take(200) {
+            let q = m.assign(v);
+            assert!(m.codebook.iter().any(|&c| c == q));
+        }
+    }
+
+    #[test]
+    fn prop_codebook_within_range() {
+        prop::check("ecsq-range", Config { cases: 12, seed: 0xE8 }, |rng| {
+            let n = 100 + rng.gen_range(2000);
+            let vals: Vec<f32> =
+                (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let k = 2 + rng.gen_range(24);
+            let m = model(&vals, k, rng);
+            let (lo, hi) = vals
+                .iter()
+                .fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+            crate::prop_assert!(m.codebook.len() <= k, "over budget");
+            crate::prop_assert!(
+                m.codebook.iter().all(|&c| c >= lo - 1e-3 && c <= hi + 1e-3),
+                "centroid escapes range"
+            );
+            Ok(())
+        });
+    }
+}

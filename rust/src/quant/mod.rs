@@ -1,0 +1,313 @@
+//! Compression techniques of paper Sect. III: magnitude weight pruning
+//! and the four weight-sharing quantizers — CWS (k-means), PWS
+//! (probabilistic), UQ (uniform), ECSQ (entropy-constrained) — in both
+//! per-layer and *unified* (one global codebook, Sect. V-H) variants.
+//!
+//! All quantizers share one calling convention: they map a value
+//! population onto at most `k` representatives and rewrite the matrix
+//! in place of `W°`, leaving dimensions untouched (structure-preserving
+//! compression). Pruned zeros can be excluded from the population so
+//! that Pr→X chains quantize only surviving weights, exactly as the
+//! paper combines them.
+
+pub mod cws;
+pub mod ecsq;
+pub mod prune;
+pub mod pws;
+pub mod uq;
+
+pub use prune::prune_percentile;
+
+use crate::mat::Mat;
+use crate::util::prng::Prng;
+
+/// Which weight-sharing quantizer to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Cws,
+    Pws,
+    Uq,
+    Ecsq,
+}
+
+impl Kind {
+    pub const ALL: [Kind; 4] = [Kind::Cws, Kind::Pws, Kind::Uq, Kind::Ecsq];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Cws => "cws",
+            Kind::Pws => "pws",
+            Kind::Uq => "uq",
+            Kind::Ecsq => "ecsq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cws" | "ucws" => Some(Kind::Cws),
+            "pws" | "upws" => Some(Kind::Pws),
+            "uq" | "uuq" => Some(Kind::Uq),
+            "ecsq" | "uecsq" => Some(Kind::Ecsq),
+            _ => None,
+        }
+    }
+}
+
+/// Result of quantizing one or more matrices against a shared codebook.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    /// Quantized matrices, same dimensions as the inputs.
+    pub mats: Vec<Mat>,
+    /// The representatives actually used (≤ requested k; duplicates and
+    /// empty clusters are collapsed).
+    pub codebook: Vec<f32>,
+}
+
+impl Quantized {
+    /// Effective number of distinct representatives.
+    pub fn k_effective(&self) -> usize {
+        self.codebook.len()
+    }
+}
+
+/// A fitted population quantizer: the codebook plus the kind-specific
+/// decision rule (nearest for CWS/UQ, randomized-unbiased for PWS,
+/// entropy-penalized for ECSQ).
+enum Assigner {
+    Nearest(Vec<f32>),
+    Pws(Vec<f32>),
+    Ecsq(ecsq::Model),
+}
+
+impl Assigner {
+    fn fit(values: &[f32], kind: Kind, k: usize, rng: &mut Prng) -> Assigner {
+        match kind {
+            Kind::Cws => Assigner::Nearest(cws::centroids(values, k)),
+            Kind::Uq => Assigner::Nearest(uq::grid_for_k(values, k)),
+            Kind::Pws => Assigner::Pws(pws::representatives(values, k)),
+            Kind::Ecsq => Assigner::Ecsq(ecsq::model(values, k, rng)),
+        }
+    }
+
+    fn codebook(&self) -> &[f32] {
+        match self {
+            Assigner::Nearest(cb) | Assigner::Pws(cb) => cb,
+            Assigner::Ecsq(m) => &m.codebook,
+        }
+    }
+
+    fn assign(&self, v: f32, rng: &mut Prng) -> f32 {
+        match self {
+            Assigner::Nearest(cb) => nearest(cb, v),
+            Assigner::Pws(cb) => pws::assign(cb, v, rng),
+            Assigner::Ecsq(m) => m.assign(v),
+        }
+    }
+}
+
+/// Nearest representative (codebook must be sorted ascending).
+pub(crate) fn nearest(codebook: &[f32], v: f32) -> f32 {
+    debug_assert!(!codebook.is_empty());
+    match codebook.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => codebook[i],
+        Err(0) => codebook[0],
+        Err(i) if i == codebook.len() => codebook[i - 1],
+        Err(i) => {
+            let (lo, hi) = (codebook[i - 1], codebook[i]);
+            if (v - lo) <= (hi - v) {
+                lo
+            } else {
+                hi
+            }
+        }
+    }
+}
+
+/// Options controlling a quantization run.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    pub kind: Kind,
+    pub k: usize,
+    /// Exclude exact zeros from the population and keep them zero — the
+    /// paper's Pr→X chains ("weight sharing considering non-null weights
+    /// identified by pruning").
+    pub exclude_zeros: bool,
+}
+
+/// Quantize a single matrix (per-layer variant).
+pub fn quantize(w: &Mat, opts: Options, rng: &mut Prng) -> Quantized {
+    quantize_unified(&[w], opts, rng)
+}
+
+/// Quantize several matrices against ONE shared codebook — the paper's
+/// unified quantization (Sect. V-H; uCWS/uPWS/uUQ/uECSQ).
+pub fn quantize_unified(ws: &[&Mat], opts: Options, rng: &mut Prng) -> Quantized {
+    assert!(opts.k >= 1, "k must be >= 1");
+    // Pool the population.
+    let mut population: Vec<f32> = Vec::new();
+    for w in ws {
+        if opts.exclude_zeros {
+            population.extend(w.data.iter().copied().filter(|&v| v != 0.0));
+        } else {
+            population.extend_from_slice(&w.data);
+        }
+    }
+    if population.is_empty() {
+        return Quantized {
+            mats: ws.iter().map(|w| (*w).clone()).collect(),
+            codebook: Vec::new(),
+        };
+    }
+    let assigner = Assigner::fit(&population, opts.kind, opts.k, rng);
+    let mut codebook = assigner.codebook().to_vec();
+    codebook.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    codebook.dedup_by(|a, b| a.to_bits() == b.to_bits());
+
+    let mats = ws
+        .iter()
+        .map(|w| {
+            let mut q = (*w).clone();
+            for v in q.data.iter_mut() {
+                if opts.exclude_zeros && *v == 0.0 {
+                    continue;
+                }
+                *v = assigner.assign(*v, rng);
+            }
+            q
+        })
+        .collect();
+    Quantized { mats, codebook }
+}
+
+/// Convenience: prune then quantize (the paper's Pr-X pipeline).
+pub fn prune_then_quantize(
+    w: &Mat,
+    percentile: f64,
+    opts: Options,
+    rng: &mut Prng,
+) -> Quantized {
+    let pruned = prune_percentile(w, percentile);
+    quantize(
+        &pruned,
+        Options { exclude_zeros: true, ..opts },
+        rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(Kind::parse("CWS"), Some(Kind::Cws));
+        assert_eq!(Kind::parse("uUQ"), Some(Kind::Uq));
+        assert_eq!(Kind::parse("uecsq"), Some(Kind::Ecsq));
+        assert_eq!(Kind::parse("nope"), None);
+        for k in Kind::ALL {
+            assert_eq!(Kind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn nearest_assignment() {
+        let cb = [-1.0f32, 0.0, 2.0];
+        assert_eq!(nearest(&cb, -5.0), -1.0);
+        assert_eq!(nearest(&cb, 5.0), 2.0);
+        assert_eq!(nearest(&cb, 0.9), 0.0);
+        assert_eq!(nearest(&cb, 1.1), 2.0);
+        assert_eq!(nearest(&cb, 0.0), 0.0);
+        // exact midpoint ties to the lower representative
+        assert_eq!(nearest(&cb, 1.0), 0.0);
+    }
+
+    #[test]
+    fn empty_population_is_noop() {
+        let w = Mat::zeros(3, 3);
+        let mut rng = Prng::seeded(1);
+        let q = quantize(
+            &w,
+            Options { kind: Kind::Cws, k: 4, exclude_zeros: true },
+            &mut rng,
+        );
+        assert_eq!(q.mats[0], w);
+        assert_eq!(q.k_effective(), 0);
+    }
+
+    #[test]
+    fn prop_all_kinds_respect_k_and_zeros() {
+        prop::check("quantize-invariants", Config { cases: 32, seed: 0x9A }, |rng| {
+            let rows = 4 + rng.gen_range(30);
+            let cols = 4 + rng.gen_range(30);
+            let w = Mat::sparse_quantized(rows, cols, 0.5, 1000, rng)
+                ; // many distinct values pre-quantization
+            let k = 2 + rng.gen_range(16);
+            for kind in Kind::ALL {
+                let q = quantize(
+                    &w,
+                    Options { kind, k, exclude_zeros: true },
+                    rng,
+                );
+                let m = &q.mats[0];
+                crate::prop_assert!(
+                    m.distinct_nonzero() <= k + 1,
+                    "{}: {} distinct > k={k}",
+                    kind.name(),
+                    m.distinct_nonzero()
+                );
+                // pruned zeros stay zero
+                for (a, b) in w.data.iter().zip(m.data.iter()) {
+                    if *a == 0.0 {
+                        crate::prop_assert!(*b == 0.0, "{}: zero not preserved", kind.name());
+                    }
+                }
+                // quantized values come from the codebook
+                for &v in m.data.iter().filter(|&&v| v != 0.0) {
+                    crate::prop_assert!(
+                        q.codebook.iter().any(|&c| c.to_bits() == v.to_bits()),
+                        "{}: value {v} not in codebook",
+                        kind.name()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unified_shares_codebook_across_layers() {
+        let mut rng = Prng::seeded(0x9B);
+        let a = Mat::gaussian(20, 20, 0.1, &mut rng);
+        let b = Mat::gaussian(10, 30, 0.1, &mut rng);
+        let q = quantize_unified(
+            &[&a, &b],
+            Options { kind: Kind::Cws, k: 8, exclude_zeros: false },
+            &mut rng,
+        );
+        assert_eq!(q.mats.len(), 2);
+        assert!(q.k_effective() <= 8);
+        // every value of both outputs is in the single shared codebook
+        for m in &q.mats {
+            for &v in &m.data {
+                assert!(q.codebook.iter().any(|&c| c.to_bits() == v.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn prune_then_quantize_pipeline() {
+        let mut rng = Prng::seeded(0x9C);
+        let w = Mat::gaussian(50, 50, 1.0, &mut rng);
+        let q = prune_then_quantize(
+            &w,
+            90.0,
+            Options { kind: Kind::Cws, k: 4, exclude_zeros: true },
+            &mut rng,
+        );
+        let m = &q.mats[0];
+        let s = m.nonzero_ratio();
+        assert!((s - 0.10).abs() < 0.02, "sparsity {s}");
+        assert!(m.distinct_nonzero() <= 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Magnitude-based weight pruning (paper Sect. III-B): zero out all
+//! entries whose absolute value does not exceed the empirical
+//! p-percentile of |W°|. O(nm log nm) — dominated by the sort.
+
+use crate::mat::Mat;
+use crate::util::stats::quantile_sorted;
+
+/// Prune `w` at percentile level `p ∈ [0, 100]`: entries with
+/// |w| ≤ w_p are set to zero (w_p = p-percentile of the absolute
+/// values). `p = 0` keeps everything except exact zeros' peers with
+/// magnitude ≤ min|w| — in practice the paper's p starts at 10.
+pub fn prune_percentile(w: &Mat, p: f64) -> Mat {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if w.numel() == 0 {
+        return w.clone();
+    }
+    let mut mags: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let w_p = quantile_sorted(&mags, p / 100.0);
+    let mut out = w.clone();
+    if p == 0.0 {
+        return out; // nothing pruned at level 0, matching Table IV row p=0
+    }
+    for v in out.data.iter_mut() {
+        if v.abs() <= w_p {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// The pruning mask (true = kept) — used by the fine-tuning path, which
+/// must only update surviving weights (paper Sect. III-B).
+pub fn keep_mask(w: &Mat) -> Vec<bool> {
+    w.data.iter().map(|&v| v != 0.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn p0_is_identity() {
+        let mut rng = Prng::seeded(1);
+        let w = Mat::gaussian(10, 10, 1.0, &mut rng);
+        assert_eq!(prune_percentile(&w, 0.0), w);
+    }
+
+    #[test]
+    fn p100_zeroes_everything() {
+        let mut rng = Prng::seeded(2);
+        let w = Mat::gaussian(10, 10, 1.0, &mut rng);
+        let p = prune_percentile(&w, 100.0);
+        assert_eq!(p.nnz(), 0);
+    }
+
+    #[test]
+    fn prop_sparsity_tracks_percentile() {
+        prop::check("prune-sparsity", Config { cases: 30, seed: 3 }, |rng| {
+            let w = Mat::gaussian(40, 40, 1.0, rng);
+            let p = 10.0 + 85.0 * rng.next_f64();
+            let pruned = prune_percentile(&w, p);
+            let survived = pruned.nonzero_ratio();
+            let expected = 1.0 - p / 100.0;
+            crate::prop_assert!(
+                (survived - expected).abs() < 0.05,
+                "p={p}: survived {survived} expected {expected}"
+            );
+            // surviving weights are untouched
+            for (a, b) in w.data.iter().zip(pruned.data.iter()) {
+                crate::prop_assert!(*b == 0.0 || a == b, "weight altered");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let w = Mat::from_vec(1, 5, vec![0.1, -5.0, 0.2, 3.0, -0.05]);
+        let p = prune_percentile(&w, 60.0);
+        assert_eq!(p.data, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn mask_matches_nonzeros() {
+        let w = Mat::from_vec(1, 4, vec![0.0, 1.0, 0.0, -2.0]);
+        assert_eq!(keep_mask(&w), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let w = Mat::zeros(0, 0);
+        assert_eq!(prune_percentile(&w, 50.0).numel(), 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! PWS — probabilistic weight sharing (paper Sect. III-C2, from Marinò
+//! et al. ICPR 2020): representatives are the k quantile points
+//! χ_{i/(k-1)} of the weight population; each weight w in the interval
+//! [r_i, r_{i+1}] is randomly mapped to r_{i+1} with probability
+//! (w − r_i)/(r_{i+1} − r_i) and to r_i otherwise, which makes the
+//! quantized matrix an *unbiased* estimator of W°:
+//! E[W | W° = w] = w.
+
+use crate::util::prng::Prng;
+use crate::util::stats::quantile_sorted;
+
+/// The k representatives: quantile points χ_{i/(k-1)}, i = 0..k−1
+/// (for k = 1, the median). Fixing interval extremes at quantiles keeps
+/// the scheme unbiased regardless of the source distribution (paper's
+/// general construction after Example 1).
+pub fn representatives(values: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted: Vec<f32> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if k == 1 {
+        return vec![quantile_sorted(&sorted, 0.5)];
+    }
+    let mut reps: Vec<f32> = (0..k)
+        .map(|i| quantile_sorted(&sorted, i as f64 / (k - 1) as f64))
+        .collect();
+    reps.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    reps
+}
+
+/// Randomized unbiased assignment of `v` onto the sorted codebook.
+pub fn assign(codebook: &[f32], v: f32, rng: &mut Prng) -> f32 {
+    debug_assert!(!codebook.is_empty());
+    match codebook.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => codebook[i],
+        Err(0) => codebook[0],
+        Err(i) if i == codebook.len() => codebook[i - 1],
+        Err(i) => {
+            let (lo, hi) = (codebook[i - 1], codebook[i]);
+            let p_hi = ((v - lo) / (hi - lo)) as f64;
+            if rng.bernoulli(p_hi) {
+                hi
+            } else {
+                lo
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn representatives_are_quantiles() {
+        let vals: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        let r = representatives(&vals, 5);
+        assert_eq!(r, vec![0.0, 25.0, 50.0, 75.0, 100.0]);
+    }
+
+    #[test]
+    fn k1_is_median() {
+        let r = representatives(&[1.0, 2.0, 100.0], 1);
+        assert_eq!(r, vec![2.0]);
+    }
+
+    #[test]
+    fn assign_is_unbiased() {
+        // E[assign(v)] == v within the interval.
+        let cb = [0.0f32, 1.0];
+        let mut rng = Prng::seeded(0xBEEF);
+        let v = 0.3f32;
+        let n = 100_000;
+        let mean: f64 = (0..n)
+            .map(|_| assign(&cb, v, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.3).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn assign_clamps_out_of_range() {
+        let cb = [0.0f32, 1.0];
+        let mut rng = Prng::seeded(1);
+        assert_eq!(assign(&cb, -5.0, &mut rng), 0.0);
+        assert_eq!(assign(&cb, 7.0, &mut rng), 1.0);
+        assert_eq!(assign(&cb, 1.0, &mut rng), 1.0); // exact hit
+    }
+
+    #[test]
+    fn prop_population_mean_preserved() {
+        // Unbiasedness at the population level: quantizing a large
+        // population must preserve its mean closely (paper's key PWS
+        // property: E(W) = E(W°)).
+        prop::check("pws-unbiased", Config { cases: 10, seed: 0xE0 }, |rng| {
+            let n = 20_000;
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = 2 + rng.gen_range(30);
+            let reps = representatives(&vals, k);
+            let qmean: f64 = vals
+                .iter()
+                .map(|&v| assign(&reps, v, rng) as f64)
+                .sum::<f64>()
+                / n as f64;
+            let mean: f64 = vals.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            crate::prop_assert!(
+                (qmean - mean).abs() < 0.02,
+                "k={k}: mean {mean} → {qmean}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(representatives(&[], 4).is_empty());
+    }
+
+}

@@ -1,0 +1,164 @@
+//! UQ — uniform quantization (paper Sect. III-C3, after Choi et al.):
+//! w ↦ δ·round((w° + d)/δ) − d. Representatives are an evenly spaced
+//! grid; Gish & Pierce show the resulting entropy is asymptotically
+//! optimal for smooth sources. δ is auto-tuned (bisection) so that the
+//! number of *occupied* grid points matches the requested k, exactly as
+//! the paper tunes δ "to give in output the number k of desired
+//! clusters" (Sect. V-I, with d = 0).
+
+use std::collections::HashSet;
+
+/// Quantize one value onto the (δ, d) grid.
+#[inline]
+pub fn snap(v: f32, delta: f64, d: f64) -> f32 {
+    let r = (delta * ((v as f64 + d) / delta).round() - d) as f32;
+    if r == 0.0 {
+        0.0 // normalize -0.0 so the grid has a single zero point
+    } else {
+        r
+    }
+}
+
+/// Occupied grid points of `values` under (δ, d).
+pub fn occupied_grid(values: &[f32], delta: f64, d: f64) -> Vec<f32> {
+    let mut set: HashSet<u32> = HashSet::new();
+    for &v in values {
+        set.insert(snap(v, delta, d).to_bits());
+    }
+    let mut grid: Vec<f32> = set.into_iter().map(f32::from_bits).collect();
+    grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid
+}
+
+/// Find a δ whose occupied grid has ≤ k points (as many as possible),
+/// and return that grid as the codebook. d = 0 per the paper's setup.
+pub fn grid_for_k(values: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let (lo, hi) = values
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v as f64), h.max(v as f64)));
+    let range = (hi - lo).max(f64::MIN_POSITIVE);
+    if range < 1e-12 {
+        return vec![values[0]];
+    }
+    // Distinct short-circuit.
+    let distinct = occupied_grid(values, range / (values.len() as f64 * 4.0), 0.0);
+    if distinct.len() <= k {
+        return distinct;
+    }
+    // Bisection on δ: occupied count decreases (weakly) as δ grows.
+    let mut d_lo = range / (4.0 * k as f64); // fine grid: ≥ k occupied
+    let mut d_hi = 2.0 * range; // coarse grid: 1–2 occupied
+    // Ensure invariant count(d_lo) > k ≥ count(d_hi).
+    for _ in 0..60 {
+        if occupied_grid(values, d_lo, 0.0).len() > k {
+            break;
+        }
+        d_lo /= 2.0;
+    }
+    let mut best: Option<Vec<f32>> = None;
+    for _ in 0..80 {
+        let mid = 0.5 * (d_lo + d_hi);
+        let grid = occupied_grid(values, mid, 0.0);
+        if grid.len() <= k {
+            // feasible: remember the densest feasible grid, shrink δ
+            let better = match &best {
+                None => true,
+                Some(b) => grid.len() > b.len(),
+            };
+            if better {
+                best = Some(grid);
+            }
+            d_hi = mid;
+        } else {
+            d_lo = mid;
+        }
+        if (d_hi - d_lo) / range < 1e-9 {
+            break;
+        }
+    }
+    best.unwrap_or_else(|| occupied_grid(values, d_hi, 0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn snap_rounds_to_grid() {
+        assert_eq!(snap(0.26, 0.5, 0.0), 0.5);
+        assert_eq!(snap(0.24, 0.5, 0.0), 0.0);
+        assert_eq!(snap(-0.74, 0.5, 0.0), -0.5);
+        // with bias d: grid shifts
+        let v = snap(0.3, 0.5, 0.25);
+        assert!((v - 0.25).abs() < 1e-6, "{v}");
+    }
+
+    #[test]
+    fn grid_points_are_multiples_of_delta() {
+        let vals: Vec<f32> = vec![-1.2, -0.3, 0.1, 0.7, 2.4];
+        let g = occupied_grid(&vals, 0.5, 0.0);
+        for &p in &g {
+            let m = (p as f64 / 0.5).round() * 0.5;
+            assert!((p as f64 - m).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_grid_for_k_hits_target() {
+        prop::check("uq-k-target", Config { cases: 30, seed: 0xF00 }, |rng| {
+            let n = 200 + rng.gen_range(3000);
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = 2 + rng.gen_range(120);
+            let grid = grid_for_k(&vals, k);
+            crate::prop_assert!(grid.len() <= k, "grid {} > k {k}", grid.len());
+            // tuning should land close to k for a continuous population
+            crate::prop_assert!(
+                grid.len() * 2 >= k,
+                "grid too coarse: {} for k={k}",
+                grid.len()
+            );
+            // evenly spaced (allow last gap wobble from occupancy holes)
+            if grid.len() > 3 {
+                let deltas: Vec<f64> = grid
+                    .windows(2)
+                    .map(|w| (w[1] - w[0]) as f64)
+                    .collect();
+                let min = deltas.iter().cloned().fold(f64::MAX, f64::min);
+                for &d in &deltas {
+                    let ratio = d / min;
+                    crate::prop_assert!(
+                        (ratio - ratio.round()).abs() < 1e-3,
+                        "grid not uniform: {deltas:?}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fewer_distinct_than_k() {
+        let g = grid_for_k(&[1.0, 1.0, 2.0], 16);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn constant_population() {
+        let g = grid_for_k(&[3.3; 50], 8);
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn k2_coarse_quantization() {
+        let mut rng = Prng::seeded(0xF01);
+        let vals: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let g = grid_for_k(&vals, 2);
+        assert!(g.len() <= 2 && !g.is_empty());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only place the `xla` crate is touched; Python never runs
+//! on the request path.
+
+pub mod pjrt;
+
+pub use pjrt::{lit_f32, lit_i32, Engine};

@@ -1,0 +1,103 @@
+//! HLO-text → PJRT executable wrapper.
+//!
+//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids. See
+//! /opt/xla-example/README.md and DESIGN.md §3.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[i64]) -> Result<Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(shape)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[i64]) -> Result<Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(shape)?)
+}
+
+/// A compiled HLO artifact plus its parameter-order sidecar.
+pub struct Engine {
+    exe: PjRtLoadedExecutable,
+    /// Input names, in the positional order the executable expects
+    /// (from the `.params` sidecar written by aot.py).
+    pub param_names: Vec<String>,
+    pub path: PathBuf,
+}
+
+impl Engine {
+    /// Load + compile `<name>.hlo.txt`, reading `<name>.params`.
+    pub fn load(client: &PjRtClient, hlo_path: impl AsRef<Path>) -> Result<Engine> {
+        let hlo_path = hlo_path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", hlo_path.display()))?;
+        let sidecar = hlo_path
+            .to_str()
+            .unwrap()
+            .replace(".hlo.txt", ".params");
+        let param_names = match std::fs::read_to_string(&sidecar) {
+            Ok(s) => s.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect(),
+            Err(_) => Vec::new(),
+        };
+        Ok(Engine { exe, param_names, path: hlo_path.to_path_buf() })
+    }
+
+    /// Execute with positional inputs; returns the first element of the
+    /// result tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Literal> {
+        let result = self.exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Execute and read the first output back as a flat f32 vector.
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        Ok(self.run(inputs)?.to_vec::<f32>()?)
+    }
+
+    /// Execute with *borrowed* literals — callers keep constant
+    /// parameter tensors alive across calls instead of cloning them
+    /// per batch (the coordinator hot path).
+    pub fn run_borrowed(&self, inputs: &[&Literal]) -> Result<Literal> {
+        let result = self.exe.execute::<&Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in rust/tests/pjrt_integration.rs (they
+    // need the artifacts directory); here we only check literal helpers.
+    use super::*;
+
+    #[test]
+    fn literal_builders_validate_shapes() {
+        assert!(lit_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_values() {
+        let l = lit_f32(&[1.5, -2.5, 3.5, 4.5], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, -2.5, 3.5, 4.5]);
+        let l = lit_i32(&[7, -8], &[2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, -8]);
+    }
+}

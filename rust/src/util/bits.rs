@@ -1,0 +1,326 @@
+//! Bit-level stream primitives underlying the HAC / sHAC bitstreams.
+//!
+//! The paper stores the Huffman-coded address map as an array of `b`-bit
+//! memory words (Sect. IV-B); we use 64-bit words. Bits are addressed
+//! MSB-first within each word so that the stream reads left-to-right in
+//! the same order the paper's `getBinarySeq` produces.
+
+/// An owned, immutable bit buffer produced by [`BitWriter::finish`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitBuf {
+    pub words: Vec<u64>,
+    pub bitlen: usize,
+}
+
+impl BitBuf {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        BitBuf { words: Vec::new(), bitlen: 0 }
+    }
+
+    /// Number of bits stored.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bitlen
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bitlen == 0
+    }
+
+    /// Size in bits of the backing word array (i.e. including padding of
+    /// the final partial word) — this is what the paper's occupancy
+    /// accounting charges for the stream `C_HAC(W)`.
+    #[inline]
+    pub fn size_bits(&self) -> usize {
+        self.words.len() * 64
+    }
+
+    /// Read the bit at absolute position `pos` (0-based, MSB-first).
+    #[inline]
+    pub fn get(&self, pos: usize) -> bool {
+        debug_assert!(pos < self.bitlen);
+        let w = pos >> 6;
+        let off = pos & 63;
+        (self.words[w] >> (63 - off)) & 1 == 1
+    }
+}
+
+impl Default for BitBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Append-only writer of an MSB-first bit stream.
+#[derive(Debug, Clone)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    bitlen: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { words: Vec::new(), bitlen: 0 }
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { words: Vec::with_capacity((bits + 63) / 64), bitlen: 0 }
+    }
+
+    #[inline]
+    pub fn len_bits(&self) -> usize {
+        self.bitlen
+    }
+
+    /// Append the low `nbits` bits of `value`, most-significant of that
+    /// slice first. `nbits` must be ≤ 64.
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        if nbits == 0 {
+            return;
+        }
+        // Mask off anything above nbits (value may carry junk above).
+        let v = if nbits == 64 { value } else { value & ((1u64 << nbits) - 1) };
+        let off = (self.bitlen & 63) as u32; // bits already used in last word
+        if off == 0 {
+            self.words.push(0);
+        }
+        let w = self.words.len() - 1;
+        let space = 64 - off; // free bits in current word
+        if nbits <= space {
+            self.words[w] |= v << (space - nbits);
+        } else {
+            let hi = nbits - space; // bits that overflow to the next word
+            self.words[w] |= v >> hi;
+            self.words.push(v << (64 - hi));
+        }
+        self.bitlen += nbits as usize;
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    pub fn finish(self) -> BitBuf {
+        BitBuf { words: self.words, bitlen: self.bitlen }
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sequential reader over a bit buffer, with absolute seek — needed for
+/// the per-column offset index used by the parallel dot (paper §VI).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    bitlen: usize,
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a BitBuf) -> Self {
+        BitReader { words: &buf.words, bitlen: buf.bitlen, pos: 0 }
+    }
+
+    pub fn from_words(words: &'a [u64], bitlen: usize) -> Self {
+        BitReader { words, bitlen, pos: 0 }
+    }
+
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.bitlen - self.pos
+    }
+
+    #[inline]
+    pub fn seek(&mut self, pos: usize) {
+        debug_assert!(pos <= self.bitlen);
+        self.pos = pos;
+    }
+
+    /// Read one bit; `None` at end of stream.
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.bitlen {
+            return None;
+        }
+        let w = self.pos >> 6;
+        let off = self.pos & 63;
+        self.pos += 1;
+        Some((self.words[w] >> (63 - off)) & 1 == 1)
+    }
+
+    /// Read `nbits` (≤ 64) as an unsigned integer; `None` if fewer remain.
+    #[inline]
+    pub fn read_bits(&mut self, nbits: u32) -> Option<u64> {
+        if (self.remaining() as u64) < nbits as u64 {
+            return None;
+        }
+        let v = self.peek_bits(nbits);
+        self.pos += nbits as usize;
+        Some(v)
+    }
+
+    /// Peek up to 64 bits starting at the cursor without consuming them.
+    /// Bits past the end of the stream read as zero (the stream is
+    /// zero-padded, exactly like the paper's final memory word).
+    #[inline]
+    pub fn peek_bits(&self, nbits: u32) -> u64 {
+        debug_assert!(nbits <= 64);
+        if nbits == 0 {
+            return 0;
+        }
+        let w = self.pos >> 6;
+        let off = (self.pos & 63) as u32;
+        let cur = if w < self.words.len() { self.words[w] } else { 0 };
+        let mut v = cur << off; // bits at cursor now in MSBs
+        if off > 0 && w + 1 < self.words.len() {
+            v |= self.words[w + 1] >> (64 - off);
+        }
+        if nbits == 64 {
+            v
+        } else {
+            v >> (64 - nbits)
+        }
+    }
+
+    /// Advance the cursor by `n` bits (clamped to end).
+    #[inline]
+    pub fn consume(&mut self, n: usize) {
+        self.pos = (self.pos + n).min(self.bitlen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn empty_buf() {
+        let buf = BitWriter::new().finish();
+        assert_eq!(buf.len(), 0);
+        assert!(buf.is_empty());
+        assert_eq!(buf.size_bits(), 0);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bit(), None);
+        assert_eq!(r.read_bits(1), None);
+        assert_eq!(r.peek_bits(17), 0);
+    }
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        let mut w = BitWriter::new();
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        let buf = w.finish();
+        assert_eq!(buf.len(), pattern.len());
+        let mut r = BitReader::new(&buf);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+        assert_eq!(r.read_bit(), None);
+        for (i, &b) in pattern.iter().enumerate() {
+            assert_eq!(buf.get(i), b);
+        }
+    }
+
+    #[test]
+    fn multi_bit_write_crossing_word_boundary() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xDEADBEEF, 32);
+        w.write_bits(0x123456789ABCDEF0, 64); // crosses into the second word
+        w.write_bits(0b101, 3);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 99);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(32), Some(0xDEADBEEF));
+        assert_eq!(r.read_bits(64), Some(0x123456789ABCDEF0));
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(1), None);
+    }
+
+    #[test]
+    fn write_bits_masks_extraneous_high_bits() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xFF, 4); // only the low 4 bits (0xF) must be written
+        w.write_bits(0, 4);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(8), Some(0xF0));
+    }
+
+    #[test]
+    fn peek_does_not_consume_and_pads_zero() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1011, 4);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.peek_bits(4), 0b1011);
+        assert_eq!(r.peek_bits(8), 0b10110000); // zero padded
+        assert_eq!(r.pos(), 0);
+        r.consume(2);
+        assert_eq!(r.peek_bits(2), 0b11);
+        assert_eq!(r.remaining(), 2);
+    }
+
+    #[test]
+    fn seek_and_reread() {
+        let mut w = BitWriter::new();
+        for i in 0..200u64 {
+            w.write_bits(i & 1, 1);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        r.seek(131);
+        assert_eq!(r.read_bit(), Some(true)); // bit 131 = 131&1 = 1
+        r.seek(0);
+        assert_eq!(r.read_bit(), Some(false));
+    }
+
+    #[test]
+    fn prop_random_chunks_roundtrip() {
+        let mut rng = Prng::seeded(0x5eed);
+        for _case in 0..200 {
+            let n = 1 + (rng.next_u64() % 64) as usize;
+            let chunks: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let nbits = 1 + (rng.next_u64() % 64) as u32;
+                    let val = if nbits == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << nbits) - 1)
+                    };
+                    (val, nbits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, nb) in &chunks {
+                w.write_bits(v, nb);
+            }
+            let buf = w.finish();
+            let total: usize = chunks.iter().map(|&(_, nb)| nb as usize).sum();
+            assert_eq!(buf.len(), total);
+            let mut r = BitReader::new(&buf);
+            for &(v, nb) in &chunks {
+                assert_eq!(r.read_bits(nb), Some(v), "chunk nbits={}", nb);
+            }
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+}

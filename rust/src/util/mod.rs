@@ -1,0 +1,9 @@
+//! Foundation utilities: bit streams, PRNG, statistics, timing, and a
+//! minimal property-testing harness (offline registry has no rand /
+//! criterion / proptest).
+
+pub mod bits;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Minimal property-testing harness (the offline registry has no
+//! `proptest`). A property is a closure from a seeded [`Prng`] to
+//! `Result<(), String>`; `check` runs it over many derived seeds and
+//! panics with the failing seed so a failure is reproducible with
+//! `check_one`.
+
+use crate::util::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` cases, each with a fresh deterministic PRNG.
+/// Panics on the first failure with the case index and seed.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Prng::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{} (seed={seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging aid).
+pub fn check_one<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let mut rng = Prng::seeded(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property `{name}` failed (seed={seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float comparison for property bodies: relative + absolute.
+pub fn approx_eq(a: f32, b: f32, rel: f32, abs: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Check two f32 slices elementwise with `approx_eq`; returns a message
+/// describing the first mismatch.
+pub fn assert_allclose(a: &[f32], b: &[f32], rel: f32, abs: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !approx_eq(x, y, rel, abs) {
+            return Err(format!("mismatch at {i}: {x} vs {y} (|Δ|={})", (x - y).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check("always-ok", Config { cases: 10, seed: 1 }, |_rng| {
+            runs += 1;
+            Ok(())
+        });
+        assert_eq!(runs, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", Config { cases: 5, seed: 2 }, |rng| {
+            let x = rng.next_f64();
+            if x >= 0.0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_behaviour() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+        // big values: relative tolerance applies
+        assert!(assert_allclose(&[1e6], &[1e6 * (1.0 + 5e-6)], 1e-5, 0.0).is_ok());
+    }
+
+    #[test]
+    fn deterministic_across_invocations() {
+        let mut first = Vec::new();
+        check("collect", Config { cases: 4, seed: 77 }, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("collect", Config { cases: 4, seed: 77 }, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,177 @@
+//! Small statistics helpers shared by quantizers, bounds, and benches.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-quantile (q in [0,1]) with linear interpolation, matching
+/// numpy.percentile's default. `xs` need not be sorted.
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// q-quantile over an already-sorted slice.
+pub fn quantile_sorted(sorted: &[f32], q: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+}
+
+/// Shannon entropy (bits/symbol) of a frequency histogram.
+pub fn entropy_bits(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / t;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Count occurrences of each distinct f32 value (bit-pattern keyed so that
+/// e.g. -0.0 and 0.0 are distinguished only if they appear as such).
+pub fn value_histogram(xs: &[f32]) -> std::collections::HashMap<u32, u64> {
+    let mut h = std::collections::HashMap::new();
+    for &x in xs {
+        *h.entry(x.to_bits()).or_insert(0u64) += 1;
+    }
+    h
+}
+
+/// Number of distinct values in a slice.
+pub fn distinct_count(xs: &[f32]) -> usize {
+    value_histogram(xs).len()
+}
+
+/// Summary of a latency/measurement sample in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let pos = p * (v.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+            }
+        };
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: v[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: v[v.len() - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        let s = std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_matches_numpy_convention() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+        // numpy.percentile([1,2,3,4], 25) == 1.75
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-6);
+        assert_eq!(quantile(&[5.0], 0.7), 5.0);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let xs = [4.0f32, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn entropy_known_cases() {
+        assert_eq!(entropy_bits(&[]), 0.0);
+        assert_eq!(entropy_bits(&[10]), 0.0);
+        assert!((entropy_bits(&[1, 1]) - 1.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+        // skewed distribution has lower entropy than uniform
+        assert!(entropy_bits(&[9, 1]) < 1.0);
+    }
+
+    #[test]
+    fn distinct_counts() {
+        assert_eq!(distinct_count(&[1.0, 1.0, 2.0]), 2);
+        assert_eq!(distinct_count(&[]), 0);
+        assert_eq!(distinct_count(&[0.0; 100]), 1);
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!(s.p95 > 90.0 && s.p99 > s.p95);
+    }
+}

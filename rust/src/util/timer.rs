@@ -1,0 +1,122 @@
+//! Micro-benchmark timing helpers (no criterion in the offline registry).
+//!
+//! `bench` runs a closure with warmup then measurement iterations and
+//! returns a [`Summary`] in nanoseconds; format helpers render times
+//! human-readably for the bench harnesses.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.start.elapsed().as_nanos() as f64
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Run `f` `warmup` times unmeasured, then `iters` measured times.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    Summary::from(&samples)
+}
+
+/// Adaptive bench: choose iteration count so total measured time is about
+/// `budget_secs`, with a floor of `min_iters`.
+pub fn bench_for<F: FnMut()>(budget_secs: f64, min_iters: usize, mut f: F) -> Summary {
+    // One calibration run.
+    let t = Instant::now();
+    f();
+    let once = t.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_secs / once) as usize).clamp(min_iters, 100_000);
+    bench(iters.min(3).max(1), iters, f)
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a byte count with an adaptive unit.
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes < 1024.0 {
+        format!("{bytes:.0} B")
+    } else if bytes < 1024.0 * 1024.0 {
+        format!("{:.2} KiB", bytes / 1024.0)
+    } else if bytes < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MiB", bytes / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", bytes / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_summary() {
+        let mut acc = 0u64;
+        let s = bench(2, 20, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(s.n, 20);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+        assert_eq!(fmt_bytes(100.0), "100 B");
+        assert!(fmt_bytes(2048.0).contains("KiB"));
+        assert!(fmt_bytes(3.0 * 1024.0 * 1024.0).contains("MiB"));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+}

@@ -1,0 +1,342 @@
+//! Heavy randomized property sweeps across the format × quantizer
+//! matrix, plus failure injection on the interchange layer. These go
+//! beyond the per-module unit batteries: larger shapes, adversarial
+//! sparsity patterns, cross-format consistency, and corrupted inputs.
+
+use sham::formats::{all_formats, par_matmul, CompressedMatrix, Hac, LzAc, Shac};
+use sham::huffman::bounds::{
+    cor1_hac_bits, cor2_shac_bits, fact2_shac_distinct, psi_csc, WORD_BITS,
+};
+use sham::mat::Mat;
+use sham::quant::{self, Kind, Options};
+use sham::util::prng::Prng;
+use sham::util::proptest::{self as prop, assert_allclose, Config};
+
+/// Adversarial sparsity patterns beyond i.i.d. pruning.
+fn structured_matrix(pattern: usize, rows: usize, cols: usize, rng: &mut Prng) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    match pattern % 5 {
+        0 => {
+            // block-sparse: a few dense blocks
+            for _ in 0..3 {
+                let r0 = rng.gen_range(rows.max(1));
+                let c0 = rng.gen_range(cols.max(1));
+                for i in r0..(r0 + rows / 4).min(rows) {
+                    for j in c0..(c0 + cols / 4).min(cols) {
+                        m.set(i, j, rng.normal() as f32);
+                    }
+                }
+            }
+        }
+        1 => {
+            // single dense column + empty rest
+            let j = rng.gen_range(cols.max(1));
+            for i in 0..rows {
+                m.set(i, j, 1.0 + (i % 7) as f32);
+            }
+        }
+        2 => {
+            // diagonal
+            for i in 0..rows.min(cols) {
+                m.set(i, i, -0.5 + (i % 3) as f32);
+            }
+        }
+        3 => {
+            // checkerboard of two values (RLE/LZW friendly)
+            for i in 0..rows {
+                for j in 0..cols {
+                    if (i + j) % 2 == 0 {
+                        m.set(i, j, 0.25);
+                    }
+                }
+            }
+        }
+        _ => {
+            // last row + first column only
+            for j in 0..cols {
+                m.set(rows - 1, j, 2.0);
+            }
+            for i in 0..rows {
+                m.set(i, 0, -3.0);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_all_formats_agree_on_structured_patterns() {
+    prop::check("structured-patterns", Config { cases: 40, seed: 0xF0F0 }, |rng| {
+        let rows = 2 + rng.gen_range(100);
+        let cols = 2 + rng.gen_range(100);
+        let m = structured_matrix(rng.gen_range(5), rows, cols, rng);
+        let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let want = m.vecmat(&x);
+        for f in all_formats(&m) {
+            check_fmt(&*f, &m, &x, &want)?;
+        }
+        // LzAc is not in the Fig-1 suite but must satisfy the same laws
+        let lz = LzAc::compress(&m);
+        check_fmt(&lz, &m, &x, &want)?;
+        Ok(())
+    });
+}
+
+pub fn check_fmt(
+    f: &dyn CompressedMatrix,
+    m: &Mat,
+    x: &[f32],
+    want: &[f32],
+) -> Result<(), String> {
+    if f.decompress() != *m {
+        return Err(format!("{}: lossy round-trip", f.name()));
+    }
+    assert_allclose(&f.vecmat(x), want, 1e-4, 1e-4)
+        .map_err(|e| format!("{}: {e}", f.name()))?;
+    if f.size_bits() == 0 && m.numel() > 0 {
+        return Err(format!("{}: zero size for non-empty matrix", f.name()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_quantizer_format_composition() {
+    // The full pipeline (prune → each quantizer → each entropy format)
+    // must preserve the quantized matrix exactly, and the paper's size
+    // bounds must hold for HAC/sHAC.
+    prop::check("pipeline-composition", Config { cases: 24, seed: 0xAB1E }, |rng| {
+        let rows = 16 + rng.gen_range(120);
+        let cols = 16 + rng.gen_range(120);
+        let w = Mat::gaussian(rows, cols, 0.1, rng);
+        let p = 40.0 + 55.0 * rng.next_f64();
+        let k = 2 + rng.gen_range(60);
+        for qkind in Kind::ALL {
+            let q = quant::prune_then_quantize(
+                &w,
+                p,
+                Options { kind: qkind, k, exclude_zeros: true },
+                rng,
+            );
+            let qm = &q.mats[0];
+            let hac = Hac::compress(qm);
+            let shac = Shac::compress(qm);
+            prop_check_bounds(qm, &hac, &shac)?;
+            // CSC occupancy formula is exact
+            let csc = sham::formats::Csc::compress(qm);
+            let psi_want =
+                psi_csc(rows as u64, cols as u64, qm.nonzero_ratio());
+            let got = csc.psi();
+            if (got - psi_want).abs() > 1e-9 {
+                return Err(format!("csc psi {got} != formula {psi_want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+pub fn prop_check_bounds(m: &Mat, hac: &Hac, shac: &Shac) -> Result<(), String> {
+    let (n, mm) = (m.rows as u64, m.cols as u64);
+    let k_total = m.distinct_values().max(1) as u64;
+    let b1 = cor1_hac_bits(n, mm, k_total, WORD_BITS) + WORD_BITS as f64;
+    if (hac.size_bits() as f64) > b1 {
+        return Err(format!("hac {} > cor1 {b1}", hac.size_bits()));
+    }
+    let k_nz = m.distinct_nonzero().max(1) as u64;
+    let s = m.nonzero_ratio();
+    let b2 = cor2_shac_bits(n, mm, s, k_nz, WORD_BITS) + WORD_BITS as f64;
+    if (shac.size_bits() as f64) > b2 {
+        return Err(format!("shac {} > cor2 {b2}", shac.size_bits()));
+    }
+    // Fact 2 (distinct-values worst case) dominates Cor. 2
+    let f2 = fact2_shac_distinct(n, mm, s, WORD_BITS);
+    if k_nz == shac.nnz() as u64 && (shac.size_bits() as f64) > f2 + WORD_BITS as f64
+    {
+        return Err(format!("shac {} > fact2 {f2}", shac.size_bits()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_parallel_dots_match_sequential() {
+    prop::check("parallel-consistency", Config { cases: 20, seed: 0x9A13 }, |rng| {
+        let rows = 8 + rng.gen_range(80);
+        let cols = 8 + rng.gen_range(80);
+        let m = Mat::sparse_quantized(rows, cols, 0.3, 12, rng);
+        let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        let hac = Hac::compress(&m).with_column_index();
+        let shac = Shac::compress(&m).with_column_index();
+        let want_h = hac.vecmat(&x);
+        let want_s = shac.vecmat(&x);
+        for t in [1usize, 2, 3, 7, 16] {
+            assert_allclose(&hac.vecmat_par_cols(&x, t), &want_h, 1e-5, 1e-5)
+                .map_err(|e| format!("hac par t={t}: {e}"))?;
+            assert_allclose(&shac.vecmat_par_cols(&x, t), &want_s, 1e-5, 1e-5)
+                .map_err(|e| format!("shac par t={t}: {e}"))?;
+        }
+        // Alg. 3 batched across formats
+        let xb = Mat::gaussian(5, rows, 1.0, rng);
+        let want = m.matmul(&xb);
+        for f in all_formats(&m) {
+            let got = par_matmul(f.as_ref(), &xb, 4);
+            if got.max_abs_diff(&want) > 1e-3 {
+                return Err(format!("{}: Alg3 mismatch", f.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_size_ordering_claims() {
+    // The qualitative Fig-1 ordering claims, over randomized workloads:
+    // (a) at p ≥ 95, sHAC < HAC; (b) at p ≤ 80, HAC ≤ sHAC;
+    // (c) IM size is sparsity-invariant.
+    prop::check("size-orderings", Config { cases: 16, seed: 0x51E5 }, |rng| {
+        let rows = 64 + rng.gen_range(128);
+        let cols = 64 + rng.gen_range(128);
+        let w = Mat::gaussian(rows, cols, 0.1, rng);
+        let k = 16 + rng.gen_range(32);
+        let build = |p: f64, rng: &mut Prng| -> Mat {
+            let q = quant::prune_then_quantize(
+                &w,
+                p,
+                Options { kind: Kind::Cws, k, exclude_zeros: true },
+                rng,
+            );
+            q.mats.into_iter().next().unwrap()
+        };
+        // Empirical crossover mechanics: HAC pays ≥ 1 bit per entry
+        // (the zero symbol cannot go below one bit), sHAC pays ≈ b bits
+        // of `ri` per *non-zero*; so actual sizes cross near s* ≈ 1/b.
+        // Assert the ordering only safely outside the dead zone, and on
+        // matrices big enough that dictionary constants don't dominate.
+        let s_star = 1.0 / WORD_BITS as f64;
+        for p in [80.0, 99.0] {
+            let m = build(p, rng);
+            if m.numel() < 32_768 {
+                continue;
+            }
+            let hac = Hac::compress(&m);
+            let shac = Shac::compress(&m);
+            let s = m.nonzero_ratio();
+            if s < 0.5 * s_star {
+                sham::prop_assert!(
+                    shac.size_bits() < hac.size_bits(),
+                    "s={s:.4} << s*={s_star:.4}: shac {} !< hac {}",
+                    shac.size_bits(),
+                    hac.size_bits()
+                );
+            } else if s > 3.0 * s_star {
+                sham::prop_assert!(
+                    hac.size_bits() <= shac.size_bits(),
+                    "s={s:.4} >> s*={s_star:.4}: hac {} !<= shac {}",
+                    hac.size_bits(),
+                    shac.size_bits()
+                );
+            }
+        }
+        let m80 = build(80.0, rng);
+        let m97 = build(97.0, rng);
+        let im80 = sham::formats::IndexMap::compress(&m80).size_bits();
+        let im97 = sham::formats::IndexMap::compress(&m97).size_bits();
+        // IM charges pointer width per entry regardless of sparsity; the
+        // codebook shrinks slightly with more pruning, nothing else.
+        let nm = (rows * cols) as u64;
+        sham::prop_assert!(im80 >= 8 * nm && im97 >= 8 * nm, "IM below floor");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: interchange layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupted_wbin_archives_are_rejected_not_crashing() {
+    use sham::io::{read_archive, write_archive, Archive, Tensor};
+    let dir = std::env::temp_dir().join("sham_fuzz_wbin");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.wbin");
+    let mut a = Archive::new();
+    a.insert(
+        "w".into(),
+        Tensor::from_f32(vec![8, 8], &(0..64).map(|i| i as f32).collect::<Vec<_>>()),
+    );
+    a.insert("y".into(), Tensor::from_i32(vec![4], &[1, 2, 3, 4]));
+    write_archive(&path, &a).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    let mut rng = Prng::seeded(0xF422);
+    let mut rejected = 0usize;
+    for case in 0..200 {
+        let mut corrupt = bytes.clone();
+        match case % 4 {
+            0 => {
+                // truncate
+                let cut = 1 + rng.gen_range(corrupt.len() - 1);
+                corrupt.truncate(cut);
+            }
+            1 => {
+                // flip random bytes in the header region
+                let i = rng.gen_range(24.min(corrupt.len()));
+                corrupt[i] ^= 0xFF;
+            }
+            2 => {
+                // blow up a shape field (offset of first dim bytes)
+                let i = 13 + rng.gen_range(8);
+                if i < corrupt.len() {
+                    corrupt[i] = 0xFF;
+                }
+            }
+            _ => {
+                // random single-byte corruption anywhere
+                let i = rng.gen_range(corrupt.len());
+                corrupt[i] = corrupt[i].wrapping_add(1 + rng.gen_range(255) as u8);
+            }
+        }
+        let p2 = dir.join(format!("c{case}.wbin"));
+        std::fs::write(&p2, &corrupt).unwrap();
+        // must either parse to *something* or error — never panic/UB
+        match read_archive(&p2) {
+            Ok(_) => {}
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 50, "corruption mostly undetected ({rejected}/200)");
+}
+
+#[test]
+fn dataset_loader_rejects_wrong_archives() {
+    use sham::io::{write_archive, Archive, Tensor, TestSet};
+    let dir = std::env::temp_dir().join("sham_fuzz_ds");
+    std::fs::create_dir_all(&dir).unwrap();
+    // y without x
+    let p = dir.join("partial.wbin");
+    let mut a = Archive::new();
+    a.insert("y_test".into(), Tensor::from_i32(vec![3], &[0, 1, 2]));
+    write_archive(&p, &a).unwrap();
+    assert!(TestSet::load(&p).is_err());
+    // x with wrong rank
+    let p2 = dir.join("rank.wbin");
+    let mut b = Archive::new();
+    b.insert("x_test".into(), Tensor::from_f32(vec![4, 4], &[0.0; 16]));
+    b.insert("y_test".into(), Tensor::from_i32(vec![4], &[0; 4]));
+    write_archive(&p2, &b).unwrap();
+    assert!(TestSet::load(&p2).is_err());
+}
+
+#[test]
+fn lzac_matches_shac_semantics_everywhere() {
+    prop::check("lzac-vs-shac", Config { cases: 30, seed: 0x12AC }, |rng| {
+        let rows = 4 + rng.gen_range(96);
+        let cols = 4 + rng.gen_range(96);
+        let m = Mat::sparse_quantized(rows, cols, 0.2 + 0.5 * rng.next_f64(), 10, rng);
+        let lz = LzAc::compress(&m);
+        let sh = Shac::compress(&m);
+        let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
+        assert_allclose(&lz.vecmat(&x), &sh.vecmat(&x), 1e-5, 1e-5)
+            .map_err(|e| format!("dot: {e}"))?;
+        sham::prop_assert!(lz.decompress() == sh.decompress(), "round-trip differs");
+        Ok(())
+    });
+}

@@ -1,0 +1,64 @@
+//! Cross-language `.wbin` check: read archives written by the Python
+//! side (datasets + weights from `make artifacts`), verify shape/dtype
+//! invariants, and round-trip them through the Rust writer.
+
+use std::path::PathBuf;
+
+use sham::io::{read_archive, write_archive, Dtype};
+use sham::nn::ModelKind;
+
+fn artifacts() -> Option<PathBuf> {
+    for base in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(base);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn reads_python_written_weights() {
+    let Some(art) = artifacts() else { return };
+    for kind in ModelKind::ALL {
+        let a = read_archive(kind.weights_path(&art)).unwrap();
+        assert!(!a.is_empty(), "{}: empty weights", kind.name());
+        for name in kind.fc_names() {
+            let w = &a[&format!("{name}.w")];
+            assert_eq!(w.dtype, Dtype::F32);
+            assert_eq!(w.shape.len(), 2, "{name}.w not 2-D");
+            let b = &a[&format!("{name}.b")];
+            assert_eq!(b.shape.len(), 1);
+            assert_eq!(w.shape[1], b.shape[0], "{name}: w/b mismatch");
+        }
+        // FC chain dims line up and start at the feature dim
+        let fcs = kind.fc_names();
+        let first = &a[&format!("{}.w", fcs[0])];
+        assert_eq!(first.shape[0], kind.feature_dim());
+        for pair in fcs.windows(2) {
+            let w0 = &a[&format!("{}.w", pair[0])];
+            let w1 = &a[&format!("{}.w", pair[1])];
+            assert_eq!(w0.shape[1], w1.shape[0], "{pair:?} chain break");
+        }
+    }
+}
+
+#[test]
+fn reads_python_written_datasets() {
+    let Some(art) = artifacts() else { return };
+    for kind in [ModelKind::VggMnist, ModelKind::DtaDavis] {
+        let ts = kind.load_test_set(&art).unwrap();
+        assert!(ts.len() > 100, "{}: tiny test set", kind.name());
+    }
+}
+
+#[test]
+fn rust_writer_roundtrips_python_archive() {
+    let Some(art) = artifacts() else { return };
+    let a = read_archive(ModelKind::VggMnist.weights_path(&art)).unwrap();
+    let tmp = std::env::temp_dir().join("sham_roundtrip.wbin");
+    write_archive(&tmp, &a).unwrap();
+    let b = read_archive(&tmp).unwrap();
+    assert_eq!(a, b);
+}
