@@ -8,6 +8,7 @@
 use std::path::PathBuf;
 
 use sham::harness::experiments::Ctx;
+use sham::formats::FormatId;
 use sham::nn::compressed::{CompressionCfg, FcFormat};
 use sham::nn::ModelKind;
 use sham::quant::Kind;
@@ -37,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         for k in [2usize, 16, 64, 256] {
             let cfg = CompressionCfg {
                 fc_quant: Some((qkind, k)),
-                fc_format: FcFormat::Hac,
+                fc_format: FcFormat::Fixed(FormatId::Hac),
                 ..Default::default()
             };
             let (m, psi, _) = ctx.eval(kind, &cfg, 0xE0 + k as u64)?;

@@ -1,0 +1,164 @@
+//! Bench: the steady-state serving hot path — alloc-per-call kernels +
+//! per-call thread spawning (the pre-redesign shape) vs the
+//! allocation-free `vecmat_into`/`matmul_batch_into` kernels + pooled
+//! `par_matmul_into`, on HAC and sHAC at serving-realistic shapes.
+//! Results are printed as a table and written to
+//! `BENCH_serving_hot_path.json` so the win is tracked across PRs.
+
+use sham::formats::{par_matmul_into, CompressedMatrix, Hac, Shac};
+use sham::mat::Mat;
+use sham::quant::{self, Kind, Options};
+use sham::util::prng::Prng;
+use sham::util::stats::Summary;
+use sham::util::timer::{bench, black_box, fmt_ns};
+
+fn workload(p: f64, k: usize, rng: &mut Prng) -> Mat {
+    let m = Mat::gaussian(1024, 1024, 0.05, rng);
+    let pruned = quant::prune_percentile(&m, p);
+    quant::quantize(
+        &pruned,
+        Options { kind: Kind::Cws, k, exclude_zeros: true },
+        rng,
+    )
+    .mats
+    .remove(0)
+}
+
+/// The pre-redesign batched product: a fresh output row `Vec` per batch
+/// row plus a fresh output matrix per call.
+fn matmul_alloc_per_call(f: &dyn CompressedMatrix, x: &Mat) -> Mat {
+    let cols = f.cols();
+    let mut out = Mat::zeros(x.rows, cols);
+    for b in 0..x.rows {
+        let y = f.vecmat(x.row(b));
+        out.data[b * cols..(b + 1) * cols].copy_from_slice(&y);
+    }
+    out
+}
+
+/// The pre-redesign Alg. 3: spawn OS threads on every invocation.
+fn par_matmul_spawning(f: &dyn CompressedMatrix, x: &Mat, threads: usize) -> Mat {
+    let t = threads.max(1).min(x.rows.max(1));
+    let cols = f.cols();
+    let mut out = Mat::zeros(x.rows, cols);
+    if x.rows == 0 {
+        return out;
+    }
+    let chunk = (x.rows + t - 1) / t;
+    let chunks: Vec<(usize, &mut [f32])> = {
+        let mut rem: &mut [f32] = &mut out.data;
+        let mut v = Vec::new();
+        let mut start = 0usize;
+        while start < x.rows {
+            let rows_here = chunk.min(x.rows - start);
+            let (head, tail) = rem.split_at_mut(rows_here * cols);
+            v.push((start, head));
+            rem = tail;
+            start += rows_here;
+        }
+        v
+    };
+    std::thread::scope(|scope| {
+        for (start, slice) in chunks {
+            scope.spawn(move || {
+                let rows_here = slice.len() / cols;
+                for r in 0..rows_here {
+                    let y = f.vecmat(x.row(start + r));
+                    slice[r * cols..(r + 1) * cols].copy_from_slice(&y);
+                }
+            });
+        }
+    });
+    out
+}
+
+struct Row {
+    name: String,
+    summary: Summary,
+}
+
+fn main() {
+    let mut rng = Prng::seeded(0x5E41);
+    let threads = 8usize;
+    let batch = 32usize;
+    println!(
+        "# serving_hot_path — 1024×1024, CWS k=32, batch={batch}, threads={threads}"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for p in [90.0, 99.0] {
+        let w = workload(p, 32, &mut rng);
+        let xb = Mat::gaussian(batch, 1024, 1.0, &mut rng);
+        let formats: Vec<Box<dyn CompressedMatrix>> =
+            vec![Box::new(Hac::compress(&w)), Box::new(Shac::compress(&w))];
+        println!("\n## pruning p={p:.0} (s={:.3})", w.nonzero_ratio());
+        println!("{:<34} {:>12} {:>12}", "variant", "median", "p95");
+        for f in &formats {
+            let fname = f.name();
+            // 1. batched, alloc per call (old default matmul_batch shape)
+            let s_alloc = bench(2, 10, || {
+                black_box(matmul_alloc_per_call(f.as_ref(), black_box(&xb)));
+            });
+            // 2. batched, allocation-free into a reused Mat
+            let mut out = Mat::zeros(0, 0);
+            let s_into = bench(2, 10, || {
+                f.matmul_batch_into(black_box(&xb), &mut out);
+                black_box(&out);
+            });
+            // 3. Alg. 3, spawning threads per call (old par_matmul)
+            let s_spawn = bench(2, 10, || {
+                black_box(par_matmul_spawning(f.as_ref(), black_box(&xb), threads));
+            });
+            // 4. Alg. 3 on the persistent pool, reused output
+            let mut pout = Mat::zeros(0, 0);
+            let s_pool = bench(2, 10, || {
+                par_matmul_into(f.as_ref(), black_box(&xb), &mut pout, threads);
+                black_box(&pout);
+            });
+            for (label, s) in [
+                ("batch_alloc_per_call", &s_alloc),
+                ("batch_into_reused", &s_into),
+                ("par_spawn_per_call", &s_spawn),
+                ("par_pooled_into", &s_pool),
+            ] {
+                println!(
+                    "{:<34} {:>12} {:>12}",
+                    format!("{fname}/{label}"),
+                    fmt_ns(s.p50),
+                    fmt_ns(s.p95)
+                );
+                rows.push(Row {
+                    name: format!("p{p:.0}/{fname}/{label}"),
+                    summary: s.clone(),
+                });
+            }
+            println!(
+                "{:<34} into {:.2}x vs alloc, pooled {:.2}x vs spawn",
+                format!("{fname}/speedup"),
+                s_alloc.p50 / s_into.p50,
+                s_spawn.p50 / s_pool.p50,
+            );
+        }
+    }
+
+    // hand-rolled JSON (no serde in the offline registry)
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"serving_hot_path\",\n");
+    json.push_str(&format!("  \"threads\": {threads},\n  \"batch\": {batch},\n"));
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}}}{}\n",
+            r.name,
+            r.summary.p50,
+            r.summary.p95,
+            r.summary.mean,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_serving_hot_path.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

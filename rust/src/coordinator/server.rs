@@ -12,17 +12,18 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::{self, Input, Policy, QueueHandle, Request};
 use crate::coordinator::metrics::Metrics;
+use crate::formats::{pool, Workspace};
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
 use crate::io::TestSet;
-use crate::runtime::{lit_f32, lit_i32, Engine};
-
+use crate::runtime::{lit_f32, lit_i32, Engine, Literal, PjRtClient};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub policy: Policy,
-    /// Threads used inside each worker for the compressed FC matmul.
+    /// Parallelism used inside each worker for the compressed FC matmul
+    /// (chunks dispatched onto the shared persistent `formats::pool`).
     pub fc_threads: usize,
 }
 
@@ -46,6 +47,14 @@ pub struct Server {
 
 impl Server {
     pub fn new(cfg: ServerConfig) -> Server {
+        // Size the shared worker pool once, up front, so steady-state
+        // serving never spawns a thread per request (a no-op when the
+        // pool is already live, and outranked by SHAM_POOL_THREADS).
+        // A sequential server (fc_threads ≤ 1) never touches the pool,
+        // so it must not shrink it for the rest of the process either.
+        if cfg.fc_threads > 1 {
+            let _ = pool::configure_threads(cfg.fc_threads);
+        }
         Server { variants: HashMap::new(), metrics: Arc::new(Metrics::new()), cfg }
     }
 
@@ -135,13 +144,13 @@ fn worker_loop(
     fc_threads: usize,
 ) -> Result<()> {
     use std::sync::atomic::Ordering;
-    let client = xla::PjRtClient::cpu().context("create PJRT client")?;
+    let client = PjRtClient::cpu().context("create PJRT client")?;
     let engine = Engine::load(&client, features_hlo)?;
     let feat_dim = model.kind.feature_dim();
     let batch = policy.max_batch;
 
     // Constant parameter literals, built once.
-    let mut const_inputs: Vec<Option<xla::Literal>> =
+    let mut const_inputs: Vec<Option<Literal>> =
         Vec::with_capacity(engine.param_names.len());
     for name in &engine.param_names {
         match name.as_str() {
@@ -161,14 +170,17 @@ fn worker_loop(
         }
     }
 
+    // Per-worker reusable FC workspace: after warm-up the whole FC stack
+    // runs with zero output allocations per batch.
+    let mut ws = Workspace::new();
     while let Some(reqs) = batcher::next_batch(&rx, &policy) {
         metrics.record_batch(reqs.len());
         let result = run_batch(
             &model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
+            &mut ws,
         );
         match result {
             Ok(outputs) => {
-                let out_dim = outputs.cols;
                 for (i, req) in reqs.iter().enumerate() {
                     let row = outputs.row(i).to_vec();
                     let _ = req.resp.send(Ok(row));
@@ -177,7 +189,6 @@ fn worker_loop(
                         req.enqueued.elapsed().as_nanos() as f64,
                     );
                 }
-                let _ = out_dim;
             }
             Err(e) => {
                 let msg = format!("{e:#}");
@@ -191,21 +202,24 @@ fn worker_loop(
 }
 
 /// Execute one formed batch: assemble padded inputs → PJRT features →
-/// compressed FC stack → per-request rows.
-fn run_batch(
+/// compressed FC stack (allocation-free, into the worker's reusable
+/// workspace) → per-request rows borrowed from that workspace.
+#[allow(clippy::too_many_arguments)]
+fn run_batch<'w>(
     model: &CompressedModel,
     engine: &Engine,
-    const_inputs: &[Option<xla::Literal>],
+    const_inputs: &[Option<Literal>],
     reqs: &[Request],
     batch: usize,
     feat_dim: usize,
     fc_threads: usize,
-) -> Result<Mat> {
+    ws: &'w mut Workspace,
+) -> Result<&'w Mat> {
     anyhow::ensure!(reqs.len() <= batch, "batch overflow");
     // Per-batch example literals, keyed by positional slot; constant
     // parameter literals are borrowed from `const_inputs` (built once at
     // worker start — the §Perf "no per-batch re-upload" point).
-    let mut batch_lits: HashMap<usize, xla::Literal> = HashMap::new();
+    let mut batch_lits: HashMap<usize, Literal> = HashMap::new();
     for (i, name) in engine.param_names.iter().enumerate() {
         match name.as_str() {
             "x" => {
@@ -254,7 +268,7 @@ fn run_batch(
         }
     }
     // Positional borrow list.
-    let ordered: Vec<&xla::Literal> = engine
+    let ordered: Vec<&Literal> = engine
         .param_names
         .iter()
         .enumerate()
@@ -268,7 +282,7 @@ fn run_batch(
     let feats_flat = engine.run_borrowed(&ordered)?.to_vec::<f32>()?;
     anyhow::ensure!(feats_flat.len() == batch * feat_dim, "feature shape mismatch");
     let feats = Mat::from_vec(batch, feat_dim, feats_flat);
-    Ok(model.fc_forward(&feats, fc_threads))
+    Ok(model.fc_forward_into(&feats, fc_threads, ws))
 }
 
 /// Ground-truth helper for tests/examples: pull request inputs straight

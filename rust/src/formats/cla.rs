@@ -12,13 +12,14 @@
 //! formats and HAC/sHAC in size; competitive dot speed) is preserved.
 //! See DESIGN.md §2 for the substitution note.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
-/// One encoded column.
+/// One encoded column. `pub(crate)` so formats::store can serialize the
+/// chosen encodings verbatim (no recompression on load).
 #[derive(Debug, Clone)]
-enum ColEnc {
+pub(crate) enum ColEnc {
     /// Run-length encoding: (value, run) pairs covering all n rows.
     Rle(Vec<(f32, u32)>),
     /// Offset-list encoding: per distinct non-zero value, the sorted row
@@ -198,6 +199,17 @@ impl Cla {
         Cla { rows: w.rows, cols: w.cols, columns }
     }
 
+    /// Reassemble from serialized parts (formats::store).
+    pub(crate) fn from_columns(rows: usize, cols: usize, columns: Vec<ColEnc>) -> Cla {
+        assert_eq!(columns.len(), cols, "column count mismatch");
+        Cla { rows, cols, columns }
+    }
+
+    /// The per-column encodings (formats::store).
+    pub(crate) fn columns(&self) -> &[ColEnc] {
+        &self.columns
+    }
+
     /// Distribution of chosen encodings (diagnostics for the bench logs).
     pub fn scheme_histogram(&self) -> [usize; 4] {
         let mut h = [0usize; 4];
@@ -214,8 +226,8 @@ impl Cla {
 }
 
 impl CompressedMatrix for Cla {
-    fn name(&self) -> &'static str {
-        "cla"
+    fn id(&self) -> FormatId {
+        FormatId::Cla
     }
 
     fn rows(&self) -> usize {
@@ -230,9 +242,12 @@ impl CompressedMatrix for Cla {
         self.columns.iter().map(|c| c.size_bits()).sum()
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        self.columns.iter().map(|c| c.dot(x)).collect()
+        assert_eq!(out.len(), self.cols);
+        for (o, c) in out.iter_mut().zip(self.columns.iter()) {
+            *o = c.dot(x);
+        }
     }
 
     fn decompress(&self) -> Mat {

@@ -1,7 +1,7 @@
 //! Coordinate-list format (COO): each non-zero stored as a
 //! (row, column, value) triple — the third Scipy baseline of Fig. 1.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -34,11 +34,24 @@ impl Coo {
     pub fn nnz(&self) -> usize {
         self.v.len()
     }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        ri: Vec<u32>,
+        ci: Vec<u32>,
+        v: Vec<f32>,
+    ) -> Coo {
+        assert_eq!(ri.len(), v.len());
+        assert_eq!(ci.len(), v.len());
+        Coo { rows, cols, ri, ci, v }
+    }
 }
 
 impl CompressedMatrix for Coo {
-    fn name(&self) -> &'static str {
-        "coo"
+    fn id(&self) -> FormatId {
+        FormatId::Coo
     }
 
     fn rows(&self) -> usize {
@@ -54,13 +67,15 @@ impl CompressedMatrix for Coo {
         3 * self.v.len() as u64 * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for t in 0..self.v.len() {
             out[self.ci[t] as usize] += x[self.ri[t] as usize] * self.v[t];
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

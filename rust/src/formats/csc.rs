@@ -3,7 +3,7 @@
 //! Occupancy ψ_CSC = (2q + m + 1)/(nm) under b-bit-per-element accounting
 //! (the paper's footnote 1 charges `ri` at b bits as well).
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -59,8 +59,8 @@ impl Csc {
 }
 
 impl CompressedMatrix for Csc {
-    fn name(&self) -> &'static str {
-        "csc"
+    fn id(&self) -> FormatId {
+        FormatId::Csc
     }
 
     fn rows(&self) -> usize {
@@ -76,18 +76,17 @@ impl CompressedMatrix for Csc {
         (2 * self.nz.len() as u64 + self.cols as u64 + 1) * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
-        for j in 0..self.cols {
+        assert_eq!(out.len(), self.cols);
+        for (j, oj) in out.iter_mut().enumerate() {
             let (lo, hi) = (self.cb[j] as usize, self.cb[j + 1] as usize);
             let mut sum = 0.0f32;
             for t in lo..hi {
                 sum += x[self.ri[t] as usize] * self.nz[t];
             }
-            out[j] = sum;
+            *oj = sum;
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

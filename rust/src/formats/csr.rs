@@ -1,7 +1,7 @@
 //! Compressed Sparse Row — the CSC dual used as a Fig. 1 baseline
 //! (stores column indices of non-zeros, rows delimited by `rb`).
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -39,11 +39,24 @@ impl Csr {
     pub fn nnz(&self) -> usize {
         self.nz.len()
     }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        nz: Vec<f32>,
+        ci: Vec<u32>,
+        rb: Vec<u32>,
+    ) -> Csr {
+        assert_eq!(rb.len(), rows + 1);
+        assert_eq!(ci.len(), nz.len());
+        Csr { rows, cols, nz, ci, rb }
+    }
 }
 
 impl CompressedMatrix for Csr {
-    fn name(&self) -> &'static str {
-        "csr"
+    fn id(&self) -> FormatId {
+        FormatId::Csr
     }
 
     fn rows(&self) -> usize {
@@ -59,9 +72,12 @@ impl CompressedMatrix for Csr {
         (2 * self.nz.len() as u64 + self.rows as u64 + 1) * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for i in 0..self.rows {
             let xi = x[i];
             if xi == 0.0 {
@@ -71,7 +87,6 @@ impl CompressedMatrix for Csr {
                 out[self.ci[t] as usize] += xi * self.nz[t];
             }
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

@@ -1,7 +1,7 @@
 //! Uncompressed dense format — the `Numpy` baseline of Fig. 1: fastest
 //! dot, full b·n·m footprint.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -22,8 +22,8 @@ impl Dense {
 }
 
 impl CompressedMatrix for Dense {
-    fn name(&self) -> &'static str {
-        "dense"
+    fn id(&self) -> FormatId {
+        FormatId::Dense
     }
 
     fn rows(&self) -> usize {
@@ -38,8 +38,8 @@ impl CompressedMatrix for Dense {
         (self.mat.numel() as u64) * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
-        self.mat.vecmat(x)
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
+        self.mat.vecmat_into(x, out);
     }
 
     fn decompress(&self) -> Mat {

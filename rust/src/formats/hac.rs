@@ -13,7 +13,7 @@
 //! column-parallel dot [`Hac::vecmat_par_cols`]; the extra m words are
 //! charged in `size_bits` when the index is built.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{pool, CompressedMatrix, FormatId};
 use crate::huffman::bounds::{dict_bits, WORD_BITS};
 use crate::huffman::Code;
 use crate::mat::Mat;
@@ -166,22 +166,30 @@ impl Hac {
         out
     }
 
-    /// Column-parallel dot over the §VI offset index.
+    /// Column-parallel dot over the §VI offset index, chunked onto the
+    /// persistent worker [`pool`] (no per-call thread spawning).
     pub fn vecmat_par_cols(&self, x: &[f32], threads: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        self.vecmat_par_cols_into(x, &mut out, threads);
+        out
+    }
+
+    /// Allocation-free variant of [`Hac::vecmat_par_cols`].
+    pub fn vecmat_par_cols_into(&self, x: &[f32], out: &mut [f32], threads: usize) {
         let offsets = self
             .col_offsets
             .as_ref()
             .expect("call with_column_index() before vecmat_par_cols");
         assert_eq!(x.len(), self.rows);
-        let t = threads.max(1).min(self.cols.max(1));
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
         if self.cols == 0 {
-            return out;
+            return;
         }
+        let t = threads.max(1).min(self.cols);
         let chunk = (self.cols + t - 1) / t;
         let mut slices: Vec<(usize, &mut [f32])> = Vec::new();
         {
-            let mut rem: &mut [f32] = &mut out;
+            let mut rem: &mut [f32] = out;
             let mut start = 0usize;
             while start < self.cols {
                 let here = chunk.min(self.cols - start);
@@ -191,7 +199,7 @@ impl Hac {
                 start += here;
             }
         }
-        std::thread::scope(|scope| {
+        pool::global().scope(|scope| {
             for (start, out_slice) in slices {
                 scope.spawn(move || {
                     let mut r = BitReader::new(&self.stream);
@@ -207,13 +215,12 @@ impl Hac {
                 });
             }
         });
-        out
     }
 }
 
 impl CompressedMatrix for Hac {
-    fn name(&self) -> &'static str {
-        "hac"
+    fn id(&self) -> FormatId {
+        FormatId::Hac
     }
 
     fn rows(&self) -> usize {
@@ -236,11 +243,14 @@ impl CompressedMatrix for Hac {
     /// Alg. 1 (`Dot_HAC`) with the multi-symbol LUT decoder: one probe
     /// can retire a whole run of short codewords (e.g. the 1-bit zero
     /// symbol dominating a pruned stream) — see EXPERIMENTS.md §Perf.
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         if self.rows == 0 || self.cols == 0 {
-            return out;
+            return;
         }
         let mut r = BitReader::new(&self.stream);
         let total = self.rows * self.cols;
@@ -274,7 +284,6 @@ impl CompressedMatrix for Hac {
             }
             t += n;
         }
-        out
     }
 
     fn decompress(&self) -> Mat {
@@ -292,12 +301,13 @@ impl CompressedMatrix for Hac {
     /// Decode-once batched product: the stream is scanned a single time
     /// and each decoded weight is applied to every batch row (an AXPY
     /// over the batch), amortizing the Huffman decode B× (§Perf).
-    fn matmul_batch(&self, x: &Mat) -> Mat {
+    fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
         let batch = x.rows;
-        let mut out = Mat::zeros(batch, self.cols);
+        out.resize(batch, self.cols);
+        out.data.fill(0.0);
         if self.rows == 0 || self.cols == 0 || batch == 0 {
-            return out;
+            return;
         }
         let mut r = BitReader::new(&self.stream);
         let total = self.rows * self.cols;
@@ -333,7 +343,6 @@ impl CompressedMatrix for Hac {
             }
             t += n;
         }
-        out
     }
 }
 

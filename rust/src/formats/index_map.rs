@@ -5,13 +5,13 @@
 //! just another codebook value — IM does not exploit sparsity, which is
 //! exactly why it loses to sHAC at high pruning in Fig. 1.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
 /// Pointer array, sized to the codebook (u8 for k ≤ 256, else u16).
 #[derive(Debug, Clone)]
-enum Pointers {
+pub(crate) enum Pointers {
     U8(Vec<u8>),
     U16(Vec<u16>),
 }
@@ -54,6 +54,32 @@ impl IndexMap {
         self.codebook.len()
     }
 
+    /// Reassemble from serialized parts (formats::store). The pointer
+    /// width is re-derived from the codebook size, matching
+    /// [`IndexMap::compress`] exactly.
+    pub(crate) fn from_indices(
+        rows: usize,
+        cols: usize,
+        codebook: Vec<f32>,
+        idx: Vec<u16>,
+    ) -> IndexMap {
+        assert_eq!(idx.len(), rows * cols, "index payload size mismatch");
+        let ptrs = if codebook.len() <= 256 {
+            Pointers::U8(idx.into_iter().map(|p| p as u8).collect())
+        } else {
+            Pointers::U16(idx)
+        };
+        IndexMap { rows, cols, codebook, idx: ptrs }
+    }
+
+    /// Widened copy of the pointer array (formats::store).
+    pub(crate) fn indices_u16(&self) -> Vec<u16> {
+        match &self.idx {
+            Pointers::U8(v) => v.iter().map(|&p| p as u16).collect(),
+            Pointers::U16(v) => v.clone(),
+        }
+    }
+
     #[inline]
     fn index_at(&self, flat: usize) -> usize {
         match &self.idx {
@@ -64,8 +90,8 @@ impl IndexMap {
 }
 
 impl CompressedMatrix for IndexMap {
-    fn name(&self) -> &'static str {
-        "im"
+    fn id(&self) -> FormatId {
+        FormatId::IndexMap
     }
 
     fn rows(&self) -> usize {
@@ -82,9 +108,12 @@ impl CompressedMatrix for IndexMap {
         bbar * nm + self.k() as u64 * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         // Row-major walk: two memory accesses per weight (Π then r),
         // as the paper describes for IM.
         match &self.idx {
@@ -111,7 +140,6 @@ impl CompressedMatrix for IndexMap {
                 }
             }
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

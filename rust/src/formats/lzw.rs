@@ -15,7 +15,7 @@
 //! as the dictionary fills (up to [`MAX_DICT_BITS`], then the dictionary
 //! freezes — the classic GIF-style variant without CLEAR codes).
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 use crate::util::bits::{BitBuf, BitReader, BitWriter};
@@ -132,6 +132,10 @@ impl<'a> LzwDecoder<'a> {
             let code = self.reader.read_bits(width)? as u32;
             match self.prev {
                 None => {
+                    // the first code must be a bare alphabet symbol
+                    if code as usize >= self.k {
+                        return None;
+                    }
                     self.expand(code);
                 }
                 Some(prev) => {
@@ -143,14 +147,16 @@ impl<'a> LzwDecoder<'a> {
                             self.next_code += 1;
                         }
                         self.expand(code);
-                    } else {
+                    } else if code == self.next_code && self.next_code < max_codes {
                         // the KwKwK special case: phrase = prev + head(prev)
                         let head = self.phrase_head(prev);
-                        if self.next_code < max_codes {
-                            self.parents.push((prev, head));
-                            self.next_code += 1;
-                        }
+                        self.parents.push((prev, head));
+                        self.next_code += 1;
                         self.expand(code);
+                    } else {
+                        // a valid encoder never emits a code ahead of the
+                        // dictionary — corrupt stream
+                        return None;
                     }
                 }
             }
@@ -208,11 +214,49 @@ impl LzAc {
     pub fn n_words(&self) -> u64 {
         (self.stream.len() as u64 + WORD_BITS - 1) / WORD_BITS
     }
+
+    /// The encoded LZW bit stream (formats::store).
+    pub fn stream_ref(&self) -> &BitBuf {
+        &self.stream
+    }
+
+    /// Reassemble from serialized parts (formats::store).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        alphabet: Vec<f32>,
+        stream: BitBuf,
+        ri: Vec<u32>,
+        cb: Vec<u32>,
+    ) -> LzAc {
+        assert_eq!(cb.len(), cols + 1, "cb length mismatch");
+        let nnz = ri.len();
+        LzAc { rows, cols, alphabet, stream, ri, cb, nnz }
+    }
+
+    /// Decode the whole stream once, verifying every symbol resolves
+    /// inside the alphabet — lets formats::store reject a corrupt
+    /// container with an error instead of panicking on first use.
+    pub fn validate_stream(&self) -> bool {
+        let k = self.alphabet.len().max(1);
+        let mut dec = LzwDecoder::new(&self.stream, k, self.nnz);
+        for _ in 0..self.nnz {
+            match dec.next_symbol() {
+                Some(s) => {
+                    if s as usize >= self.alphabet.len() {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+        true
+    }
 }
 
 impl CompressedMatrix for LzAc {
-    fn name(&self) -> &'static str {
-        "lzac"
+    fn id(&self) -> FormatId {
+        FormatId::LzAc
     }
 
     fn rows(&self) -> usize {
@@ -231,9 +275,9 @@ impl CompressedMatrix for LzAc {
             + (self.ri.len() as u64 + self.cols as u64 + 1) * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
         let k = self.alphabet.len().max(1);
         let mut dec = LzwDecoder::new(&self.stream, k, self.nnz);
         let mut pos = 0usize;
@@ -247,7 +291,6 @@ impl CompressedMatrix for LzAc {
             }
             *oj = sum;
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

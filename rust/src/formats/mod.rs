@@ -7,12 +7,21 @@
 //! - [`cla`]     — CLA-lite column co-coding baseline (Elgohary et al.)
 //! - [`hac`]     — Huffman Address Map compression (Sect. IV-B, Alg. 1)
 //! - [`shac`]    — sparse HAC (Sect. IV-C, Alg. 2)
+//! - [`lzw`]     — LZ-AC, the §VI universal-code extension
+//! - [`relidx`]  — DC-RI, Deep Compression's relative-index storage
 //!
 //! Every format implements [`CompressedMatrix`]: paper-faithful size
 //! accounting (`size_bits`, with `b = 32`-bit memory words), the
-//! sequential dot `x^T W` computed *directly on the compressed data*, and
-//! `decompress` for lossless round-trip checks. [`par_matmul`] is the
-//! paper's Alg. 3 (row-chunk parallel `X W`).
+//! sequential dot `x^T W` computed *directly on the compressed data*
+//! through the allocation-free kernel [`CompressedMatrix::vecmat_into`],
+//! and `decompress` for lossless round-trip checks. [`par_matmul_into`]
+//! is the paper's Alg. 3 (row-chunk parallel `X W`) running on the
+//! persistent worker [`pool`] instead of spawning threads per call.
+//!
+//! [`FormatId`] is the single registry every surface derives from:
+//! parse-by-name (CLI / [`crate::nn::compressed::FcFormat`]), the Fig. 1
+//! suite ([`all_formats`]), and the `.sham` container kind tags
+//! ([`store`]). See DESIGN.md §1–§2.
 
 pub mod cla;
 pub mod coo;
@@ -22,6 +31,7 @@ pub mod dense;
 pub mod hac;
 pub mod index_map;
 pub mod lzw;
+pub mod pool;
 pub mod relidx;
 pub mod shac;
 pub mod store;
@@ -34,17 +44,154 @@ pub use dense::Dense;
 pub use hac::Hac;
 pub use index_map::IndexMap;
 pub use lzw::LzAc;
+pub use pool::Pool;
 pub use relidx::RelIdx;
 pub use shac::Shac;
 
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
+/// The one registry of compressed-matrix formats. Everything that names,
+/// parses, enumerates, builds, or serializes a format goes through this
+/// enum: [`FormatId::parse`] (CLI & `FcFormat`), [`FormatId::ALL`] /
+/// [`all_formats`] (the Fig. 1 suite), [`FormatId::compress`]
+/// (construction), and [`FormatId::tag`] (`.sham` kind tags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatId {
+    /// Uncompressed dense baseline (`Numpy` in the figures).
+    Dense,
+    /// Compressed sparse column (Sect. IV-A).
+    Csc,
+    /// Compressed sparse row.
+    Csr,
+    /// Coordinate list.
+    Coo,
+    /// Han et al.'s index map (IM).
+    IndexMap,
+    /// CLA-lite column co-coding (Elgohary et al.).
+    Cla,
+    /// Huffman address map (Sect. IV-B, Alg. 1).
+    Hac,
+    /// Sparse HAC (Sect. IV-C, Alg. 2).
+    Shac,
+    /// LZ-AC — LZW-coded sparse address map (§VI extension).
+    LzAc,
+    /// DC-RI — Deep Compression's relative-index storage (ref. [20]).
+    RelIdx,
+}
+
+impl FormatId {
+    /// Every format, in the Fig. 1 display order (paper suite first,
+    /// the two future-work extensions last).
+    pub const ALL: [FormatId; 10] = [
+        FormatId::Dense,
+        FormatId::Csc,
+        FormatId::Csr,
+        FormatId::Coo,
+        FormatId::IndexMap,
+        FormatId::Cla,
+        FormatId::Hac,
+        FormatId::Shac,
+        FormatId::LzAc,
+        FormatId::RelIdx,
+    ];
+
+    /// Short name as used in the paper's figures and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatId::Dense => "dense",
+            FormatId::Csc => "csc",
+            FormatId::Csr => "csr",
+            FormatId::Coo => "coo",
+            FormatId::IndexMap => "im",
+            FormatId::Cla => "cla",
+            FormatId::Hac => "hac",
+            FormatId::Shac => "shac",
+            FormatId::LzAc => "lzac",
+            FormatId::RelIdx => "dcri",
+        }
+    }
+
+    /// Parse a format name (the CLI surface). Accepts the canonical
+    /// names plus a few historical aliases.
+    pub fn parse(s: &str) -> Option<FormatId> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dense" | "numpy" => FormatId::Dense,
+            "csc" => FormatId::Csc,
+            "csr" => FormatId::Csr,
+            "coo" => FormatId::Coo,
+            "im" | "index_map" | "indexmap" => FormatId::IndexMap,
+            "cla" => FormatId::Cla,
+            "hac" => FormatId::Hac,
+            "shac" => FormatId::Shac,
+            "lzac" | "lz-ac" | "lzw" => FormatId::LzAc,
+            "dcri" | "dc-ri" | "relidx" => FormatId::RelIdx,
+            _ => return None,
+        })
+    }
+
+    /// `.sham` container kind tag. Tags 0–3 predate the unified registry
+    /// and are kept stable so old containers still load.
+    pub fn tag(self) -> u8 {
+        match self {
+            FormatId::Dense => 0,
+            FormatId::Hac => 1,
+            FormatId::Shac => 2,
+            FormatId::Csc => 3,
+            FormatId::Csr => 4,
+            FormatId::Coo => 5,
+            FormatId::IndexMap => 6,
+            FormatId::Cla => 7,
+            FormatId::LzAc => 8,
+            FormatId::RelIdx => 9,
+        }
+    }
+
+    /// Inverse of [`FormatId::tag`].
+    pub fn from_tag(tag: u8) -> Option<FormatId> {
+        FormatId::ALL.into_iter().find(|id| id.tag() == tag)
+    }
+
+    /// Compress `w` into this format.
+    pub fn compress(self, w: &Mat) -> Box<dyn CompressedMatrix> {
+        match self {
+            FormatId::Dense => Box::new(Dense::compress(w)),
+            FormatId::Csc => Box::new(Csc::compress(w)),
+            FormatId::Csr => Box::new(Csr::compress(w)),
+            FormatId::Coo => Box::new(Coo::compress(w)),
+            FormatId::IndexMap => Box::new(IndexMap::compress(w)),
+            FormatId::Cla => Box::new(Cla::compress(w)),
+            FormatId::Hac => Box::new(Hac::compress(w)),
+            FormatId::Shac => Box::new(Shac::compress(w)),
+            FormatId::LzAc => Box::new(LzAc::compress(w)),
+            FormatId::RelIdx => Box::new(RelIdx::compress(w)),
+        }
+    }
+}
+
+impl std::fmt::Display for FormatId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A weight matrix stored in a compressed representation that supports
 /// linear algebra directly on the compressed data.
+///
+/// The *required* kernels are allocation-free: `vecmat_into` writes the
+/// product into a caller-provided buffer (fully overwriting it — dirty
+/// input buffers are fine), and `matmul_batch_into` reuses a persistent
+/// output matrix. The allocating `vecmat` / `matmul_batch` are provided
+/// conveniences for one-shot callers (figures, tests); the serving hot
+/// path never touches them.
 pub trait CompressedMatrix: Send + Sync {
+    /// Which registry entry this format is.
+    fn id(&self) -> FormatId;
+
     /// Short format name as used in the paper's figures.
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &'static str {
+        self.id().name()
+    }
 
     fn rows(&self) -> usize;
     fn cols(&self) -> usize;
@@ -53,26 +200,41 @@ pub trait CompressedMatrix: Send + Sync {
     /// (b-bit memory words, dictionary overheads included).
     fn size_bits(&self) -> u64;
 
-    /// `x^T W` computed on the compressed representation
-    /// (`x.len() == rows()`, output length `cols()`).
-    fn vecmat(&self, x: &[f32]) -> Vec<f32>;
+    /// `x^T W` computed on the compressed representation into `out`
+    /// (`x.len() == rows()`, `out.len() == cols()`). `out` is fully
+    /// overwritten; its previous contents are irrelevant.
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]);
+
+    /// Allocating convenience wrapper over [`Self::vecmat_into`].
+    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols()];
+        self.vecmat_into(x, &mut out);
+        out
+    }
 
     /// Lossless reconstruction of the stored matrix.
     fn decompress(&self) -> Mat;
 
-    /// Batched product `X W` (X is `batch × rows`). Default: one
-    /// sequential dot per row. Entropy-coded formats override this to
-    /// decode the bitstream ONCE for the whole batch (decode cost
-    /// amortized B×) — the coordinator's FC hot path
-    /// (EXPERIMENTS.md §Perf).
-    fn matmul_batch(&self, x: &Mat) -> Mat {
+    /// Batched product `X W` (X is `batch × rows`) into `out`, which is
+    /// resized to `batch × cols` in place (grow-only capacity — pass the
+    /// same `Mat` every call and steady state allocates nothing).
+    /// Default: one `vecmat_into` per batch row, written directly into
+    /// the output row. Entropy-coded formats override this to decode the
+    /// bitstream ONCE for the whole batch (decode cost amortized B×) —
+    /// the coordinator's FC hot path (EXPERIMENTS.md §Perf).
+    fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.rows(), "matmul_batch dimension mismatch");
         let cols = self.cols();
-        let mut out = Mat::zeros(x.rows, cols);
+        out.resize(x.rows, cols);
         for b in 0..x.rows {
-            let y = self.vecmat(x.row(b));
-            out.data[b * cols..(b + 1) * cols].copy_from_slice(&y);
+            self.vecmat_into(x.row(b), &mut out.data[b * cols..(b + 1) * cols]);
         }
+    }
+
+    /// Allocating convenience wrapper over [`Self::matmul_batch_into`].
+    fn matmul_batch(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_batch_into(x, &mut out);
         out
     }
 
@@ -91,16 +253,61 @@ pub trait CompressedMatrix: Send + Sync {
     }
 }
 
-/// Paper Alg. 3 (`ParDot`): evaluate `X W` (X is `batch × rows`) by
-/// splitting the rows of `X` into `threads` chunks, each performing
-/// independent sequential dots on the shared compressed matrix.
-pub fn par_matmul<F: CompressedMatrix + ?Sized>(w: &F, x: &Mat, threads: usize) -> Mat {
+/// Reusable buffers for the serving hot path: a grow-only activation
+/// ping-pong pair used by `CompressedModel::fc_forward_into` so the FC
+/// stack performs zero per-call output allocations in steady state.
+pub struct Workspace {
+    pub(crate) a: Mat,
+    pub(crate) b: Mat,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { a: Mat::zeros(0, 0), b: Mat::zeros(0, 0) }
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Paper Alg. 3 (`ParDot`): evaluate `X W` (X is `batch × rows`) into
+/// `out` by splitting the rows of `X` into up to `threads` chunks, each
+/// performing independent allocation-free dots on the shared compressed
+/// matrix. Chunks run on the persistent [`pool`] — steady state spawns
+/// zero threads and allocates nothing beyond `out`'s first growth.
+pub fn par_matmul_into<F: CompressedMatrix + ?Sized>(
+    w: &F,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    par_matmul_into_on(pool::global(), w, x, out, threads);
+}
+
+/// [`par_matmul_into`] on an explicit pool — for callers that dedicate a
+/// private pool to a workload (and for deterministic pool tests).
+pub fn par_matmul_into_on<F: CompressedMatrix + ?Sized>(
+    pool: &Pool,
+    w: &F,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
     assert_eq!(x.cols, w.rows(), "par_matmul dimension mismatch");
-    let t = threads.max(1).min(x.rows.max(1));
     let cols = w.cols();
-    let mut out = Mat::zeros(x.rows, cols);
-    if x.rows == 0 {
-        return out;
+    out.resize(x.rows, cols);
+    if x.rows == 0 || cols == 0 {
+        return;
+    }
+    let t = threads.max(1).min(x.rows);
+    if t == 1 {
+        for b in 0..x.rows {
+            w.vecmat_into(x.row(b), &mut out.data[b * cols..(b + 1) * cols]);
+        }
+        return;
     }
     let chunk = (x.rows + t - 1) / t; // ceil(n/q), paper line 1
     let out_chunks: Vec<(usize, &mut [f32])> = {
@@ -116,32 +323,33 @@ pub fn par_matmul<F: CompressedMatrix + ?Sized>(w: &F, x: &Mat, threads: usize) 
         }
         v
     };
-    std::thread::scope(|scope| {
+    pool.scope(|scope| {
         for (start, out_slice) in out_chunks {
             scope.spawn(move || {
                 let rows_here = out_slice.len() / cols;
                 for r in 0..rows_here {
-                    let y = w.vecmat(x.row(start + r));
-                    out_slice[r * cols..(r + 1) * cols].copy_from_slice(&y);
+                    w.vecmat_into(
+                        x.row(start + r),
+                        &mut out_slice[r * cols..(r + 1) * cols],
+                    );
                 }
             });
         }
     });
+}
+
+/// Allocating convenience wrapper over [`par_matmul_into`].
+pub fn par_matmul<F: CompressedMatrix + ?Sized>(w: &F, x: &Mat, threads: usize) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    par_matmul_into(w, x, &mut out, threads);
     out
 }
 
-/// All comparison formats built from the same matrix — the Fig. 1 suite.
+/// All comparison formats built from the same matrix — the Fig. 1 suite,
+/// derived from the [`FormatId`] registry (all ten formats, including
+/// the LZ-AC and DC-RI extensions).
 pub fn all_formats(w: &Mat) -> Vec<Box<dyn CompressedMatrix>> {
-    vec![
-        Box::new(Dense::compress(w)),
-        Box::new(Csc::compress(w)),
-        Box::new(Csr::compress(w)),
-        Box::new(Coo::compress(w)),
-        Box::new(IndexMap::compress(w)),
-        Box::new(Cla::compress(w)),
-        Box::new(Hac::compress(w)),
-        Box::new(Shac::compress(w)),
-    ]
+    FormatId::ALL.iter().map(|id| id.compress(w)).collect()
 }
 
 #[cfg(test)]
@@ -160,6 +368,21 @@ pub(crate) mod test_support {
         ])
     }
 
+    /// `vecmat_into` must fully overwrite a dirty (non-zeroed) output
+    /// buffer — NaN poison catches any kernel that accumulates into
+    /// stale contents instead of overwriting.
+    fn check_dirty_vecmat_into<F: CompressedMatrix>(f: &F, x: &[f32]) {
+        let want = f.vecmat(x);
+        let mut dirty = vec![f32::NAN; f.cols()];
+        f.vecmat_into(x, &mut dirty);
+        assert_eq!(
+            dirty,
+            want,
+            "{}: vecmat_into on a dirty buffer diverges from vecmat",
+            f.name()
+        );
+    }
+
     /// Shared correctness battery every format must pass.
     pub fn exercise_format<F, C>(compress: C, rng: &mut Prng)
     where
@@ -175,6 +398,7 @@ pub(crate) mod test_support {
         let got = f.vecmat(&x);
         let want = w.vecmat(&x);
         assert_eq!(got, want, "{}: dot on example2", f.name());
+        check_dirty_vecmat_into(&f, &x);
 
         // 2. Degenerate matrices.
         for m in [
@@ -194,6 +418,7 @@ pub(crate) mod test_support {
                 1e-6,
             )
             .unwrap_or_else(|e| panic!("{}: degenerate dot: {e}", f.name()));
+            check_dirty_vecmat_into(&f, &x);
         }
 
         // 3. Randomized matrices across sparsity/quantization levels.
@@ -213,7 +438,8 @@ pub(crate) mod test_support {
                 1e-4,
             )
             .unwrap_or_else(|e| panic!("{}: random dot: {e}", f.name()));
-            // par dot consistency
+            check_dirty_vecmat_into(&f, &x);
+            // par dot consistency (pooled Alg. 3)
             let xb = Mat::from_vec(3, rows, {
                 let mut v = Vec::with_capacity(3 * rows);
                 for _ in 0..3 * rows {
@@ -228,11 +454,23 @@ pub(crate) mod test_support {
                 "{}: par_matmul mismatch",
                 f.name()
             );
-            // decode-once batched path must agree too
+            // decode-once batched path must agree too, including into a
+            // dirty reused output matrix
             let batched = f.matmul_batch(&xb);
             assert!(
                 batched.max_abs_diff(&seq) < 1e-3,
                 "{}: matmul_batch mismatch",
+                f.name()
+            );
+            let mut reused = Mat::zeros(7, 3); // wrong shape + dirty data
+            reused.data.fill(f32::NAN);
+            f.matmul_batch_into(&xb, &mut reused);
+            assert_eq!((reused.rows, reused.cols), (3, cols));
+            // bitwise compare: NaN poison left behind would fail here
+            assert_eq!(
+                reused.data,
+                batched.data,
+                "{}: matmul_batch_into on a dirty Mat diverges",
                 f.name()
             );
         }
@@ -263,16 +501,118 @@ mod tests {
     }
 
     #[test]
+    fn par_matmul_into_reuses_buffer_without_reallocating() {
+        let mut rng = Prng::seeded(0x9001);
+        let m = Mat::sparse_quantized(48, 32, 0.3, 8, &mut rng);
+        let w = Hac::compress(&m);
+        let x = Mat::gaussian(8, 48, 1.0, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        par_matmul_into(&w, &x, &mut out, 4);
+        let want = m.matmul(&x);
+        assert!(out.max_abs_diff(&want) < 1e-3);
+        // steady state: same buffer, no capacity growth
+        let cap = out.data.capacity();
+        let ptr = out.data.as_ptr();
+        for _ in 0..5 {
+            par_matmul_into(&w, &x, &mut out, 4);
+        }
+        assert_eq!(out.data.capacity(), cap, "output buffer reallocated");
+        assert_eq!(out.data.as_ptr(), ptr, "output buffer moved");
+        assert!(out.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn par_matmul_steady_state_spawns_no_threads() {
+        // Acceptance: repeated par_matmul calls run on the pool's fixed
+        // worker set (plus the helping caller) — the set of executing
+        // threads cannot grow with the call count. A private pool keeps
+        // the thread set deterministic (the global pool's queue is
+        // shared, so concurrent tests could help-execute our tasks).
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let pool = Pool::new(3);
+        let mut rng = Prng::seeded(0x9002);
+        let m = Mat::sparse_quantized(32, 16, 0.4, 8, &mut rng);
+        let w = Shac::compress(&m);
+        let x = Mat::gaussian(8, 32, 1.0, &mut rng);
+        let want = m.matmul(&x);
+        let seen = Mutex::new(HashSet::new());
+        // wrap vecmat_into to record which thread ran it
+        struct Spy<'a> {
+            inner: &'a Shac,
+            seen: &'a Mutex<HashSet<std::thread::ThreadId>>,
+        }
+        impl CompressedMatrix for Spy<'_> {
+            fn id(&self) -> FormatId {
+                self.inner.id()
+            }
+            fn rows(&self) -> usize {
+                self.inner.rows()
+            }
+            fn cols(&self) -> usize {
+                self.inner.cols()
+            }
+            fn size_bits(&self) -> u64 {
+                self.inner.size_bits()
+            }
+            fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
+                self.seen.lock().unwrap().insert(std::thread::current().id());
+                self.inner.vecmat_into(x, out);
+            }
+            fn decompress(&self) -> Mat {
+                self.inner.decompress()
+            }
+        }
+        let spy = Spy { inner: &w, seen: &seen };
+        let mut out = Mat::zeros(0, 0);
+        for _ in 0..40 {
+            par_matmul_into_on(&pool, &spy, &x, &mut out, 4);
+        }
+        assert!(out.max_abs_diff(&want) < 1e-3);
+        let distinct = seen.lock().unwrap().len();
+        let cap = pool.threads() + 1; // workers + helping caller
+        assert!(
+            distinct <= cap,
+            "thread set grew to {distinct} (> pool {cap}) across 40 calls"
+        );
+    }
+
+    #[test]
     fn all_formats_agree_on_shared_matrix() {
         let mut rng = Prng::seeded(0xF16);
         let m = Mat::sparse_quantized(40, 30, 0.2, 16, &mut rng);
         let x: Vec<f32> = (0..40).map(|_| rng.normal() as f32).collect();
         let want = m.vecmat(&x);
+        assert_eq!(all_formats(&m).len(), FormatId::ALL.len());
         for f in all_formats(&m) {
             crate::util::proptest::assert_allclose(&f.vecmat(&x), &want, 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("{}: {e}", f.name()));
             assert_eq!(f.decompress(), m, "{} lossless", f.name());
             assert!(f.size_bits() > 0);
+        }
+    }
+
+    #[test]
+    fn format_id_registry_is_consistent() {
+        for id in FormatId::ALL {
+            assert_eq!(FormatId::parse(id.name()), Some(id), "{id} parse");
+            assert_eq!(FormatId::from_tag(id.tag()), Some(id), "{id} tag");
+        }
+        // tags are unique
+        let mut tags: Vec<u8> = FormatId::ALL.iter().map(|id| id.tag()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), FormatId::ALL.len());
+        // legacy .sham tags stay pinned
+        assert_eq!(FormatId::Dense.tag(), 0);
+        assert_eq!(FormatId::Hac.tag(), 1);
+        assert_eq!(FormatId::Shac.tag(), 2);
+        assert_eq!(FormatId::Csc.tag(), 3);
+        assert_eq!(FormatId::parse("zzz"), None);
+        // every registry entry builds a matching format
+        let m = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        for id in FormatId::ALL {
+            assert_eq!(id.compress(&m).id(), id);
         }
     }
 }

@@ -1,0 +1,407 @@
+//! Persistent worker pool for the compressed-kernel hot paths.
+//!
+//! The paper's Alg. 3 (`par_matmul`) and the §VI column-parallel dots
+//! used to spawn fresh OS threads on every invocation via
+//! `std::thread::scope` — fine for a one-shot figure run, fatal for a
+//! serving coordinator answering millions of requests. This module
+//! replaces per-call spawning with one long-lived pool, sized once from
+//! configuration ([`configure_threads`] / `SHAM_POOL_THREADS`, falling
+//! back to the machine's available parallelism), so steady-state serving
+//! spawns **zero** threads per call.
+//!
+//! The API mirrors `std::thread::scope`: [`Pool::scope`] hands out a
+//! [`Scope`] whose `spawn` accepts closures borrowing stack data; the
+//! scope does not return until every spawned task has completed, so the
+//! borrows stay valid. While waiting, the scoping thread *helps* by
+//! executing its own scope's still-queued tasks — this shortens the
+//! critical path, makes nested scopes deadlock-free even on a
+//! single-worker pool, and keeps one scope's tail latency independent
+//! of other scopes' chunk sizes. See DESIGN.md §1/§5.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A lifetime-erased queued task (see the SAFETY note in [`Scope::spawn`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Tracks outstanding tasks of one scope (and whether any panicked).
+struct WaitGroup {
+    state: Mutex<WgState>,
+    done_cv: Condvar,
+}
+
+struct WgState {
+    pending: usize,
+    panicked: bool,
+}
+
+impl WaitGroup {
+    fn new() -> WaitGroup {
+        WaitGroup {
+            state: Mutex::new(WgState { pending: 0, panicked: false }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    fn add(&self) {
+        self.state.lock().unwrap().pending += 1;
+    }
+
+    fn task_done(&self, ok: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.pending -= 1;
+        if !ok {
+            s.panicked = true;
+        }
+        if s.pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().pending == 0
+    }
+
+    /// Wait up to `d` for the group to drain; true when drained.
+    fn wait_timeout(&self, d: Duration) -> bool {
+        let s = self.state.lock().unwrap();
+        if s.pending == 0 {
+            return true;
+        }
+        let (s, _) = self.done_cv.wait_timeout(s, d).unwrap();
+        s.pending == 0
+    }
+
+    fn panicked(&self) -> bool {
+        self.state.lock().unwrap().panicked
+    }
+}
+
+/// A queued task: the lifetime-erased closure plus the wait-group it
+/// belongs to, so a helping caller can prefer its own scope's work.
+struct QueuedTask {
+    run: Task,
+    wg: Arc<WaitGroup>,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    queue: Mutex<VecDeque<QueuedTask>>,
+    task_cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    fn push(&self, task: QueuedTask) {
+        self.queue.lock().unwrap().push_back(task);
+        self.task_cv.notify_one();
+    }
+
+    /// Pop the first queued task belonging to `wg` (helper path: a
+    /// scoping thread only executes its *own* scope's tasks, so one
+    /// scope's tail latency can't be held hostage by another scope's
+    /// long chunk).
+    fn try_pop_of(&self, wg: &Arc<WaitGroup>) -> Option<Task> {
+        let mut q = self.queue.lock().unwrap();
+        let idx = q.iter().position(|t| Arc::ptr_eq(&t.wg, wg))?;
+        q.remove(idx).map(|t| t.run)
+    }
+}
+
+/// A fixed-size pool of long-lived worker threads.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.task_cv.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => (t.run)(), // panics are caught inside the wrapper
+            None => return,
+        }
+    }
+}
+
+impl Pool {
+    /// Spawn a pool with `threads` workers (at least one).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            task_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sham-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, workers }
+    }
+
+    /// Number of worker threads (fixed for the pool's lifetime).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f` with a [`Scope`] that can spawn borrowing tasks onto the
+    /// pool; returns only after every spawned task finished. Panics if
+    /// any task panicked.
+    pub fn scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let wg = Arc::new(WaitGroup::new());
+        let scope = Scope {
+            pool: self,
+            wg: wg.clone(),
+            _env: PhantomData,
+        };
+        // Panic-safe join: even if `f` unwinds after spawning, the guard
+        // drains the scope before any borrowed stack data goes away.
+        struct Join<'p> {
+            pool: &'p Pool,
+            wg: Arc<WaitGroup>,
+        }
+        impl Drop for Join<'_> {
+            fn drop(&mut self) {
+                self.pool.wait_help(&self.wg);
+            }
+        }
+        let join = Join { pool: self, wg: wg.clone() };
+        let out = f(&scope);
+        drop(join);
+        assert!(!wg.panicked(), "pool task panicked");
+        out
+    }
+
+    /// Wait for `wg` to drain, executing *this scope's* still-queued
+    /// tasks in the meantime — so nested scopes cannot deadlock (the
+    /// blocked thread drains its own subtree) while one scope's tail
+    /// latency never depends on another scope's chunk sizes.
+    fn wait_help(&self, wg: &Arc<WaitGroup>) {
+        loop {
+            if wg.is_done() {
+                return;
+            }
+            match self.shared.try_pop_of(wg) {
+                Some(task) => task(),
+                None => {
+                    if wg.wait_timeout(Duration::from_millis(1)) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.task_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Spawn handle tied to one [`Pool::scope`] invocation.
+pub struct Scope<'env> {
+    pool: &'env Pool,
+    wg: Arc<WaitGroup>,
+    /// Invariant over `'env` so the scope lifetime cannot be shrunk.
+    _env: PhantomData<std::cell::Cell<&'env ()>>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue `f` onto the pool. `f` may borrow anything that outlives
+    /// the enclosing `scope` call.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.wg.add();
+        let wg = self.wg.clone();
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_ok();
+            wg.task_done(ok);
+        });
+        // SAFETY: `Pool::scope` joins every spawned task (via the
+        // drop-guarded `wait_help`) before returning — on the success and
+        // the unwind path alike — so the `'env` borrows captured by `f`
+        // are live for as long as the task can run. Erasing the lifetime
+        // is therefore sound; it never outlives the data it borrows.
+        let run: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        self.pool.shared.push(QueuedTask { run, wg: self.wg.clone() });
+    }
+}
+
+// ---- the global serving pool ----------------------------------------------
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+/// Thread count requested via [`configure_threads`] (0 = unset).
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a size for the global pool. Effective only before the first
+/// [`global`] call (the pool is sized exactly once); returns whether the
+/// request can still take effect. An explicit `SHAM_POOL_THREADS`
+/// environment setting always wins over programmatic requests — the
+/// operator outranks the embedding code.
+pub fn configure_threads(threads: usize) -> bool {
+    REQUESTED.store(threads.max(1), Ordering::Release);
+    GLOBAL.get().is_none()
+}
+
+fn env_threads() -> Option<usize> {
+    std::env::var("SHAM_POOL_THREADS")
+        .ok()
+        .and_then(|n| n.parse::<usize>().ok())
+        .map(|n| n.max(1))
+}
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// The process-wide pool used by `par_matmul` and the §VI column-parallel
+/// dots. Created on first use; lives for the rest of the process.
+/// Sizing priority: `SHAM_POOL_THREADS` env (operator), then
+/// [`configure_threads`] (embedding code), then available parallelism.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| {
+        let n = env_threads().unwrap_or_else(|| {
+            match REQUESTED.load(Ordering::Acquire) {
+                0 => auto_threads(),
+                n => n,
+            }
+        });
+        Pool::new(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_runs_all_tasks_with_borrows() {
+        let pool = Pool::new(3);
+        let mut out = vec![0u64; 64];
+        pool.scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move || *slot = (i as u64) * 2);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_scopes() {
+        // The acceptance check for per-call spawning: 50 scopes on one
+        // pool must only ever run on the pool's workers (plus the
+        // helping caller) — the thread set cannot grow per call.
+        let pool = Pool::new(2);
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..50 {
+            pool.scope(|s| {
+                for _ in 0..6 {
+                    s.spawn(|| {
+                        ids.lock().unwrap().insert(std::thread::current().id());
+                    });
+                }
+            });
+        }
+        let distinct = ids.lock().unwrap().len();
+        assert!(
+            distinct <= pool.threads() + 1,
+            "thread set grew to {distinct} across 50 scopes"
+        );
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // Single worker + nested scope: the waiting outer task must help
+        // drain the queue instead of blocking forever.
+        let pool = Pool::new(1);
+        let total = AtomicU64::new(0);
+        pool.scope(|s| {
+            s.spawn(|| {
+                pool.scope(|inner| {
+                    for _ in 0..4 {
+                        inner.spawn(|| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+                total.fetch_add(100, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 104);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool task panicked")]
+    fn task_panic_propagates_to_scope() {
+        let pool = Pool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn worker_survives_task_panic() {
+        let pool = Pool::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(|s| s.spawn(|| panic!("first")));
+        }));
+        assert!(r.is_err());
+        // the single worker must still be alive and serving
+        let hits = AtomicU64::new(0);
+        pool.scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn global_pool_is_created_once() {
+        let a = global() as *const Pool;
+        let b = global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+        // once the pool exists, configuration requests report that they
+        // can no longer take effect
+        assert!(!configure_threads(8));
+    }
+}

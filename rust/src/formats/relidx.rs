@@ -11,7 +11,7 @@
 //! deployed between pruning and Huffman coding, sitting between IM
 //! (dense pointers) and sHAC (entropy-coded values) in Fig. 1 terms.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{CompressedMatrix, FormatId};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
@@ -77,14 +77,32 @@ impl RelIdx {
         self.entries.len()
     }
 
+    /// Reassemble from serialized parts (formats::store).
+    pub(crate) fn from_parts(
+        rows: usize,
+        cols: usize,
+        codebook: Vec<f32>,
+        entries: Vec<(u32, u32)>,
+        centry: Vec<u32>,
+    ) -> RelIdx {
+        assert_eq!(centry.len(), cols + 1, "centry length mismatch");
+        RelIdx { rows, cols, codebook, entries, centry }
+    }
+
+    /// The raw (gap, pointer) entry stream + column boundaries
+    /// (formats::store).
+    pub(crate) fn parts(&self) -> (&[(u32, u32)], &[u32]) {
+        (&self.entries, &self.centry)
+    }
+
     fn ptr_bits(&self) -> u64 {
         index_map_pointer_bits(self.codebook.len().max(2) as u64)
     }
 }
 
 impl CompressedMatrix for RelIdx {
-    fn name(&self) -> &'static str {
-        "dcri"
+    fn id(&self) -> FormatId {
+        FormatId::RelIdx
     }
 
     fn rows(&self) -> usize {
@@ -102,10 +120,10 @@ impl CompressedMatrix for RelIdx {
             + (self.cols as u64 + 1) * WORD_BITS
     }
 
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
-        for j in 0..self.cols {
+        assert_eq!(out.len(), self.cols);
+        for (j, oj) in out.iter_mut().enumerate() {
             let (lo, hi) = (self.centry[j] as usize, self.centry[j + 1] as usize);
             let mut row = 0usize;
             let mut sum = 0.0f32;
@@ -115,9 +133,8 @@ impl CompressedMatrix for RelIdx {
                 sum += x[row.min(self.rows - 1)] * self.codebook[ptr as usize];
                 row += 1;
             }
-            out[j] = sum;
+            *oj = sum;
         }
-        out
     }
 
     fn decompress(&self) -> Mat {

@@ -6,7 +6,7 @@
 //! compressed `nz` stream once, using `cb` to skip empty columns and
 //! `ri` to address the input vector.
 
-use crate::formats::CompressedMatrix;
+use crate::formats::{pool, CompressedMatrix, FormatId};
 use crate::huffman::bounds::{dict_bits, WORD_BITS};
 use crate::huffman::Code;
 use crate::mat::Mat;
@@ -103,22 +103,30 @@ impl Shac {
     }
 
     /// Column-parallel Dot_sHAC over the §VI offset index: columns are
-    /// chunked across threads, each seeking into the compressed stream.
+    /// chunked onto the persistent worker [`pool`], each task seeking
+    /// into the compressed stream (no per-call thread spawning).
     pub fn vecmat_par_cols(&self, x: &[f32], threads: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        self.vecmat_par_cols_into(x, &mut out, threads);
+        out
+    }
+
+    /// Allocation-free variant of [`Shac::vecmat_par_cols`].
+    pub fn vecmat_par_cols_into(&self, x: &[f32], out: &mut [f32], threads: usize) {
         let offsets = self
             .col_offsets
             .as_ref()
             .expect("call with_column_index() before vecmat_par_cols");
         assert_eq!(x.len(), self.rows);
-        let t = threads.max(1).min(self.cols.max(1));
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
         if self.cols == 0 {
-            return out;
+            return;
         }
+        let t = threads.max(1).min(self.cols);
         let chunk = (self.cols + t - 1) / t;
         let mut slices: Vec<(usize, &mut [f32])> = Vec::new();
         {
-            let mut rem: &mut [f32] = &mut out;
+            let mut rem: &mut [f32] = out;
             let mut start = 0usize;
             while start < self.cols {
                 let here = chunk.min(self.cols - start);
@@ -128,7 +136,7 @@ impl Shac {
                 start += here;
             }
         }
-        std::thread::scope(|scope| {
+        pool::global().scope(|scope| {
             for (start, out_slice) in slices {
                 scope.spawn(move || {
                     let mut r = BitReader::new(&self.stream);
@@ -149,7 +157,6 @@ impl Shac {
                 });
             }
         });
-        out
     }
 
     /// Reassemble from serialized parts (formats::store).
@@ -192,8 +199,8 @@ impl Shac {
 }
 
 impl CompressedMatrix for Shac {
-    fn name(&self) -> &'static str {
-        "shac"
+    fn id(&self) -> FormatId {
+        FormatId::Shac
     }
 
     fn rows(&self) -> usize {
@@ -219,12 +226,15 @@ impl CompressedMatrix for Shac {
     /// empty columns are skipped via `cb` (lines 5–7 of the paper).
     /// Uses the multi-symbol LUT to retire runs of short codewords in
     /// one probe (EXPERIMENTS.md §Perf).
-    fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
-        let mut out = vec![0.0f32; self.cols];
+        assert_eq!(out.len(), self.cols);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         let q = self.ri.len();
         if q == 0 || self.cols == 0 {
-            return out;
+            return;
         }
         let mut r = BitReader::new(&self.stream);
         let mut run = [0u32; 8];
@@ -257,7 +267,6 @@ impl CompressedMatrix for Shac {
         }
         // flush the final non-empty column (empty tail columns are 0)
         out[col] = sum;
-        out
     }
 
     fn decompress(&self) -> Mat {
@@ -275,16 +284,17 @@ impl CompressedMatrix for Shac {
         m
     }
 
-    /// Decode-once batched product (see `Hac::matmul_batch`): one pass
-    /// over the compressed nz stream, each non-zero applied across the
-    /// whole batch.
-    fn matmul_batch(&self, x: &Mat) -> Mat {
+    /// Decode-once batched product (see `Hac::matmul_batch_into`): one
+    /// pass over the compressed nz stream, each non-zero applied across
+    /// the whole batch.
+    fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
         let batch = x.rows;
-        let mut out = Mat::zeros(batch, self.cols);
+        out.resize(batch, self.cols);
+        out.data.fill(0.0);
         let q = self.ri.len();
         if q == 0 || self.cols == 0 || batch == 0 {
-            return out;
+            return;
         }
         let mut r = BitReader::new(&self.stream);
         let mut run = [0u32; 8];
@@ -316,7 +326,6 @@ impl CompressedMatrix for Shac {
                 pos += 1;
             }
         }
-        out
     }
 }
 

@@ -9,49 +9,69 @@
 //!   u32    entry count
 //!   per entry:
 //!     u16 name-len, name bytes
-//!     u8  kind tag (0 dense-f32, 1 HAC, 2 sHAC, 3 CSC)
-//!     payload (kind-specific, see the `encode_*` functions)
+//!     u8  kind tag ([`FormatId::tag`] — the single registry; tags 0–3
+//!         predate the unified registry and stay pinned so old
+//!         containers load)
+//!     payload (kind-specific, see the `encode_entry` match)
 //!
-//! Canonical Huffman codes are rebuilt from code lengths alone, so a
-//! k-symbol dictionary costs k bytes of lengths + 4k bytes of values on
-//! disk — far below the paper's conservative 6·k·b accounting.
+//! Every [`FormatId`] round-trips: the payload stores each format's own
+//! compressed layout verbatim (no recompression on load). Canonical
+//! Huffman codes are rebuilt from code lengths alone, so a k-symbol
+//! dictionary costs k bytes of lengths + 4k bytes of values on disk —
+//! far below the paper's conservative 6·k·b accounting. See DESIGN.md §5.
 
 use std::io::Write;
 
 use anyhow::{bail, Context, Result};
 
-use crate::formats::{CompressedMatrix, Csc, Dense, Hac, Shac};
+use crate::formats::cla::ColEnc;
+use crate::formats::{
+    Cla, Coo, CompressedMatrix, Csc, Csr, Dense, FormatId, Hac, IndexMap, LzAc,
+    RelIdx, Shac,
+};
 use crate::huffman::Code;
 use crate::mat::Mat;
-use crate::util::bits::BitBuf;
+use crate::util::bits::{BitBuf, BitReader};
 
 pub const MAGIC: &[u8; 6] = b"SHAM1\x00";
 
-/// A format that can live in a `.sham` container.
+/// A format instance inside a `.sham` container — one variant per
+/// [`FormatId`] registry entry.
 pub enum Stored {
     Dense(Dense),
+    Csc(Csc),
+    Csr(Csr),
+    Coo(Coo),
+    IndexMap(IndexMap),
+    Cla(Cla),
     Hac(Hac),
     Shac(Shac),
-    Csc(Csc),
+    LzAc(LzAc),
+    RelIdx(RelIdx),
 }
 
 impl Stored {
     pub fn as_compressed(&self) -> &dyn CompressedMatrix {
         match self {
             Stored::Dense(f) => f,
+            Stored::Csc(f) => f,
+            Stored::Csr(f) => f,
+            Stored::Coo(f) => f,
+            Stored::IndexMap(f) => f,
+            Stored::Cla(f) => f,
             Stored::Hac(f) => f,
             Stored::Shac(f) => f,
-            Stored::Csc(f) => f,
+            Stored::LzAc(f) => f,
+            Stored::RelIdx(f) => f,
         }
     }
 
+    pub fn id(&self) -> FormatId {
+        self.as_compressed().id()
+    }
+
     fn tag(&self) -> u8 {
-        match self {
-            Stored::Dense(_) => 0,
-            Stored::Hac(_) => 1,
-            Stored::Shac(_) => 2,
-            Stored::Csc(_) => 3,
-        }
+        self.id().tag()
     }
 }
 
@@ -73,6 +93,13 @@ fn w_f32s(out: &mut Vec<u8>, vs: &[f32]) {
 }
 
 fn w_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    w_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn w_u16s(out: &mut Vec<u8>, vs: &[u16]) {
     w_u32(out, vs.len() as u32);
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
@@ -136,6 +163,15 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     fn bitbuf(&mut self) -> Result<BitBuf> {
         let bitlen = self.u64()? as usize;
         let n = self.u32()? as usize;
@@ -154,103 +190,338 @@ impl<'a> Reader<'a> {
 // ---- per-kind encoders ----------------------------------------------------
 
 fn encode_entry(out: &mut Vec<u8>, s: &Stored) {
+    let c = s.as_compressed();
+    w_u32(out, c.rows() as u32);
+    w_u32(out, c.cols() as u32);
     match s {
         Stored::Dense(f) => {
             let m = f.decompress();
-            w_u32(out, m.rows as u32);
-            w_u32(out, m.cols as u32);
             w_f32s(out, &m.data);
         }
-        Stored::Hac(f) => {
-            w_u32(out, f.rows() as u32);
-            w_u32(out, f.cols() as u32);
-            w_f32s(out, &f.alphabet);
-            let lengths: Vec<u32> = f.code_lengths().to_vec();
-            w_u32s(out, &lengths);
-            w_bitbuf(out, f.stream_ref());
-        }
-        Stored::Shac(f) => {
-            w_u32(out, f.rows() as u32);
-            w_u32(out, f.cols() as u32);
-            w_f32s(out, &f.alphabet);
-            let lengths: Vec<u32> = f.code_lengths().to_vec();
-            w_u32s(out, &lengths);
-            w_bitbuf(out, f.stream_ref());
-            w_u32s(out, &f.ri);
-            w_u32s(out, &f.cb);
-        }
         Stored::Csc(f) => {
-            w_u32(out, f.rows() as u32);
-            w_u32(out, f.cols() as u32);
             w_f32s(out, &f.nz);
             w_u32s(out, &f.ri);
             w_u32s(out, &f.cb);
         }
+        Stored::Csr(f) => {
+            w_f32s(out, &f.nz);
+            w_u32s(out, &f.ci);
+            w_u32s(out, &f.rb);
+        }
+        Stored::Coo(f) => {
+            w_f32s(out, &f.v);
+            w_u32s(out, &f.ri);
+            w_u32s(out, &f.ci);
+        }
+        Stored::IndexMap(f) => {
+            w_f32s(out, &f.codebook);
+            w_u16s(out, &f.indices_u16());
+        }
+        Stored::Cla(f) => {
+            for col in f.columns() {
+                match col {
+                    ColEnc::Rle(runs) => {
+                        out.push(0);
+                        w_u32(out, runs.len() as u32);
+                        for &(v, run) in runs {
+                            out.extend_from_slice(&v.to_le_bytes());
+                            w_u32(out, run);
+                        }
+                    }
+                    ColEnc::Ole { values, offsets } => {
+                        out.push(1);
+                        w_f32s(out, values);
+                        for offs in offsets {
+                            w_u32s(out, offs);
+                        }
+                    }
+                    ColEnc::Ddc { dict, idx } => {
+                        out.push(2);
+                        w_f32s(out, dict);
+                        w_u16s(out, idx);
+                    }
+                    ColEnc::Uc(vals) => {
+                        out.push(3);
+                        w_f32s(out, vals);
+                    }
+                }
+            }
+        }
+        Stored::Hac(f) => {
+            w_f32s(out, &f.alphabet);
+            w_u32s(out, f.code_lengths());
+            w_bitbuf(out, f.stream_ref());
+        }
+        Stored::Shac(f) => {
+            w_f32s(out, &f.alphabet);
+            w_u32s(out, f.code_lengths());
+            w_bitbuf(out, f.stream_ref());
+            w_u32s(out, &f.ri);
+            w_u32s(out, &f.cb);
+        }
+        Stored::LzAc(f) => {
+            w_f32s(out, &f.alphabet);
+            w_bitbuf(out, f.stream_ref());
+            w_u32s(out, &f.ri);
+            w_u32s(out, &f.cb);
+        }
+        Stored::RelIdx(f) => {
+            w_f32s(out, &f.codebook);
+            let (entries, centry) = f.parts();
+            w_u32(out, entries.len() as u32);
+            for &(gap, ptr) in entries {
+                w_u32(out, gap);
+                w_u32(out, ptr);
+            }
+            w_u32s(out, centry);
+        }
+    }
+}
+
+/// Rebuild a canonical code from untrusted lengths and verify the
+/// entropy stream decodes cleanly for the expected symbol count, so a
+/// corrupt container errors at load instead of panicking on first use.
+fn check_huffman(
+    lengths: Vec<u32>,
+    stream: &BitBuf,
+    symbols: usize,
+    what: &str,
+) -> Result<Code> {
+    let Some(code) = Code::try_from_lengths(lengths) else {
+        bail!("{what}: invalid code lengths");
+    };
+    let mut r = BitReader::new(stream);
+    for i in 0..symbols {
+        if code.decode_next(&mut r).is_none() {
+            bail!("{what}: bitstream truncated at symbol {i}/{symbols}");
+        }
+    }
+    Ok(code)
+}
+
+/// Validate a CSC-style skeleton: `boundary` has `n_cols + 1` monotone
+/// entries ending at `n_items`, and every index in `idx` is `< limit`.
+fn check_skeleton(
+    boundary: &[u32],
+    n_cols: usize,
+    idx: &[u32],
+    n_items: usize,
+    limit: usize,
+    what: &str,
+) -> Result<()> {
+    if boundary.len() != n_cols + 1
+        || boundary.first() != Some(&0)
+        || boundary.last() != Some(&(n_items as u32))
+        || boundary.windows(2).any(|w| w[0] > w[1])
+    {
+        bail!("{what}: bad column boundaries");
+    }
+    if idx.len() != n_items || idx.iter().any(|&i| i as usize >= limit) {
+        bail!("{what}: index out of range");
+    }
+    Ok(())
+}
+
+fn decode_cla_column(r: &mut Reader, rows: usize) -> Result<ColEnc> {
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            let mut runs = Vec::with_capacity(n);
+            let mut total = 0u64;
+            for _ in 0..n {
+                let v = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+                let run = r.u32()?;
+                total += run as u64;
+                runs.push((v, run));
+            }
+            if total != rows as u64 {
+                bail!("cla rle runs do not cover the column");
+            }
+            Ok(ColEnc::Rle(runs))
+        }
+        1 => {
+            let values = r.f32s()?;
+            let mut offsets = Vec::with_capacity(values.len());
+            for _ in 0..values.len() {
+                let offs = r.u32s()?;
+                if offs.iter().any(|&o| o as usize >= rows) {
+                    bail!("cla ole offset out of range");
+                }
+                offsets.push(offs);
+            }
+            Ok(ColEnc::Ole { values, offsets })
+        }
+        2 => {
+            let dict = r.f32s()?;
+            let idx = r.u16s()?;
+            if idx.len() != rows || idx.iter().any(|&p| p as usize >= dict.len()) {
+                bail!("cla ddc structure mismatch");
+            }
+            Ok(ColEnc::Ddc { dict, idx })
+        }
+        3 => {
+            let vals = r.f32s()?;
+            if vals.len() != rows {
+                bail!("cla uc length mismatch");
+            }
+            Ok(ColEnc::Uc(vals))
+        }
+        t => bail!("unknown cla column encoding {t}"),
     }
 }
 
 fn decode_entry(r: &mut Reader, tag: u8) -> Result<Stored> {
-    match tag {
-        0 => {
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
+    let Some(id) = FormatId::from_tag(tag) else {
+        bail!("unknown entry kind {tag}");
+    };
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    match id {
+        FormatId::Dense => {
             let data = r.f32s()?;
             if data.len() != rows * cols {
                 bail!("dense payload size mismatch");
             }
             Ok(Stored::Dense(Dense::from_mat(Mat::from_vec(rows, cols, data))))
         }
-        1 => {
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
+        FormatId::Csc => {
+            let nz = r.f32s()?;
+            let ri = r.u32s()?;
+            let cb = r.u32s()?;
+            check_skeleton(&cb, cols, &ri, nz.len(), rows, "csc")?;
+            Ok(Stored::Csc(Csc::from_parts(rows, cols, nz, ri, cb)))
+        }
+        FormatId::Csr => {
+            let nz = r.f32s()?;
+            let ci = r.u32s()?;
+            let rb = r.u32s()?;
+            check_skeleton(&rb, rows, &ci, nz.len(), cols, "csr")?;
+            Ok(Stored::Csr(Csr::from_parts(rows, cols, nz, ci, rb)))
+        }
+        FormatId::Coo => {
+            let v = r.f32s()?;
+            let ri = r.u32s()?;
+            let ci = r.u32s()?;
+            if ri.len() != v.len()
+                || ci.len() != v.len()
+                || ri.iter().any(|&i| i as usize >= rows)
+                || ci.iter().any(|&j| j as usize >= cols)
+            {
+                bail!("coo structure mismatch");
+            }
+            Ok(Stored::Coo(Coo::from_parts(rows, cols, ri, ci, v)))
+        }
+        FormatId::IndexMap => {
+            let codebook = r.f32s()?;
+            let idx = r.u16s()?;
+            if codebook.is_empty() && rows * cols > 0 {
+                bail!("im empty codebook");
+            }
+            if idx.len() != rows * cols
+                || idx.iter().any(|&p| p as usize >= codebook.len().max(1))
+            {
+                bail!("im structure mismatch");
+            }
+            Ok(Stored::IndexMap(IndexMap::from_indices(rows, cols, codebook, idx)))
+        }
+        FormatId::Cla => {
+            let mut columns = Vec::with_capacity(cols);
+            for _ in 0..cols {
+                columns.push(decode_cla_column(r, rows)?);
+            }
+            Ok(Stored::Cla(Cla::from_columns(rows, cols, columns)))
+        }
+        FormatId::Hac => {
             let alphabet = r.f32s()?;
             let lengths = r.u32s()?;
             let stream = r.bitbuf()?;
             if lengths.len() != alphabet.len() {
                 bail!("hac dictionary mismatch");
             }
-            let code = Code::from_lengths(lengths);
+            let code = check_huffman(lengths, &stream, rows * cols, "hac")?;
             Ok(Stored::Hac(Hac::from_parts(rows, cols, alphabet, code, stream)))
         }
-        2 => {
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
+        FormatId::Shac => {
             let alphabet = r.f32s()?;
             let lengths = r.u32s()?;
             let stream = r.bitbuf()?;
             let ri = r.u32s()?;
             let cb = r.u32s()?;
-            if lengths.len() != alphabet.len() || cb.len() != cols + 1 {
-                bail!("shac structure mismatch");
+            if lengths.len() != alphabet.len() {
+                bail!("shac dictionary mismatch");
             }
-            let code = Code::from_lengths(lengths);
+            check_skeleton(&cb, cols, &ri, ri.len(), rows, "shac")?;
+            let code = check_huffman(lengths, &stream, ri.len(), "shac")?;
             Ok(Stored::Shac(Shac::from_parts(
                 rows, cols, alphabet, code, stream, ri, cb,
             )))
         }
-        3 => {
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
-            let nz = r.f32s()?;
+        FormatId::LzAc => {
+            let alphabet = r.f32s()?;
+            let stream = r.bitbuf()?;
             let ri = r.u32s()?;
             let cb = r.u32s()?;
-            if cb.len() != cols + 1 || ri.len() != nz.len() {
-                bail!("csc structure mismatch");
+            check_skeleton(&cb, cols, &ri, ri.len(), rows, "lzac")?;
+            let lz = LzAc::from_parts(rows, cols, alphabet, stream, ri, cb);
+            if !lz.validate_stream() {
+                bail!("lzac bitstream corrupt or truncated");
             }
-            Ok(Stored::Csc(Csc::from_parts(rows, cols, nz, ri, cb)))
+            Ok(Stored::LzAc(lz))
         }
-        t => bail!("unknown entry kind {t}"),
+        FormatId::RelIdx => {
+            let codebook = r.f32s()?;
+            let n = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let gap = r.u32()?;
+                let ptr = r.u32()?;
+                if ptr as usize >= codebook.len() {
+                    bail!("dcri pointer out of range");
+                }
+                entries.push((gap, ptr));
+            }
+            let centry = r.u32s()?;
+            if centry.len() != cols + 1
+                || centry.first() != Some(&0)
+                || centry.last() != Some(&(n as u32))
+                || centry.windows(2).any(|w| w[0] > w[1])
+            {
+                bail!("dcri column boundaries mismatch");
+            }
+            if codebook.last().map(|v| *v != 0.0).unwrap_or(!entries.is_empty()) {
+                bail!("dcri codebook missing padding-zero slot");
+            }
+            // each column's entries must stay inside the row range
+            for j in 0..cols {
+                let mut consumed = 0u64;
+                for &(gap, _) in &entries[centry[j] as usize..centry[j + 1] as usize] {
+                    consumed += gap as u64 + 1;
+                }
+                if consumed > rows as u64 {
+                    bail!("dcri column {j} overruns {rows} rows");
+                }
+            }
+            Ok(Stored::RelIdx(RelIdx::from_parts(rows, cols, codebook, entries, centry)))
+        }
     }
 }
 
-/// Wrap any compressed matrix into its storable form (falling back to
-/// dense for kinds without a disk encoding).
+/// Wrap any compressed matrix into its storable form. Every registry
+/// entry has a disk encoding, so this is a total mapping driven by
+/// [`FormatId`] (the matrix is recompressed deterministically into the
+/// same format).
 pub fn to_stored(w: &Mat, f: &dyn CompressedMatrix) -> Stored {
-    match f.name() {
-        "hac" => Stored::Hac(Hac::compress(w)),
-        "shac" => Stored::Shac(Shac::compress(w)),
-        "csc" => Stored::Csc(Csc::compress(w)),
-        _ => Stored::Dense(Dense::compress(w)),
+    match f.id() {
+        FormatId::Dense => Stored::Dense(Dense::compress(w)),
+        FormatId::Csc => Stored::Csc(Csc::compress(w)),
+        FormatId::Csr => Stored::Csr(Csr::compress(w)),
+        FormatId::Coo => Stored::Coo(Coo::compress(w)),
+        FormatId::IndexMap => Stored::IndexMap(IndexMap::compress(w)),
+        FormatId::Cla => Stored::Cla(Cla::compress(w)),
+        FormatId::Hac => Stored::Hac(Hac::compress(w)),
+        FormatId::Shac => Stored::Shac(Shac::compress(w)),
+        FormatId::LzAc => Stored::LzAc(LzAc::compress(w)),
+        FormatId::RelIdx => Stored::RelIdx(RelIdx::compress(w)),
     }
 }
 
@@ -303,34 +574,71 @@ mod tests {
         dir.join(name)
     }
 
+    /// Satellite acceptance: every [`FormatId`] round-trips through a
+    /// `.sham` container — decompress equality, identical paper-model
+    /// size accounting, and a working dot on the loaded instance.
     #[test]
-    fn roundtrip_all_kinds() {
+    fn roundtrip_every_format_id() {
         let mut rng = Prng::seeded(0x570);
         let m = Mat::sparse_quantized(60, 40, 0.15, 12, &mut rng);
-        let entries = vec![
-            ("dense".to_string(), Stored::Dense(Dense::compress(&m))),
-            ("hac".to_string(), Stored::Hac(Hac::compress(&m))),
-            ("shac".to_string(), Stored::Shac(Shac::compress(&m))),
-            ("csc".to_string(), Stored::Csc(Csc::compress(&m))),
-        ];
-        let path = tmp("all.sham");
-        save(&path, &entries).unwrap();
-        let back = load(&path).unwrap();
-        assert_eq!(back.len(), 4);
-        for (name, s) in &back {
-            assert_eq!(s.as_compressed().decompress(), m, "{name} round-trip");
-        }
-        // dot on the loaded compressed representations
         let x: Vec<f32> = (0..60).map(|i| i as f32 * 0.1).collect();
         let want = m.vecmat(&x);
-        for (name, s) in &back {
-            crate::util::proptest::assert_allclose(
-                &s.as_compressed().vecmat(&x),
-                &want,
-                1e-4,
-                1e-4,
-            )
-            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let entries: Vec<(String, Stored)> = FormatId::ALL
+            .iter()
+            .map(|id| {
+                let f = id.compress(&m);
+                (id.name().to_string(), to_stored(&m, f.as_ref()))
+            })
+            .collect();
+        let sizes: Vec<u64> = entries
+            .iter()
+            .map(|(_, s)| s.as_compressed().size_bits())
+            .collect();
+        let path = tmp("all_ids.sham");
+        save(&path, &entries).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), FormatId::ALL.len());
+        for (((name, s), id), size) in
+            back.iter().zip(FormatId::ALL.iter()).zip(sizes.iter())
+        {
+            let c = s.as_compressed();
+            assert_eq!(c.id(), *id, "{name}: id preserved");
+            assert_eq!(c.decompress(), m, "{name}: lossless round-trip");
+            assert_eq!(c.size_bits(), *size, "{name}: size accounting drifted");
+            assert!(c.size_bits() > 0, "{name}: zero size");
+            crate::util::proptest::assert_allclose(&c.vecmat(&x), &want, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    /// Degenerate matrices must survive the disk round-trip for every
+    /// format too (all-zero, single cell, single distinct value).
+    #[test]
+    fn roundtrip_every_format_id_degenerate() {
+        for (i, m) in [
+            Mat::zeros(5, 3),
+            Mat::from_vec(1, 1, vec![2.5]),
+            Mat::from_vec(2, 3, vec![7.0; 6]),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let entries: Vec<(String, Stored)> = FormatId::ALL
+                .iter()
+                .map(|id| {
+                    let f = id.compress(&m);
+                    (id.name().to_string(), to_stored(&m, f.as_ref()))
+                })
+                .collect();
+            let path = tmp(&format!("degenerate_{i}.sham"));
+            save(&path, &entries).unwrap();
+            for (name, s) in load(&path).unwrap() {
+                assert_eq!(
+                    s.as_compressed().decompress(),
+                    m,
+                    "{name}: degenerate case {i}"
+                );
+            }
         }
     }
 
@@ -369,6 +677,12 @@ mod tests {
         let mut bad = std::fs::read(&path).unwrap();
         bad[0] = b'X';
         std::fs::write(&path2, &bad).unwrap();
+        assert!(load(&path2).is_err());
+        // unknown kind tag
+        let mut unk = std::fs::read(&path).unwrap();
+        // tag sits right after magic(6) + count(4) + namelen(2) + "w"(1)
+        unk[13] = 0xEE;
+        std::fs::write(&path2, &unk).unwrap();
         assert!(load(&path2).is_err());
     }
 }

@@ -34,13 +34,15 @@ Experiment commands (regenerate the paper's tables/figures):
 Single-configuration evaluation:
   eval --net <mnist|cifar|kiba|davis> [--prune P] [--quant cws|pws|uq|ecsq]
        [--k K] [--conv-quant <q>] [--conv-k K] [--conv-prune P]
-       [--format dense|csc|csr|coo|im|cla|hac|shac|auto] [--per-layer]
+       [--format dense|csc|csr|coo|im|cla|hac|shac|lzac|dcri|auto] [--per-layer]
                       compress one model and report perf + occupancy
 
 On-disk compressed models:
   compress --net <bench> [--prune P] [--quant q --k K] [--format auto]
            --out model.sham
                       compress a trained model into a .sham container
+                      (every registry format can be stored: dense, csc,
+                      csr, coo, im, cla, hac, shac, lzac, dcri)
   inspect <file.sham> list container entries, formats, and sizes
 
 Serving:

@@ -18,8 +18,9 @@ use crate::mat::Mat;
 use crate::nn::compressed::{CompressionCfg, FcFormat};
 use crate::nn::eval::{compute_features, evaluate_full, metric_from_outputs, Metric};
 use crate::nn::{CompressedModel, ModelKind};
+use crate::formats::FormatId;
 use crate::quant::Kind;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, PjRtClient};
 use crate::util::prng::Prng;
 
 pub const TABLE3_KS: [usize; 6] = [2, 16, 32, 64, 128, 256];
@@ -33,7 +34,7 @@ pub struct Ctx {
     pub art: PathBuf,
     pub threads: usize,
     pub batch: usize,
-    client: xla::PjRtClient,
+    client: PjRtClient,
     engines: HashMap<ModelKind, Engine>,
     tests: HashMap<ModelKind, TestSet>,
     weights: HashMap<ModelKind, Archive>,
@@ -52,7 +53,7 @@ fn conv_key(cfg: &CompressionCfg) -> String {
 
 impl Ctx {
     pub fn new(art: PathBuf, threads: usize) -> Result<Ctx> {
-        let client = xla::PjRtClient::cpu().context("PJRT client")?;
+        let client = PjRtClient::cpu().context("PJRT client")?;
         Ok(Ctx {
             art,
             threads,
@@ -117,7 +118,7 @@ impl Ctx {
         let conv_cfg = CompressionCfg {
             fc_prune: None,
             fc_quant: None,
-            fc_format: FcFormat::Dense,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
             ..*cfg
         };
         let mut rng = Prng::seeded(0xC0117);
@@ -174,7 +175,7 @@ impl Ctx {
             return Ok(*m);
         }
         let (m, _, _) = self.eval(kind, &CompressionCfg {
-            fc_format: FcFormat::Dense,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
             ..Default::default()
         }, 0)?;
         self.baselines.insert(kind, m);
@@ -237,7 +238,7 @@ pub fn table2(ctx: &mut Ctx) -> Result<Table> {
             // Unified
             let cfg = CompressionCfg {
                 fc_quant: Some((qkind, k_unified)),
-                fc_format: FcFormat::Hac,
+                fc_format: FcFormat::Fixed(FormatId::Hac),
                 unified: true,
                 ..Default::default()
             };
@@ -279,16 +280,16 @@ fn eval_non_unified(
     // assemble a model manually: build with cheap dense FC first, then
     // swap in the per-layer-quantized HAC matrices
     let base_cfg =
-        CompressionCfg { fc_format: FcFormat::Dense, ..Default::default() };
+        CompressionCfg { fc_format: FcFormat::Fixed(FormatId::Dense), ..Default::default() };
     let mut model = CompressedModel::build(kind, &weights, &base_cfg, &mut rng)?;
     let mut fc_bits_dense = 0u64;
     let mut fc_bits = 0u64;
     for (layer, qm) in model.fc.iter_mut().zip(fc_mats.iter()) {
-        let hac = FcFormat::Hac.build(qm);
+        let hac = FcFormat::Fixed(FormatId::Hac).build(qm);
         fc_bits += hac.size_bits();
         fc_bits_dense += qm.numel() as u64 * crate::huffman::bounds::WORD_BITS;
         // forward runs on the dense reconstruction (see Ctx::eval)
-        layer.w = FcFormat::Dense.build(qm);
+        layer.w = FcFormat::Fixed(FormatId::Dense).build(qm);
     }
     let feats = ctx.features_for(kind, &base_cfg)?;
     let outputs = model.fc_forward(&feats, ctx.threads);
@@ -318,7 +319,7 @@ pub fn table3(ctx: &mut Ctx, vgg: bool) -> Result<Table> {
             for kind in &kinds {
                 let cfg = CompressionCfg {
                     fc_quant: Some((qkind, k)),
-                    fc_format: FcFormat::Hac,
+                    fc_format: FcFormat::Fixed(FormatId::Hac),
                     ..Default::default()
                 };
                 let (m, psi, _) = ctx.eval(*kind, &cfg, 0x33 + k as u64)?;
@@ -342,7 +343,7 @@ pub fn table4(ctx: &mut Ctx) -> Result<Table> {
         for kind in ModelKind::ALL {
             let cfg = CompressionCfg {
                 conv_prune: if p > 0.0 { Some(p) } else { None },
-                fc_format: FcFormat::Dense,
+                fc_format: FcFormat::Fixed(FormatId::Dense),
                 ..Default::default()
             };
             let (m, _, _) = ctx.eval(kind, &cfg, 0x44)?;
@@ -443,7 +444,7 @@ pub fn s1_sweep(ctx: &mut Ctx, quick: bool) -> Result<SweepOutcome> {
         for &p in &ps {
             let cfg = CompressionCfg {
                 fc_prune: Some(p),
-                fc_format: FcFormat::Csc,
+                fc_format: FcFormat::Fixed(FormatId::Csc),
                 ..Default::default()
             };
             let (m, psi, _) = ctx.eval(kind, &cfg, 0x51)?;
@@ -454,7 +455,7 @@ pub fn s1_sweep(ctx: &mut Ctx, quick: bool) -> Result<SweepOutcome> {
             for &k in &ks {
                 let cfg = CompressionCfg {
                     fc_quant: Some((qk, k)),
-                    fc_format: FcFormat::Hac,
+                    fc_format: FcFormat::Fixed(FormatId::Hac),
                     ..Default::default()
                 };
                 let (m, psi, _) = ctx.eval(kind, &cfg, 0x52 + k as u64)?;
@@ -596,7 +597,7 @@ pub fn s7(ctx: &mut Ctx) -> Result<Table> {
             for kind in ModelKind::ALL {
                 let cfg = CompressionCfg {
                     conv_quant: Some((qkind, k)),
-                    fc_format: FcFormat::Dense,
+                    fc_format: FcFormat::Fixed(FormatId::Dense),
                     ..Default::default()
                 };
                 let (m, _, _) = ctx.eval(kind, &cfg, 0x77)?;

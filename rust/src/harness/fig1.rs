@@ -77,22 +77,17 @@ pub fn run(
         let dense_bits: u64 =
             compressed.iter().map(|m| m.numel() as u64 * WORD_BITS).sum();
 
-        // per-format totals: the paper's Fig-1 suite + our two extra
-        // baselines (DC-RI = ref. [20]'s storage, LZ-AC = §VI LZ coding)
-        let formats_of = |m: &Mat| {
-            let mut fs = all_formats(m);
-            fs.push(Box::new(crate::formats::RelIdx::compress(m)));
-            fs.push(Box::new(crate::formats::LzAc::compress(m)));
-            fs
-        };
-        let n_formats = formats_of(&compressed[0]).len();
+        // per-format totals: the unified registry suite — the paper's
+        // Fig-1 formats plus the DC-RI (ref. [20]) and LZ-AC (§VI)
+        // extension baselines, all enumerated from `FormatId::ALL`
+        let n_formats = crate::formats::FormatId::ALL.len();
         for fi in 0..n_formats {
             let mut size_bits = 0u64;
             let mut secs = 0.0f64;
             let mut fname = "";
             let mut bound_bits = 0.0f64;
             for m in &compressed {
-                let fs = formats_of(m);
+                let fs = all_formats(m);
                 let f = &fs[fi];
                 fname = f.name();
                 size_bits += f.size_bits();
@@ -177,14 +172,22 @@ mod tests {
         };
         let s70 = collect(70.0);
         let s99 = collect(99.0);
+        // The paper's Fig-1 claims concern its own format suite; the
+        // registry's LZ-AC / DC-RI extensions are excluded from the
+        // argmin (DC-RI can rival sHAC in narrow regimes).
+        let paper_min = |s: &std::collections::HashMap<String, u64>| {
+            s.iter()
+                .filter(|(n, _)| n.as_str() != "lzac" && n.as_str() != "dcri")
+                .min_by_key(|(_, &v)| v)
+                .map(|(n, _)| n.clone())
+                .unwrap()
+        };
         // p=70: HAC compresses the most (paper: "with lower pruning HAC
         // shows the highest compression rate")
-        let min70 = s70.iter().min_by_key(|(_, &v)| v).unwrap();
-        assert_eq!(min70.0, "hac", "{s70:?}");
+        assert_eq!(paper_min(&s70), "hac", "{s70:?}");
         // p=99: sHAC wins (paper: "when matrices get highly sparse sHAC
         // compresses the most")
-        let min99 = s99.iter().min_by_key(|(_, &v)| v).unwrap();
-        assert_eq!(min99.0, "shac", "{s99:?}");
+        assert_eq!(paper_min(&s99), "shac", "{s99:?}");
         // Scipy-style formats always bigger than CLA at these settings
         assert!(s70["cla"] < s70["csc"]);
         // IM does not exploit sparsity: identical at both prune levels

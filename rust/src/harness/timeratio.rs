@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 
+use crate::formats::{FormatId, Workspace};
 use crate::harness::tables::Table;
 use crate::mat::Mat;
 use crate::nn::compressed::{CompressionCfg, FcFormat};
@@ -15,30 +16,21 @@ use crate::quant::Kind;
 use crate::util::prng::Prng;
 use crate::util::timer::{bench, black_box};
 
-/// Formats compared (dense is the denominator).
-const FORMATS: [FcFormat; 7] = [
-    FcFormat::Csc,
-    FcFormat::Im,
-    FcFormat::Cla,
-    FcFormat::Hac,
-    FcFormat::Shac,
+/// Formats compared (dense is the denominator): all ten registry
+/// formats plus the paper's `*`-marked automatic HAC/sHAC choice.
+const FORMATS: [FcFormat; 11] = [
+    FcFormat::Fixed(FormatId::Csc),
+    FcFormat::Fixed(FormatId::Csr),
+    FcFormat::Fixed(FormatId::Coo),
+    FcFormat::Fixed(FormatId::IndexMap),
+    FcFormat::Fixed(FormatId::Cla),
+    FcFormat::Fixed(FormatId::Hac),
+    FcFormat::Fixed(FormatId::Shac),
+    FcFormat::Fixed(FormatId::LzAc),
+    FcFormat::Fixed(FormatId::RelIdx),
     FcFormat::Auto,
-    FcFormat::Dense,
+    FcFormat::Fixed(FormatId::Dense),
 ];
-
-fn fmt_name(f: FcFormat) -> &'static str {
-    match f {
-        FcFormat::Dense => "dense",
-        FcFormat::Csc => "csc",
-        FcFormat::Csr => "csr",
-        FcFormat::Coo => "coo",
-        FcFormat::Im => "im",
-        FcFormat::Cla => "cla",
-        FcFormat::Hac => "hac",
-        FcFormat::Shac => "shac",
-        FcFormat::Auto => "auto",
-    }
-}
 
 /// Build the compressed model at (p, k) and time `fc_forward` over a
 /// `batch`-row feature block; report time ratios vs dense.
@@ -67,20 +59,22 @@ pub fn run(
                 ..Default::default()
             };
             let model = CompressedModel::build(kind, &weights, &cfg, &mut rng)?;
+            // reuse one workspace across iterations — the serving shape
+            let mut ws = Workspace::new();
             let s = bench(1, 5, || {
-                black_box(model.fc_forward(black_box(&feats), threads));
+                black_box(model.fc_forward_into(black_box(&feats), threads, &mut ws));
             });
             times.push((fmt, s.p50, model.psi_fc()));
         }
         let dense_t = times
             .iter()
-            .find(|(f, _, _)| *f == FcFormat::Dense)
+            .find(|(f, _, _)| *f == FcFormat::Fixed(FormatId::Dense))
             .map(|(_, t, _)| *t)
             .unwrap();
         for (fmt, t, psi) in times {
             table.row(vec![
                 format!("{p:.0}"),
-                fmt_name(fmt).to_string(),
+                fmt.name().to_string(),
                 format!("{:.2}", t / 1e6),
                 format!("{:.2}", t / dense_t),
                 format!("{psi:.4}"),
@@ -97,8 +91,9 @@ mod tests {
     #[test]
     fn format_names_cover_table() {
         for f in FORMATS {
-            assert!(!fmt_name(f).is_empty());
+            assert!(!f.name().is_empty());
         }
-        assert_eq!(fmt_name(FcFormat::Auto), "auto");
+        assert_eq!(FcFormat::Auto.name(), "auto");
+        assert_eq!(FcFormat::Fixed(FormatId::RelIdx).name(), "dcri");
     }
 }

@@ -56,6 +56,29 @@ impl Code {
         Self::from_lengths(lengths)
     }
 
+    /// Fallible [`Code::from_lengths`] for *untrusted* lengths (e.g. a
+    /// `.sham` container read from disk): rejects lengths beyond the
+    /// decoder limit and sets violating the Kraft inequality — either
+    /// would otherwise panic or build out-of-range decode tables.
+    pub fn try_from_lengths(lengths: Vec<u32>) -> Option<Self> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        if max_len > 57 {
+            return None;
+        }
+        if max_len > 0 {
+            let mut kraft = 0u128;
+            for &l in &lengths {
+                if l > 0 {
+                    kraft += 1u128 << (max_len - l);
+                }
+            }
+            if kraft > 1u128 << max_len {
+                return None;
+            }
+        }
+        Some(Self::from_lengths(lengths))
+    }
+
     /// Build from known code lengths (0 = absent symbol).
     pub fn from_lengths(lengths: Vec<u32>) -> Self {
         let max_len = lengths.iter().copied().max().unwrap_or(0);
@@ -283,6 +306,21 @@ impl Code {
 mod tests {
     use super::*;
     use crate::util::proptest::{self as prop, Config};
+
+    #[test]
+    fn try_from_lengths_rejects_corrupt_dictionaries() {
+        // three 1-bit codes violate the Kraft inequality
+        assert!(Code::try_from_lengths(vec![1, 1, 1]).is_none());
+        // beyond the 57-bit peeking limit
+        assert!(Code::try_from_lengths(vec![60]).is_none());
+        // a valid set builds the same code as the infallible path
+        let ok = Code::try_from_lengths(vec![1, 2, 2]).unwrap();
+        let want = Code::from_lengths(vec![1, 2, 2]);
+        assert_eq!(ok.lengths, want.lengths);
+        assert_eq!(ok.codes, want.codes);
+        // absent symbols (length 0) are fine
+        assert!(Code::try_from_lengths(vec![0, 1, 1]).is_some());
+    }
 
     fn roundtrip(freqs: &[u64], stream: &[u32]) {
         let code = Code::from_freqs(freqs);

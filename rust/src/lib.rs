@@ -8,18 +8,26 @@
 //! serving coordinator that evaluates compressed CNNs end-to-end with the
 //! conv front-ends executed as AOT-compiled XLA (PJRT) artifacts.
 //!
-//! Layering (see DESIGN.md):
+//! Layering — kernels → pool → registry → store → coordinator (see
+//! DESIGN.md for the full picture):
 //! - `util`, `mat`, `huffman` — substrates (bitstreams, PRNG, coding).
-//! - `formats` — the paper's contribution: CSC/CSR/COO/IM/CLA baselines,
-//!   HAC (Alg. 1), sHAC (Alg. 2), parallel dot (Alg. 3).
+//! - `formats` — the paper's contribution as allocation-free kernels:
+//!   CSC/CSR/COO/IM/CLA baselines, HAC (Alg. 1), sHAC (Alg. 2), all
+//!   behind `CompressedMatrix::{vecmat_into, matmul_batch_into}`.
+//! - `formats::pool` — the persistent worker pool backing the parallel
+//!   dot (Alg. 3) and the §VI column-parallel dots.
+//! - `formats::FormatId` — the single format registry: parse-by-name,
+//!   the Fig. 1 suite (`all_formats`), FC format selection, and `.sham`
+//!   kind tags all derive from it; `formats::{LzAc, RelIdx}` extend the
+//!   paper's future-work directions as first-class registry entries.
+//! - `formats::store` — the on-disk `.sham` container; every registry
+//!   format round-trips.
 //! - `quant` — pruning + the four weight-sharing quantizers, unified and
 //!   per-layer.
 //! - `io`, `nn`, `runtime` — model/dataset interchange with the JAX build
-//!   path, compressed inference, PJRT execution.
+//!   path, compressed inference (workspace-reusing FC stack), PJRT
+//!   execution (gated behind the `pjrt` feature; stubbed otherwise).
 //! - `coordinator` — batching inference server + CLI surface.
-//! - `formats::store` — the on-disk `.sham` container for compressed
-//!   models; `formats::{LzAc, RelIdx}` and the §VI column-parallel dots
-//!   extend the paper's future-work directions.
 //! - `harness` — drivers that regenerate every table and figure.
 
 pub mod coordinator;

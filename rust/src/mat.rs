@@ -79,11 +79,32 @@ impl Mat {
         stats::distinct_count(&nz)
     }
 
+    /// Reshape in place to `rows × cols`, reusing the existing
+    /// allocation (grow-only capacity). Newly exposed entries are
+    /// zeroed; the retained prefix keeps its stale contents — callers
+    /// are expected to overwrite.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Dense vector–matrix product `x^T W` (x.len() == rows), the paper's
     /// reference dot the compressed formats are checked/benched against.
     pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.rows, "vecmat dimension mismatch");
         let mut out = vec![0.0f32; self.cols];
+        self.vecmat_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free `x^T W` into `out` (`out.len() == cols`); `out`
+    /// is fully overwritten.
+    pub fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "vecmat dimension mismatch");
+        assert_eq!(out.len(), self.cols, "vecmat output length mismatch");
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for (i, &xi) in x.iter().enumerate() {
             if xi == 0.0 {
                 continue;
@@ -93,7 +114,6 @@ impl Mat {
                 *o += xi * w;
             }
         }
-        out
     }
 
     /// Dense matrix product `X W` where `X` is `batch × rows`; output is

@@ -7,7 +7,7 @@
 use anyhow::{Context, Result};
 
 use crate::formats::{
-    par_matmul, Cla, Coo, CompressedMatrix, Csc, Csr, Dense, Hac, IndexMap, Shac,
+    par_matmul_into, CompressedMatrix, FormatId, Hac, Shac, Workspace,
 };
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::io::{Archive, Tensor};
@@ -16,49 +16,44 @@ use crate::nn::model::ModelKind;
 use crate::quant::{self, Kind, Options};
 use crate::util::prng::Prng;
 
-/// Storage format choice for FC matrices.
+/// Storage format choice for FC matrices — a thin policy layer over the
+/// [`FormatId`] registry: either one fixed registry entry, or the
+/// paper's `*`-marked automatic HAC/sHAC choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FcFormat {
-    Dense,
-    Csc,
-    Csr,
-    Coo,
-    Im,
-    Cla,
-    Hac,
-    /// sHAC
-    Shac,
+    /// Store every FC matrix in one fixed format.
+    Fixed(FormatId),
     /// Whichever of HAC / sHAC is smaller for the given matrix — the
     /// paper's `*`-marked per-configuration choice.
     Auto,
 }
 
+impl From<FormatId> for FcFormat {
+    fn from(id: FormatId) -> FcFormat {
+        FcFormat::Fixed(id)
+    }
+}
+
 impl FcFormat {
+    /// Parse via the unified registry (every [`FormatId`] name, incl.
+    /// `lzac` / `dcri`) plus `auto`.
     pub fn parse(s: &str) -> Option<FcFormat> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "dense" => FcFormat::Dense,
-            "csc" => FcFormat::Csc,
-            "csr" => FcFormat::Csr,
-            "coo" => FcFormat::Coo,
-            "im" => FcFormat::Im,
-            "cla" => FcFormat::Cla,
-            "hac" => FcFormat::Hac,
-            "shac" => FcFormat::Shac,
-            "auto" => FcFormat::Auto,
-            _ => return None,
-        })
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(FcFormat::Auto);
+        }
+        FormatId::parse(s).map(FcFormat::Fixed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FcFormat::Fixed(id) => id.name(),
+            FcFormat::Auto => "auto",
+        }
     }
 
     pub fn build(&self, w: &Mat) -> Box<dyn CompressedMatrix> {
         match self {
-            FcFormat::Dense => Box::new(Dense::compress(w)),
-            FcFormat::Csc => Box::new(Csc::compress(w)),
-            FcFormat::Csr => Box::new(Csr::compress(w)),
-            FcFormat::Coo => Box::new(Coo::compress(w)),
-            FcFormat::Im => Box::new(IndexMap::compress(w)),
-            FcFormat::Cla => Box::new(Cla::compress(w)),
-            FcFormat::Hac => Box::new(Hac::compress(w)),
-            FcFormat::Shac => Box::new(Shac::compress(w)),
+            FcFormat::Fixed(id) => id.compress(w),
             FcFormat::Auto => {
                 let hac = Hac::compress(w);
                 let shac = Shac::compress(w);
@@ -110,6 +105,18 @@ impl Default for CompressionCfg {
     }
 }
 
+/// Apply bias + (except on the last layer) ReLU to every row of `y`.
+fn bias_relu(y: &mut Mat, bias: &[f32], is_last: bool) {
+    let cols = y.cols;
+    for r in 0..y.rows {
+        let row = &mut y.data[r * cols..(r + 1) * cols];
+        for (v, b) in row.iter_mut().zip(bias.iter()) {
+            let s = *v + *b;
+            *v = if is_last { s } else { s.max(0.0) };
+        }
+    }
+}
+
 /// A model ready for compressed inference + occupancy accounting.
 pub struct CompressedModel {
     pub kind: ModelKind,
@@ -128,7 +135,7 @@ impl CompressedModel {
     /// Uncompressed baseline (dense FC, dense conv).
     pub fn baseline(kind: ModelKind, params: &Archive) -> Result<CompressedModel> {
         Self::build(kind, params, &CompressionCfg {
-            fc_format: FcFormat::Dense,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
             ..Default::default()
         }, &mut Prng::seeded(0))
     }
@@ -259,29 +266,64 @@ impl CompressedModel {
     }
 
     /// FC forward: features (B × feat_dim) → outputs (B × last_dim).
-    /// ReLU between layers, none after the last. Uses the decode-once
-    /// `matmul_batch` (the entropy formats amortize their bitstream
-    /// decode across the batch); `threads > 1` switches to the paper's
-    /// row-parallel Alg. 3 (pays decode per row — better only when
-    /// cores outnumber the amortization factor).
+    /// ReLU between layers, none after the last. Allocating convenience
+    /// wrapper over [`CompressedModel::fc_forward_into`] — one-shot
+    /// callers (tables, tests) only; the serving hot path reuses a
+    /// [`Workspace`].
     pub fn fc_forward(&self, feats: &Mat, threads: usize) -> Mat {
-        let mut h = feats.clone();
-        let last = self.fc.len() - 1;
-        for (li, layer) in self.fc.iter().enumerate() {
-            let mut y = if threads > 1 && h.rows > 1 {
-                par_matmul(layer.w.as_ref(), &h, threads)
-            } else {
-                layer.w.matmul_batch(&h)
-            };
-            for r in 0..y.rows {
-                for (c, bias) in layer.b.iter().enumerate() {
-                    let v = y.get(r, c) + bias;
-                    y.set(r, c, if li < last { v.max(0.0) } else { v });
-                }
-            }
-            h = y;
+        let mut ws = Workspace::new();
+        self.fc_forward_into(feats, threads, &mut ws);
+        // The ping-pong writes layer i into buffer `a` when i is even
+        // (see fc_forward_into), so an odd layer count lands the result
+        // in `a`. Move the buffer out instead of copying it.
+        if self.fc.len() % 2 == 1 {
+            ws.a
+        } else {
+            ws.b
         }
-        h
+    }
+
+    /// Allocation-free FC forward: activations ping-pong between the two
+    /// grow-only buffers of `ws`, each layer running the decode-once
+    /// `matmul_batch_into` (the entropy formats amortize their bitstream
+    /// decode across the batch); `threads > 1` switches to the paper's
+    /// row-parallel Alg. 3 on the persistent pool (pays decode per row —
+    /// better only when cores outnumber the amortization factor). In
+    /// steady state (same batch shape, reused `ws`) this performs zero
+    /// output allocations and spawns zero threads — the coordinator's FC
+    /// hot path.
+    pub fn fc_forward_into<'w>(
+        &self,
+        feats: &Mat,
+        threads: usize,
+        ws: &'w mut Workspace,
+    ) -> &'w Mat {
+        assert!(!self.fc.is_empty(), "model has no FC layers");
+        let last = self.fc.len() - 1;
+        let mut dst_is_a = true;
+        for (li, layer) in self.fc.iter().enumerate() {
+            let (src, dst): (&Mat, &mut Mat) = if li == 0 {
+                (feats, &mut ws.a)
+            } else if dst_is_a {
+                (&ws.b, &mut ws.a)
+            } else {
+                (&ws.a, &mut ws.b)
+            };
+            if threads > 1 && src.rows > 1 {
+                par_matmul_into(layer.w.as_ref(), src, dst, threads);
+            } else {
+                layer.w.matmul_batch_into(src, dst);
+            }
+            bias_relu(dst, &layer.b, li == last);
+            dst_is_a = !dst_is_a;
+        }
+        // `dst_is_a` was flipped after the last layer: the result lives
+        // in `a` exactly when the flag now reads false.
+        if dst_is_a {
+            &ws.b
+        } else {
+            &ws.a
+        }
     }
 
     /// Replace every FC matrix with its dense decompression. Outputs are
@@ -381,7 +423,12 @@ mod tests {
     fn fc_forward_matches_dense_reference() {
         let mut rng = Prng::seeded(3);
         let a = tiny_archive(&mut rng);
-        for fmt in [FcFormat::Dense, FcFormat::Hac, FcFormat::Shac, FcFormat::Auto] {
+        for fmt in [
+            FcFormat::Fixed(FormatId::Dense),
+            FcFormat::Fixed(FormatId::Hac),
+            FcFormat::Fixed(FormatId::Shac),
+            FcFormat::Auto,
+        ] {
             let cfg = CompressionCfg { fc_format: fmt, ..Default::default() };
             let m =
                 CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
@@ -415,7 +462,7 @@ mod tests {
         let cfg = CompressionCfg {
             fc_quant: Some((Kind::Cws, 4)),
             unified: false,
-            fc_format: FcFormat::Dense,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
             ..Default::default()
         };
         let m = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
@@ -433,8 +480,20 @@ mod tests {
 
     #[test]
     fn fcformat_parse() {
-        assert_eq!(FcFormat::parse("shac"), Some(FcFormat::Shac));
+        assert_eq!(
+            FcFormat::parse("shac"),
+            Some(FcFormat::Fixed(FormatId::Shac))
+        );
         assert_eq!(FcFormat::parse("AUTO"), Some(FcFormat::Auto));
         assert_eq!(FcFormat::parse("zzz"), None);
+        // the registry's extension formats are selectable too
+        assert_eq!(
+            FcFormat::parse("lzac"),
+            Some(FcFormat::Fixed(FormatId::LzAc))
+        );
+        assert_eq!(
+            FcFormat::parse("dcri"),
+            Some(FcFormat::Fixed(FormatId::RelIdx))
+        );
     }
 }

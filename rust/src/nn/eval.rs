@@ -3,12 +3,11 @@
 //! formats, metric = accuracy (classification) or MSE (regression).
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
 
 use crate::io::{Archive, TestSet};
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
-use crate::runtime::{lit_f32, lit_i32, Engine};
+use crate::runtime::{lit_f32, lit_i32, Engine, Literal};
 use crate::util::timer::Stopwatch;
 
 /// Evaluation metric (paper Sect. V-C).

@@ -2,7 +2,26 @@
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
 //! This is the only place the `xla` crate is touched; Python never runs
 //! on the request path.
+//!
+//! The `xla` dependency is gated behind the `pjrt` cargo feature (it
+//! needs a vendored xla-rs + xla_extension, unavailable on plain
+//! toolchains). Without the feature a [`stub`] with the identical API
+//! surface is compiled instead: everything builds and the pure-Rust
+//! layers (formats, quantizers, store, pool) are fully usable, while
+//! PJRT entry points return a descriptive error at run time. Callers
+//! import `Engine` / `PjRtClient` / `Literal` from here, never from
+//! `xla` directly. See DESIGN.md §3.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{lit_f32, lit_i32, Engine};
+#[cfg(feature = "pjrt")]
+pub use xla::{Literal, PjRtClient};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{lit_f32, lit_i32, Engine, Literal, PjRtClient};

@@ -1,0 +1,80 @@
+//! Stub runtime used when the crate is built without the `pjrt`
+//! feature: the API surface of [`super::pjrt`] (engine, client, literal
+//! constructors) with every entry point returning a descriptive error at
+//! run time. This keeps the coordinator, harness, and tests compiling —
+//! and the format/quantizer layers fully usable — on machines without a
+//! vendored `xla` crate. See DESIGN.md §3.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+const MSG: &str = "built without the `pjrt` feature — PJRT execution \
+                   requires a vendored xla-rs (see DESIGN.md §3)";
+
+/// Opaque placeholder for `xla::Literal`; never constructed in stub
+/// builds (every constructor errors first).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!(MSG)
+    }
+}
+
+/// Opaque placeholder for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        bail!(MSG)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(_data: &[f32], _shape: &[i64]) -> Result<Literal> {
+    bail!(MSG)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(_data: &[i32], _shape: &[i64]) -> Result<Literal> {
+    bail!(MSG)
+}
+
+/// A compiled HLO artifact plus its parameter-order sidecar.
+pub struct Engine {
+    /// Input names, in the positional order the executable expects.
+    pub param_names: Vec<String>,
+    pub path: PathBuf,
+}
+
+impl Engine {
+    pub fn load(_client: &PjRtClient, hlo_path: impl AsRef<Path>) -> Result<Engine> {
+        bail!("cannot load {}: {MSG}", hlo_path.as_ref().display())
+    }
+
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Literal> {
+        bail!(MSG)
+    }
+
+    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        bail!(MSG)
+    }
+
+    pub fn run_borrowed(&self, _inputs: &[&Literal]) -> Result<Literal> {
+        bail!(MSG)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(lit_f32(&[1.0], &[1]).is_err());
+        let e = lit_i32(&[1], &[1]).unwrap_err();
+        assert!(format!("{e}").contains("pjrt"));
+    }
+}

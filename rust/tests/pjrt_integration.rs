@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use sham::formats::CompressedMatrix;
 use sham::nn::{evaluate, CompressedModel, Metric, ModelKind};
+use sham::formats::FormatId;
 use sham::nn::compressed::{CompressionCfg, FcFormat};
 use sham::quant::Kind;
 use sham::runtime::Engine;
@@ -44,7 +45,7 @@ fn vgg_mnist_baseline_matches_python() {
     let kind = ModelKind::VggMnist;
     let params = kind.load_weights(&art).unwrap();
     let test = kind.load_test_set(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
     let model = CompressedModel::baseline(kind, &params).unwrap();
     let (metric, _, _) = evaluate(&model, &engine, &test, 32, 1).unwrap();
@@ -62,7 +63,7 @@ fn dta_kiba_baseline_matches_python() {
     let kind = ModelKind::DtaKiba;
     let params = kind.load_weights(&art).unwrap();
     let test = kind.load_test_set(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
     let model = CompressedModel::baseline(kind, &params).unwrap();
     let (metric, _, _) = evaluate(&model, &engine, &test, 32, 1).unwrap();
@@ -80,7 +81,7 @@ fn compressed_vgg_stays_close_to_baseline() {
     let kind = ModelKind::VggMnist;
     let params = kind.load_weights(&art).unwrap();
     let test = kind.load_test_set(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
 
     let cfg = CompressionCfg {
@@ -119,7 +120,7 @@ fn finetuned_artifact_recovers_baseline_quality() {
     }
     let ft_params = sham::io::read_archive(&ft_path).unwrap();
     let test = kind.load_test_set(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
     let cfg = CompressionCfg { fc_format: FcFormat::Auto, ..Default::default() };
     let mut rng = Prng::seeded(3);
@@ -143,13 +144,13 @@ fn ws_head_artifact_runs_and_matches_rust_fc() {
     let Some(art) = artifacts() else { return };
     let kind = ModelKind::VggMnist;
     let params = kind.load_weights(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let head = Engine::load(&client, art.join("hlo/vgg_ws_head_b32_k64.hlo.txt")).unwrap();
 
     // Quantize FC weights to k=64 (IM form: codebook + indices).
     let cfg = CompressionCfg {
         fc_quant: Some((Kind::Cws, 64)),
-        fc_format: FcFormat::Im,
+        fc_format: FcFormat::Fixed(FormatId::IndexMap),
         ..Default::default()
     };
     let mut rng = Prng::seeded(9);
@@ -236,7 +237,7 @@ fn rust_reference_conv_matches_pjrt_features() {
                 }
             }
         };
-        let client = xla::PjRtClient::cpu().unwrap();
+        let client = sham::runtime::PjRtClient::cpu().unwrap();
         let engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
         let pjrt = sham::nn::eval::compute_features(
             &engine,
@@ -264,7 +265,7 @@ fn full_graph_agrees_with_features_plus_fc() {
     let kind = ModelKind::VggMnist;
     let params = kind.load_weights(&art).unwrap();
     let test = kind.load_test_set(&art).unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = sham::runtime::PjRtClient::cpu().unwrap();
     let feat_engine = Engine::load(&client, kind.features_hlo(&art, 32)).unwrap();
     let full_engine = Engine::load(&client, kind.full_hlo(&art, 32)).unwrap();
     let model = CompressedModel::baseline(kind, &params).unwrap();

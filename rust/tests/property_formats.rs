@@ -72,12 +72,11 @@ fn prop_all_formats_agree_on_structured_patterns() {
         let m = structured_matrix(rng.gen_range(5), rows, cols, rng);
         let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32).collect();
         let want = m.vecmat(&x);
+        // `all_formats` enumerates the whole FormatId registry, LzAc and
+        // RelIdx included — every entry must satisfy the same laws.
         for f in all_formats(&m) {
             check_fmt(&*f, &m, &x, &want)?;
         }
-        // LzAc is not in the Fig-1 suite but must satisfy the same laws
-        let lz = LzAc::compress(&m);
-        check_fmt(&lz, &m, &x, &want)?;
         Ok(())
     });
 }
@@ -93,6 +92,11 @@ pub fn check_fmt(
     }
     assert_allclose(&f.vecmat(x), want, 1e-4, 1e-4)
         .map_err(|e| format!("{}: {e}", f.name()))?;
+    // the allocation-free kernel must fully overwrite a dirty buffer
+    let mut dirty = vec![f32::NAN; m.cols];
+    f.vecmat_into(x, &mut dirty);
+    assert_allclose(&dirty, want, 1e-4, 1e-4)
+        .map_err(|e| format!("{}: dirty-buffer vecmat_into: {e}", f.name()))?;
     if f.size_bits() == 0 && m.numel() > 0 {
         return Err(format!("{}: zero size for non-empty matrix", f.name()));
     }
