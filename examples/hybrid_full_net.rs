@@ -53,7 +53,11 @@ fn main() -> anyhow::Result<()> {
             );
             // best = smallest psi not degrading the baseline materially
             let ok = delta >= -0.005;
-            if ok && best.as_ref().map_or(true, |(b, _)| psi < *b) {
+            let better = match &best {
+                None => true,
+                Some((b, _)) => psi < *b,
+            };
+            if ok && better {
                 best = Some((psi, format!("k={k},p={p:.0}")));
             }
         }

@@ -1,0 +1,242 @@
+//! Bench: conv execution on the compressed formats — the im2col-lowered
+//! pipeline (`nn::lowering`) against the dense triple-loop reference,
+//! per model family (VGG-like conv2d stack, DTA-like conv1d branches).
+//! A counting global allocator verifies the acceptance criterion that
+//! the conv hot path performs **zero heap allocations per call after
+//! warmup** (sequential path; the pooled path allocates its scope
+//! bookkeeping). Results land in `BENCH_compressed_conv.json`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sham::formats::{FormatId, Workspace};
+use sham::io::{Archive, Tensor};
+use sham::mat::Mat;
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::reference::plan_features;
+use sham::nn::{CompressedModel, ModelKind, PlanInput};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+use sham::util::stats::Summary;
+use sham::util::timer::{bench, black_box, fmt_ns};
+
+/// Counts every heap allocation so steady-state hot paths can prove
+/// they perform none.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Shape-consistent VGG-mini-like archive at the real benchmark dims
+/// (32×32×1 input → 4×4×32 → 512 features), weights pruned+quantized.
+fn vgg_archive(rng: &mut Prng) -> Archive {
+    let mut a = Archive::new();
+    let conv_dims = [
+        ("c1a", 1usize, 16usize),
+        ("c1b", 16, 16),
+        ("c2a", 16, 32),
+        ("c2b", 32, 32),
+        ("c3a", 32, 32),
+    ];
+    for (name, cin, cout) in conv_dims {
+        let w = Mat::sparse_quantized(3 * 3 * cin, cout, 0.25, 32, rng);
+        a.insert(
+            format!("{name}.w"),
+            Tensor::from_f32(vec![3, 3, cin, cout], &w.data),
+        );
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![cout], &vec![0.01; cout]));
+    }
+    for (name, &(nin, nout)) in ModelKind::VggMnist
+        .fc_names()
+        .iter()
+        .zip([(512usize, 128usize), (128, 64), (64, 10)].iter())
+    {
+        let w = Mat::sparse_quantized(nin, nout, 0.1, 32, rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+    }
+    a
+}
+
+/// DTA-mini-like archive (two embed→conv1d×3→global-max branches,
+/// 48 features per branch).
+fn dta_archive(rng: &mut Prng) -> Archive {
+    let mut a = Archive::new();
+    for branch in ["lig", "prot"] {
+        let (vocab, edim) = (32usize, 8usize);
+        let emb = Mat::gaussian(vocab, edim, 0.3, rng);
+        a.insert(
+            format!("{branch}_embed"),
+            Tensor::from_f32(vec![vocab, edim], &emb.data),
+        );
+        let mut cin = edim;
+        for (conv, cout) in [("c1", 16usize), ("c2", 32), ("c3", 48)] {
+            let w = Mat::sparse_quantized(5 * cin, cout, 0.3, 32, rng);
+            a.insert(
+                format!("{branch}_{conv}.w"),
+                Tensor::from_f32(vec![5, cin, cout], &w.data),
+            );
+            a.insert(
+                format!("{branch}_{conv}.b"),
+                Tensor::from_f32(vec![cout], &vec![0.01; cout]),
+            );
+            cin = cout;
+        }
+    }
+    for (name, &(nin, nout)) in ModelKind::DtaKiba
+        .fc_names()
+        .iter()
+        .zip([(96usize, 128usize), (128, 64), (64, 32), (32, 1)].iter())
+    {
+        let w = Mat::sparse_quantized(nin, nout, 0.1, 32, rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+    }
+    a
+}
+
+struct Row {
+    name: String,
+    summary: Summary,
+    steady_allocs: Option<u64>,
+}
+
+fn bench_model(
+    label: &str,
+    kind: ModelKind,
+    archive: &Archive,
+    input: &PlanInput<'_>,
+    rows: &mut Vec<Row>,
+) {
+    // dense-loop reference conv (the oracle) as the baseline
+    let s_ref = bench(2, 8, || {
+        black_box(plan_features(kind, archive, black_box(input)).unwrap());
+    });
+    println!(
+        "{:<40} {:>12} {:>12} {:>8}",
+        format!("{label}/dense_loop_reference"),
+        fmt_ns(s_ref.p50),
+        fmt_ns(s_ref.p95),
+        "-"
+    );
+    rows.push(Row {
+        name: format!("{label}/dense_loop_reference"),
+        summary: s_ref,
+        steady_allocs: None,
+    });
+    for fmt in [FormatId::Dense, FormatId::IndexMap, FormatId::Hac, FormatId::Shac] {
+        let cfg = CompressionCfg {
+            conv_format: FcFormat::Fixed(fmt),
+            fc_format: FcFormat::Fixed(fmt),
+            ..Default::default()
+        };
+        let mut rng = Prng::seeded(7);
+        let model = CompressedModel::build(kind, archive, &cfg, &mut rng).unwrap();
+        let mut ws = Workspace::new();
+        // warm up: grow every workspace buffer to steady-state shape
+        for _ in 0..2 {
+            model.conv_features_into(input, 1, &mut ws).unwrap();
+        }
+        // acceptance check: zero allocations across the whole warm
+        // window (raw delta — an average would floor away stragglers)
+        let before = allocs();
+        for _ in 0..5 {
+            black_box(model.conv_features_into(black_box(input), 1, &mut ws).unwrap());
+        }
+        let steady = allocs() - before;
+        let s = bench(1, 8, || {
+            black_box(model.conv_features_into(black_box(input), 1, &mut ws).unwrap());
+        });
+        println!(
+            "{:<40} {:>12} {:>12} {:>8}",
+            format!("{label}/im2col_{fmt}"),
+            fmt_ns(s.p50),
+            fmt_ns(s.p95),
+            format!("{steady}"),
+        );
+        rows.push(Row {
+            name: format!("{label}/im2col_{fmt}"),
+            summary: s,
+            steady_allocs: Some(steady),
+        });
+    }
+}
+
+fn main() {
+    let batch = 8usize;
+    println!("# compressed_conv — im2col-lowered conv vs dense loops, batch={batch}");
+    println!(
+        "{:<40} {:>12} {:>12} {:>8}",
+        "variant", "median", "p95", "allocs"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+
+    let mut rng = Prng::seeded(0xC0417);
+    let vgg = vgg_archive(&mut rng);
+    let images: Vec<f32> =
+        (0..batch * 32 * 32).map(|_| rng.normal() as f32).collect();
+    let vgg_input =
+        PlanInput::Images { n: batch, h: 32, w: 32, c: 1, data: &images };
+    bench_model("vgg", ModelKind::VggMnist, &vgg, &vgg_input, &mut rows);
+
+    let dta = dta_archive(&mut rng);
+    let (llen, plen) = (64usize, 96usize);
+    let lig: Vec<i32> = (0..batch * llen).map(|i| (i % 32) as i32).collect();
+    let prot: Vec<i32> = (0..batch * plen).map(|i| ((i * 7) % 32) as i32).collect();
+    let dta_input = PlanInput::Tokens { n: batch, lig: &lig, prot: &prot };
+    bench_model("dta", ModelKind::DtaKiba, &dta, &dta_input, &mut rows);
+
+    let zero_alloc_ok = rows.iter().all(|r| r.steady_allocs.unwrap_or(0) == 0);
+    println!(
+        "\nsteady-state conv hot path allocation-free: {}",
+        if zero_alloc_ok { "YES" } else { "NO (regression!)" }
+    );
+
+    // hand-rolled JSON (no serde in the offline registry)
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"compressed_conv\",\n");
+    json.push_str(&format!("  \"batch\": {batch},\n"));
+    json.push_str(&format!("  \"steady_state_alloc_free\": {zero_alloc_ok},\n"));
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let allocs = r
+            .steady_allocs
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        json.push_str(&format!(
+            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}, \"steady_allocs\": {}}}{}\n",
+            r.name,
+            r.summary.p50,
+            r.summary.p95,
+            r.summary.mean,
+            allocs,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_compressed_conv.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

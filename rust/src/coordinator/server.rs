@@ -1,7 +1,10 @@
 //! The inference server: a router over model variants, each with its own
-//! dynamic-batching worker thread that owns a PJRT engine (engines are
-//! not `Send`, so each worker constructs its own client + executable).
-//! Python never runs here — the artifacts are self-contained.
+//! dynamic-batching worker thread. A variant's worker either owns a PJRT
+//! engine for the conv front-end (engines are not `Send`, so each worker
+//! constructs its own client + executable) or runs the whole network on
+//! the pure-Rust lowered-conv pipeline ([`Server::add_variant_pure`]) —
+//! full compressed serving with zero PJRT dependency. Python never runs
+//! here — the artifacts are self-contained.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -15,8 +18,19 @@ use crate::coordinator::metrics::Metrics;
 use crate::formats::{pool, Workspace};
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
+use crate::nn::lowering::PlanInput;
+use crate::nn::model::{BranchInput, Step};
 use crate::io::TestSet;
 use crate::runtime::{lit_f32, lit_i32, Engine, Literal, PjRtClient};
+
+/// How a variant executes its conv front-end.
+enum Backend {
+    /// AOT-compiled HLO through a per-worker PJRT engine.
+    Pjrt(PathBuf),
+    /// The whole network on the compressed formats (im2col lowering) —
+    /// no engine, no artifacts beyond the weights.
+    Pure,
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -67,6 +81,22 @@ impl Server {
         model: CompressedModel,
         features_hlo: PathBuf,
     ) -> Result<()> {
+        self.add_variant_backend(name, model, Backend::Pjrt(features_hlo))
+    }
+
+    /// Register a *pure-Rust* full-network variant: conv layers execute
+    /// on their lowered compressed matrices (im2col pipeline), FC on the
+    /// compressed stack — serving with zero PJRT dependency.
+    pub fn add_variant_pure(&mut self, name: &str, model: CompressedModel) -> Result<()> {
+        self.add_variant_backend(name, model, Backend::Pure)
+    }
+
+    fn add_variant_backend(
+        &mut self,
+        name: &str,
+        model: CompressedModel,
+        backend: Backend,
+    ) -> Result<()> {
         if self.variants.contains_key(name) {
             bail!("variant `{name}` already registered");
         }
@@ -78,9 +108,15 @@ impl Server {
         let worker = std::thread::Builder::new()
             .name(format!("sham-worker-{name}"))
             .spawn(move || {
-                if let Err(e) =
-                    worker_loop(model, &features_hlo, rx, policy, metrics, fc_threads)
-                {
+                let r = match backend {
+                    Backend::Pjrt(hlo) => {
+                        worker_loop(model, &hlo, rx, policy, metrics, fc_threads)
+                    }
+                    Backend::Pure => {
+                        worker_loop_pure(model, rx, policy, metrics, fc_threads)
+                    }
+                };
+                if let Err(e) = r {
                     eprintln!("worker `{vname}` exited with error: {e:#}");
                 }
             })
@@ -143,7 +179,6 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     fc_threads: usize,
 ) -> Result<()> {
-    use std::sync::atomic::Ordering;
     let client = PjRtClient::cpu().context("create PJRT client")?;
     let engine = Engine::load(&client, features_hlo)?;
     let feat_dim = model.kind.feature_dim();
@@ -179,26 +214,166 @@ fn worker_loop(
             &model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
             &mut ws,
         );
-        match result {
-            Ok(outputs) => {
-                for (i, req) in reqs.iter().enumerate() {
-                    let row = outputs.row(i).to_vec();
-                    let _ = req.resp.send(Ok(row));
-                    metrics.responses_total.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_latency_ns(
-                        req.enqueued.elapsed().as_nanos() as f64,
-                    );
-                }
+        answer_batch(&reqs, result, &metrics);
+    }
+    Ok(())
+}
+
+/// Grow-only per-worker buffers for the pure backend: the forward
+/// workspace plus the contiguous input-assembly buffers, so steady-state
+/// batches marshal requests with zero per-batch allocations too.
+struct PureScratch {
+    ws: Workspace,
+    imgs: Vec<f32>,
+    lig: Vec<i32>,
+    prot: Vec<i32>,
+}
+
+/// Per-variant worker for the pure-Rust backend: no engine, no
+/// artifacts — batches run end-to-end on the compressed formats into the
+/// worker's reusable workspace.
+fn worker_loop_pure(
+    model: CompressedModel,
+    rx: std::sync::mpsc::Receiver<Request>,
+    policy: Policy,
+    metrics: Arc<Metrics>,
+    fc_threads: usize,
+) -> Result<()> {
+    let mut scratch = PureScratch {
+        ws: Workspace::new(),
+        imgs: Vec::new(),
+        lig: Vec::new(),
+        prot: Vec::new(),
+    };
+    while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+        metrics.record_batch(reqs.len());
+        let result = run_batch_pure(&model, &reqs, fc_threads, &mut scratch);
+        answer_batch(&reqs, result, &metrics);
+    }
+    Ok(())
+}
+
+/// Fan one batch result out to its requests (per-request rows on
+/// success, a shared error otherwise).
+fn answer_batch(reqs: &[Request], result: Result<&Mat>, metrics: &Metrics) {
+    use std::sync::atomic::Ordering;
+    match result {
+        Ok(outputs) => {
+            for (i, req) in reqs.iter().enumerate() {
+                let row = outputs.row(i).to_vec();
+                let _ = req.resp.send(Ok(row));
+                metrics.responses_total.fetch_add(1, Ordering::Relaxed);
+                metrics.record_latency_ns(req.enqueued.elapsed().as_nanos() as f64);
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in &reqs {
-                    let _ = req.resp.send(Err(anyhow!("{msg}")));
-                }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in reqs {
+                let _ = req.resp.send(Err(anyhow!("{msg}")));
             }
         }
     }
-    Ok(())
+}
+
+/// Execute one formed batch entirely in Rust: assemble contiguous input
+/// buffers (no padding — the pure pipeline handles any batch size),
+/// then run the compressed conv→FC forward into the worker's workspace.
+fn run_batch_pure<'w>(
+    model: &CompressedModel,
+    reqs: &[Request],
+    fc_threads: usize,
+    scratch: &'w mut PureScratch,
+) -> Result<&'w Mat> {
+    let PureScratch { ref mut ws, ref mut imgs, ref mut lig, ref mut prot } =
+        *scratch;
+    let n = reqs.len();
+    anyhow::ensure!(n > 0, "empty batch");
+    match &reqs[0].input {
+        Input::Image(v0) => {
+            let plan = model.kind.layer_plan();
+            anyhow::ensure!(
+                matches!(
+                    plan.branches.first().map(|b| b.input),
+                    Some(BranchInput::Images)
+                ),
+                "variant expects token inputs, got an image"
+            );
+            // derive the expected square NHWC geometry from the model
+            // itself (works for real and synthetic dims alike): the
+            // flatten dim is (side/2^pools)² · cout_last, cin comes from
+            // the first conv layer.
+            let c = model.conv.first().map(|l| l.cin).unwrap_or(1);
+            let cout = model.conv.last().map(|l| l.cout).unwrap_or(1);
+            anyhow::ensure!(!model.fc.is_empty(), "model has no FC layers");
+            let feat_dim = model.fc[0].w.rows();
+            let pools = plan.branches[0]
+                .steps
+                .iter()
+                .filter(|s| matches!(s, Step::MaxPool2))
+                .count() as u32;
+            anyhow::ensure!(cout > 0 && feat_dim % cout == 0, "inconsistent model dims");
+            let spatial = feat_dim / cout;
+            let small = (spatial as f64).sqrt().round() as usize;
+            anyhow::ensure!(small * small == spatial, "inconsistent model dims");
+            let side = small << pools;
+            let per = v0.len();
+            anyhow::ensure!(
+                per == side * side * c,
+                "image payload is {per} floats, this variant expects {side}x{side}x{c}"
+            );
+            imgs.resize(n * per, 0.0);
+            for (r, req) in reqs.iter().enumerate() {
+                match &req.input {
+                    Input::Image(v) => {
+                        anyhow::ensure!(v.len() == per, "ragged image input");
+                        imgs[r * per..(r + 1) * per].copy_from_slice(v);
+                    }
+                    _ => bail!("mixed input kinds in batch"),
+                }
+            }
+            let input = PlanInput::Images {
+                n,
+                h: side,
+                w: side,
+                c,
+                data: &imgs[..n * per],
+            };
+            model.forward_into(&input, fc_threads, ws)
+        }
+        Input::Tokens { lig: l0, prot: p0 } => {
+            let plan = model.kind.layer_plan();
+            anyhow::ensure!(
+                !matches!(
+                    plan.branches.first().map(|b| b.input),
+                    Some(BranchInput::Images)
+                ),
+                "variant expects image inputs, got tokens"
+            );
+            let (lp, pp) = (l0.len(), p0.len());
+            anyhow::ensure!(lp > 0 && pp > 0, "empty token sequence");
+            lig.resize(n * lp, 0);
+            prot.resize(n * pp, 0);
+            for (r, req) in reqs.iter().enumerate() {
+                match &req.input {
+                    Input::Tokens { lig: lv, prot: pv } => {
+                        anyhow::ensure!(
+                            lv.len() == lp && pv.len() == pp,
+                            "ragged token input"
+                        );
+                        lig[r * lp..(r + 1) * lp].copy_from_slice(lv);
+                        prot[r * pp..(r + 1) * pp].copy_from_slice(pv);
+                    }
+                    _ => bail!("mixed input kinds in batch"),
+                }
+            }
+            let input = PlanInput::Tokens {
+                n,
+                lig: &lig[..n * lp],
+                prot: &prot[..n * pp],
+            };
+            model.forward_into(&input, fc_threads, ws)
+        }
+    }
 }
 
 /// Execute one formed batch: assemble padded inputs → PJRT features →

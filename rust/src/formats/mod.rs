@@ -253,17 +253,39 @@ pub trait CompressedMatrix: Send + Sync {
     }
 }
 
-/// Reusable buffers for the serving hot path: a grow-only activation
-/// ping-pong pair used by `CompressedModel::fc_forward_into` so the FC
-/// stack performs zero per-call output allocations in steady state.
+/// Reusable buffers for the serving hot path, all grow-only:
+///
+/// - `a` / `b` — the FC activation ping-pong pair used by
+///   `CompressedModel::fc_forward_into`;
+/// - `patches` — the im2col patch matrix of the lowered conv pipeline
+///   (`nn::lowering`);
+/// - `act_a` / `act_b` — the conv activation ping-pong pair (NHWC
+///   flattened to `(n·h·w) × c`);
+/// - `feats` — the feature matrix the conv front-end hands to the FC
+///   stack.
+///
+/// Passing the same `Workspace` every call makes an entire end-to-end
+/// forward (conv → pool → flatten → FC) perform zero per-call output
+/// allocations in steady state.
 pub struct Workspace {
     pub(crate) a: Mat,
     pub(crate) b: Mat,
+    pub(crate) patches: Mat,
+    pub(crate) act_a: Mat,
+    pub(crate) act_b: Mat,
+    pub(crate) feats: Mat,
 }
 
 impl Workspace {
     pub fn new() -> Workspace {
-        Workspace { a: Mat::zeros(0, 0), b: Mat::zeros(0, 0) }
+        Workspace {
+            a: Mat::zeros(0, 0),
+            b: Mat::zeros(0, 0),
+            patches: Mat::zeros(0, 0),
+            act_a: Mat::zeros(0, 0),
+            act_b: Mat::zeros(0, 0),
+            feats: Mat::zeros(0, 0),
+        }
     }
 }
 

@@ -70,6 +70,23 @@ impl Stored {
         self.as_compressed().id()
     }
 
+    /// Move the stored instance out as a boxed [`CompressedMatrix`] —
+    /// the loaded format becomes directly executable (no recompression).
+    pub fn into_compressed(self) -> Box<dyn CompressedMatrix> {
+        match self {
+            Stored::Dense(f) => Box::new(f),
+            Stored::Csc(f) => Box::new(f),
+            Stored::Csr(f) => Box::new(f),
+            Stored::Coo(f) => Box::new(f),
+            Stored::IndexMap(f) => Box::new(f),
+            Stored::Cla(f) => Box::new(f),
+            Stored::Hac(f) => Box::new(f),
+            Stored::Shac(f) => Box::new(f),
+            Stored::LzAc(f) => Box::new(f),
+            Stored::RelIdx(f) => Box::new(f),
+        }
+    }
+
     fn tag(&self) -> u8 {
         self.id().tag()
     }

@@ -35,19 +35,27 @@ Single-configuration evaluation:
   eval --net <mnist|cifar|kiba|davis> [--prune P] [--quant cws|pws|uq|ecsq]
        [--k K] [--conv-quant <q>] [--conv-k K] [--conv-prune P]
        [--format dense|csc|csr|coo|im|cla|hac|shac|lzac|dcri|auto] [--per-layer]
-                      compress one model and report perf + occupancy
+       [--conv-format <fmt>] [--pure]
+                      compress one model and report perf + occupancy;
+                      --pure runs conv+FC entirely on the compressed
+                      formats (im2col lowering, zero PJRT dependency)
 
 On-disk compressed models:
   compress --net <bench> [--prune P] [--quant q --k K] [--format auto]
+           [--conv-quant q --conv-k K] [--conv-prune P] [--conv-format <fmt>]
            --out model.sham
-                      compress a trained model into a .sham container
-                      (every registry format can be stored: dense, csc,
-                      csr, coo, im, cla, hac, shac, lzac, dcri)
+                      compress a trained model into a .sham container —
+                      FC *and lowered conv* matrices in any registry
+                      format (dense, csc, csr, coo, im, cla, hac, shac,
+                      lzac, dcri), reloadable as an executable model
   inspect <file.sham> list container entries, formats, and sizes
 
 Serving:
-  serve [--addr 127.0.0.1:7410] [--variants baseline,compressed]
-                      run the batching inference server over TCP
+  serve [--addr 127.0.0.1:7410] [--pure]
+                      run the batching inference server over TCP; every
+                      benchmark gets a `<ds>-full` pure-Rust compressed
+                      variant (conv included); --pure skips the
+                      PJRT-backed variants entirely
 
 Common options:
   --artifacts <dir>   artifacts directory (default: artifacts/ or $SHAM_ARTIFACTS)
@@ -83,6 +91,54 @@ fn artifacts_dir(flags: &Flags) -> PathBuf {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(crate::nn::model::artifacts_dir)
+}
+
+/// Parse a quantizer flag pair (`--quant`/`--k` or `--conv-quant`/
+/// `--conv-k`); an unknown quantizer name or malformed k is an error,
+/// not a silent no-op.
+fn quant_flags(
+    flags: &Flags,
+    qname: &str,
+    kname: &str,
+) -> Result<Option<(crate::quant::Kind, usize)>> {
+    match flags.get(qname) {
+        None => Ok(None),
+        Some(q) => {
+            let qk = crate::quant::Kind::parse(&q)
+                .ok_or_else(|| anyhow::anyhow!("unknown quantizer `{q}`"))?;
+            let k = match flags.get(kname) {
+                None => 32usize,
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{kname} must be an integer, got `{s}`"))?,
+            };
+            Ok(Some((qk, k)))
+        }
+    }
+}
+
+/// Parse a `--format`-style flag; an unknown format name is an error.
+fn format_flag(
+    flags: &Flags,
+    name: &str,
+    default: crate::nn::compressed::FcFormat,
+) -> Result<crate::nn::compressed::FcFormat> {
+    match flags.get(name) {
+        None => Ok(default),
+        Some(s) => crate::nn::compressed::FcFormat::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown format `{s}` for --{name}")),
+    }
+}
+
+/// Parse a numeric percentile flag; a malformed value is an error.
+fn prune_flag(flags: &Flags, name: &str) -> Result<Option<f64>> {
+    match flags.get(name) {
+        None => Ok(None),
+        Some(s) => s
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number, got `{s}`")),
+    }
 }
 
 fn emit(table: &crate::harness::tables::Table, flags: &Flags) -> Result<()> {
@@ -229,7 +285,6 @@ fn print_bounds() {
 
 fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
     use crate::nn::compressed::{CompressionCfg, FcFormat};
-    use crate::quant::Kind;
 
     let art = artifacts_dir(flags);
     if !art.join("manifest.txt").exists() {
@@ -239,31 +294,41 @@ fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
         .get("net")
         .and_then(|s| ModelKind::parse(&s))
         .ok_or_else(|| anyhow::anyhow!("--net is required (mnist|cifar|kiba|davis)"))?;
-    let parse_q = |name: &str, kname: &str| -> Result<Option<(Kind, usize)>> {
-        match flags.get(name) {
-            None => Ok(None),
-            Some(q) => {
-                let qk = Kind::parse(&q)
-                    .ok_or_else(|| anyhow::anyhow!("unknown quantizer `{q}`"))?;
-                let k = flags
-                    .get(kname)
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(32usize);
-                Ok(Some((qk, k)))
-            }
-        }
-    };
     let cfg = CompressionCfg {
-        fc_prune: flags.get("prune").and_then(|s| s.parse().ok()),
-        fc_quant: parse_q("quant", "k")?,
-        conv_quant: parse_q("conv-quant", "conv-k")?,
-        conv_prune: flags.get("conv-prune").and_then(|s| s.parse().ok()),
+        fc_prune: prune_flag(flags, "prune")?,
+        fc_quant: quant_flags(flags, "quant", "k")?,
+        conv_quant: quant_flags(flags, "conv-quant", "conv-k")?,
+        conv_prune: prune_flag(flags, "conv-prune")?,
         unified: !flags.has("per-layer"),
-        fc_format: flags
-            .get("format")
-            .and_then(|s| FcFormat::parse(&s))
-            .unwrap_or(FcFormat::Auto),
+        fc_format: format_flag(flags, "format", FcFormat::Auto)?,
+        // executable conv format defaults to dense, matching compress:
+        // Auto on unquantized conv weights would entropy-code one
+        // symbol per distinct f32 and crawl
+        conv_format: format_flag(
+            flags,
+            "conv-format",
+            FcFormat::Fixed(crate::formats::FormatId::Dense),
+        )?,
     };
+    if flags.has("pure") {
+        // end-to-end on the compressed formats — no PJRT engine, no Ctx
+        use crate::nn::CompressedModel;
+        use crate::util::prng::Prng;
+        let params = kind.load_weights(&art)?;
+        let test = kind.load_test_set(&art)?;
+        let mut rng = Prng::seeded(0xE7A1);
+        let model = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
+        let (psi_fc, psi_total) = (model.psi_fc(), model.psi_total());
+        let (m, secs) = crate::nn::evaluate_pure(&model, &test, 32, threads)?;
+        println!("benchmark : {} (pure-Rust compressed pipeline)", kind.name());
+        println!("compressed: {m}  ({secs:.3}s end-to-end)");
+        println!("ψ_fc      : {psi_fc:.4}  ({:.1}× smaller FC block)", 1.0 / psi_fc);
+        println!(
+            "ψ_total   : {psi_total:.4}  ({:.1}× smaller whole net)",
+            1.0 / psi_total
+        );
+        return Ok(());
+    }
     let mut ctx = experiments::Ctx::new(art, threads)?;
     let base = ctx.baseline(kind)?;
     let (m, psi_fc, psi_total) = ctx.eval(kind, &cfg, 0xE7A1)?;
@@ -279,11 +344,8 @@ fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
 }
 
 fn compress_cmd(flags: &Flags) -> Result<()> {
-    use crate::formats::store::{save, to_stored, Stored};
-    use crate::formats::Dense;
     use crate::nn::compressed::{CompressionCfg, FcFormat};
     use crate::nn::CompressedModel;
-    use crate::quant::Kind;
     use crate::util::prng::Prng;
 
     let art = artifacts_dir(flags);
@@ -295,52 +357,26 @@ fn compress_cmd(flags: &Flags) -> Result<()> {
         .get("out")
         .unwrap_or_else(|| format!("{}.sham", kind.name()));
     let cfg = CompressionCfg {
-        fc_prune: flags.get("prune").and_then(|s| s.parse().ok()),
-        fc_quant: flags.get("quant").and_then(|q| {
-            Kind::parse(&q).map(|qk| {
-                (qk, flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(32))
-            })
-        }),
-        fc_format: flags
-            .get("format")
-            .and_then(|s| FcFormat::parse(&s))
-            .unwrap_or(FcFormat::Auto),
+        fc_prune: prune_flag(flags, "prune")?,
+        fc_quant: quant_flags(flags, "quant", "k")?,
+        conv_quant: quant_flags(flags, "conv-quant", "conv-k")?,
+        conv_prune: prune_flag(flags, "conv-prune")?,
+        fc_format: format_flag(flags, "format", FcFormat::Auto)?,
+        // executable conv format defaults to dense (Auto on unquantized
+        // conv weights would entropy-code one symbol per distinct f32)
+        conv_format: format_flag(
+            flags,
+            "conv-format",
+            FcFormat::Fixed(crate::formats::FormatId::Dense),
+        )?,
         ..Default::default()
     };
     let params = kind.load_weights(&art)?;
     let mut rng = Prng::seeded(0xC0);
     let model = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
-    let mut entries: Vec<(String, Stored)> = Vec::new();
-    for layer in &model.fc {
-        let w = layer.w.decompress();
-        entries.push((format!("{}.w", layer.name), to_stored(&w, layer.w.as_ref())));
-        entries.push((
-            format!("{}.b", layer.name),
-            Stored::Dense(Dense::from_mat(crate::Mat::from_vec(
-                1,
-                layer.b.len(),
-                layer.b.clone(),
-            ))),
-        ));
-    }
-    // conv + remaining tensors stay dense in the container
-    for (name, t) in model.params.iter() {
-        if model.fc.iter().any(|l| name.starts_with(&format!("{}.", l.name))) {
-            continue;
-        }
-        if t.shape.len() >= 1 && t.dtype == crate::io::Dtype::F32 {
-            let flat = t.as_f32()?;
-            entries.push((
-                name.clone(),
-                Stored::Dense(Dense::from_mat(crate::Mat::from_vec(
-                    1,
-                    flat.len(),
-                    flat,
-                ))),
-            ));
-        }
-    }
-    save(&out, &entries)?;
+    // whole model — FC and lowered conv matrices in their compressed
+    // formats — through the .sham container; reloadable with load_sham
+    model.save_sham(&out)?;
     let disk = std::fs::metadata(&out)?.len();
     let dense_bytes: u64 = model
         .params
@@ -348,12 +384,12 @@ fn compress_cmd(flags: &Flags) -> Result<()> {
         .map(|t| t.numel() as u64 * 4)
         .sum();
     println!(
-        "wrote {out}: {} entries, {} on disk vs {} dense ({:.1}x smaller), ψ_fc={:.4}",
-        entries.len(),
+        "wrote {out}: {} on disk vs {} dense ({:.1}x smaller), ψ_fc={:.4}, ψ_total={:.4}",
         crate::util::timer::fmt_bytes(disk as f64),
         crate::util::timer::fmt_bytes(dense_bytes as f64),
         dense_bytes as f64 / disk as f64,
         model.psi_fc(),
+        model.psi_total(),
     );
     Ok(())
 }
@@ -402,27 +438,44 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         fc_threads: threads,
     };
     let mut server = Server::new(cfg);
+    let pure_only = flags.has("pure");
     for kind in ModelKind::ALL {
         let params = kind.load_weights(&art)?;
-        let baseline = CompressedModel::baseline(kind, &params)?;
-        server.add_variant(
-            &format!("{}-baseline", kind.dataset()),
-            baseline,
-            kind.features_hlo(&art, 32),
-        )?;
-        let ccfg = CompressionCfg {
+        if !pure_only {
+            let baseline = CompressedModel::baseline(kind, &params)?;
+            server.add_variant(
+                &format!("{}-baseline", kind.dataset()),
+                baseline,
+                kind.features_hlo(&art, 32),
+            )?;
+            let ccfg = CompressionCfg {
+                fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
+                fc_quant: Some((Kind::Cws, 32)),
+                fc_format: FcFormat::Auto,
+                ..Default::default()
+            };
+            let mut rng = Prng::seeded(42);
+            let compressed = CompressedModel::build(kind, &params, &ccfg, &mut rng)?;
+            server.add_variant(
+                &format!("{}-compressed", kind.dataset()),
+                compressed,
+                kind.features_hlo(&art, 32),
+            )?;
+        }
+        // full-network compressed variant on the pure-Rust im2col
+        // pipeline: conv quantized + lowered, FC pruned+quantized —
+        // serves with zero PJRT dependency
+        let fcfg = CompressionCfg {
+            conv_quant: Some((Kind::Cws, 32)),
+            conv_format: FcFormat::Auto,
             fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
             fc_quant: Some((Kind::Cws, 32)),
             fc_format: FcFormat::Auto,
             ..Default::default()
         };
-        let mut rng = Prng::seeded(42);
-        let compressed = CompressedModel::build(kind, &params, &ccfg, &mut rng)?;
-        server.add_variant(
-            &format!("{}-compressed", kind.dataset()),
-            compressed,
-            kind.features_hlo(&art, 32),
-        )?;
+        let mut rng = Prng::seeded(43);
+        let full = CompressedModel::build(kind, &params, &fcfg, &mut rng)?;
+        server.add_variant_pure(&format!("{}-full", kind.dataset()), full)?;
     }
     println!("variants: {:?}", server.variant_names());
     let server = Arc::new(server);

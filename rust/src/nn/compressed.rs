@@ -1,10 +1,11 @@
-//! Compressed model container: conv tensors stored under index-map
-//! accounting (the paper's choice for conv layers, Sect. V-K), FC
-//! matrices under any [`CompressedMatrix`] format, and the full
-//! compression pipeline (prune → quantize → store) as a reusable
-//! configuration ([`CompressionCfg`]).
+//! Compressed model container: conv layers held as *executable* lowered
+//! [`CompressedMatrix`] weights (im2col pipeline, DESIGN.md §6) with the
+//! paper's index-map accounting kept as the Sect. V-K size baseline, FC
+//! matrices under any format, the full compression pipeline
+//! (prune → quantize → lower → store) as a reusable configuration
+//! ([`CompressionCfg`]), and whole-model `.sham` persistence.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::formats::{
     par_matmul_into, CompressedMatrix, FormatId, Hac, Shac, Workspace,
@@ -12,7 +13,8 @@ use crate::formats::{
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::io::{Archive, Tensor};
 use crate::mat::Mat;
-use crate::nn::model::ModelKind;
+use crate::nn::lowering::{self, bias_act, ActView, PlanInput};
+use crate::nn::model::{BranchInput, ModelKind, Step};
 use crate::quant::{self, Kind, Options};
 use crate::util::prng::Prng;
 
@@ -74,6 +76,28 @@ pub struct FcLayer {
     pub b: Vec<f32>,
 }
 
+/// One conv layer lowered to an executable compressed matrix:
+/// `w` is `(kh·kw·cin) × cout` (`kh = 1` for conv1d), multiplied
+/// against im2col patches by the lowered pipeline (`nn::lowering`).
+pub struct ConvLayer {
+    pub name: String,
+    pub w: Box<dyn CompressedMatrix>,
+    pub b: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// A dense embedding table for token branches (row lookup, not matmul —
+/// kept dense, charged at word size like the paper's remaining
+/// parameters).
+pub struct EmbedTable {
+    pub name: String,
+    pub dim: usize,
+    pub table: Vec<f32>,
+}
+
 /// A full compression experiment configuration (one cell of the paper's
 /// grids).
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +114,11 @@ pub struct CompressionCfg {
     pub unified: bool,
     /// Storage format for FC matrices.
     pub fc_format: FcFormat,
+    /// Executable storage format for the *lowered* conv matrices (the
+    /// im2col pipeline). Size accounting stays on the paper's index-map
+    /// baseline regardless; this only selects what the pure-Rust conv
+    /// forward multiplies against. Defaults to dense.
+    pub conv_format: FcFormat,
 }
 
 impl Default for CompressionCfg {
@@ -101,19 +130,53 @@ impl Default for CompressionCfg {
             conv_prune: None,
             unified: true,
             fc_format: FcFormat::Auto,
+            conv_format: FcFormat::Fixed(FormatId::Dense),
         }
     }
 }
 
-/// Apply bias + (except on the last layer) ReLU to every row of `y`.
-fn bias_relu(y: &mut Mat, bias: &[f32], is_last: bool) {
-    let cols = y.cols;
-    for r in 0..y.rows {
-        let row = &mut y.data[r * cols..(r + 1) * cols];
-        for (v, b) in row.iter_mut().zip(bias.iter()) {
-            let s = *v + *b;
-            *v = if is_last { s } else { s.max(0.0) };
+/// Run the FC stack reading `feats`, ping-ponging activations between
+/// the grow-only buffers `a` and `b` (layer 0 writes `a`). Returns
+/// whether the last layer's output landed in `a`.
+fn fc_stack_into(fc: &[FcLayer], feats: &Mat, threads: usize, a: &mut Mat, b: &mut Mat) -> bool {
+    assert!(!fc.is_empty(), "model has no FC layers");
+    let last = fc.len() - 1;
+    let mut dst_is_a = true;
+    for (li, layer) in fc.iter().enumerate() {
+        let (src, dst): (&Mat, &mut Mat) = if li == 0 {
+            (feats, &mut *a)
+        } else if dst_is_a {
+            (&*b, &mut *a)
+        } else {
+            (&*a, &mut *b)
+        };
+        if threads > 1 && src.rows > 1 {
+            par_matmul_into(layer.w.as_ref(), src, dst, threads);
+        } else {
+            layer.w.matmul_batch_into(src, dst);
         }
+        bias_act(dst, &layer.b, li != last);
+        dst_is_a = !dst_is_a;
+    }
+    // `dst_is_a` was flipped after the last layer: the result lives in
+    // `a` exactly when the flag now reads false.
+    !dst_is_a
+}
+
+/// The paper's conv storage accounting (Sect. V-K): index map when
+/// quantized, CSC on the flattened tensor when only pruned, dense
+/// otherwise. Shared by [`CompressedModel::build`] and `.sham` reload.
+fn conv_weight_bits(vals: &[f32], quantized: bool, pruned: bool) -> u64 {
+    let numel = vals.len() as u64;
+    if quantized {
+        // index-map accounting: b̄ bits/entry + codebook
+        let distinct = crate::util::stats::distinct_count(vals).max(1) as u64;
+        index_map_pointer_bits(distinct) * numel + distinct * WORD_BITS
+    } else if pruned {
+        let q = vals.iter().filter(|&&v| v != 0.0).count() as u64;
+        (2 * q + 2) * WORD_BITS
+    } else {
+        numel * WORD_BITS
     }
 }
 
@@ -124,11 +187,20 @@ pub struct CompressedModel {
     /// possibly pruned/quantized; FC entries present but unused there).
     pub params: Archive,
     pub fc: Vec<FcLayer>,
+    /// Conv layers as executable lowered compressed matrices, in layer
+    /// plan order — the pure-Rust conv front-end runs on these.
+    pub conv: Vec<ConvLayer>,
+    /// Dense embedding tables for token branches (empty for VGG).
+    pub embeds: Vec<EmbedTable>,
     /// Storage bits charged for the conv tensors (index map when
     /// quantized, dense otherwise) + all non-FC parameters.
     pub conv_bits: u64,
     conv_dense_bits: u64,
     fc_dense_bits: u64,
+    /// Conv pipeline flags recorded for the accounting rule (needed to
+    /// re-derive `conv_bits` after a `.sham` round-trip).
+    conv_quantized: bool,
+    conv_pruned: bool,
 }
 
 impl CompressedModel {
@@ -200,7 +272,9 @@ impl CompressedModel {
         // biases stay dense: charge them at word size on top of the
         // format's matrix bits (done in fc_bits()).
 
-        // --- conv pipeline: prune and/or quantize; stored as index map
+        // --- conv pipeline: prune and/or quantize, then lower each
+        // tensor to an executable (kh·kw·cin, cout) compressed matrix.
+        // Size accounting stays on the paper's index-map baseline.
         let conv_names = kind.conv_names();
         let mut conv_bits = 0u64;
         let mut conv_dense_bits = 0u64;
@@ -234,21 +308,54 @@ impl CompressedModel {
                 *vals = qm.data;
             }
         }
-        for (key, shape, vals) in conv_vals {
-            let numel = vals.len() as u64;
-            conv_dense_bits += numel * WORD_BITS;
-            conv_bits += if cfg.conv_quant.is_some() {
-                // index-map accounting: b̄ bits/entry + codebook
-                let distinct = crate::util::stats::distinct_count(&vals).max(1) as u64;
-                index_map_pointer_bits(distinct) * numel + distinct * WORD_BITS
-            } else if cfg.conv_prune.is_some() {
-                // CSC accounting on the flattened tensor
-                let q = vals.iter().filter(|&&v| v != 0.0).count() as u64;
-                (2 * q + 2) * WORD_BITS
-            } else {
-                numel * WORD_BITS
+        let mut conv = Vec::with_capacity(conv_names.len());
+        for ((key, shape, vals), name) in conv_vals.into_iter().zip(conv_names.iter()) {
+            conv_dense_bits += vals.len() as u64 * WORD_BITS;
+            conv_bits +=
+                conv_weight_bits(&vals, cfg.conv_quant.is_some(), cfg.conv_prune.is_some());
+            let (lowered, kh, kw, cin, cout) = match shape.len() {
+                4 => (
+                    lowering::lower_conv2d(&vals, &shape),
+                    shape[0], shape[1], shape[2], shape[3],
+                ),
+                3 => (
+                    lowering::lower_conv1d(&vals, &shape),
+                    1, shape[0], shape[1], shape[2],
+                ),
+                r => bail!("conv tensor {key} has unsupported rank {r}"),
             };
+            let b = base
+                .get(&format!("{name}.b"))
+                .with_context(|| format!("missing {name}.b"))?
+                .as_f32()?;
+            ensure!(b.len() == cout, "{name}: bias/cout mismatch");
+            conv.push(ConvLayer {
+                name: name.to_string(),
+                w: cfg.conv_format.build(&lowered),
+                b,
+                kh,
+                kw,
+                cin,
+                cout,
+            });
             params.insert(key, Tensor::from_f32(shape, &vals));
+        }
+        // Embedding tables feeding token branches (dense row lookup).
+        let mut embeds = Vec::new();
+        for branch in kind.layer_plan().branches {
+            for step in branch.steps {
+                if let Step::Embed(name) = *step {
+                    let t = base
+                        .get(name)
+                        .with_context(|| format!("missing embedding {name}"))?;
+                    ensure!(t.shape.len() == 2, "embedding {name} must be 2-D");
+                    embeds.push(EmbedTable {
+                        name: name.to_string(),
+                        dim: t.shape[1],
+                        table: t.as_f32()?,
+                    });
+                }
+            }
         }
         // All remaining parameters (conv biases, embeddings) stay dense.
         for (name, t) in base.iter() {
@@ -262,7 +369,18 @@ impl CompressedModel {
             }
         }
 
-        Ok(CompressedModel { kind, params, fc, conv_bits, conv_dense_bits, fc_dense_bits })
+        Ok(CompressedModel {
+            kind,
+            params,
+            fc,
+            conv,
+            embeds,
+            conv_bits,
+            conv_dense_bits,
+            fc_dense_bits,
+            conv_quantized: cfg.conv_quant.is_some(),
+            conv_pruned: cfg.conv_prune.is_some(),
+        })
     }
 
     /// FC forward: features (B × feat_dim) → outputs (B × last_dim).
@@ -298,32 +416,177 @@ impl CompressedModel {
         threads: usize,
         ws: &'w mut Workspace,
     ) -> &'w Mat {
-        assert!(!self.fc.is_empty(), "model has no FC layers");
-        let last = self.fc.len() - 1;
-        let mut dst_is_a = true;
-        for (li, layer) in self.fc.iter().enumerate() {
-            let (src, dst): (&Mat, &mut Mat) = if li == 0 {
-                (feats, &mut ws.a)
-            } else if dst_is_a {
-                (&ws.b, &mut ws.a)
-            } else {
-                (&ws.a, &mut ws.b)
-            };
-            if threads > 1 && src.rows > 1 {
-                par_matmul_into(layer.w.as_ref(), src, dst, threads);
-            } else {
-                layer.w.matmul_batch_into(src, dst);
-            }
-            bias_relu(dst, &layer.b, li == last);
-            dst_is_a = !dst_is_a;
-        }
-        // `dst_is_a` was flipped after the last layer: the result lives
-        // in `a` exactly when the flag now reads false.
-        if dst_is_a {
-            &ws.b
-        } else {
+        let Workspace { ref mut a, ref mut b, .. } = *ws;
+        let last_in_a = fc_stack_into(&self.fc, feats, threads, a, b);
+        if last_in_a {
             &ws.a
+        } else {
+            &ws.b
         }
+    }
+
+    /// Conv front-end on the lowered compressed weights: walks the layer
+    /// plan with the im2col pipeline (`nn::lowering`), activations
+    /// ping-ponging between the workspace's conv buffers and the branch
+    /// features concatenating into `ws.feats` (returned). Steady state
+    /// (same shapes, reused `ws`) allocates nothing and — with
+    /// `threads ≤ 1` — spawns no threads; `threads > 1` dispatches the
+    /// patch matmul onto the persistent `formats::pool` (Alg. 3).
+    pub fn conv_features_into<'w>(
+        &self,
+        input: &PlanInput<'_>,
+        threads: usize,
+        ws: &'w mut Workspace,
+    ) -> Result<&'w Mat> {
+        let plan = self.kind.layer_plan();
+        let n = input.batch();
+        ensure!(n > 0, "empty batch");
+        ensure!(!self.fc.is_empty(), "model has no FC layers");
+        let feat_dim = self.fc[0].w.rows();
+        let Workspace {
+            ref mut patches,
+            ref mut act_a,
+            ref mut act_b,
+            ref mut feats,
+            ..
+        } = *ws;
+        feats.resize(n, feat_dim);
+        // branches are required to cover every feature column; zeroing
+        // first keeps a mis-declared synthetic plan from leaking stale
+        // workspace contents
+        feats.data.fill(0.0);
+        let mut conv_i = 0usize;
+        let mut feat_off = 0usize;
+        for branch in plan.branches {
+            let (mut cur, mut nxt): (&mut Mat, &mut Mat) =
+                (&mut *act_a, &mut *act_b);
+            // current activation dims: (h, w, c); conv1d runs with h = 1
+            // and w as the time axis (token branches get c from Embed)
+            let mut toks: Option<(&[i32], usize)> = None;
+            // image branches: the first step reads the caller's batch
+            // directly (no copy into the workspace); every later step
+            // reads the ping-pong buffers
+            let mut ext: Option<&[f32]> = None;
+            let (mut h, mut w, mut c) = match (branch.input, input) {
+                (
+                    BranchInput::Images,
+                    PlanInput::Images { h: ih, w: iw, c: ic, data, .. },
+                ) => {
+                    ensure!(
+                        data.len() == n * ih * iw * ic,
+                        "image batch shape mismatch"
+                    );
+                    ext = Some(*data);
+                    (*ih, *iw, *ic)
+                }
+                (BranchInput::LigTokens, PlanInput::Tokens { lig, .. }) => {
+                    // empty sequences must error here, not panic in the
+                    // pooling kernel — serving inputs are untrusted
+                    ensure!(
+                        !lig.is_empty() && lig.len() % n == 0,
+                        "empty or ragged token batch"
+                    );
+                    toks = Some((*lig, lig.len() / n));
+                    (1, lig.len() / n, 0)
+                }
+                (BranchInput::ProtTokens, PlanInput::Tokens { prot, .. }) => {
+                    ensure!(
+                        !prot.is_empty() && prot.len() % n == 0,
+                        "empty or ragged token batch"
+                    );
+                    toks = Some((*prot, prot.len() / n));
+                    (1, prot.len() / n, 0)
+                }
+                _ => bail!("input kind does not match the model's layer plan"),
+            };
+            for step in branch.steps {
+                match *step {
+                    Step::Embed(name) => {
+                        let (tokens, len) = toks
+                            .with_context(|| format!("embed `{name}` without tokens"))?;
+                        let e = self
+                            .embeds
+                            .iter()
+                            .find(|e| e.name == name)
+                            .with_context(|| format!("missing embedding {name}"))?;
+                        lowering::embed_into(tokens, n, len, &e.table, e.dim, cur)?;
+                        c = e.dim;
+                    }
+                    Step::Conv2d(name) | Step::Conv1d(name) => {
+                        let layer = self
+                            .conv
+                            .get(conv_i)
+                            .with_context(|| format!("missing conv layer {name}"))?;
+                        conv_i += 1;
+                        ensure!(layer.name == name, "conv layer order mismatch");
+                        ensure!(layer.cin == c, "{name}: channel mismatch");
+                        let src = ext.take().unwrap_or(&cur.data);
+                        lowering::conv_lowered_into(
+                            layer.w.as_ref(),
+                            layer.kh,
+                            layer.kw,
+                            ActView::new(n, h, w, c, src),
+                            &layer.b,
+                            true,
+                            threads,
+                            patches,
+                            nxt,
+                        );
+                        c = layer.cout;
+                        std::mem::swap(&mut cur, &mut nxt);
+                    }
+                    Step::MaxPool2 => {
+                        let src = ext.take().unwrap_or(&cur.data);
+                        lowering::maxpool2_into(ActView::new(n, h, w, c, src), nxt);
+                        h /= 2;
+                        w /= 2;
+                        std::mem::swap(&mut cur, &mut nxt);
+                    }
+                    Step::GlobalMaxPool => {
+                        ensure!(
+                            feat_off + c <= feat_dim,
+                            "branch features exceed the FC input dim"
+                        );
+                        let src = ext.take().unwrap_or(&cur.data);
+                        lowering::global_maxpool_into(
+                            ActView::new(n, h, w, c, src),
+                            feats,
+                            feat_off,
+                        );
+                        feat_off += c;
+                    }
+                    Step::Flatten => {
+                        ensure!(
+                            feat_off == 0 && h * w * c == feat_dim,
+                            "flattened features ({}) do not match the FC input dim ({feat_dim})",
+                            h * w * c
+                        );
+                        let src = ext.take().unwrap_or(&cur.data);
+                        feats.data.copy_from_slice(src);
+                        feat_off += h * w * c;
+                    }
+                }
+            }
+        }
+        ensure!(conv_i == self.conv.len(), "layer plan skipped conv layers");
+        ensure!(feat_off == feat_dim, "branches did not fill the feature vector");
+        Ok(&ws.feats)
+    }
+
+    /// Pure-Rust end-to-end forward on the compressed formats — conv
+    /// (im2col, lowered weights) → pool → flatten → FC — with zero PJRT
+    /// dependency. Output rows borrow the workspace; steady state
+    /// performs no per-call output allocations.
+    pub fn forward_into<'w>(
+        &self,
+        input: &PlanInput<'_>,
+        threads: usize,
+        ws: &'w mut Workspace,
+    ) -> Result<&'w Mat> {
+        self.conv_features_into(input, threads, ws)?;
+        let Workspace { ref feats, ref mut a, ref mut b, .. } = *ws;
+        let last_in_a = fc_stack_into(&self.fc, feats, threads, a, b);
+        Ok(if last_in_a { &ws.a } else { &ws.b })
     }
 
     /// Replace every FC matrix with its dense decompression. Outputs are
@@ -356,6 +619,188 @@ impl CompressedModel {
     pub fn psi_total(&self) -> f64 {
         (self.fc_bits() + self.conv_bits) as f64
             / (self.fc_dense_bits + self.conv_dense_bits) as f64
+    }
+
+    /// Persist the whole model through the `.sham` container
+    /// (`formats::store`): FC and *lowered conv* matrices in their
+    /// compressed formats, biases/embeddings dense, a `kshape` sidecar
+    /// per conv layer, and the conv accounting flags. [`Self::load_sham`]
+    /// restores an executable model with identical ψ accounting.
+    pub fn save_sham(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use crate::formats::store::{save, to_stored, Stored};
+        use crate::formats::Dense;
+        fn dense_row(v: &[f32]) -> Stored {
+            Stored::Dense(Dense::from_mat(Mat::from_vec(1, v.len(), v.to_vec())))
+        }
+        let mut entries: Vec<(String, Stored)> = Vec::new();
+        // the benchmark kind is stamped into the entry *name* so a
+        // container cannot silently load under the wrong ModelKind
+        entries.push((format!("meta/kind/{}", self.kind.name()), dense_row(&[1.0])));
+        entries.push((
+            "meta/conv_cfg".to_string(),
+            dense_row(&[
+                if self.conv_quantized { 1.0 } else { 0.0 },
+                if self.conv_pruned { 1.0 } else { 0.0 },
+            ]),
+        ));
+        for l in &self.fc {
+            let w = l.w.decompress();
+            entries.push((format!("fc/{}.w", l.name), to_stored(&w, l.w.as_ref())));
+            entries.push((format!("fc/{}.b", l.name), dense_row(&l.b)));
+        }
+        for l in &self.conv {
+            let w = l.w.decompress();
+            entries.push((format!("conv/{}.w", l.name), to_stored(&w, l.w.as_ref())));
+            entries.push((format!("conv/{}.b", l.name), dense_row(&l.b)));
+            entries.push((
+                format!("conv/{}.kshape", l.name),
+                dense_row(&[l.kh as f32, l.kw as f32, l.cin as f32, l.cout as f32]),
+            ));
+        }
+        for e in &self.embeds {
+            entries.push((
+                format!("embed/{}", e.name),
+                Stored::Dense(Dense::from_mat(Mat::from_vec(
+                    e.table.len() / e.dim,
+                    e.dim,
+                    e.table.clone(),
+                ))),
+            ));
+        }
+        save(path, &entries)
+    }
+
+    /// Load a model persisted by [`Self::save_sham`]: every layer comes
+    /// back in its stored compressed format (no recompression), the
+    /// parameter archive is rebuilt for the PJRT feature graph, and the
+    /// ψ accounting is re-derived bit-identically via the recorded conv
+    /// flags.
+    pub fn load_sham(
+        kind: ModelKind,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<CompressedModel> {
+        use std::collections::HashMap;
+        let mut map: HashMap<String, crate::formats::store::Stored> =
+            crate::formats::store::load(path)?.into_iter().collect();
+        // reject a container saved for a different benchmark up front —
+        // layer names alone would let e.g. kiba weights load as davis
+        if map.remove(&format!("meta/kind/{}", kind.name())).is_none() {
+            let saved: Vec<&str> = map
+                .keys()
+                .filter_map(|k| k.strip_prefix("meta/kind/"))
+                .collect();
+            bail!(
+                "container was saved for {:?}, not {}",
+                saved,
+                kind.name()
+            );
+        }
+        let mut take = |name: String| {
+            map.remove(&name).with_context(|| format!("container missing {name}"))
+        };
+        let row_vec = |s: crate::formats::store::Stored| s.as_compressed().decompress().data;
+
+        let flags = row_vec(take("meta/conv_cfg".to_string())?);
+        ensure!(flags.len() == 2, "bad meta/conv_cfg entry");
+        let (conv_quantized, conv_pruned) = (flags[0] != 0.0, flags[1] != 0.0);
+
+        let mut params = Archive::new();
+        let mut fc = Vec::new();
+        let mut fc_dense_bits = 0u64;
+        for name in kind.fc_names() {
+            let w = take(format!("fc/{name}.w"))?.into_compressed();
+            let b = row_vec(take(format!("fc/{name}.b"))?);
+            fc_dense_bits +=
+                ((w.rows() * w.cols()) as u64 + b.len() as u64) * WORD_BITS;
+            let d = w.decompress();
+            params.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![d.rows, d.cols], &d.data),
+            );
+            params.insert(format!("{name}.b"), Tensor::from_f32(vec![b.len()], &b));
+            fc.push(FcLayer { name: name.to_string(), w, b });
+        }
+
+        // conv tensor rank comes from the layer plan (the 4-slot kshape
+        // sidecar alone cannot tell a [1,kw,cin,cout] conv2d from a
+        // [kw,cin,cout] conv1d)
+        let mut is_2d = Vec::with_capacity(kind.conv_names().len());
+        for branch in kind.layer_plan().branches {
+            for step in branch.steps {
+                match step {
+                    Step::Conv2d(_) => is_2d.push(true),
+                    Step::Conv1d(_) => is_2d.push(false),
+                    _ => {}
+                }
+            }
+        }
+        ensure!(is_2d.len() == kind.conv_names().len(), "layer plan out of sync");
+        let mut conv = Vec::new();
+        let mut conv_bits = 0u64;
+        let mut conv_dense_bits = 0u64;
+        for (name, &two_d) in kind.conv_names().iter().zip(is_2d.iter()) {
+            let w = take(format!("conv/{name}.w"))?.into_compressed();
+            let b = row_vec(take(format!("conv/{name}.b"))?);
+            let ks = row_vec(take(format!("conv/{name}.kshape"))?);
+            ensure!(ks.len() == 4, "{name}: bad kshape sidecar");
+            let (kh, kw, cin, cout) =
+                (ks[0] as usize, ks[1] as usize, ks[2] as usize, ks[3] as usize);
+            ensure!(
+                w.rows() == kh * kw * cin && w.cols() == cout,
+                "{name}: lowered matrix does not match kshape"
+            );
+            ensure!(two_d || kh == 1, "{name}: conv1d layer with kh > 1");
+            let d = w.decompress();
+            conv_dense_bits += d.data.len() as u64 * WORD_BITS;
+            conv_bits += conv_weight_bits(&d.data, conv_quantized, conv_pruned);
+            // conv biases count dense, like every remaining parameter
+            let bias_bits = b.len() as u64 * WORD_BITS;
+            conv_bits += bias_bits;
+            conv_dense_bits += bias_bits;
+            let orig_shape = if two_d {
+                vec![kh, kw, cin, cout]
+            } else {
+                vec![kw, cin, cout]
+            };
+            params.insert(format!("{name}.w"), Tensor::from_f32(orig_shape, &d.data));
+            params.insert(format!("{name}.b"), Tensor::from_f32(vec![b.len()], &b));
+            conv.push(ConvLayer { name: name.to_string(), w, b, kh, kw, cin, cout });
+        }
+
+        let mut embeds = Vec::new();
+        for branch in kind.layer_plan().branches {
+            for step in branch.steps {
+                if let Step::Embed(name) = *step {
+                    let s = take(format!("embed/{name}"))?;
+                    let d = s.as_compressed().decompress();
+                    let bits = d.data.len() as u64 * WORD_BITS;
+                    conv_bits += bits;
+                    conv_dense_bits += bits;
+                    params.insert(
+                        name.to_string(),
+                        Tensor::from_f32(vec![d.rows, d.cols], &d.data),
+                    );
+                    embeds.push(EmbedTable {
+                        name: name.to_string(),
+                        dim: d.cols,
+                        table: d.data,
+                    });
+                }
+            }
+        }
+
+        Ok(CompressedModel {
+            kind,
+            params,
+            fc,
+            conv,
+            embeds,
+            conv_bits,
+            conv_dense_bits,
+            fc_dense_bits,
+            conv_quantized,
+            conv_pruned,
+        })
     }
 }
 
@@ -476,6 +921,142 @@ mod tests {
             }
         }
         assert!(union.len() > 4);
+    }
+
+    /// Synthetic archive whose conv chain is shape-consistent with the
+    /// VGG layer plan (8×8×1 input → three pools → 1×1×5 → fc 5→6→6→4),
+    /// so the pure-Rust forward can actually run. Mirror of
+    /// `tests/common/mod.rs::synthetic_vgg_archive` (the integration
+    /// tests cannot import `#[cfg(test)]` items) — keep the two in sync.
+    fn chain_archive(rng: &mut Prng) -> Archive {
+        let mut a = Archive::new();
+        let conv_dims =
+            [("c1a", 1usize, 3usize), ("c1b", 3, 3), ("c2a", 3, 4), ("c2b", 4, 4), ("c3a", 4, 5)];
+        for (name, cin, cout) in conv_dims {
+            let w = Mat::gaussian(3 * 3 * cin, cout, 0.25, rng);
+            a.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![3, 3, cin, cout], &w.data),
+            );
+            a.insert(
+                format!("{name}.b"),
+                Tensor::from_f32(vec![cout], &vec![0.05; cout]),
+            );
+        }
+        let fc_dims = [(5usize, 6usize), (6, 6), (6, 4)];
+        for (name, &(nin, nout)) in
+            ModelKind::VggMnist.fc_names().iter().zip(fc_dims.iter())
+        {
+            let w = Mat::gaussian(nin, nout, 0.4, rng);
+            a.insert(
+                format!("{name}.w"),
+                Tensor::from_f32(vec![nin, nout], &w.data),
+            );
+            a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+        }
+        a
+    }
+
+    fn chain_input(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n * 8 * 8).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn pure_forward_matches_dense_reference_across_formats() {
+        let mut rng = Prng::seeded(0xC04);
+        let a = chain_archive(&mut rng);
+        let images = chain_input(&mut rng, 3);
+        let input = PlanInput::Images { n: 3, h: 8, w: 8, c: 1, data: &images };
+        // dense reference: plan features through the oracle kernels +
+        // dense FC stack
+        let feats =
+            crate::nn::reference::plan_features(ModelKind::VggMnist, &a, &input)
+                .unwrap();
+        let base = CompressedModel::baseline(ModelKind::VggMnist, &a).unwrap();
+        let want = base.fc_forward(&feats, 1);
+        for fmt in [
+            FormatId::Dense,
+            FormatId::Csc,
+            FormatId::IndexMap,
+            FormatId::Hac,
+            FormatId::Shac,
+        ] {
+            let cfg = CompressionCfg {
+                fc_format: FcFormat::Fixed(fmt),
+                conv_format: FcFormat::Fixed(fmt),
+                ..Default::default()
+            };
+            let m =
+                CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng)
+                    .unwrap();
+            let mut ws = Workspace::new();
+            let got = m.forward_into(&input, 1, &mut ws).unwrap();
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "{fmt:?}: pure forward diverged by {}",
+                got.max_abs_diff(&want)
+            );
+            // pooled path agrees too
+            let mut ws2 = Workspace::new();
+            let got_par = m.forward_into(&input, 3, &mut ws2).unwrap();
+            assert!(got_par.max_abs_diff(&want) < 1e-4, "{fmt:?} par");
+        }
+    }
+
+    #[test]
+    fn conv_forward_steady_state_reuses_buffers() {
+        let mut rng = Prng::seeded(0xC05);
+        let a = chain_archive(&mut rng);
+        let cfg = CompressionCfg {
+            conv_quant: Some((Kind::Cws, 8)),
+            conv_format: FcFormat::Fixed(FormatId::Shac),
+            fc_format: FcFormat::Fixed(FormatId::Hac),
+            ..Default::default()
+        };
+        let m = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng)
+            .unwrap();
+        let images = chain_input(&mut rng, 4);
+        let input = PlanInput::Images { n: 4, h: 8, w: 8, c: 1, data: &images };
+        let mut ws = Workspace::new();
+        // warm up: grow every buffer once
+        let first = m.forward_into(&input, 1, &mut ws).unwrap().clone();
+        m.forward_into(&input, 1, &mut ws).unwrap();
+        let fingerprints = [
+            (ws.patches.data.as_ptr(), ws.patches.data.capacity()),
+            (ws.act_a.data.as_ptr(), ws.act_a.data.capacity()),
+            (ws.act_b.data.as_ptr(), ws.act_b.data.capacity()),
+            (ws.feats.data.as_ptr(), ws.feats.data.capacity()),
+            (ws.a.data.as_ptr(), ws.a.data.capacity()),
+            (ws.b.data.as_ptr(), ws.b.data.capacity()),
+        ];
+        for _ in 0..5 {
+            let out = m.forward_into(&input, 1, &mut ws).unwrap();
+            assert_eq!(out.data, first.data, "steady-state output drifted");
+        }
+        let after = [
+            (ws.patches.data.as_ptr(), ws.patches.data.capacity()),
+            (ws.act_a.data.as_ptr(), ws.act_a.data.capacity()),
+            (ws.act_b.data.as_ptr(), ws.act_b.data.capacity()),
+            (ws.feats.data.as_ptr(), ws.feats.data.capacity()),
+            (ws.a.data.as_ptr(), ws.a.data.capacity()),
+            (ws.b.data.as_ptr(), ws.b.data.capacity()),
+        ];
+        assert_eq!(fingerprints, after, "workspace buffers reallocated");
+    }
+
+    #[test]
+    fn forward_rejects_mismatched_input() {
+        let mut rng = Prng::seeded(0xC06);
+        let a = chain_archive(&mut rng);
+        let m = CompressedModel::baseline(ModelKind::VggMnist, &a).unwrap();
+        let mut ws = Workspace::new();
+        let input = PlanInput::Tokens { n: 1, lig: &[0, 1], prot: &[0, 1] };
+        assert!(m.forward_into(&input, 1, &mut ws).is_err());
+        // wrong payload size
+        let bad = vec![0.0f32; 7];
+        let input = PlanInput::Images { n: 1, h: 8, w: 8, c: 1, data: &bad };
+        assert!(m.forward_into(&input, 1, &mut ws).is_err());
     }
 
     #[test]

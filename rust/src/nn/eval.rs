@@ -1,12 +1,16 @@
 //! Evaluation of (compressed) models over the exported test splits:
-//! conv front-end through the PJRT engine, FC stack on the compressed
-//! formats, metric = accuracy (classification) or MSE (regression).
+//! conv front-end through the PJRT engine *or* the pure-Rust lowered
+//! pipeline ([`evaluate_pure`], zero PJRT dependency), FC stack on the
+//! compressed formats, metric = accuracy (classification) or MSE
+//! (regression).
 
 use anyhow::{bail, Context, Result};
 
+use crate::formats::Workspace;
 use crate::io::{Archive, TestSet};
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
+use crate::nn::lowering::PlanInput;
 use crate::runtime::{lit_f32, lit_i32, Engine, Literal};
 use crate::util::timer::Stopwatch;
 
@@ -205,6 +209,65 @@ pub fn evaluate(
     let outputs = model.fc_forward(&feats, threads);
     let fc_secs = fc_t.elapsed_secs();
     Ok((metric_from_outputs(&outputs, test), fc_secs, total.elapsed_secs()))
+}
+
+/// Full evaluation with **zero PJRT dependency**: the conv front-end
+/// runs on the model's lowered compressed weights (im2col pipeline) and
+/// the FC stack on its compressed matrices, batched through one reused
+/// [`Workspace`]. Returns (metric, total_seconds).
+pub fn evaluate_pure(
+    model: &CompressedModel,
+    test: &TestSet,
+    batch: usize,
+    threads: usize,
+) -> Result<(Metric, f64)> {
+    anyhow::ensure!(batch > 0, "batch must be positive");
+    anyhow::ensure!(!model.fc.is_empty(), "model has no FC layers");
+    let sw = Stopwatch::start();
+    let n = test.len();
+    let out_dim = model.fc.last().unwrap().w.cols();
+    let mut outputs = Mat::zeros(n, out_dim);
+    let mut ws = Workspace::new();
+    let mut start = 0usize;
+    match test {
+        TestSet::Cls { x, .. } => {
+            let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+            let per = h * w * c;
+            let data = x.as_f32()?;
+            while start < n {
+                let here = batch.min(n - start);
+                let input = PlanInput::Images {
+                    n: here,
+                    h,
+                    w,
+                    c,
+                    data: &data[start * per..(start + here) * per],
+                };
+                let out = model.forward_into(&input, threads, &mut ws)?;
+                outputs.data[start * out_dim..(start + here) * out_dim]
+                    .copy_from_slice(&out.data);
+                start += here;
+            }
+        }
+        TestSet::Reg { lig, prot, .. } => {
+            let lp: usize = lig.shape[1..].iter().product();
+            let pp: usize = prot.shape[1..].iter().product();
+            let (l, p) = (lig.as_i32()?, prot.as_i32()?);
+            while start < n {
+                let here = batch.min(n - start);
+                let input = PlanInput::Tokens {
+                    n: here,
+                    lig: &l[start * lp..(start + here) * lp],
+                    prot: &p[start * pp..(start + here) * pp],
+                };
+                let out = model.forward_into(&input, threads, &mut ws)?;
+                outputs.data[start * out_dim..(start + here) * out_dim]
+                    .copy_from_slice(&out.data);
+                start += here;
+            }
+        }
+    }
+    Ok((metric_from_outputs(&outputs, test), sw.elapsed_secs()))
 }
 
 /// Evaluate the *full* uncompressed graph end-to-end through PJRT (the

@@ -1,0 +1,382 @@
+//! Conv execution on the compressed formats: im2col lowering.
+//!
+//! The paper's whole-network numbers (Sect. V-K) compress the conv
+//! layers with the same pruned/quantized-matrix structure as the FC
+//! layers — and a SAME-padded stride-1 convolution is exactly a matrix
+//! product once the input is unrolled into patches. This module lowers
+//! HWIO conv2d weights to a `(kh·kw·cin, cout)` matrix (WIO conv1d to
+//! `(kw·cin, cout)` — the `kh = 1` special case) and extracts the
+//! matching im2col patch matrix into a caller-provided grow-only
+//! buffer, so any [`CompressedMatrix`] format can execute convolutions
+//! through its allocation-free `matmul_batch_into` kernel (or the
+//! pooled `par_matmul_into`, Alg. 3). In steady state the conv hot
+//! path allocates nothing and spawns no threads. See DESIGN.md §6.
+//!
+//! Layout invariant that makes this a pure reshape: a row-major HWIO
+//! tensor `[kh, kw, cin, cout]` flattened is already the row-major
+//! `(kh·kw·cin) × cout` matrix, and an im2col patch row laid out
+//! `[dy][dx][ci]` lines up with it; the `(n·h·w) × cout` product is in
+//! turn exactly the flattened NHWC output activation.
+
+use anyhow::{ensure, Result};
+
+use crate::formats::{par_matmul_into, CompressedMatrix};
+use crate::mat::Mat;
+
+/// Borrowed view of a flattened NHWC activation tensor
+/// (`data.len() == n·h·w·c`). Conv1d activations use `h = 1` with `w`
+/// as the time axis.
+#[derive(Debug, Clone, Copy)]
+pub struct ActView<'a> {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> ActView<'a> {
+    pub fn new(n: usize, h: usize, w: usize, c: usize, data: &'a [f32]) -> ActView<'a> {
+        assert_eq!(data.len(), n * h * w * c, "activation shape mismatch");
+        ActView { n, h, w, c, data }
+    }
+}
+
+/// One batch of model inputs for the plan executors (dense reference
+/// and compressed pipeline alike).
+#[derive(Debug, Clone, Copy)]
+pub enum PlanInput<'a> {
+    /// NHWC images, `data.len() == n·h·w·c`.
+    Images { n: usize, h: usize, w: usize, c: usize, data: &'a [f32] },
+    /// Token-id sequences, `lig.len() == n·lig_len`,
+    /// `prot.len() == n·prot_len`.
+    Tokens { n: usize, lig: &'a [i32], prot: &'a [i32] },
+}
+
+impl PlanInput<'_> {
+    /// Batch size.
+    pub fn batch(&self) -> usize {
+        match self {
+            PlanInput::Images { n, .. } | PlanInput::Tokens { n, .. } => *n,
+        }
+    }
+}
+
+/// Reshape a flattened HWIO conv2d weight tensor `[kh, kw, cin, cout]`
+/// into the lowered `(kh·kw·cin) × cout` matrix (a pure copy — the
+/// row-major layouts coincide).
+pub fn lower_conv2d(vals: &[f32], shape: &[usize]) -> Mat {
+    assert_eq!(shape.len(), 4, "conv2d weights must be HWIO");
+    Mat::from_vec(shape[0] * shape[1] * shape[2], shape[3], vals.to_vec())
+}
+
+/// Reshape a flattened WIO conv1d weight tensor `[kw, cin, cout]` into
+/// the lowered `(kw·cin) × cout` matrix.
+pub fn lower_conv1d(vals: &[f32], shape: &[usize]) -> Mat {
+    assert_eq!(shape.len(), 3, "conv1d weights must be WIO");
+    Mat::from_vec(shape[0] * shape[1], shape[2], vals.to_vec())
+}
+
+/// im2col patch extraction for a SAME-padded stride-1 `kh × kw`
+/// convolution: `patches` is resized in place (grow-only capacity) to
+/// `(n·h·w) × (kh·kw·c)` and fully overwritten — out-of-bounds taps are
+/// zero-filled, so a dirty reused buffer is fine. `kh = 1` is the
+/// conv1d case (`w` = time axis).
+pub fn im2col_into(x: ActView<'_>, kh: usize, kw: usize, patches: &mut Mat) {
+    let ActView { n, h, w, c, data } = x;
+    let (ph, pw) = (kh / 2, kw / 2);
+    let pc = kh * kw * c;
+    patches.resize(n * h * w, pc);
+    let mut row_start = 0usize;
+    for b in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let row = &mut patches.data[row_start..row_start + pc];
+                for dy in 0..kh {
+                    let iy = oy as isize + dy as isize - ph as isize;
+                    let in_y = iy >= 0 && iy < h as isize;
+                    for dx in 0..kw {
+                        let tap = (dy * kw + dx) * c;
+                        let dst = &mut row[tap..tap + c];
+                        let ix = ox as isize + dx as isize - pw as isize;
+                        if in_y && ix >= 0 && ix < w as isize {
+                            let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                            dst.copy_from_slice(&data[src..src + c]);
+                        } else {
+                            dst.fill(0.0);
+                        }
+                    }
+                }
+                row_start += pc;
+            }
+        }
+    }
+}
+
+/// Add `bias` to every row of `y` and apply ReLU when `relu` — the
+/// single fused epilogue shared by the conv pipeline and the FC stack.
+pub(crate) fn bias_act(y: &mut Mat, bias: &[f32], relu: bool) {
+    assert_eq!(y.cols, bias.len(), "bias length mismatch");
+    let cols = y.cols;
+    for r in 0..y.rows {
+        let row = &mut y.data[r * cols..(r + 1) * cols];
+        for (v, b) in row.iter_mut().zip(bias.iter()) {
+            let s = *v + *b;
+            *v = if relu { s.max(0.0) } else { s };
+        }
+    }
+}
+
+/// SAME-padded stride-1 convolution executed on a lowered compressed
+/// weight matrix: im2col into `patches`, multiply through the format's
+/// allocation-free batched kernel (or the pooled Alg. 3 when
+/// `threads > 1`), bias + activation fused on the way out. `out` ends
+/// up `(n·h·w) × cout` — the flattened NHWC output activation. Both
+/// buffers are resized in place (grow-only) and fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_lowered_into(
+    w: &dyn CompressedMatrix,
+    kh: usize,
+    kw: usize,
+    x: ActView<'_>,
+    bias: &[f32],
+    relu: bool,
+    threads: usize,
+    patches: &mut Mat,
+    out: &mut Mat,
+) {
+    assert_eq!(w.rows(), kh * kw * x.c, "lowered conv weight shape mismatch");
+    assert_eq!(bias.len(), w.cols(), "conv bias length mismatch");
+    im2col_into(x, kh, kw, patches);
+    if threads > 1 && patches.rows > 1 {
+        par_matmul_into(w, patches, out, threads);
+    } else {
+        w.matmul_batch_into(patches, out);
+    }
+    bias_act(out, bias, relu);
+}
+
+/// 2×2 max pool, stride 2 (VALID) on a flattened NHWC activation;
+/// `out` becomes `(n·(h/2)·(w/2)) × c`, fully overwritten.
+pub fn maxpool2_into(x: ActView<'_>, out: &mut Mat) {
+    let ActView { n, h, w, c, data } = x;
+    let (oh, ow) = (h / 2, w / 2);
+    out.resize(n * oh * ow, c);
+    let mut oi = 0usize;
+    for b in 0..n {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let i00 = ((b * h + 2 * y) * w + 2 * xx) * c;
+                let i01 = i00 + c;
+                let i10 = i00 + w * c;
+                let i11 = i10 + c;
+                for ch in 0..c {
+                    out.data[oi] = data[i00 + ch]
+                        .max(data[i01 + ch])
+                        .max(data[i10 + ch])
+                        .max(data[i11 + ch]);
+                    oi += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Global max pool over the time axis of a conv1d activation
+/// (`h == 1`): writes one `c`-wide feature row per example into
+/// `feats` at column `offset` (the branch-concatenation slot).
+pub fn global_maxpool_into(x: ActView<'_>, feats: &mut Mat, offset: usize) {
+    let ActView { n, h, w: len, c, data } = x;
+    assert_eq!(h, 1, "global max pool expects a conv1d activation");
+    assert!(len > 0, "global max pool over an empty sequence");
+    assert!(offset + c <= feats.cols, "feature columns out of range");
+    assert!(n <= feats.rows, "feature rows out of range");
+    for b in 0..n {
+        for ch in 0..c {
+            let mut m = f32::NEG_INFINITY;
+            for t in 0..len {
+                m = m.max(data[(b * len + t) * c + ch]);
+            }
+            feats.set(b, offset + ch, m);
+        }
+    }
+}
+
+/// Token-id lookup into a dense embedding table (`table.len() ==
+/// vocab·dim`): `out` becomes `(n·len) × dim`, fully overwritten.
+/// Out-of-range ids error (serving inputs are untrusted).
+pub fn embed_into(
+    tokens: &[i32],
+    n: usize,
+    len: usize,
+    table: &[f32],
+    dim: usize,
+    out: &mut Mat,
+) -> Result<()> {
+    ensure!(tokens.len() == n * len, "token count mismatch");
+    ensure!(dim > 0 && table.len() % dim == 0, "embedding table shape mismatch");
+    let vocab = table.len() / dim;
+    out.resize(n * len, dim);
+    for (i, &tok) in tokens.iter().enumerate() {
+        ensure!(
+            tok >= 0 && (tok as usize) < vocab,
+            "token id {tok} out of range (vocab {vocab})"
+        );
+        let t = tok as usize;
+        out.data[i * dim..(i + 1) * dim].copy_from_slice(&table[t * dim..(t + 1) * dim]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{all_formats, Dense};
+    use crate::nn::reference::{conv1d_relu, conv2d, maxpool2, Act4};
+    use crate::util::prng::Prng;
+
+    fn rand_act(n: usize, h: usize, w: usize, c: usize, rng: &mut Prng) -> Act4 {
+        Act4 {
+            n,
+            h,
+            w,
+            c,
+            data: (0..n * h * w * c).map(|_| rng.normal() as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel_is_the_activation() {
+        let mut rng = Prng::seeded(1);
+        let x = rand_act(2, 3, 4, 5, &mut rng);
+        let mut patches = Mat::zeros(0, 0);
+        im2col_into(ActView::new(x.n, x.h, x.w, x.c, &x.data), 1, 1, &mut patches);
+        assert_eq!((patches.rows, patches.cols), (2 * 3 * 4, 5));
+        assert_eq!(patches.data, x.data);
+    }
+
+    #[test]
+    fn lowered_conv2d_matches_oracle_every_format_dirty_buffers() {
+        let mut rng = Prng::seeded(2);
+        for (kh, kw) in [(1, 1), (3, 3), (5, 3)] {
+            let (n, h, w, cin, cout) = (2, 5, 6, 3, 4);
+            let x = rand_act(n, h, w, cin, &mut rng);
+            let wshape = [kh, kw, cin, cout];
+            let wvals: Vec<f32> =
+                (0..kh * kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+            for relu in [false, true] {
+                let want = conv2d(&x, &wvals, &wshape, &bias, relu);
+                let lowered = lower_conv2d(&wvals, &wshape);
+                for f in all_formats(&lowered) {
+                    // NaN-poisoned reused buffers: kernels must fully
+                    // overwrite
+                    let mut patches = Mat::zeros(3, 7);
+                    patches.data.fill(f32::NAN);
+                    let mut out = Mat::zeros(2, 2);
+                    out.data.fill(f32::NAN);
+                    conv_lowered_into(
+                        f.as_ref(),
+                        kh,
+                        kw,
+                        ActView::new(n, h, w, cin, &x.data),
+                        &bias,
+                        relu,
+                        1,
+                        &mut patches,
+                        &mut out,
+                    );
+                    assert_eq!((out.rows, out.cols), (n * h * w, cout));
+                    for (a, b) in out.data.iter().zip(want.data.iter()) {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{} {kh}x{kw} relu={relu}: {a} vs {b}",
+                            f.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowered_conv1d_matches_oracle() {
+        let mut rng = Prng::seeded(3);
+        for kw in [1, 3, 7] {
+            let (n, len, cin, cout) = (3, 9, 4, 5);
+            let xd: Vec<f32> = (0..n * len * cin).map(|_| rng.normal() as f32).collect();
+            let wshape = [kw, cin, cout];
+            let wvals: Vec<f32> =
+                (0..kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+            let want = conv1d_relu(&xd, n, len, cin, &wvals, &wshape, &bias);
+            let lowered = lower_conv1d(&wvals, &wshape);
+            let f = Dense::compress(&lowered);
+            let mut patches = Mat::zeros(0, 0);
+            let mut out = Mat::zeros(0, 0);
+            conv_lowered_into(
+                &f,
+                1,
+                kw,
+                ActView::new(n, 1, len, cin, &xd),
+                &bias,
+                true,
+                1,
+                &mut patches,
+                &mut out,
+            );
+            assert_eq!(out.data.len(), want.len());
+            for (a, b) in out.data.iter().zip(want.iter()) {
+                assert!((a - b).abs() < 1e-5, "conv1d kw={kw}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_conv_matches_sequential() {
+        let mut rng = Prng::seeded(4);
+        let (n, h, w, cin, cout) = (4, 6, 6, 3, 5);
+        let x = rand_act(n, h, w, cin, &mut rng);
+        let wshape = [3, 3, cin, cout];
+        let wvals: Vec<f32> =
+            (0..9 * cin * cout).map(|_| 0.2 * rng.normal() as f32).collect();
+        let bias = vec![0.1f32; cout];
+        let lowered = lower_conv2d(&wvals, &wshape);
+        let f = Dense::compress(&lowered);
+        let (mut p1, mut o1) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let (mut p2, mut o2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let view = ActView::new(n, h, w, cin, &x.data);
+        conv_lowered_into(&f, 3, 3, view, &bias, true, 1, &mut p1, &mut o1);
+        conv_lowered_into(&f, 3, 3, view, &bias, true, 4, &mut p2, &mut o2);
+        assert!(o1.max_abs_diff(&o2) < 1e-5);
+    }
+
+    #[test]
+    fn maxpool2_into_matches_oracle() {
+        let mut rng = Prng::seeded(5);
+        let x = rand_act(2, 6, 4, 3, &mut rng);
+        let want = maxpool2(&x);
+        let mut out = Mat::zeros(1, 1);
+        out.data.fill(f32::NAN);
+        maxpool2_into(ActView::new(x.n, x.h, x.w, x.c, &x.data), &mut out);
+        assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    fn embed_rejects_out_of_range_tokens() {
+        let table = vec![0.0f32; 4 * 3]; // vocab 4, dim 3
+        let mut out = Mat::zeros(0, 0);
+        assert!(embed_into(&[0, 3], 1, 2, &table, 3, &mut out).is_ok());
+        assert!(embed_into(&[0, 4], 1, 2, &table, 3, &mut out).is_err());
+        assert!(embed_into(&[-1, 0], 1, 2, &table, 3, &mut out).is_err());
+        assert!(embed_into(&[0], 1, 2, &table, 3, &mut out).is_err());
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let table: Vec<f32> = (0..6).map(|i| i as f32).collect(); // vocab 3, dim 2
+        let mut out = Mat::zeros(0, 0);
+        embed_into(&[2, 0, 1], 1, 3, &table, 2, &mut out).unwrap();
+        assert_eq!(out.data, vec![4.0, 5.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,13 +1,19 @@
-//! Compressed neural-network evaluation: model metadata, FC-stack
-//! inference over any [`crate::formats::CompressedMatrix`], hybrid
-//! conv(IM)+FC(HAC/sHAC) models (paper Sect. V-K), and accuracy/MSE
-//! evaluation against the exported test splits.
+//! Compressed neural-network evaluation: model metadata + the
+//! declarative [`model::LayerPlan`], im2col lowering so convolutions run
+//! directly on the compressed formats ([`lowering`], DESIGN.md §6),
+//! FC-stack inference over any [`crate::formats::CompressedMatrix`],
+//! whole-network compressed models (paper Sect. V-K) with pure-Rust
+//! end-to-end forward ([`CompressedModel::forward_into`]), and
+//! accuracy/MSE evaluation against the exported test splits — through
+//! PJRT or entirely without it ([`eval::evaluate_pure`]).
 
 pub mod compressed;
 pub mod eval;
+pub mod lowering;
 pub mod model;
 pub mod reference;
 
-pub use compressed::{CompressedModel, FcLayer, FcFormat};
-pub use eval::{evaluate, Metric};
-pub use model::ModelKind;
+pub use compressed::{CompressedModel, ConvLayer, EmbedTable, FcFormat, FcLayer};
+pub use eval::{evaluate, evaluate_pure, Metric};
+pub use lowering::{ActView, PlanInput};
+pub use model::{Branch, BranchInput, LayerPlan, ModelKind, Step};

@@ -1,11 +1,118 @@
 //! Model/benchmark metadata: the four (network, dataset) pairs of the
-//! paper's evaluation, their artifact paths and layer inventories.
+//! paper's evaluation, their artifact paths, layer inventories, and the
+//! declarative [`LayerPlan`] every forward-pass executor walks (the
+//! dense oracle in [`crate::nn::reference`], the lowered compressed
+//! pipeline in [`crate::nn::lowering`] / `CompressedModel`).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
 use crate::io::{read_archive, Archive, TestSet};
+
+/// One step of a model's conv front-end (DESIGN.md §6). Conv steps name
+/// the weight tensor (`<name>.w` / `<name>.b` in the archive); the FC
+/// stack that follows the front-end is listed in [`LayerPlan::fc`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Token-id lookup into the dense embedding table `<name>`.
+    Embed(&'static str),
+    /// SAME-padded stride-1 conv2d (HWIO weights) + bias + ReLU.
+    Conv2d(&'static str),
+    /// SAME-padded stride-1 conv1d (WIO weights) + bias + ReLU.
+    Conv1d(&'static str),
+    /// 2×2 max pool, stride 2 (VALID).
+    MaxPool2,
+    /// Max over the time axis — ends a token branch with one feature
+    /// vector per example.
+    GlobalMaxPool,
+    /// NHWC reshape to (B, h·w·c) — ends an image branch.
+    Flatten,
+}
+
+/// Which model input feeds a branch of the front-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchInput {
+    /// The NHWC image tensor (`x`).
+    Images,
+    /// The ligand token sequence (`lig`).
+    LigTokens,
+    /// The protein token sequence (`prot`).
+    ProtTokens,
+}
+
+/// One branch of the conv front-end. Branch outputs are concatenated in
+/// declaration order to form the feature matrix entering the FC stack.
+#[derive(Debug, Clone, Copy)]
+pub struct Branch {
+    pub input: BranchInput,
+    pub steps: &'static [Step],
+}
+
+/// The declarative forward-pass pipeline of a [`ModelKind`]: conv
+/// front-end branches followed by the FC stack (ReLU between FC layers,
+/// none after the last). Both the dense reference executor and the
+/// compressed im2col pipeline walk this plan, so layer dispatch lives in
+/// exactly one place.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPlan {
+    pub branches: &'static [Branch],
+    /// FC layer names in forward order (weights `<name>.w`, biases
+    /// `<name>.b`).
+    pub fc: &'static [&'static str],
+    /// Feature dimension entering the FC stack for the real benchmark
+    /// weights (synthetic test models may differ; executors size from
+    /// the actual tensors).
+    pub feature_dim: usize,
+}
+
+/// VGG-mini: five conv2d layers with three 2×2 pools, flattened.
+static VGG_PLAN: LayerPlan = LayerPlan {
+    branches: &[Branch {
+        input: BranchInput::Images,
+        steps: &[
+            Step::Conv2d("c1a"),
+            Step::Conv2d("c1b"),
+            Step::MaxPool2,
+            Step::Conv2d("c2a"),
+            Step::Conv2d("c2b"),
+            Step::MaxPool2,
+            Step::Conv2d("c3a"),
+            Step::MaxPool2,
+            Step::Flatten,
+        ],
+    }],
+    fc: &["fc1", "fc2", "fc3"],
+    feature_dim: 512,
+};
+
+/// DeepDTA-mini: two embed→conv1d×3→global-max branches, concatenated.
+static DTA_PLAN: LayerPlan = LayerPlan {
+    branches: &[
+        Branch {
+            input: BranchInput::LigTokens,
+            steps: &[
+                Step::Embed("lig_embed"),
+                Step::Conv1d("lig_c1"),
+                Step::Conv1d("lig_c2"),
+                Step::Conv1d("lig_c3"),
+                Step::GlobalMaxPool,
+            ],
+        },
+        Branch {
+            input: BranchInput::ProtTokens,
+            steps: &[
+                Step::Embed("prot_embed"),
+                Step::Conv1d("prot_c1"),
+                Step::Conv1d("prot_c2"),
+                Step::Conv1d("prot_c3"),
+                Step::GlobalMaxPool,
+            ],
+        },
+    ],
+    fc: &["fc1", "fc2", "fc3", "out"],
+    feature_dim: 96,
+};
 
 /// The paper's four benchmark configurations (Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -69,17 +176,25 @@ impl ModelKind {
         }
     }
 
-    /// FC layer names in forward order (weights are `<name>.w`, biases
-    /// `<name>.b`). ReLU between all but the last.
-    pub fn fc_names(&self) -> &'static [&'static str] {
+    /// The declarative forward-pass pipeline (conv front-end branches +
+    /// FC stack) every executor walks.
+    pub fn layer_plan(&self) -> &'static LayerPlan {
         if self.is_vgg() {
-            &["fc1", "fc2", "fc3"]
+            &VGG_PLAN
         } else {
-            &["fc1", "fc2", "fc3", "out"]
+            &DTA_PLAN
         }
     }
 
-    /// Conv weight-tensor names (the targets of conv-layer compression).
+    /// FC layer names in forward order (weights are `<name>.w`, biases
+    /// `<name>.b`). ReLU between all but the last. Derived from the
+    /// [`LayerPlan`].
+    pub fn fc_names(&self) -> &'static [&'static str] {
+        self.layer_plan().fc
+    }
+
+    /// Conv weight-tensor names (the targets of conv-layer compression),
+    /// in the order their [`Step`]s appear in the layer plan.
     pub fn conv_names(&self) -> &'static [&'static str] {
         if self.is_vgg() {
             &["c1a", "c1b", "c2a", "c2b", "c3a"]
@@ -88,13 +203,9 @@ impl ModelKind {
         }
     }
 
-    /// Feature dimension entering the FC stack.
+    /// Feature dimension entering the FC stack (real benchmark weights).
     pub fn feature_dim(&self) -> usize {
-        if self.is_vgg() {
-            512
-        } else {
-            96
-        }
+        self.layer_plan().feature_dim
     }
 
     pub fn weights_path(&self, artifacts: &Path) -> PathBuf {
@@ -162,6 +273,34 @@ mod tests {
         assert_eq!(ModelKind::DtaDavis.conv_names().len(), 6);
         assert_eq!(ModelKind::VggMnist.feature_dim(), 512);
         assert_eq!(ModelKind::DtaKiba.feature_dim(), 96);
+    }
+
+    #[test]
+    fn layer_plan_matches_inventories() {
+        for kind in ModelKind::ALL {
+            let plan = kind.layer_plan();
+            assert_eq!(plan.fc, kind.fc_names());
+            assert_eq!(plan.feature_dim, kind.feature_dim());
+            // conv steps appear in exactly conv_names() order
+            let mut conv_steps = Vec::new();
+            for branch in plan.branches {
+                for step in branch.steps {
+                    if let Step::Conv2d(n) | Step::Conv1d(n) = step {
+                        conv_steps.push(*n);
+                    }
+                }
+            }
+            assert_eq!(conv_steps, kind.conv_names());
+            // every branch ends in a feature-producing step
+            for branch in plan.branches {
+                assert!(matches!(
+                    branch.steps.last(),
+                    Some(Step::Flatten) | Some(Step::GlobalMaxPool)
+                ));
+            }
+        }
+        assert_eq!(ModelKind::VggMnist.layer_plan().branches.len(), 1);
+        assert_eq!(ModelKind::DtaKiba.layer_plan().branches.len(), 2);
     }
 
     #[test]

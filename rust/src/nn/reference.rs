@@ -11,7 +11,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::io::Archive;
 use crate::mat::Mat;
-use crate::nn::model::ModelKind;
+use crate::nn::lowering::{self, ActView, PlanInput};
+use crate::nn::model::{Branch, BranchInput, ModelKind, Step};
 
 /// A dense NHWC activation tensor.
 #[derive(Debug, Clone)]
@@ -40,6 +41,9 @@ impl Act4 {
 }
 
 /// SAME-padded stride-1 conv2d (HWIO weights) + bias + optional ReLU.
+/// Bias + activation are fused into the accumulation walk: each output
+/// position is finished (accumulated, biased, activated) before the
+/// loop moves on, so the tensor is traversed exactly once.
 pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -> Act4 {
     let (kh, kw, cin, cout) = (wshape[0], wshape[1], wshape[2], wshape[3]);
     assert_eq!(cin, x.c, "conv2d channel mismatch");
@@ -74,16 +78,10 @@ pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -
                         }
                     }
                 }
-            }
-        }
-    }
-    for b in 0..x.n {
-        for y in 0..x.h {
-            for xx in 0..x.w {
-                let base = out.idx(b, y, xx, 0);
-                for co in 0..cout {
-                    let v = out.data[base + co] + bias[co];
-                    out.data[base + co] = if relu { v.max(0.0) } else { v };
+                let orow = &mut out.data[out_base..out_base + cout];
+                for (v, bch) in orow.iter_mut().zip(bias.iter()) {
+                    let s = *v + *bch;
+                    *v = if relu { s.max(0.0) } else { s };
                 }
             }
         }
@@ -91,21 +89,27 @@ pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -
     out
 }
 
-/// 2×2 max pool, stride 2 (VALID).
+/// 2×2 max pool, stride 2 (VALID). The output is written through one
+/// linearly advancing index; the four input taps share one base index
+/// per window instead of recomputing `idx` per element.
 pub fn maxpool2(x: &Act4) -> Act4 {
     let (oh, ow) = (x.h / 2, x.w / 2);
     let mut out = Act4::zeros(x.n, oh, ow, x.c);
+    let c = x.c;
+    let mut oi = 0usize;
     for b in 0..x.n {
         for y in 0..oh {
             for xx in 0..ow {
-                for c in 0..x.c {
-                    let m = x
-                        .get(b, 2 * y, 2 * xx, c)
-                        .max(x.get(b, 2 * y, 2 * xx + 1, c))
-                        .max(x.get(b, 2 * y + 1, 2 * xx, c))
-                        .max(x.get(b, 2 * y + 1, 2 * xx + 1, c));
-                    let i = out.idx(b, y, xx, c);
-                    out.data[i] = m;
+                let i00 = ((b * x.h + 2 * y) * x.w + 2 * xx) * c;
+                let i01 = i00 + c;
+                let i10 = i00 + x.w * c;
+                let i11 = i10 + c;
+                for ch in 0..c {
+                    out.data[oi] = x.data[i00 + ch]
+                        .max(x.data[i01 + ch])
+                        .max(x.data[i10 + ch])
+                        .max(x.data[i11 + ch]);
+                    oi += 1;
                 }
             }
         }
@@ -115,7 +119,7 @@ pub fn maxpool2(x: &Act4) -> Act4 {
 
 /// SAME-padded stride-1 conv1d (WIO weights) + bias + ReLU over an
 /// (n, len, c) activation stored flat.
-fn conv1d_relu(
+pub fn conv1d_relu(
     x: &[f32],
     n: usize,
     len: usize,
@@ -228,7 +232,131 @@ pub fn dta_features(
     Ok(feats)
 }
 
-/// Features for a whole test set, dispatching on model kind.
+/// Run one branch of the layer plan with the dense oracle kernels,
+/// returning this branch's `(n × c)` feature block.
+fn run_branch_dense(
+    params: &Archive,
+    branch: &Branch,
+    input: &PlanInput<'_>,
+) -> Result<Mat> {
+    let n = input.batch();
+    let act: Act4;
+    let mut toks: Option<(&[i32], usize)> = None;
+    match (branch.input, input) {
+        (BranchInput::Images, PlanInput::Images { h, w, c, data, .. }) => {
+            anyhow::ensure!(
+                data.len() == n * h * w * c,
+                "image batch shape mismatch"
+            );
+            act = Act4 { n, h: *h, w: *w, c: *c, data: data.to_vec() };
+        }
+        (BranchInput::LigTokens, PlanInput::Tokens { lig, .. }) => {
+            anyhow::ensure!(
+                n > 0 && !lig.is_empty() && lig.len() % n == 0,
+                "empty or ragged token batch"
+            );
+            toks = Some((*lig, lig.len() / n));
+            act = Act4::zeros(0, 0, 0, 0);
+        }
+        (BranchInput::ProtTokens, PlanInput::Tokens { prot, .. }) => {
+            anyhow::ensure!(
+                n > 0 && !prot.is_empty() && prot.len() % n == 0,
+                "empty or ragged token batch"
+            );
+            toks = Some((*prot, prot.len() / n));
+            act = Act4::zeros(0, 0, 0, 0);
+        }
+        _ => bail!("input kind does not match the model's layer plan"),
+    }
+    run_steps(params, branch.steps, act, toks, n)
+}
+
+/// Walk a branch's steps from an initial activation (owned — callers
+/// with a materialized tensor hand it over without a copy).
+fn run_steps(
+    params: &Archive,
+    steps: &[Step],
+    mut act: Act4,
+    toks: Option<(&[i32], usize)>,
+    n: usize,
+) -> Result<Mat> {
+    for step in steps {
+        match *step {
+            Step::Embed(name) => {
+                let (tokens, len) =
+                    toks.with_context(|| format!("embed `{name}` without tokens"))?;
+                let (eshape, emb) = tensor(params, name)?;
+                let edim = eshape[1];
+                let mut out = Mat::zeros(0, 0);
+                lowering::embed_into(tokens, n, len, &emb, edim, &mut out)?;
+                act = Act4 { n, h: 1, w: len, c: edim, data: out.data };
+            }
+            Step::Conv2d(name) => {
+                let (wshape, w) = tensor(params, &format!("{name}.w"))?;
+                let (_, b) = tensor(params, &format!("{name}.b"))?;
+                act = conv2d(&act, &w, wshape, &b, true);
+            }
+            Step::Conv1d(name) => {
+                let (wshape, w) = tensor(params, &format!("{name}.w"))?;
+                let (_, b) = tensor(params, &format!("{name}.b"))?;
+                act = Act4 {
+                    n,
+                    h: 1,
+                    w: act.w,
+                    c: wshape[2],
+                    data: conv1d_relu(&act.data, n, act.w, act.c, &w, wshape, &b),
+                };
+            }
+            Step::MaxPool2 => act = maxpool2(&act),
+            Step::GlobalMaxPool => {
+                let mut feats = Mat::zeros(n, act.c);
+                lowering::global_maxpool_into(
+                    ActView::new(n, 1, act.w, act.c, &act.data),
+                    &mut feats,
+                    0,
+                );
+                return Ok(feats);
+            }
+            Step::Flatten => {
+                let cols = act.h * act.w * act.c;
+                return Ok(Mat::from_vec(n, cols, act.data));
+            }
+        }
+    }
+    bail!("layer-plan branch did not end in a feature-producing step")
+}
+
+/// Features for a batch of inputs through the declarative layer plan,
+/// executed with the dense oracle kernels; branch outputs concatenate
+/// in declaration order.
+pub fn plan_features(
+    kind: ModelKind,
+    params: &Archive,
+    input: &PlanInput<'_>,
+) -> Result<Mat> {
+    let plan = kind.layer_plan();
+    let n = input.batch();
+    let mut parts = Vec::with_capacity(plan.branches.len());
+    for branch in plan.branches {
+        parts.push(run_branch_dense(params, branch, input)?);
+    }
+    if parts.len() == 1 {
+        return Ok(parts.pop().unwrap());
+    }
+    let dim: usize = parts.iter().map(|p| p.cols).sum();
+    let mut feats = Mat::zeros(n, dim);
+    let mut off = 0usize;
+    for p in parts {
+        for b in 0..n {
+            feats.data[b * dim + off..b * dim + off + p.cols]
+                .copy_from_slice(p.row(b));
+        }
+        off += p.cols;
+    }
+    Ok(feats)
+}
+
+/// Features for a whole test set through the layer plan of `kind`.
 pub fn features_for_test_set(
     kind: ModelKind,
     params: &Archive,
@@ -237,13 +365,28 @@ pub fn features_for_test_set(
     match test {
         crate::io::TestSet::Cls { x, y } => {
             let n = y.len();
-            let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
-            let act = Act4 { n, h, w, c, data: x.as_f32()? };
-            vgg_features(params, &act)
+            let plan = kind.layer_plan();
+            anyhow::ensure!(
+                plan.branches.len() == 1
+                    && matches!(plan.branches[0].input, BranchInput::Images),
+                "classification test set does not match the model's layer plan"
+            );
+            anyhow::ensure!(x.shape[0] == n, "example/label count mismatch");
+            // hand the materialized tensor straight to the walker — no
+            // second whole-test-set copy
+            let act = Act4 {
+                n,
+                h: x.shape[1],
+                w: x.shape[2],
+                c: x.shape[3],
+                data: x.as_f32()?,
+            };
+            run_steps(params, plan.branches[0].steps, act, None, n)
         }
         crate::io::TestSet::Reg { lig, prot, y } => {
-            let _ = kind;
-            dta_features(params, &lig.as_i32()?, &prot.as_i32()?, y.len())
+            let (l, p) = (lig.as_i32()?, prot.as_i32()?);
+            let input = PlanInput::Tokens { n: y.len(), lig: &l, prot: &p };
+            plan_features(kind, params, &input)
         }
     }
 }
@@ -299,9 +442,7 @@ mod tests {
         assert_eq!(out.data, vec![5.0]);
     }
 
-    #[test]
-    fn vgg_features_shape_on_synthetic_weights() {
-        let mut rng = Prng::seeded(2);
+    fn synthetic_vgg_params(rng: &mut Prng) -> Archive {
         let mut params = Archive::new();
         let dims = [("c1a", 1, 16), ("c1b", 16, 16), ("c2a", 16, 32), ("c2b", 32, 32), ("c3a", 32, 32)];
         for (name, cin, cout) in dims {
@@ -316,6 +457,13 @@ mod tests {
                 Tensor::from_f32(vec![cout], &vec![0.0; cout]),
             );
         }
+        params
+    }
+
+    #[test]
+    fn vgg_features_shape_on_synthetic_weights() {
+        let mut rng = Prng::seeded(2);
+        let params = synthetic_vgg_params(&mut rng);
         let x = Act4 {
             n: 2,
             h: 32,
@@ -326,5 +474,72 @@ mod tests {
         let f = vgg_features(&params, &x).unwrap();
         assert_eq!((f.rows, f.cols), (2, 512));
         assert!(f.data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn plan_executor_matches_hardcoded_vgg_oracle() {
+        let mut rng = Prng::seeded(6);
+        let params = synthetic_vgg_params(&mut rng);
+        let x = Act4 {
+            n: 2,
+            h: 32,
+            w: 32,
+            c: 1,
+            data: (0..2 * 32 * 32).map(|_| rng.next_f32()).collect(),
+        };
+        let want = vgg_features(&params, &x).unwrap();
+        let input =
+            PlanInput::Images { n: 2, h: 32, w: 32, c: 1, data: &x.data };
+        let got = plan_features(ModelKind::VggMnist, &params, &input).unwrap();
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert_eq!(got.data, want.data, "plan walker diverged from oracle");
+    }
+
+    #[test]
+    fn plan_executor_matches_hardcoded_dta_oracle() {
+        let mut rng = Prng::seeded(7);
+        let mut params = Archive::new();
+        // dims chosen so each branch contributes 48 features (the
+        // hardcoded oracle writes prot at offset 48)
+        for branch in ["lig", "prot"] {
+            let (vocab, edim) = (12usize, 4usize);
+            let emb: Vec<f32> =
+                (0..vocab * edim).map(|_| rng.normal() as f32).collect();
+            params.insert(
+                format!("{branch}_embed"),
+                Tensor::from_f32(vec![vocab, edim], &emb),
+            );
+            let mut cin = edim;
+            for (conv, cout) in [("c1", 6usize), ("c2", 6), ("c3", 48)] {
+                let w: Vec<f32> =
+                    (0..3 * cin * cout).map(|_| 0.2 * rng.normal() as f32).collect();
+                params.insert(
+                    format!("{branch}_{conv}.w"),
+                    Tensor::from_f32(vec![3, cin, cout], &w),
+                );
+                params.insert(
+                    format!("{branch}_{conv}.b"),
+                    Tensor::from_f32(vec![cout], &vec![0.01; cout]),
+                );
+                cin = cout;
+            }
+        }
+        let n = 3usize;
+        let (llen, plen) = (7usize, 9usize);
+        let lig: Vec<i32> = (0..n * llen).map(|i| (i % 12) as i32).collect();
+        let prot: Vec<i32> = (0..n * plen).map(|i| (i % 11) as i32).collect();
+        let want = dta_features(&params, &lig, &prot, n).unwrap();
+        let input = PlanInput::Tokens { n, lig: &lig, prot: &prot };
+        let got = plan_features(ModelKind::DtaKiba, &params, &input).unwrap();
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert_eq!(got.data, want.data, "plan walker diverged from oracle");
+    }
+
+    #[test]
+    fn plan_executor_rejects_mismatched_input_kind() {
+        let mut rng = Prng::seeded(8);
+        let params = synthetic_vgg_params(&mut rng);
+        let input = PlanInput::Tokens { n: 1, lig: &[0], prot: &[0] };
+        assert!(plan_features(ModelKind::VggMnist, &params, &input).is_err());
     }
 }

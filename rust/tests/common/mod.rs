@@ -1,0 +1,48 @@
+//! Shared fixtures for the integration tests (not a test target —
+//! cargo treats `tests/common/` as a plain module directory).
+
+use sham::io::{Archive, Tensor};
+use sham::mat::Mat;
+use sham::nn::ModelKind;
+use sham::util::prng::Prng;
+
+/// Shape-consistent synthetic VGG-like archive: 8×8×1 images → three
+/// 2×2 pools → 1×1×5 features → fc 5→6→6→4. Small enough for fast
+/// pure-Rust forwards, chain-consistent so the layer plan actually
+/// runs. Mirror of `chain_archive` in the `nn::compressed` unit tests
+/// (`#[cfg(test)]` items cannot cross the crate boundary) — keep the
+/// two in sync.
+pub fn synthetic_vgg_archive(rng: &mut Prng) -> Archive {
+    let mut a = Archive::new();
+    let conv_dims = [
+        ("c1a", 1usize, 3usize),
+        ("c1b", 3, 3),
+        ("c2a", 3, 4),
+        ("c2b", 4, 4),
+        ("c3a", 4, 5),
+    ];
+    for (name, cin, cout) in conv_dims {
+        let w = Mat::gaussian(3 * 3 * cin, cout, 0.25, rng);
+        a.insert(
+            format!("{name}.w"),
+            Tensor::from_f32(vec![3, 3, cin, cout], &w.data),
+        );
+        a.insert(
+            format!("{name}.b"),
+            Tensor::from_f32(vec![cout], &vec![0.05; cout]),
+        );
+    }
+    for (name, &(nin, nout)) in ModelKind::VggMnist
+        .fc_names()
+        .iter()
+        .zip([(5usize, 6usize), (6, 6), (6, 4)].iter())
+    {
+        let w = Mat::gaussian(nin, nout, 0.4, rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(
+            format!("{name}.b"),
+            Tensor::from_f32(vec![nout], &vec![0.01; nout]),
+        );
+    }
+    a
+}

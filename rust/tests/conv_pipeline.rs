@@ -1,0 +1,301 @@
+//! End-to-end tests of the lowered conv pipeline: property tests of
+//! im2col-compressed convolution against the direct-loop oracle (every
+//! registry format, dirty reused buffers, randomized shapes/batches),
+//! whole-model pure-Rust forward passes, and the `.sham` whole-model
+//! round-trip including conv layers. No artifacts or PJRT needed.
+
+use sham::formats::{all_formats, FormatId, Workspace};
+use sham::io::{Archive, Tensor};
+use sham::mat::Mat;
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::lowering::{conv_lowered_into, lower_conv1d, lower_conv2d, ActView};
+use sham::nn::reference::{conv1d_relu, conv2d, plan_features, Act4};
+use sham::nn::{CompressedModel, ModelKind, PlanInput};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+
+mod common;
+use common::synthetic_vgg_archive;
+
+fn nan_mat() -> Mat {
+    let mut m = Mat::zeros(5, 3);
+    m.data.fill(f32::NAN);
+    m
+}
+
+/// Property: for randomized shapes, batches, and sparsity/quantization
+/// levels, the lowered convolution matches the dense triple-loop oracle
+/// within 1e-4 for every registry format — with NaN-poisoned reused
+/// buffers, so any kernel that fails to fully overwrite is caught.
+#[test]
+fn lowered_conv2d_matches_oracle_property() {
+    let mut rng = Prng::seeded(0x10_2C01);
+    let mut patches = nan_mat();
+    let mut out = nan_mat();
+    for case in 0..12 {
+        let n = 1 + rng.gen_range(3);
+        let h = 1 + rng.gen_range(7);
+        let w = 1 + rng.gen_range(7);
+        let cin = 1 + rng.gen_range(4);
+        let cout = 1 + rng.gen_range(5);
+        let (kh, kw) = ([1, 3, 5][rng.gen_range(3)], [1, 3, 5][rng.gen_range(3)]);
+        // quantized/sparse weights: the regime the compressed formats
+        // are built for
+        let wmat = Mat::sparse_quantized(kh * kw * cin, cout, 0.4, 8, &mut rng);
+        let wshape = [kh, kw, cin, cout];
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+        let x = Act4 {
+            n,
+            h,
+            w,
+            c: cin,
+            data: (0..n * h * w * cin).map(|_| rng.normal() as f32).collect(),
+        };
+        let want = conv2d(&x, &wmat.data, &wshape, &bias, true);
+        for f in all_formats(&wmat) {
+            conv_lowered_into(
+                f.as_ref(),
+                kh,
+                kw,
+                ActView::new(n, h, w, cin, &x.data),
+                &bias,
+                true,
+                1,
+                &mut patches,
+                &mut out,
+            );
+            assert_eq!((out.rows, out.cols), (n * h * w, cout));
+            for (a, b) in out.data.iter().zip(want.data.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "case {case} {}: {a} vs {b} (shape {n}x{h}x{w}x{cin}->{cout}, k {kh}x{kw})",
+                    f.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lowered_conv1d_matches_oracle_property() {
+    let mut rng = Prng::seeded(0x10_2C02);
+    let mut patches = nan_mat();
+    let mut out = nan_mat();
+    for case in 0..10 {
+        let n = 1 + rng.gen_range(3);
+        let len = 1 + rng.gen_range(12);
+        let cin = 1 + rng.gen_range(5);
+        let cout = 1 + rng.gen_range(6);
+        let kw = [1, 3, 5, 7][rng.gen_range(4)];
+        let wmat = Mat::sparse_quantized(kw * cin, cout, 0.5, 6, &mut rng);
+        let wshape = [kw, cin, cout];
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+        let xd: Vec<f32> = (0..n * len * cin).map(|_| rng.normal() as f32).collect();
+        let want = conv1d_relu(&xd, n, len, cin, &wmat.data, &wshape, &bias);
+        for f in all_formats(&wmat) {
+            conv_lowered_into(
+                f.as_ref(),
+                1,
+                kw,
+                ActView::new(n, 1, len, cin, &xd),
+                &bias,
+                true,
+                1,
+                &mut patches,
+                &mut out,
+            );
+            for (a, b) in out.data.iter().zip(want.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "case {case} {}: {a} vs {b} (len {len}, {cin}->{cout}, kw {kw})",
+                    f.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lowered_weight_shapes() {
+    let v: Vec<f32> = (0..3 * 3 * 2 * 4).map(|i| i as f32).collect();
+    let m = lower_conv2d(&v, &[3, 3, 2, 4]);
+    assert_eq!((m.rows, m.cols), (18, 4));
+    assert_eq!(m.data, v);
+    let v1: Vec<f32> = (0..5 * 2 * 3).map(|i| i as f32).collect();
+    let m1 = lower_conv1d(&v1, &[5, 2, 3]);
+    assert_eq!((m1.rows, m1.cols), (10, 3));
+}
+
+/// A shape-consistent DTA-like archive (both branches end at 5 channels
+/// → 10 features → fc 10→8→8→6→1).
+fn synthetic_dta_archive(rng: &mut Prng) -> Archive {
+    let mut a = Archive::new();
+    for branch in ["lig", "prot"] {
+        let (vocab, edim) = (16usize, 4usize);
+        let emb: Vec<f32> = (0..vocab * edim).map(|_| rng.normal() as f32).collect();
+        a.insert(
+            format!("{branch}_embed"),
+            Tensor::from_f32(vec![vocab, edim], &emb),
+        );
+        let mut cin = edim;
+        for (conv, cout) in [("c1", 6usize), ("c2", 6), ("c3", 5)] {
+            let w = Mat::gaussian(3 * cin, cout, 0.3, rng);
+            a.insert(
+                format!("{branch}_{conv}.w"),
+                Tensor::from_f32(vec![3, cin, cout], &w.data),
+            );
+            a.insert(
+                format!("{branch}_{conv}.b"),
+                Tensor::from_f32(vec![cout], &vec![0.02; cout]),
+            );
+            cin = cout;
+        }
+    }
+    let fc_dims = [(10usize, 8usize), (8, 8), (8, 6), (6, 1)];
+    for (name, &(nin, nout)) in
+        ModelKind::DtaKiba.fc_names().iter().zip(fc_dims.iter())
+    {
+        let w = Mat::gaussian(nin, nout, 0.4, rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+    }
+    a
+}
+
+#[test]
+fn dta_pure_forward_matches_dense_reference() {
+    let mut rng = Prng::seeded(0x10_2C03);
+    let a = synthetic_dta_archive(&mut rng);
+    let n = 3usize;
+    let (llen, plen) = (8usize, 11usize);
+    let lig: Vec<i32> = (0..n * llen).map(|i| (i % 16) as i32).collect();
+    let prot: Vec<i32> = (0..n * plen).map(|i| (i % 13) as i32).collect();
+    let input = PlanInput::Tokens { n, lig: &lig, prot: &prot };
+    let feats = plan_features(ModelKind::DtaKiba, &a, &input).unwrap();
+    let base = CompressedModel::baseline(ModelKind::DtaKiba, &a).unwrap();
+    let want = base.fc_forward(&feats, 1);
+    for fmt in [FormatId::Dense, FormatId::Hac, FormatId::Shac, FormatId::RelIdx] {
+        let cfg = CompressionCfg {
+            fc_format: FcFormat::Fixed(fmt),
+            conv_format: FcFormat::Fixed(fmt),
+            ..Default::default()
+        };
+        let mut rng2 = Prng::seeded(9);
+        let m = CompressedModel::build(ModelKind::DtaKiba, &a, &cfg, &mut rng2).unwrap();
+        let mut ws = Workspace::new();
+        let got = m.forward_into(&input, 1, &mut ws).unwrap();
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "{fmt:?}: dta pure forward diverged by {}",
+            got.max_abs_diff(&want)
+        );
+        // a second, differently-shaped batch through the same (now
+        // dirty) workspace must still be exact
+        let n2 = 2usize;
+        let lig2: Vec<i32> = (0..n2 * llen).map(|i| ((i * 3) % 16) as i32).collect();
+        let prot2: Vec<i32> = (0..n2 * plen).map(|i| ((i * 5) % 16) as i32).collect();
+        let input2 = PlanInput::Tokens { n: n2, lig: &lig2, prot: &prot2 };
+        let feats2 = plan_features(ModelKind::DtaKiba, &a, &input2).unwrap();
+        let want2 = base.fc_forward(&feats2, 1);
+        let got2 = m.forward_into(&input2, 1, &mut ws).unwrap();
+        assert!(got2.max_abs_diff(&want2) < 1e-4, "{fmt:?}: dirty-ws batch");
+    }
+}
+
+#[test]
+fn empty_token_batch_errors_instead_of_panicking() {
+    // Serving inputs are untrusted: a zero-length token sequence must
+    // come back as an error, never unwind a worker thread.
+    let mut rng = Prng::seeded(0x10_2C06);
+    let a = synthetic_dta_archive(&mut rng);
+    let m = CompressedModel::baseline(ModelKind::DtaKiba, &a).unwrap();
+    let mut ws = Workspace::new();
+    let input = PlanInput::Tokens { n: 1, lig: &[], prot: &[] };
+    assert!(m.forward_into(&input, 1, &mut ws).is_err());
+    let lig = [0i32; 4];
+    let input = PlanInput::Tokens { n: 1, lig: &lig, prot: &[] };
+    assert!(m.forward_into(&input, 1, &mut ws).is_err());
+}
+
+/// Whole-model `.sham` round-trip including conv layers: the loaded
+/// model keeps every layer's format, produces identical outputs, and
+/// re-derives identical ψ accounting.
+#[test]
+fn whole_model_sham_roundtrip_with_conv() {
+    let dir = std::env::temp_dir().join("sham_conv_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Prng::seeded(0x10_2C04);
+    let a = synthetic_dta_archive(&mut rng);
+    let cfg = CompressionCfg {
+        conv_quant: Some((Kind::Cws, 8)),
+        conv_format: FcFormat::Fixed(FormatId::Shac),
+        fc_prune: Some(60.0),
+        fc_quant: Some((Kind::Cws, 8)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    let model = CompressedModel::build(ModelKind::DtaKiba, &a, &cfg, &mut rng).unwrap();
+    let path = dir.join("dta_full.sham");
+    model.save_sham(&path).unwrap();
+    // same layer names, different benchmark: must be rejected
+    assert!(CompressedModel::load_sham(ModelKind::DtaDavis, &path).is_err());
+    let loaded = CompressedModel::load_sham(ModelKind::DtaKiba, &path).unwrap();
+
+    // formats survive (no recompression into something else)
+    assert_eq!(loaded.fc.len(), model.fc.len());
+    assert_eq!(loaded.conv.len(), model.conv.len());
+    for (l, m) in loaded.conv.iter().zip(model.conv.iter()) {
+        assert_eq!(l.w.id(), m.w.id(), "conv {}", m.name);
+        assert_eq!(l.w.decompress(), m.w.decompress(), "conv {}", m.name);
+        assert_eq!((l.kh, l.kw, l.cin, l.cout), (m.kh, m.kw, m.cin, m.cout));
+    }
+    for (l, m) in loaded.fc.iter().zip(model.fc.iter()) {
+        assert_eq!(l.w.id(), m.w.id(), "fc {}", m.name);
+        assert_eq!(l.w.decompress(), m.w.decompress(), "fc {}", m.name);
+    }
+    // accounting is re-derived bit-identically
+    assert!((loaded.psi_fc() - model.psi_fc()).abs() < 1e-12);
+    assert!((loaded.psi_total() - model.psi_total()).abs() < 1e-12);
+    // and the loaded model is executable with identical outputs
+    let n = 2usize;
+    let lig: Vec<i32> = (0..n * 9).map(|i| (i % 16) as i32).collect();
+    let prot: Vec<i32> = (0..n * 7).map(|i| (i % 16) as i32).collect();
+    let input = PlanInput::Tokens { n, lig: &lig, prot: &prot };
+    let mut ws1 = Workspace::new();
+    let mut ws2 = Workspace::new();
+    let out1 = model.forward_into(&input, 1, &mut ws1).unwrap();
+    let out2 = loaded.forward_into(&input, 1, &mut ws2).unwrap();
+    assert_eq!(out1.data, out2.data, "loaded model output drifted");
+    // params archive was rebuilt with the original tensor shapes
+    assert_eq!(loaded.params["lig_c1.w"].shape, vec![3, 4, 6]);
+    assert_eq!(loaded.params["lig_embed"].shape, vec![16, 4]);
+}
+
+#[test]
+fn vgg_model_sham_roundtrip_keeps_hwio_shape() {
+    let dir = std::env::temp_dir().join("sham_conv_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Prng::seeded(0x10_2C05);
+    // chain-consistent VGG-like archive (8×8 input → 1×1×5 → fc 5→…→4)
+    let a = synthetic_vgg_archive(&mut rng);
+    let cfg = CompressionCfg {
+        conv_format: FcFormat::Fixed(FormatId::Hac),
+        fc_format: FcFormat::Fixed(FormatId::Hac),
+        ..Default::default()
+    };
+    let model = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
+    let path = dir.join("vgg_full.sham");
+    model.save_sham(&path).unwrap();
+    let loaded = CompressedModel::load_sham(ModelKind::VggMnist, &path).unwrap();
+    assert_eq!(loaded.params["c1a.w"].shape, vec![3, 3, 1, 3]);
+    let images: Vec<f32> = (0..2 * 8 * 8).map(|_| rng.normal() as f32).collect();
+    let input = PlanInput::Images { n: 2, h: 8, w: 8, c: 1, data: &images };
+    let mut ws1 = Workspace::new();
+    let mut ws2 = Workspace::new();
+    assert_eq!(
+        model.forward_into(&input, 1, &mut ws1).unwrap().data,
+        loaded.forward_into(&input, 1, &mut ws2).unwrap().data,
+    );
+}

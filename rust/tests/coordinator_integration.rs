@@ -13,6 +13,8 @@ use sham::nn::{CompressedModel, ModelKind};
 use sham::quant::Kind;
 use sham::util::prng::Prng;
 
+mod common;
+
 fn artifacts() -> Option<PathBuf> {
     for base in ["artifacts", "../artifacts"] {
         let p = PathBuf::from(base);
@@ -63,6 +65,81 @@ fn build_server(art: &PathBuf) -> Server {
         .add_variant("mnist-shac", compressed, kind.features_hlo(art, 32))
         .unwrap();
     server
+}
+
+// ---- pure-Rust full-network variants (no artifacts needed) -------------
+
+use common::synthetic_vgg_archive;
+
+#[test]
+fn pure_variant_serves_batches_without_pjrt() {
+    // The whole point of the lowered pipeline: a full-network compressed
+    // variant answers real batched traffic with zero PJRT dependency —
+    // this test runs even in stub builds with no artifacts.
+    let mut rng = Prng::seeded(0xBEEF);
+    let a = synthetic_vgg_archive(&mut rng);
+    let ccfg = CompressionCfg {
+        conv_quant: Some((Kind::Cws, 8)),
+        conv_format: FcFormat::Fixed(sham::formats::FormatId::Shac),
+        fc_quant: Some((Kind::Cws, 8)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    let model =
+        CompressedModel::build(ModelKind::VggMnist, &a, &ccfg, &mut rng).unwrap();
+    // reference outputs straight through the model, one big batch
+    let n = 24usize;
+    let per = 8 * 8;
+    let images: Vec<f32> = (0..n * per).map(|_| rng.normal() as f32).collect();
+    let input = sham::nn::PlanInput::Images { n, h: 8, w: 8, c: 1, data: &images };
+    let mut ws = sham::formats::Workspace::new();
+    let want = model.forward_into(&input, 1, &mut ws).unwrap().clone();
+
+    let model2 =
+        CompressedModel::build(ModelKind::VggMnist, &a, &ccfg, &mut Prng::seeded(0xE)).unwrap();
+    let mut server = Server::new(ServerConfig {
+        policy: Policy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+            queue_cap: 64,
+        },
+        fc_threads: 1,
+    });
+    server.add_variant_pure("vgg-full", model2).unwrap();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let img = images[i * per..(i + 1) * per].to_vec();
+        pending.push((i, server.submit("vgg-full", Input::Image(img)).unwrap()));
+    }
+    for (i, rx) in pending {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 4);
+        for (a, b) in out.iter().zip(want.row(i).iter()) {
+            assert!((a - b).abs() < 1e-4, "request {i}: {a} vs {b}");
+        }
+    }
+    // ragged input → per-request error, variant stays alive
+    let err = server.infer("vgg-full", Input::Image(vec![0.0; 7]));
+    assert!(err.is_err(), "ragged image must be rejected");
+    let ok = server.infer(
+        "vgg-full",
+        Input::Image(images[..per].to_vec()),
+    );
+    assert!(ok.is_ok(), "variant wedged after bad request");
+}
+
+#[test]
+fn pure_variant_rejects_wrong_input_kind() {
+    let mut rng = Prng::seeded(77);
+    let a = synthetic_vgg_archive(&mut rng);
+    let model = CompressedModel::baseline(ModelKind::VggMnist, &a).unwrap();
+    let mut server = Server::new(ServerConfig::default());
+    server.add_variant_pure("vgg-pure", model).unwrap();
+    let res = server.infer(
+        "vgg-pure",
+        Input::Tokens { lig: vec![0; 4], prot: vec![0; 4] },
+    );
+    assert!(res.is_err(), "token input against an image variant");
 }
 
 // ---- failure injection (no artifacts needed) ---------------------------
