@@ -1,10 +1,13 @@
 //! Bench: conv execution on the compressed formats — the im2col-lowered
 //! pipeline (`nn::lowering`) against the dense triple-loop reference,
-//! per model family (VGG-like conv2d stack, DTA-like conv1d branches).
-//! A counting global allocator verifies the acceptance criterion that
-//! the conv hot path performs **zero heap allocations per call after
-//! warmup** (sequential path; the pooled path allocates its scope
-//! bookkeeping). Results land in `BENCH_compressed_conv.json`.
+//! per model family (VGG-like conv2d stack, DTA-like conv1d branches),
+//! plus strided SAME / strided VALID single-layer shapes. A counting
+//! global allocator verifies the acceptance criterion that the conv hot
+//! path performs **zero heap allocations per call after warmup** —
+//! including the strided/VALID geometries (sequential path; the pooled
+//! path allocates its scope bookkeeping). Results land in
+//! `BENCH_compressed_conv.json`. Set `SHAM_BENCH_QUICK=1` (the CI smoke
+//! step) for a fast low-iteration run.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,13 +15,24 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use sham::formats::{FormatId, Workspace};
 use sham::io::{Archive, Tensor};
 use sham::mat::Mat;
-use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
+use sham::nn::lowering::{conv_lowered_into, ActView};
 use sham::nn::reference::plan_features;
-use sham::nn::{CompressedModel, ModelKind, PlanInput};
+use sham::nn::{CompressedModel, ConvSpec, ModelKind, Padding, PlanInput};
 use sham::quant::Kind;
 use sham::util::prng::Prng;
 use sham::util::stats::Summary;
 use sham::util::timer::{bench, black_box, fmt_ns};
+
+/// CI smoke mode: fewer timing iterations, same alloc assertions.
+/// Honors the documented contract: only `SHAM_BENCH_QUICK=1` (or any
+/// non-empty value other than `0`) enables it.
+fn bench_iters() -> usize {
+    match std::env::var("SHAM_BENCH_QUICK") {
+        Ok(v) if !v.is_empty() && v != "0" => 3,
+        _ => 8,
+    }
+}
 
 /// Counts every heap allocation so steady-state hot paths can prove
 /// they perform none.
@@ -121,6 +135,63 @@ struct Row {
     steady_allocs: Option<u64>,
 }
 
+/// Strided SAME / strided VALID single-layer shapes through
+/// `conv_lowered_into` with reused buffers: the generalized pipeline
+/// must stay allocation-free after warmup for *every* geometry, not
+/// just the benchmarks' stride-1 SAME.
+fn bench_strided(rows: &mut Vec<Row>) {
+    let mut rng = Prng::seeded(0x57_81DE);
+    let (n, h, w, cin, cout) = (8usize, 32usize, 32usize, 16usize, 32usize);
+    let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.normal() as f32).collect();
+    let view = ActView::new(n, h, w, cin, &x);
+    for (label, spec) in [
+        ("3x3_s2_same", ConvSpec::new(3, 3, (2, 2), Padding::Same)),
+        ("5x5_s2_valid", ConvSpec::new(5, 5, (2, 2), Padding::Valid)),
+        ("2x2_s1_same", ConvSpec::new(2, 2, (1, 1), Padding::Same)),
+    ] {
+        let wmat =
+            Mat::sparse_quantized(spec.kh * spec.kw * cin, cout, 0.3, 32, &mut rng);
+        let bias = vec![0.01f32; cout];
+        for fmt in [FormatId::Dense, FormatId::IndexMap, FormatId::Hac, FormatId::Shac]
+        {
+            let f = fmt.compress(&wmat);
+            let mut patches = Mat::zeros(0, 0);
+            let mut out = Mat::zeros(0, 0);
+            for _ in 0..2 {
+                conv_lowered_into(
+                    f.as_ref(), &spec, view, &bias, true, 1, &mut patches, &mut out,
+                );
+            }
+            let before = allocs();
+            for _ in 0..5 {
+                conv_lowered_into(
+                    f.as_ref(), &spec, view, &bias, true, 1, &mut patches, &mut out,
+                );
+                black_box(&out);
+            }
+            let steady = allocs() - before;
+            let s = bench(1, bench_iters(), || {
+                conv_lowered_into(
+                    f.as_ref(), &spec, view, &bias, true, 1, &mut patches, &mut out,
+                );
+                black_box(&out);
+            });
+            println!(
+                "{:<40} {:>12} {:>12} {:>8}",
+                format!("strided/{label}_{fmt}"),
+                fmt_ns(s.p50),
+                fmt_ns(s.p95),
+                format!("{steady}"),
+            );
+            rows.push(Row {
+                name: format!("strided/{label}_{fmt}"),
+                summary: s,
+                steady_allocs: Some(steady),
+            });
+        }
+    }
+}
+
 fn bench_model(
     label: &str,
     kind: ModelKind,
@@ -129,7 +200,7 @@ fn bench_model(
     rows: &mut Vec<Row>,
 ) {
     // dense-loop reference conv (the oracle) as the baseline
-    let s_ref = bench(2, 8, || {
+    let s_ref = bench(2, bench_iters(), || {
         black_box(plan_features(kind, archive, black_box(input)).unwrap());
     });
     println!(
@@ -146,7 +217,7 @@ fn bench_model(
     });
     for fmt in [FormatId::Dense, FormatId::IndexMap, FormatId::Hac, FormatId::Shac] {
         let cfg = CompressionCfg {
-            conv_format: FcFormat::Fixed(fmt),
+            conv_format: ConvFormat::Fixed(fmt),
             fc_format: FcFormat::Fixed(fmt),
             ..Default::default()
         };
@@ -164,7 +235,7 @@ fn bench_model(
             black_box(model.conv_features_into(black_box(input), 1, &mut ws).unwrap());
         }
         let steady = allocs() - before;
-        let s = bench(1, 8, || {
+        let s = bench(1, bench_iters(), || {
             black_box(model.conv_features_into(black_box(input), 1, &mut ws).unwrap());
         });
         println!(
@@ -206,6 +277,8 @@ fn main() {
     let dta_input = PlanInput::Tokens { n: batch, lig: &lig, prot: &prot };
     bench_model("dta", ModelKind::DtaKiba, &dta, &dta_input, &mut rows);
 
+    bench_strided(&mut rows);
+
     let zero_alloc_ok = rows.iter().all(|r| r.steady_allocs.unwrap_or(0) == 0);
     println!(
         "\nsteady-state conv hot path allocation-free: {}",
@@ -238,5 +311,10 @@ fn main() {
     match std::fs::write(path, &json) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    // make the zero-alloc acceptance criterion a hard failure so the CI
+    // smoke run catches regressions, not just records them
+    if !zero_alloc_ok {
+        std::process::exit(1);
     }
 }

@@ -77,6 +77,15 @@ struct Row {
     summary: Summary,
 }
 
+/// CI smoke mode: fewer timing iterations. Only `SHAM_BENCH_QUICK=1`
+/// (or any non-empty value other than `0`) enables it.
+fn bench_iters() -> usize {
+    match std::env::var("SHAM_BENCH_QUICK") {
+        Ok(v) if !v.is_empty() && v != "0" => 3,
+        _ => 10,
+    }
+}
+
 fn main() {
     let mut rng = Prng::seeded(0x5E41);
     let threads = 8usize;
@@ -95,22 +104,22 @@ fn main() {
         for f in &formats {
             let fname = f.name();
             // 1. batched, alloc per call (old default matmul_batch shape)
-            let s_alloc = bench(2, 10, || {
+            let s_alloc = bench(2, bench_iters(), || {
                 black_box(matmul_alloc_per_call(f.as_ref(), black_box(&xb)));
             });
             // 2. batched, allocation-free into a reused Mat
             let mut out = Mat::zeros(0, 0);
-            let s_into = bench(2, 10, || {
+            let s_into = bench(2, bench_iters(), || {
                 f.matmul_batch_into(black_box(&xb), &mut out);
                 black_box(&out);
             });
             // 3. Alg. 3, spawning threads per call (old par_matmul)
-            let s_spawn = bench(2, 10, || {
+            let s_spawn = bench(2, bench_iters(), || {
                 black_box(par_matmul_spawning(f.as_ref(), black_box(&xb), threads));
             });
             // 4. Alg. 3 on the persistent pool, reused output
             let mut pout = Mat::zeros(0, 0);
-            let s_pool = bench(2, 10, || {
+            let s_pool = bench(2, bench_iters(), || {
                 par_matmul_into(f.as_ref(), black_box(&xb), &mut pout, threads);
                 black_box(&pout);
             });

@@ -19,7 +19,7 @@ use crate::formats::{pool, Workspace};
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
 use crate::nn::lowering::PlanInput;
-use crate::nn::model::{BranchInput, Step};
+use crate::nn::model::BranchInput;
 use crate::io::TestSet;
 use crate::runtime::{lit_f32, lit_i32, Engine, Literal, PjRtClient};
 
@@ -298,28 +298,32 @@ fn run_batch_pure<'w>(
                 ),
                 "variant expects token inputs, got an image"
             );
-            // derive the expected square NHWC geometry from the model
-            // itself (works for real and synthetic dims alike): the
-            // flatten dim is (side/2^pools)² · cout_last, cin comes from
-            // the first conv layer.
+            // derive the expected square NHWC geometry from the payload
+            // and validate it against the model's own shape math (the
+            // conv specs' stride/padding + pools), so strided/VALID
+            // layer plans are handled the same as the stride-1 SAME
+            // benchmarks: side = sqrt(per/cin), then the walked flatten
+            // dim must land exactly on the FC input dim.
             let c = model.conv.first().map(|l| l.cin).unwrap_or(1);
-            let cout = model.conv.last().map(|l| l.cout).unwrap_or(1);
             anyhow::ensure!(!model.fc.is_empty(), "model has no FC layers");
             let feat_dim = model.fc[0].w.rows();
-            let pools = plan.branches[0]
-                .steps
-                .iter()
-                .filter(|s| matches!(s, Step::MaxPool2))
-                .count() as u32;
-            anyhow::ensure!(cout > 0 && feat_dim % cout == 0, "inconsistent model dims");
-            let spatial = feat_dim / cout;
-            let small = (spatial as f64).sqrt().round() as usize;
-            anyhow::ensure!(small * small == spatial, "inconsistent model dims");
-            let side = small << pools;
             let per = v0.len();
             anyhow::ensure!(
-                per == side * side * c,
-                "image payload is {per} floats, this variant expects {side}x{side}x{c}"
+                c > 0 && per % c == 0,
+                "image payload is {per} floats, not divisible by {c} channels"
+            );
+            let spatial = per / c;
+            let side = (spatial as f64).sqrt().round() as usize;
+            anyhow::ensure!(
+                side * side == spatial,
+                "image payload is {per} floats, this variant expects a square \
+                 {c}-channel image"
+            );
+            let walked = model.image_feature_dim(side, side, c)?;
+            anyhow::ensure!(
+                walked == feat_dim,
+                "a {side}x{side}x{c} image yields {walked} features, this \
+                 variant's FC stack expects {feat_dim}"
             );
             imgs.resize(n * per, 0.0);
             for (r, req) in reqs.iter().enumerate() {

@@ -24,7 +24,8 @@ Experiment commands (regenerate the paper's tables/figures):
   s5 [--quick]        prune→quantize sweeps (Tables S5/S6)
   s7                  conv-only weight sharing (Table S7)
   s8 --net <bench> [--quick]
-                      full-net hybrid grids (Tables S8–S11)
+                      full-net hybrid grids (Tables S8–S11) + measured
+                      per-layer conv-format (Auto) report
   fig1 [--k 32|256] [--paper-dims] [--net mnist|cifar]
                       format size + dot-time comparison (Fig. 1 / S2)
   timeratio [--net mnist] [--k 32]
@@ -35,10 +36,13 @@ Single-configuration evaluation:
   eval --net <mnist|cifar|kiba|davis> [--prune P] [--quant cws|pws|uq|ecsq]
        [--k K] [--conv-quant <q>] [--conv-k K] [--conv-prune P]
        [--format dense|csc|csr|coo|im|cla|hac|shac|lzac|dcri|auto] [--per-layer]
-       [--conv-format <fmt>] [--pure]
+       [--conv-format <fmt|auto>] [--pure]
                       compress one model and report perf + occupancy;
                       --pure runs conv+FC entirely on the compressed
-                      formats (im2col lowering, zero PJRT dependency)
+                      formats (im2col lowering, arbitrary stride/padding,
+                      zero PJRT dependency); --conv-format auto picks
+                      per layer by *measured* batched-dot time within a
+                      size budget (choices printed per layer)
 
 On-disk compressed models:
   compress --net <bench> [--prune P] [--quant q --k K] [--format auto]
@@ -127,6 +131,20 @@ fn format_flag(
         None => Ok(default),
         Some(s) => crate::nn::compressed::FcFormat::parse(&s)
             .ok_or_else(|| anyhow::anyhow!("unknown format `{s}` for --{name}")),
+    }
+}
+
+/// Parse the `--conv-format` flag (registry names + the measured
+/// `auto`); defaults to dense — Auto on unquantized conv weights would
+/// collapse its size budget to ~dense anyway, and dense skips the
+/// per-layer timing race at build time.
+fn conv_format_flag(flags: &Flags) -> Result<crate::nn::compressed::ConvFormat> {
+    use crate::formats::FormatId;
+    use crate::nn::compressed::ConvFormat;
+    match flags.get("conv-format") {
+        None => Ok(ConvFormat::Fixed(FormatId::Dense)),
+        Some(s) => ConvFormat::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown format `{s}` for --conv-format")),
     }
 }
 
@@ -222,10 +240,22 @@ pub fn run(args: Vec<String>) -> Result<()> {
                         .get("net")
                         .and_then(|s| ModelKind::parse(&s))
                         .unwrap_or(ModelKind::VggMnist);
-                    emit(
-                        &experiments::s8_11(&mut ctx, kind, flags.has("quick"))?,
-                        &flags,
-                    )
+                    let quick = flags.has("quick");
+                    emit(&experiments::s8_11(&mut ctx, kind, quick)?, &flags)?;
+                    let ks: Vec<usize> =
+                        if quick { vec![32] } else { vec![32, 256] };
+                    let report =
+                        experiments::s8_conv_format_report(&mut ctx, kind, &ks)?;
+                    println!("== measured conv_format:Auto choices per layer ==");
+                    println!("{}", report.render());
+                    // the grid already claimed --csv's path; the report
+                    // goes to a sibling file so scripts get both tables
+                    if let Some(path) = flags.get("csv") {
+                        let rpath = format!("{path}.conv_formats.csv");
+                        report.write_csv(&rpath)?;
+                        println!("(conv-format report csv written to {rpath})");
+                    }
+                    Ok(())
                 }
                 _ => unreachable!(),
             }
@@ -301,14 +331,7 @@ fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
         conv_prune: prune_flag(flags, "conv-prune")?,
         unified: !flags.has("per-layer"),
         fc_format: format_flag(flags, "format", FcFormat::Auto)?,
-        // executable conv format defaults to dense, matching compress:
-        // Auto on unquantized conv weights would entropy-code one
-        // symbol per distinct f32 and crawl
-        conv_format: format_flag(
-            flags,
-            "conv-format",
-            FcFormat::Fixed(crate::formats::FormatId::Dense),
-        )?,
+        conv_format: conv_format_flag(flags)?,
     };
     if flags.has("pure") {
         // end-to-end on the compressed formats — no PJRT engine, no Ctx
@@ -321,6 +344,7 @@ fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
         let (psi_fc, psi_total) = (model.psi_fc(), model.psi_total());
         let (m, secs) = crate::nn::evaluate_pure(&model, &test, 32, threads)?;
         println!("benchmark : {} (pure-Rust compressed pipeline)", kind.name());
+        println!("conv fmts : {}", model.conv_format_report());
         println!("compressed: {m}  ({secs:.3}s end-to-end)");
         println!("ψ_fc      : {psi_fc:.4}  ({:.1}× smaller FC block)", 1.0 / psi_fc);
         println!(
@@ -362,13 +386,7 @@ fn compress_cmd(flags: &Flags) -> Result<()> {
         conv_quant: quant_flags(flags, "conv-quant", "conv-k")?,
         conv_prune: prune_flag(flags, "conv-prune")?,
         fc_format: format_flag(flags, "format", FcFormat::Auto)?,
-        // executable conv format defaults to dense (Auto on unquantized
-        // conv weights would entropy-code one symbol per distinct f32)
-        conv_format: format_flag(
-            flags,
-            "conv-format",
-            FcFormat::Fixed(crate::formats::FormatId::Dense),
-        )?,
+        conv_format: conv_format_flag(flags)?,
         ..Default::default()
     };
     let params = kind.load_weights(&art)?;
@@ -391,6 +409,7 @@ fn compress_cmd(flags: &Flags) -> Result<()> {
         model.psi_fc(),
         model.psi_total(),
     );
+    println!("conv formats: {}", model.conv_format_report());
     Ok(())
 }
 
@@ -467,7 +486,9 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         // serves with zero PJRT dependency
         let fcfg = CompressionCfg {
             conv_quant: Some((Kind::Cws, 32)),
-            conv_format: FcFormat::Auto,
+            // measured per-layer choice (timed at startup, not on the
+            // serving path)
+            conv_format: crate::nn::compressed::ConvFormat::Auto,
             fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
             fc_quant: Some((Kind::Cws, 32)),
             fc_format: FcFormat::Auto,
@@ -475,6 +496,11 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         };
         let mut rng = Prng::seeded(43);
         let full = CompressedModel::build(kind, &params, &fcfg, &mut rng)?;
+        println!(
+            "{}-full conv formats: {}",
+            kind.dataset(),
+            full.conv_format_report()
+        );
         server.add_variant_pure(&format!("{}-full", kind.dataset()), full)?;
     }
     println!("variants: {:?}", server.variant_names());

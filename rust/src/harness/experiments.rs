@@ -115,10 +115,14 @@ impl Ctx {
         }
         // Build a model with ONLY the conv part applied (FC untouched,
         // dense) to produce the parameter archive for the feature graph.
+        // The executable conv format is pinned to dense here: features
+        // come from PJRT on the params archive, so a measured-Auto
+        // timing race in `cfg` would burn build time for nothing.
         let conv_cfg = CompressionCfg {
             fc_prune: None,
             fc_quant: None,
             fc_format: FcFormat::Fixed(FormatId::Dense),
+            conv_format: crate::nn::compressed::ConvFormat::Fixed(FormatId::Dense),
             ..*cfg
         };
         let mut rng = Prng::seeded(0xC0117);
@@ -622,6 +626,39 @@ pub fn s8_prune_grid(kind: ModelKind) -> Vec<f64> {
         ModelKind::DtaKiba => vec![50.0, 55.0, 60.0, 65.0, 70.0],
         ModelKind::DtaDavis => vec![70.0, 75.0, 80.0, 85.0, 90.0],
     }
+}
+
+/// Per-layer executable conv-format report for the S8–S11 grids: one
+/// row per (k, conv layer) with the *measured* `conv_format: Auto`
+/// winner — which format ran fastest within the size budget on that
+/// layer's lowered matrix (DESIGN.md §6).
+pub fn s8_conv_format_report(ctx: &mut Ctx, kind: ModelKind, ks: &[usize]) -> Result<Table> {
+    let mut t = Table::new(&["k", "layer", "spec", "format", "kbits", "dot_p50"]);
+    for &k in ks {
+        let cfg = CompressionCfg {
+            conv_quant: Some((Kind::Cws, k)),
+            conv_format: crate::nn::compressed::ConvFormat::Auto,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
+            ..Default::default()
+        };
+        let weights = ctx.weights_of(kind)?;
+        let mut rng = Prng::seeded(0x58_C0 + k as u64);
+        let model = CompressedModel::build(kind, weights, &cfg, &mut rng)?;
+        for (choice, layer) in model.conv_choices.iter().zip(model.conv.iter()) {
+            t.row(vec![
+                k.to_string(),
+                choice.name.clone(),
+                layer.spec.to_string(),
+                choice.format.to_string(),
+                format!("{:.1}", choice.size_bits as f64 / 1000.0),
+                choice
+                    .measured_ns
+                    .map(crate::util::timer::fmt_ns)
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    Ok(t)
 }
 
 pub fn s8_11(ctx: &mut Ctx, kind: ModelKind, quick: bool) -> Result<Table> {

@@ -13,10 +13,11 @@ use crate::formats::{
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::io::{Archive, Tensor};
 use crate::mat::Mat;
-use crate::nn::lowering::{self, bias_act, ActView, PlanInput};
+use crate::nn::lowering::{self, bias_act, ActView, ConvSpec, Padding, PlanInput};
 use crate::nn::model::{BranchInput, ModelKind, Step};
 use crate::quant::{self, Kind, Options};
 use crate::util::prng::Prng;
+use crate::util::timer::bench;
 
 /// Storage format choice for FC matrices — a thin policy layer over the
 /// [`FormatId`] registry: either one fixed registry entry, or the
@@ -69,6 +70,127 @@ impl FcFormat {
     }
 }
 
+/// Executable storage-format policy for the *lowered* conv matrices
+/// (the im2col pipeline). Distinct from [`FcFormat`]: the FC `Auto`
+/// picks by *size* (the paper's `*` rule), while the conv `Auto` picks
+/// per-layer by *measured dot time* within a size budget — Deep
+/// Compression and Marinò et al. (2020) both argue format choice
+/// should be per-layer and workload-driven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvFormat {
+    /// Store every lowered conv matrix in one fixed registry format.
+    Fixed(FormatId),
+    /// Measured policy: compress the lowered matrix in every
+    /// [`CONV_AUTO_CANDIDATES`] format, time `matmul_batch_into` on a
+    /// representative im2col patch batch, and keep the fastest whose
+    /// size is within [`CONV_AUTO_SIZE_SLACK`]× of the smallest
+    /// candidate. The per-layer outcome is recorded in
+    /// [`CompressedModel::conv_choices`].
+    Auto,
+}
+
+impl From<FormatId> for ConvFormat {
+    fn from(id: FormatId) -> ConvFormat {
+        ConvFormat::Fixed(id)
+    }
+}
+
+impl ConvFormat {
+    /// Parse via the unified registry plus `auto` (the measured policy).
+    pub fn parse(s: &str) -> Option<ConvFormat> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(ConvFormat::Auto);
+        }
+        FormatId::parse(s).map(ConvFormat::Fixed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvFormat::Fixed(id) => id.name(),
+            ConvFormat::Auto => "auto",
+        }
+    }
+}
+
+/// Candidate formats the measured [`ConvFormat::Auto`] policy races:
+/// the dense baseline, the classic sparse format, and the four
+/// codebook/entropy formats with batched-decode kernels.
+pub const CONV_AUTO_CANDIDATES: [FormatId; 6] = [
+    FormatId::Dense,
+    FormatId::Csc,
+    FormatId::IndexMap,
+    FormatId::Hac,
+    FormatId::Shac,
+    FormatId::RelIdx,
+];
+
+/// A candidate stays in the timing race only while its size is within
+/// this factor of the smallest candidate — "fastest within the size
+/// budget". (On unquantized weights the entropy formats blow up, the
+/// budget collapses to ~dense, and dense wins by speed; on quantized
+/// weights dense falls outside the budget and the compact formats race
+/// on measured time.)
+pub const CONV_AUTO_SIZE_SLACK: f64 = 2.0;
+
+/// Rows of the representative im2col patch batch the Auto policy times
+/// against (≈ one 8×8 output tile × batch 1 — big enough to amortize
+/// the entropy formats' batched decode, small enough to keep model
+/// builds fast).
+const CONV_AUTO_PATCH_ROWS: usize = 64;
+
+/// How one conv layer's executable format was decided — the model
+/// report behind `conv_format: Auto` (surfaced by `sham s8`,
+/// `sham eval --pure`, and `sham compress`).
+#[derive(Debug, Clone)]
+pub struct ConvChoice {
+    pub name: String,
+    pub format: FormatId,
+    pub size_bits: u64,
+    /// Median `matmul_batch_into` time (ns) of the winner on the
+    /// representative patch batch — `None` when the format was fixed
+    /// (or reloaded from a container), not measured.
+    pub measured_ns: Option<f64>,
+}
+
+/// Race the Auto candidates on one lowered conv matrix. Returns the
+/// winner plus its report entry.
+fn pick_conv_format_measured(
+    name: &str,
+    lowered: &Mat,
+) -> (Box<dyn CompressedMatrix>, ConvChoice) {
+    let mut rng = Prng::seeded(0xA07_0F0);
+    let patches = Mat::gaussian(CONV_AUTO_PATCH_ROWS, lowered.rows, 1.0, &mut rng);
+    let candidates: Vec<Box<dyn CompressedMatrix>> =
+        CONV_AUTO_CANDIDATES.iter().map(|id| id.compress(lowered)).collect();
+    let min_bits = candidates.iter().map(|c| c.size_bits()).min().unwrap_or(0);
+    let budget = (min_bits as f64 * CONV_AUTO_SIZE_SLACK).ceil() as u64;
+    let mut out = Mat::zeros(0, 0);
+    let mut best: Option<usize> = None;
+    let mut best_ns = f64::INFINITY;
+    for (i, c) in candidates.iter().enumerate() {
+        if c.size_bits() > budget {
+            continue;
+        }
+        let s = bench(1, 3, || c.matmul_batch_into(&patches, &mut out));
+        if s.p50 < best_ns {
+            best_ns = s.p50;
+            best = Some(i);
+        }
+    }
+    // the smallest candidate is always within budget, so `best` is set
+    let i = best.expect("no conv format candidate within size budget");
+    let ns = best_ns;
+    let mut candidates = candidates;
+    let w = candidates.swap_remove(i);
+    let choice = ConvChoice {
+        name: name.to_string(),
+        format: w.id(),
+        size_bits: w.size_bits(),
+        measured_ns: Some(ns),
+    };
+    (w, choice)
+}
+
 /// One compressed FC layer.
 pub struct FcLayer {
     pub name: String,
@@ -78,13 +200,15 @@ pub struct FcLayer {
 
 /// One conv layer lowered to an executable compressed matrix:
 /// `w` is `(kh·kw·cin) × cout` (`kh = 1` for conv1d), multiplied
-/// against im2col patches by the lowered pipeline (`nn::lowering`).
+/// against im2col patches extracted under `spec` (arbitrary stride,
+/// SAME/VALID) by the lowered pipeline (`nn::lowering`).
 pub struct ConvLayer {
     pub name: String,
     pub w: Box<dyn CompressedMatrix>,
     pub b: Vec<f32>,
-    pub kh: usize,
-    pub kw: usize,
+    /// Kernel extent + stride + padding — the execution-time source of
+    /// truth (persisted through the `.sham` sidecar).
+    pub spec: ConvSpec,
     pub cin: usize,
     pub cout: usize,
 }
@@ -117,8 +241,9 @@ pub struct CompressionCfg {
     /// Executable storage format for the *lowered* conv matrices (the
     /// im2col pipeline). Size accounting stays on the paper's index-map
     /// baseline regardless; this only selects what the pure-Rust conv
-    /// forward multiplies against. Defaults to dense.
-    pub conv_format: FcFormat,
+    /// forward multiplies against. Defaults to dense; `Auto` picks
+    /// per-layer by measured dot time (see [`ConvFormat`]).
+    pub conv_format: ConvFormat,
 }
 
 impl Default for CompressionCfg {
@@ -130,16 +255,22 @@ impl Default for CompressionCfg {
             conv_prune: None,
             unified: true,
             fc_format: FcFormat::Auto,
-            conv_format: FcFormat::Fixed(FormatId::Dense),
+            conv_format: ConvFormat::Fixed(FormatId::Dense),
         }
     }
 }
 
 /// Run the FC stack reading `feats`, ping-ponging activations between
 /// the grow-only buffers `a` and `b` (layer 0 writes `a`). Returns
-/// whether the last layer's output landed in `a`.
+/// whether the last layer's output landed in `a`. A zero-layer stack
+/// is the identity: the features are copied into `a` (the ping-pong
+/// parity used to hand back an untouched — possibly empty — `b` here).
 fn fc_stack_into(fc: &[FcLayer], feats: &Mat, threads: usize, a: &mut Mat, b: &mut Mat) -> bool {
-    assert!(!fc.is_empty(), "model has no FC layers");
+    if fc.is_empty() {
+        a.resize(feats.rows, feats.cols);
+        a.data.copy_from_slice(&feats.data);
+        return true;
+    }
     let last = fc.len() - 1;
     let mut dst_is_a = true;
     for (li, layer) in fc.iter().enumerate() {
@@ -192,6 +323,10 @@ pub struct CompressedModel {
     pub conv: Vec<ConvLayer>,
     /// Dense embedding tables for token branches (empty for VGG).
     pub embeds: Vec<EmbedTable>,
+    /// Per-layer executable-format decisions, in layer order — the
+    /// model report behind [`ConvFormat::Auto`] (`measured_ns` set when
+    /// the measured policy actually raced the candidates).
+    pub conv_choices: Vec<ConvChoice>,
     /// Storage bits charged for the conv tensors (index map when
     /// quantized, dense otherwise) + all non-FC parameters.
     pub conv_bits: u64,
@@ -308,33 +443,54 @@ impl CompressedModel {
                 *vals = qm.data;
             }
         }
+        let steps = kind.conv_steps();
+        ensure!(steps.len() == conv_names.len(), "layer plan out of sync");
         let mut conv = Vec::with_capacity(conv_names.len());
-        for ((key, shape, vals), name) in conv_vals.into_iter().zip(conv_names.iter()) {
+        let mut conv_choices = Vec::with_capacity(conv_names.len());
+        for ((key, shape, vals), (name, is_2d, geom)) in
+            conv_vals.into_iter().zip(steps.into_iter())
+        {
             conv_dense_bits += vals.len() as u64 * WORD_BITS;
             conv_bits +=
                 conv_weight_bits(&vals, cfg.conv_quant.is_some(), cfg.conv_prune.is_some());
             let (lowered, kh, kw, cin, cout) = match shape.len() {
-                4 => (
+                4 if is_2d => (
                     lowering::lower_conv2d(&vals, &shape),
                     shape[0], shape[1], shape[2], shape[3],
                 ),
-                3 => (
+                3 if !is_2d => (
                     lowering::lower_conv1d(&vals, &shape),
                     1, shape[0], shape[1], shape[2],
                 ),
-                r => bail!("conv tensor {key} has unsupported rank {r}"),
+                r => bail!(
+                    "conv tensor {key} has rank {r}, layer plan expects {}",
+                    if is_2d { "HWIO conv2d" } else { "WIO conv1d" }
+                ),
             };
             let b = base
                 .get(&format!("{name}.b"))
                 .with_context(|| format!("missing {name}.b"))?
                 .as_f32()?;
             ensure!(b.len() == cout, "{name}: bias/cout mismatch");
+            let (w, choice) = match cfg.conv_format {
+                ConvFormat::Fixed(id) => {
+                    let w = id.compress(&lowered);
+                    let bits = w.size_bits();
+                    (w, ConvChoice {
+                        name: name.to_string(),
+                        format: id,
+                        size_bits: bits,
+                        measured_ns: None,
+                    })
+                }
+                ConvFormat::Auto => pick_conv_format_measured(name, &lowered),
+            };
+            conv_choices.push(choice);
             conv.push(ConvLayer {
                 name: name.to_string(),
-                w: cfg.conv_format.build(&lowered),
+                w,
                 b,
-                kh,
-                kw,
+                spec: geom.spec(kh, kw),
                 cin,
                 cout,
             });
@@ -375,6 +531,7 @@ impl CompressedModel {
             fc,
             conv,
             embeds,
+            conv_choices,
             conv_bits,
             conv_dense_bits,
             fc_dense_bits,
@@ -383,18 +540,38 @@ impl CompressedModel {
         })
     }
 
+    /// One-line per-layer summary of the executable conv formats (the
+    /// `conv_format: Auto` model report): `name=fmt` per layer, with
+    /// `@t` appended when the choice was measured. Sizes live in
+    /// [`Self::conv_choices`] (the `sham s8` report table prints them).
+    pub fn conv_format_report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for c in &self.conv_choices {
+            if !s.is_empty() {
+                s.push(' ');
+            }
+            let _ = write!(s, "{}={}", c.name, c.format);
+            if let Some(ns) = c.measured_ns {
+                let _ = write!(s, "@{}", crate::util::timer::fmt_ns(ns));
+            }
+        }
+        s
+    }
+
     /// FC forward: features (B × feat_dim) → outputs (B × last_dim).
     /// ReLU between layers, none after the last. Allocating convenience
-    /// wrapper over [`CompressedModel::fc_forward_into`] — one-shot
-    /// callers (tables, tests) only; the serving hot path reuses a
-    /// [`Workspace`].
+    /// over the same `fc_stack_into` ping-pong as
+    /// [`CompressedModel::fc_forward_into`] — one-shot callers (tables,
+    /// tests) only; the serving hot path reuses a [`Workspace`].
     pub fn fc_forward(&self, feats: &Mat, threads: usize) -> Mat {
         let mut ws = Workspace::new();
-        self.fc_forward_into(feats, threads, &mut ws);
-        // The ping-pong writes layer i into buffer `a` when i is even
-        // (see fc_forward_into), so an odd layer count lands the result
-        // in `a`. Move the buffer out instead of copying it.
-        if self.fc.len() % 2 == 1 {
+        // Move the landing buffer out instead of copying it; the
+        // returned parity (not a re-derived `len % 2`) also covers the
+        // zero-layer identity case, which lands the features in `a`.
+        let Workspace { ref mut a, ref mut b, .. } = ws;
+        let last_in_a = fc_stack_into(&self.fc, feats, threads, a, b);
+        if last_in_a {
             ws.a
         } else {
             ws.b
@@ -512,7 +689,10 @@ impl CompressedModel {
                         lowering::embed_into(tokens, n, len, &e.table, e.dim, cur)?;
                         c = e.dim;
                     }
-                    Step::Conv2d(name) | Step::Conv1d(name) => {
+                    Step::Conv2d(name, _) | Step::Conv1d(name, _) => {
+                        // the layer's persisted spec — not the plan's
+                        // geometry — drives execution, so a `.sham`
+                        // container with a re-speced layer runs as saved
                         let layer = self
                             .conv
                             .get(conv_i)
@@ -520,11 +700,17 @@ impl CompressedModel {
                         conv_i += 1;
                         ensure!(layer.name == name, "conv layer order mismatch");
                         ensure!(layer.cin == c, "{name}: channel mismatch");
+                        let (oh, ow) =
+                            layer.spec.checked_out_dims(h, w).with_context(|| {
+                                format!(
+                                    "{name}: {h}x{w} input too small for {}",
+                                    layer.spec
+                                )
+                            })?;
                         let src = ext.take().unwrap_or(&cur.data);
                         lowering::conv_lowered_into(
                             layer.w.as_ref(),
-                            layer.kh,
-                            layer.kw,
+                            &layer.spec,
                             ActView::new(n, h, w, c, src),
                             &layer.b,
                             true,
@@ -532,10 +718,17 @@ impl CompressedModel {
                             patches,
                             nxt,
                         );
+                        (h, w) = (oh, ow);
                         c = layer.cout;
                         std::mem::swap(&mut cur, &mut nxt);
                     }
                     Step::MaxPool2 => {
+                        // untrusted inputs: odd dims must error here,
+                        // not trip the kernel's assert on a worker
+                        ensure!(
+                            h % 2 == 0 && w % 2 == 0,
+                            "maxpool2 on odd spatial dims {h}x{w}"
+                        );
                         let src = ext.take().unwrap_or(&cur.data);
                         lowering::maxpool2_into(ActView::new(n, h, w, c, src), nxt);
                         h /= 2;
@@ -587,6 +780,65 @@ impl CompressedModel {
         let Workspace { ref feats, ref mut a, ref mut b, .. } = *ws;
         let last_in_a = fc_stack_into(&self.fc, feats, threads, a, b);
         Ok(if last_in_a { &ws.a } else { &ws.b })
+    }
+
+    /// Walk the image branch's shape math — each conv layer's actual
+    /// [`ConvSpec`] (stride/padding aware) plus the pools — from an
+    /// `h × w × c` input, returning the flattened feature dim entering
+    /// the FC stack. Errors (never panics) on geometry a serving
+    /// payload can get wrong: odd dims at a pool, a VALID kernel larger
+    /// than its input, or a channel mismatch.
+    ///
+    /// KEEP IN SYNC with the image-branch arms of
+    /// [`Self::conv_features_into`]: this is the same shape fold minus
+    /// the data movement, and a `Step` variant or validation rule added
+    /// there must be mirrored here or the coordinator's pre-check will
+    /// reject payloads the executor accepts.
+    pub fn image_feature_dim(
+        &self,
+        mut h: usize,
+        mut w: usize,
+        mut c: usize,
+    ) -> Result<usize> {
+        let plan = self.kind.layer_plan();
+        let branch = plan
+            .branches
+            .first()
+            .context("model has an empty layer plan")?;
+        ensure!(
+            matches!(branch.input, BranchInput::Images),
+            "model does not take image input"
+        );
+        let mut conv_i = 0usize;
+        for step in branch.steps {
+            match *step {
+                Step::Conv2d(name, _) => {
+                    let layer = self
+                        .conv
+                        .get(conv_i)
+                        .with_context(|| format!("missing conv layer {name}"))?;
+                    conv_i += 1;
+                    ensure!(layer.cin == c, "{name}: channel mismatch");
+                    let (oh, ow) =
+                        layer.spec.checked_out_dims(h, w).with_context(|| {
+                            format!("{name}: {h}x{w} input too small for {}", layer.spec)
+                        })?;
+                    (h, w) = (oh, ow);
+                    c = layer.cout;
+                }
+                Step::MaxPool2 => {
+                    ensure!(
+                        h % 2 == 0 && w % 2 == 0,
+                        "maxpool2 on odd spatial dims {h}x{w}"
+                    );
+                    h /= 2;
+                    w /= 2;
+                }
+                Step::Flatten => return Ok(h * w * c),
+                _ => bail!("model's first branch is not an image branch"),
+            }
+        }
+        bail!("image branch did not end in Flatten")
     }
 
     /// Replace every FC matrix with its dense decompression. Outputs are
@@ -652,9 +904,23 @@ impl CompressedModel {
             let w = l.w.decompress();
             entries.push((format!("conv/{}.w", l.name), to_stored(&w, l.w.as_ref())));
             entries.push((format!("conv/{}.b", l.name), dense_row(&l.b)));
+            // kshape sidecar v2: kernel extent + channels + stride +
+            // padding flag (0 = SAME, 1 = VALID); 4-slot v1 sidecars
+            // load as stride-1 SAME
             entries.push((
                 format!("conv/{}.kshape", l.name),
-                dense_row(&[l.kh as f32, l.kw as f32, l.cin as f32, l.cout as f32]),
+                dense_row(&[
+                    l.spec.kh as f32,
+                    l.spec.kw as f32,
+                    l.cin as f32,
+                    l.cout as f32,
+                    l.spec.stride.0 as f32,
+                    l.spec.stride.1 as f32,
+                    match l.spec.padding {
+                        Padding::Same => 0.0,
+                        Padding::Valid => 1.0,
+                    },
+                ]),
             ));
         }
         for e in &self.embeds {
@@ -721,35 +987,48 @@ impl CompressedModel {
             fc.push(FcLayer { name: name.to_string(), w, b });
         }
 
-        // conv tensor rank comes from the layer plan (the 4-slot kshape
+        // conv tensor rank comes from the layer plan (the kshape
         // sidecar alone cannot tell a [1,kw,cin,cout] conv2d from a
-        // [kw,cin,cout] conv1d)
-        let mut is_2d = Vec::with_capacity(kind.conv_names().len());
-        for branch in kind.layer_plan().branches {
-            for step in branch.steps {
-                match step {
-                    Step::Conv2d(_) => is_2d.push(true),
-                    Step::Conv1d(_) => is_2d.push(false),
-                    _ => {}
-                }
-            }
-        }
-        ensure!(is_2d.len() == kind.conv_names().len(), "layer plan out of sync");
+        // [kw,cin,cout] conv1d); stride/padding come from the sidecar —
+        // the persisted spec, not the plan default, is what executes
+        let steps = kind.conv_steps();
+        ensure!(steps.len() == kind.conv_names().len(), "layer plan out of sync");
         let mut conv = Vec::new();
+        let mut conv_choices = Vec::new();
         let mut conv_bits = 0u64;
         let mut conv_dense_bits = 0u64;
-        for (name, &two_d) in kind.conv_names().iter().zip(is_2d.iter()) {
+        for (name, two_d, _) in steps {
             let w = take(format!("conv/{name}.w"))?.into_compressed();
             let b = row_vec(take(format!("conv/{name}.b"))?);
             let ks = row_vec(take(format!("conv/{name}.kshape"))?);
-            ensure!(ks.len() == 4, "{name}: bad kshape sidecar");
+            ensure!(
+                ks.len() == 4 || ks.len() == 7,
+                "{name}: bad kshape sidecar"
+            );
             let (kh, kw, cin, cout) =
                 (ks[0] as usize, ks[1] as usize, ks[2] as usize, ks[3] as usize);
+            // v1 (4-slot) sidecars predate arbitrary geometry: stride-1
+            // SAME was the only thing the pipeline could run
+            let (stride, padding) = if ks.len() == 7 {
+                let pad = match ks[6] as usize {
+                    0 => Padding::Same,
+                    1 => Padding::Valid,
+                    other => bail!("{name}: unknown padding tag {other}"),
+                };
+                ((ks[4] as usize, ks[5] as usize), pad)
+            } else {
+                ((1, 1), Padding::Same)
+            };
+            ensure!(
+                kh > 0 && kw > 0 && stride.0 > 0 && stride.1 > 0,
+                "{name}: degenerate kshape sidecar"
+            );
             ensure!(
                 w.rows() == kh * kw * cin && w.cols() == cout,
                 "{name}: lowered matrix does not match kshape"
             );
             ensure!(two_d || kh == 1, "{name}: conv1d layer with kh > 1");
+            let spec = ConvSpec::new(kh, kw, stride, padding);
             let d = w.decompress();
             conv_dense_bits += d.data.len() as u64 * WORD_BITS;
             conv_bits += conv_weight_bits(&d.data, conv_quantized, conv_pruned);
@@ -764,7 +1043,13 @@ impl CompressedModel {
             };
             params.insert(format!("{name}.w"), Tensor::from_f32(orig_shape, &d.data));
             params.insert(format!("{name}.b"), Tensor::from_f32(vec![b.len()], &b));
-            conv.push(ConvLayer { name: name.to_string(), w, b, kh, kw, cin, cout });
+            conv_choices.push(ConvChoice {
+                name: name.to_string(),
+                format: w.id(),
+                size_bits: w.size_bits(),
+                measured_ns: None,
+            });
+            conv.push(ConvLayer { name: name.to_string(), w, b, spec, cin, cout });
         }
 
         let mut embeds = Vec::new();
@@ -795,6 +1080,7 @@ impl CompressedModel {
             fc,
             conv,
             embeds,
+            conv_choices,
             conv_bits,
             conv_dense_bits,
             fc_dense_bits,
@@ -983,7 +1269,7 @@ mod tests {
         ] {
             let cfg = CompressionCfg {
                 fc_format: FcFormat::Fixed(fmt),
-                conv_format: FcFormat::Fixed(fmt),
+                conv_format: ConvFormat::Fixed(fmt),
                 ..Default::default()
             };
             let m =
@@ -1010,7 +1296,7 @@ mod tests {
         let a = chain_archive(&mut rng);
         let cfg = CompressionCfg {
             conv_quant: Some((Kind::Cws, 8)),
-            conv_format: FcFormat::Fixed(FormatId::Shac),
+            conv_format: ConvFormat::Fixed(FormatId::Shac),
             fc_format: FcFormat::Fixed(FormatId::Hac),
             ..Default::default()
         };
@@ -1057,6 +1343,104 @@ mod tests {
         let bad = vec![0.0f32; 7];
         let input = PlanInput::Images { n: 1, h: 8, w: 8, c: 1, data: &bad };
         assert!(m.forward_into(&input, 1, &mut ws).is_err());
+    }
+
+    #[test]
+    fn empty_fc_stack_returns_the_features() {
+        // zero-layer parity: the old code handed back an untouched
+        // (empty) `b` buffer instead of the input features
+        let mut rng = Prng::seeded(0xE0);
+        let a = tiny_archive(&mut rng);
+        let mut m = CompressedModel::baseline(ModelKind::VggMnist, &a).unwrap();
+        m.fc.clear();
+        let x = Mat::gaussian(3, 7, 1.0, &mut rng);
+        let got = m.fc_forward(&x, 1);
+        assert_eq!((got.rows, got.cols), (3, 7));
+        assert_eq!(got.data, x.data);
+        // the _into variant agrees through a dirty workspace
+        let mut ws = Workspace::new();
+        ws.a.resize(9, 9);
+        ws.a.data.fill(f32::NAN);
+        let got2 = m.fc_forward_into(&x, 1, &mut ws);
+        assert_eq!(got2.data, x.data);
+    }
+
+    #[test]
+    fn measured_auto_conv_format_is_reported_and_exact() {
+        let mut rng = Prng::seeded(0xA0);
+        let a = chain_archive(&mut rng);
+        // quantized conv weights: the regime where the compact formats
+        // beat dense on size and the measured race is non-trivial
+        let cfg = CompressionCfg {
+            conv_quant: Some((Kind::Cws, 8)),
+            conv_format: ConvFormat::Auto,
+            fc_format: FcFormat::Fixed(FormatId::Dense),
+            ..Default::default()
+        };
+        let mut rng_m = Prng::seeded(0xA1);
+        let m = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng_m)
+            .unwrap();
+        assert_eq!(m.conv_choices.len(), m.conv.len());
+        let min_sizes: Vec<u64> = m
+            .conv
+            .iter()
+            .map(|l| {
+                let d = l.w.decompress();
+                CONV_AUTO_CANDIDATES
+                    .iter()
+                    .map(|id| id.compress(&d).size_bits())
+                    .min()
+                    .unwrap()
+            })
+            .collect();
+        for (c, (l, min)) in
+            m.conv_choices.iter().zip(m.conv.iter().zip(min_sizes.iter()))
+        {
+            assert_eq!(c.name, l.name);
+            assert_eq!(c.format, l.w.id(), "report/layer format mismatch");
+            assert!(c.measured_ns.is_some(), "auto choice was not measured");
+            // within the size budget relative to the smallest candidate
+            assert!(
+                c.size_bits as f64 <= *min as f64 * CONV_AUTO_SIZE_SLACK + 1.0,
+                "{}: {} bits vs min {min}",
+                c.name,
+                c.size_bits
+            );
+        }
+        let report = m.conv_format_report();
+        for l in &m.conv {
+            assert!(report.contains(&l.name), "report missing {}", l.name);
+        }
+        // whichever formats won, the forward is still exact vs a dense
+        // build of the same archive with the same quantizer seed
+        let images = chain_input(&mut rng, 2);
+        let input = PlanInput::Images { n: 2, h: 8, w: 8, c: 1, data: &images };
+        let base_cfg = CompressionCfg {
+            conv_quant: Some((Kind::Cws, 8)),
+            conv_format: ConvFormat::Fixed(FormatId::Dense),
+            fc_format: FcFormat::Fixed(FormatId::Dense),
+            ..Default::default()
+        };
+        let mut rng_b = Prng::seeded(0xA1);
+        let base = CompressedModel::build(ModelKind::VggMnist, &a, &base_cfg, &mut rng_b)
+            .unwrap();
+        let mut ws1 = Workspace::new();
+        let mut ws2 = Workspace::new();
+        let got = m.forward_into(&input, 1, &mut ws1).unwrap();
+        let want = base.forward_into(&input, 1, &mut ws2).unwrap();
+        assert!(got.max_abs_diff(want) < 1e-4);
+    }
+
+    #[test]
+    fn convformat_parse() {
+        assert_eq!(
+            ConvFormat::parse("shac"),
+            Some(ConvFormat::Fixed(FormatId::Shac))
+        );
+        assert_eq!(ConvFormat::parse("Auto"), Some(ConvFormat::Auto));
+        assert_eq!(ConvFormat::parse("zzz"), None);
+        assert_eq!(ConvFormat::Auto.name(), "auto");
+        assert_eq!(ConvFormat::Fixed(FormatId::Hac).name(), "hac");
     }
 
     #[test]

@@ -2,26 +2,147 @@
 //!
 //! The paper's whole-network numbers (Sect. V-K) compress the conv
 //! layers with the same pruned/quantized-matrix structure as the FC
-//! layers — and a SAME-padded stride-1 convolution is exactly a matrix
-//! product once the input is unrolled into patches. This module lowers
-//! HWIO conv2d weights to a `(kh·kw·cin, cout)` matrix (WIO conv1d to
+//! layers — and a convolution is exactly a matrix product once the
+//! input is unrolled into patches. This module lowers HWIO conv2d
+//! weights to a `(kh·kw·cin, cout)` matrix (WIO conv1d to
 //! `(kw·cin, cout)` — the `kh = 1` special case) and extracts the
-//! matching im2col patch matrix into a caller-provided grow-only
-//! buffer, so any [`CompressedMatrix`] format can execute convolutions
-//! through its allocation-free `matmul_batch_into` kernel (or the
-//! pooled `par_matmul_into`, Alg. 3). In steady state the conv hot
-//! path allocates nothing and spawns no threads. See DESIGN.md §6.
+//! matching im2col patch matrix for any [`ConvSpec`] — arbitrary
+//! `(stride_h, stride_w)` with SAME or VALID padding — into a
+//! caller-provided grow-only buffer, so any [`CompressedMatrix`] format
+//! can execute convolutions through its allocation-free
+//! `matmul_batch_into` kernel (or the pooled `par_matmul_into`,
+//! Alg. 3). In steady state the conv hot path allocates nothing and
+//! spawns no threads. See DESIGN.md §6.
 //!
 //! Layout invariant that makes this a pure reshape: a row-major HWIO
 //! tensor `[kh, kw, cin, cout]` flattened is already the row-major
 //! `(kh·kw·cin) × cout` matrix, and an im2col patch row laid out
-//! `[dy][dx][ci]` lines up with it; the `(n·h·w) × cout` product is in
-//! turn exactly the flattened NHWC output activation.
+//! `[dy][dx][ci]` lines up with it; the `(n·oh·ow) × cout` product is
+//! in turn exactly the flattened NHWC output activation.
 
 use anyhow::{ensure, Result};
 
 use crate::formats::{par_matmul_into, CompressedMatrix};
 use crate::mat::Mat;
+
+/// Padding scheme of a convolution, matching the TF/XLA semantics the
+/// benchmark checkpoints were exported with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// `out = ceil(in / stride)`; zero padding split
+    /// `pad_before = pad_total / 2` (so even kernels pad `(k-1)/2`
+    /// before and the remainder *after* — the TF convention; padding
+    /// top/left-heavy instead silently shifts every even-kernel
+    /// checkpoint by one pixel).
+    Same,
+    /// No padding: `out = (in - k) / stride + 1`, requires `in ≥ k`.
+    Valid,
+}
+
+impl Padding {
+    pub fn name(self) -> &'static str {
+        match self {
+            Padding::Same => "same",
+            Padding::Valid => "valid",
+        }
+    }
+}
+
+impl std::fmt::Display for Padding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The full geometry of a convolution: kernel extent, stride, and
+/// padding scheme. Conv1d is the `kh = 1` case with `kw` on the time
+/// axis. Threaded through the im2col pipeline, the dense oracles, the
+/// layer plan, and the `.sham` sidecars — one source of truth for the
+/// output-shape math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub kh: usize,
+    pub kw: usize,
+    /// `(stride_h, stride_w)`.
+    pub stride: (usize, usize),
+    pub padding: Padding,
+}
+
+/// TF SAME split for one axis: total padding needed so that
+/// `out = ceil(in/stride)`, with the *smaller* half before.
+fn same_pad_before(input: usize, k: usize, stride: usize) -> usize {
+    assert!(input > 0 && k > 0 && stride > 0, "degenerate conv axis");
+    let out = input.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(input);
+    total / 2
+}
+
+impl ConvSpec {
+    pub fn new(kh: usize, kw: usize, stride: (usize, usize), padding: Padding) -> ConvSpec {
+        assert!(kh > 0 && kw > 0, "zero-extent kernel");
+        assert!(stride.0 > 0 && stride.1 > 0, "zero stride");
+        ConvSpec { kh, kw, stride, padding }
+    }
+
+    /// The historical default: stride 1, SAME.
+    pub fn unit(kh: usize, kw: usize) -> ConvSpec {
+        ConvSpec::new(kh, kw, (1, 1), Padding::Same)
+    }
+
+    /// Output spatial dims for an `h × w` input, or `None` when the
+    /// input is smaller than a VALID kernel (untrusted serving inputs
+    /// must get an error, not a panic).
+    pub fn checked_out_dims(&self, h: usize, w: usize) -> Option<(usize, usize)> {
+        if h == 0 || w == 0 {
+            return None;
+        }
+        match self.padding {
+            Padding::Same => {
+                Some((h.div_ceil(self.stride.0), w.div_ceil(self.stride.1)))
+            }
+            Padding::Valid => {
+                if h < self.kh || w < self.kw {
+                    return None;
+                }
+                Some((
+                    (h - self.kh) / self.stride.0 + 1,
+                    (w - self.kw) / self.stride.1 + 1,
+                ))
+            }
+        }
+    }
+
+    /// Output spatial dims; panics on a VALID kernel larger than the
+    /// input (trusted callers — use [`Self::checked_out_dims`] for
+    /// serving inputs).
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        self.checked_out_dims(h, w)
+            .unwrap_or_else(|| panic!("{h}x{w} input too small for {self:?}"))
+    }
+
+    /// Zero padding inserted *before* the first input row/column (the TF
+    /// convention: `pad_total / 2`, remainder after). Depends on the
+    /// input extent when the stride exceeds 1.
+    pub fn pad_before(&self, h: usize, w: usize) -> (usize, usize) {
+        match self.padding {
+            Padding::Same => (
+                same_pad_before(h, self.kh, self.stride.0),
+                same_pad_before(w, self.kw, self.stride.1),
+            ),
+            Padding::Valid => (0, 0),
+        }
+    }
+}
+
+impl std::fmt::Display for ConvSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{}/s{}x{}/{}",
+            self.kh, self.kw, self.stride.0, self.stride.1, self.padding
+        )
+    }
+}
 
 /// Borrowed view of a flattened NHWC activation tensor
 /// (`data.len() == n·h·w·c`). Conv1d activations use `h = 1` with `w`
@@ -77,28 +198,31 @@ pub fn lower_conv1d(vals: &[f32], shape: &[usize]) -> Mat {
     Mat::from_vec(shape[0] * shape[1], shape[2], vals.to_vec())
 }
 
-/// im2col patch extraction for a SAME-padded stride-1 `kh × kw`
-/// convolution: `patches` is resized in place (grow-only capacity) to
-/// `(n·h·w) × (kh·kw·c)` and fully overwritten — out-of-bounds taps are
-/// zero-filled, so a dirty reused buffer is fine. `kh = 1` is the
-/// conv1d case (`w` = time axis).
-pub fn im2col_into(x: ActView<'_>, kh: usize, kw: usize, patches: &mut Mat) {
+/// im2col patch extraction for an arbitrary [`ConvSpec`]: `patches` is
+/// resized in place (grow-only capacity) to `(n·oh·ow) × (kh·kw·c)` and
+/// fully overwritten — out-of-bounds taps are zero-filled, so a dirty
+/// reused buffer is fine. `kh = 1` is the conv1d case (`w` = time
+/// axis). Panics when a VALID kernel exceeds the input; serving paths
+/// pre-check with [`ConvSpec::checked_out_dims`].
+pub fn im2col_into(x: ActView<'_>, spec: &ConvSpec, patches: &mut Mat) {
     let ActView { n, h, w, c, data } = x;
-    let (ph, pw) = (kh / 2, kw / 2);
+    let ConvSpec { kh, kw, stride: (sh, sw), .. } = *spec;
+    let (oh, ow) = spec.out_dims(h, w);
+    let (ph, pw) = spec.pad_before(h, w);
     let pc = kh * kw * c;
-    patches.resize(n * h * w, pc);
+    patches.resize(n * oh * ow, pc);
     let mut row_start = 0usize;
     for b in 0..n {
-        for oy in 0..h {
-            for ox in 0..w {
+        for oy in 0..oh {
+            for ox in 0..ow {
                 let row = &mut patches.data[row_start..row_start + pc];
                 for dy in 0..kh {
-                    let iy = oy as isize + dy as isize - ph as isize;
+                    let iy = (oy * sh + dy) as isize - ph as isize;
                     let in_y = iy >= 0 && iy < h as isize;
                     for dx in 0..kw {
                         let tap = (dy * kw + dx) * c;
                         let dst = &mut row[tap..tap + c];
-                        let ix = ox as isize + dx as isize - pw as isize;
+                        let ix = (ox * sw + dx) as isize - pw as isize;
                         if in_y && ix >= 0 && ix < w as isize {
                             let src = ((b * h + iy as usize) * w + ix as usize) * c;
                             dst.copy_from_slice(&data[src..src + c]);
@@ -127,17 +251,16 @@ pub(crate) fn bias_act(y: &mut Mat, bias: &[f32], relu: bool) {
     }
 }
 
-/// SAME-padded stride-1 convolution executed on a lowered compressed
-/// weight matrix: im2col into `patches`, multiply through the format's
-/// allocation-free batched kernel (or the pooled Alg. 3 when
-/// `threads > 1`), bias + activation fused on the way out. `out` ends
-/// up `(n·h·w) × cout` — the flattened NHWC output activation. Both
-/// buffers are resized in place (grow-only) and fully overwritten.
+/// Convolution under an arbitrary [`ConvSpec`] executed on a lowered
+/// compressed weight matrix: im2col into `patches`, multiply through
+/// the format's allocation-free batched kernel (or the pooled Alg. 3
+/// when `threads > 1`), bias + activation fused on the way out. `out`
+/// ends up `(n·oh·ow) × cout` — the flattened NHWC output activation.
+/// Both buffers are resized in place (grow-only) and fully overwritten.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_lowered_into(
     w: &dyn CompressedMatrix,
-    kh: usize,
-    kw: usize,
+    spec: &ConvSpec,
     x: ActView<'_>,
     bias: &[f32],
     relu: bool,
@@ -145,9 +268,13 @@ pub fn conv_lowered_into(
     patches: &mut Mat,
     out: &mut Mat,
 ) {
-    assert_eq!(w.rows(), kh * kw * x.c, "lowered conv weight shape mismatch");
+    assert_eq!(
+        w.rows(),
+        spec.kh * spec.kw * x.c,
+        "lowered conv weight shape mismatch"
+    );
     assert_eq!(bias.len(), w.cols(), "conv bias length mismatch");
-    im2col_into(x, kh, kw, patches);
+    im2col_into(x, spec, patches);
     if threads > 1 && patches.rows > 1 {
         par_matmul_into(w, patches, out, threads);
     } else {
@@ -157,9 +284,16 @@ pub fn conv_lowered_into(
 }
 
 /// 2×2 max pool, stride 2 (VALID) on a flattened NHWC activation;
-/// `out` becomes `(n·(h/2)·(w/2)) × c`, fully overwritten.
+/// `out` becomes `(n·(h/2)·(w/2)) × c`, fully overwritten. Odd spatial
+/// dims would silently drop the last row/column, so they are rejected
+/// up front — no benchmark model pools an odd extent, and surfacing the
+/// mistake beats corrupting the activation.
 pub fn maxpool2_into(x: ActView<'_>, out: &mut Mat) {
     let ActView { n, h, w, c, data } = x;
+    assert!(
+        h % 2 == 0 && w % 2 == 0,
+        "maxpool2 requires even spatial dims, got {h}x{w}"
+    );
     let (oh, ow) = (h / 2, w / 2);
     out.resize(n * oh * ow, c);
     let mut oi = 0usize;
@@ -246,53 +380,110 @@ mod tests {
     }
 
     #[test]
+    fn out_dims_and_padding_math() {
+        // stride 1 SAME keeps the extent; even kernels pad (k-1)/2 first
+        let s = ConvSpec::unit(3, 3);
+        assert_eq!(s.out_dims(5, 7), (5, 7));
+        assert_eq!(s.pad_before(5, 7), (1, 1));
+        let e = ConvSpec::unit(2, 4);
+        assert_eq!(e.out_dims(5, 5), (5, 5));
+        // TF convention: pad_total = k-1 → before = (k-1)/2
+        assert_eq!(e.pad_before(5, 5), (0, 1));
+        // strided SAME: out = ceil(in/s)
+        let st = ConvSpec::new(3, 3, (2, 2), Padding::Same);
+        assert_eq!(st.out_dims(5, 6), (3, 3));
+        assert_eq!(st.pad_before(5, 5), (1, 1));
+        // 4x4 input, k 3, stride 2: out 2, total = (2-1)*2+3-4 = 1 → before 0
+        assert_eq!(st.pad_before(4, 4), (0, 0));
+        // VALID
+        let v = ConvSpec::new(3, 3, (2, 2), Padding::Valid);
+        assert_eq!(v.out_dims(7, 8), (3, 3));
+        assert_eq!(v.pad_before(7, 8), (0, 0));
+        assert_eq!(v.checked_out_dims(2, 9), None);
+        assert_eq!(ConvSpec::unit(1, 3).checked_out_dims(0, 4), None);
+    }
+
+    #[test]
     fn im2col_identity_kernel_is_the_activation() {
         let mut rng = Prng::seeded(1);
         let x = rand_act(2, 3, 4, 5, &mut rng);
         let mut patches = Mat::zeros(0, 0);
-        im2col_into(ActView::new(x.n, x.h, x.w, x.c, &x.data), 1, 1, &mut patches);
+        im2col_into(
+            ActView::new(x.n, x.h, x.w, x.c, &x.data),
+            &ConvSpec::unit(1, 1),
+            &mut patches,
+        );
         assert_eq!((patches.rows, patches.cols), (2 * 3 * 4, 5));
         assert_eq!(patches.data, x.data);
     }
 
     #[test]
+    fn im2col_even_kernel_follows_tf_convention() {
+        // 2×2 kernel, stride 1 SAME on a 3×3 single-channel input: TF
+        // pads 0 before / 1 after, so the patch at output (0,0) reads
+        // input rows {0,1} × cols {0,1} — NOT {-1,0} × {-1,0}.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut patches = Mat::zeros(0, 0);
+        im2col_into(
+            ActView::new(1, 3, 3, 1, &x),
+            &ConvSpec::unit(2, 2),
+            &mut patches,
+        );
+        assert_eq!((patches.rows, patches.cols), (9, 4));
+        // output (0,0): taps (0,0),(0,1),(1,0),(1,1) → 1,2,4,5
+        assert_eq!(patches.row(0), &[1.0, 2.0, 4.0, 5.0]);
+        // output (2,2): taps run off the bottom/right edge → 9,0,0,0
+        assert_eq!(patches.row(8), &[9.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
     fn lowered_conv2d_matches_oracle_every_format_dirty_buffers() {
         let mut rng = Prng::seeded(2);
-        for (kh, kw) in [(1, 1), (3, 3), (5, 3)] {
-            let (n, h, w, cin, cout) = (2, 5, 6, 3, 4);
-            let x = rand_act(n, h, w, cin, &mut rng);
-            let wshape = [kh, kw, cin, cout];
-            let wvals: Vec<f32> =
-                (0..kh * kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
-            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
-            for relu in [false, true] {
-                let want = conv2d(&x, &wvals, &wshape, &bias, relu);
-                let lowered = lower_conv2d(&wvals, &wshape);
-                for f in all_formats(&lowered) {
-                    // NaN-poisoned reused buffers: kernels must fully
-                    // overwrite
-                    let mut patches = Mat::zeros(3, 7);
-                    patches.data.fill(f32::NAN);
-                    let mut out = Mat::zeros(2, 2);
-                    out.data.fill(f32::NAN);
-                    conv_lowered_into(
-                        f.as_ref(),
-                        kh,
-                        kw,
-                        ActView::new(n, h, w, cin, &x.data),
-                        &bias,
-                        relu,
-                        1,
-                        &mut patches,
-                        &mut out,
-                    );
-                    assert_eq!((out.rows, out.cols), (n * h * w, cout));
-                    for (a, b) in out.data.iter().zip(want.data.iter()) {
-                        assert!(
-                            (a - b).abs() < 1e-4,
-                            "{} {kh}x{kw} relu={relu}: {a} vs {b}",
-                            f.name()
+        for (kh, kw) in [(1, 1), (2, 2), (3, 3), (5, 3), (4, 2)] {
+            for (stride, padding) in [
+                ((1, 1), Padding::Same),
+                ((2, 2), Padding::Same),
+                ((2, 1), Padding::Valid),
+            ] {
+                let (n, h, w, cin, cout) = (2, 6, 7, 3, 4);
+                if padding == Padding::Valid && (h < kh || w < kw) {
+                    continue;
+                }
+                let spec = ConvSpec::new(kh, kw, stride, padding);
+                let x = rand_act(n, h, w, cin, &mut rng);
+                let wshape = [kh, kw, cin, cout];
+                let wvals: Vec<f32> =
+                    (0..kh * kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
+                let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+                for relu in [false, true] {
+                    let want = conv2d(&x, &wvals, &wshape, &bias, relu, stride, padding);
+                    let lowered = lower_conv2d(&wvals, &wshape);
+                    for f in all_formats(&lowered) {
+                        // NaN-poisoned reused buffers: kernels must fully
+                        // overwrite
+                        let mut patches = Mat::zeros(3, 7);
+                        patches.data.fill(f32::NAN);
+                        let mut out = Mat::zeros(2, 2);
+                        out.data.fill(f32::NAN);
+                        conv_lowered_into(
+                            f.as_ref(),
+                            &spec,
+                            ActView::new(n, h, w, cin, &x.data),
+                            &bias,
+                            relu,
+                            1,
+                            &mut patches,
+                            &mut out,
                         );
+                        let (oh, ow) = spec.out_dims(h, w);
+                        assert_eq!((out.rows, out.cols), (n * oh * ow, cout));
+                        for (a, b) in out.data.iter().zip(want.data.iter()) {
+                            assert!(
+                                (a - b).abs() < 1e-4,
+                                "{} {spec} relu={relu}: {a} vs {b}",
+                                f.name()
+                            );
+                        }
                     }
                 }
             }
@@ -303,31 +494,40 @@ mod tests {
     fn lowered_conv1d_matches_oracle() {
         let mut rng = Prng::seeded(3);
         for kw in [1, 3, 7] {
-            let (n, len, cin, cout) = (3, 9, 4, 5);
-            let xd: Vec<f32> = (0..n * len * cin).map(|_| rng.normal() as f32).collect();
-            let wshape = [kw, cin, cout];
-            let wvals: Vec<f32> =
-                (0..kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
-            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
-            let want = conv1d_relu(&xd, n, len, cin, &wvals, &wshape, &bias);
-            let lowered = lower_conv1d(&wvals, &wshape);
-            let f = Dense::compress(&lowered);
-            let mut patches = Mat::zeros(0, 0);
-            let mut out = Mat::zeros(0, 0);
-            conv_lowered_into(
-                &f,
-                1,
-                kw,
-                ActView::new(n, 1, len, cin, &xd),
-                &bias,
-                true,
-                1,
-                &mut patches,
-                &mut out,
-            );
-            assert_eq!(out.data.len(), want.len());
-            for (a, b) in out.data.iter().zip(want.iter()) {
-                assert!((a - b).abs() < 1e-5, "conv1d kw={kw}: {a} vs {b}");
+            for (stride, padding) in
+                [(1, Padding::Same), (2, Padding::Same), (3, Padding::Valid)]
+            {
+                let (n, len, cin, cout) = (3, 9, 4, 5);
+                let spec = ConvSpec::new(1, kw, (1, stride), padding);
+                let xd: Vec<f32> =
+                    (0..n * len * cin).map(|_| rng.normal() as f32).collect();
+                let wshape = [kw, cin, cout];
+                let wvals: Vec<f32> =
+                    (0..kw * cin * cout).map(|_| 0.3 * rng.normal() as f32).collect();
+                let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
+                let want =
+                    conv1d_relu(&xd, n, len, cin, &wvals, &wshape, &bias, stride, padding);
+                let lowered = lower_conv1d(&wvals, &wshape);
+                let f = Dense::compress(&lowered);
+                let mut patches = Mat::zeros(0, 0);
+                let mut out = Mat::zeros(0, 0);
+                conv_lowered_into(
+                    &f,
+                    &spec,
+                    ActView::new(n, 1, len, cin, &xd),
+                    &bias,
+                    true,
+                    1,
+                    &mut patches,
+                    &mut out,
+                );
+                assert_eq!(out.data.len(), want.len());
+                for (a, b) in out.data.iter().zip(want.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "conv1d kw={kw} s={stride} {padding}: {a} vs {b}"
+                    );
+                }
             }
         }
     }
@@ -343,11 +543,12 @@ mod tests {
         let bias = vec![0.1f32; cout];
         let lowered = lower_conv2d(&wvals, &wshape);
         let f = Dense::compress(&lowered);
+        let spec = ConvSpec::new(3, 3, (2, 2), Padding::Same);
         let (mut p1, mut o1) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         let (mut p2, mut o2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         let view = ActView::new(n, h, w, cin, &x.data);
-        conv_lowered_into(&f, 3, 3, view, &bias, true, 1, &mut p1, &mut o1);
-        conv_lowered_into(&f, 3, 3, view, &bias, true, 4, &mut p2, &mut o2);
+        conv_lowered_into(&f, &spec, view, &bias, true, 1, &mut p1, &mut o1);
+        conv_lowered_into(&f, &spec, view, &bias, true, 4, &mut p2, &mut o2);
         assert!(o1.max_abs_diff(&o2) < 1e-5);
     }
 
@@ -360,6 +561,15 @@ mod tests {
         out.data.fill(f32::NAN);
         maxpool2_into(ActView::new(x.n, x.h, x.w, x.c, &x.data), &mut out);
         assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "even spatial dims")]
+    fn maxpool2_into_rejects_odd_dims() {
+        // odd h would silently drop the last row — assert instead
+        let x = vec![0.0f32; 5 * 4 * 2];
+        let mut out = Mat::zeros(0, 0);
+        maxpool2_into(ActView::new(1, 5, 4, 2, &x), &mut out);
     }
 
     #[test]

@@ -13,7 +13,10 @@ pub mod lowering;
 pub mod model;
 pub mod reference;
 
-pub use compressed::{CompressedModel, ConvLayer, EmbedTable, FcFormat, FcLayer};
+pub use compressed::{
+    CompressedModel, ConvChoice, ConvFormat, ConvLayer, EmbedTable, FcFormat,
+    FcLayer,
+};
 pub use eval::{evaluate, evaluate_pure, Metric};
-pub use lowering::{ActView, PlanInput};
-pub use model::{Branch, BranchInput, LayerPlan, ModelKind, Step};
+pub use lowering::{ActView, ConvSpec, Padding, PlanInput};
+pub use model::{Branch, BranchInput, ConvGeom, LayerPlan, ModelKind, Step};

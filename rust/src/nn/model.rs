@@ -9,18 +9,42 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::io::{read_archive, Archive, TestSet};
+use crate::nn::lowering::{ConvSpec, Padding};
+
+/// Stride + padding of a conv step — the plan-level half of a
+/// [`ConvSpec`] (kernel extents come from the weight tensor at build
+/// time). Conv1d geometries put the time axis in `stride.1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub stride: (usize, usize),
+    pub padding: Padding,
+}
+
+impl ConvGeom {
+    /// The benchmark checkpoints' geometry: stride 1, SAME.
+    pub const UNIT_SAME: ConvGeom =
+        ConvGeom { stride: (1, 1), padding: Padding::Same };
+
+    /// Complete this geometry with the kernel extents from the weight
+    /// tensor.
+    pub fn spec(self, kh: usize, kw: usize) -> ConvSpec {
+        ConvSpec::new(kh, kw, self.stride, self.padding)
+    }
+}
 
 /// One step of a model's conv front-end (DESIGN.md §6). Conv steps name
-/// the weight tensor (`<name>.w` / `<name>.b` in the archive); the FC
-/// stack that follows the front-end is listed in [`LayerPlan::fc`].
+/// the weight tensor (`<name>.w` / `<name>.b` in the archive) and carry
+/// their stride/padding geometry; the FC stack that follows the
+/// front-end is listed in [`LayerPlan::fc`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Step {
     /// Token-id lookup into the dense embedding table `<name>`.
     Embed(&'static str),
-    /// SAME-padded stride-1 conv2d (HWIO weights) + bias + ReLU.
-    Conv2d(&'static str),
-    /// SAME-padded stride-1 conv1d (WIO weights) + bias + ReLU.
-    Conv1d(&'static str),
+    /// conv2d (HWIO weights) + bias + ReLU under the given geometry.
+    Conv2d(&'static str, ConvGeom),
+    /// conv1d (WIO weights) + bias + ReLU; the time axis is
+    /// `ConvGeom::stride.1`.
+    Conv1d(&'static str, ConvGeom),
     /// 2×2 max pool, stride 2 (VALID).
     MaxPool2,
     /// Max over the time axis — ends a token branch with one feature
@@ -71,13 +95,13 @@ static VGG_PLAN: LayerPlan = LayerPlan {
     branches: &[Branch {
         input: BranchInput::Images,
         steps: &[
-            Step::Conv2d("c1a"),
-            Step::Conv2d("c1b"),
+            Step::Conv2d("c1a", ConvGeom::UNIT_SAME),
+            Step::Conv2d("c1b", ConvGeom::UNIT_SAME),
             Step::MaxPool2,
-            Step::Conv2d("c2a"),
-            Step::Conv2d("c2b"),
+            Step::Conv2d("c2a", ConvGeom::UNIT_SAME),
+            Step::Conv2d("c2b", ConvGeom::UNIT_SAME),
             Step::MaxPool2,
-            Step::Conv2d("c3a"),
+            Step::Conv2d("c3a", ConvGeom::UNIT_SAME),
             Step::MaxPool2,
             Step::Flatten,
         ],
@@ -93,9 +117,9 @@ static DTA_PLAN: LayerPlan = LayerPlan {
             input: BranchInput::LigTokens,
             steps: &[
                 Step::Embed("lig_embed"),
-                Step::Conv1d("lig_c1"),
-                Step::Conv1d("lig_c2"),
-                Step::Conv1d("lig_c3"),
+                Step::Conv1d("lig_c1", ConvGeom::UNIT_SAME),
+                Step::Conv1d("lig_c2", ConvGeom::UNIT_SAME),
+                Step::Conv1d("lig_c3", ConvGeom::UNIT_SAME),
                 Step::GlobalMaxPool,
             ],
         },
@@ -103,9 +127,9 @@ static DTA_PLAN: LayerPlan = LayerPlan {
             input: BranchInput::ProtTokens,
             steps: &[
                 Step::Embed("prot_embed"),
-                Step::Conv1d("prot_c1"),
-                Step::Conv1d("prot_c2"),
-                Step::Conv1d("prot_c3"),
+                Step::Conv1d("prot_c1", ConvGeom::UNIT_SAME),
+                Step::Conv1d("prot_c2", ConvGeom::UNIT_SAME),
+                Step::Conv1d("prot_c3", ConvGeom::UNIT_SAME),
                 Step::GlobalMaxPool,
             ],
         },
@@ -203,6 +227,23 @@ impl ModelKind {
         }
     }
 
+    /// Conv steps in layer-plan order as `(name, is_2d, geom)` — the
+    /// single walk `CompressedModel::{build, load_sham}` derive per-layer
+    /// rank and stride/padding geometry from.
+    pub fn conv_steps(&self) -> Vec<(&'static str, bool, ConvGeom)> {
+        let mut out = Vec::new();
+        for branch in self.layer_plan().branches {
+            for step in branch.steps {
+                match *step {
+                    Step::Conv2d(name, geom) => out.push((name, true, geom)),
+                    Step::Conv1d(name, geom) => out.push((name, false, geom)),
+                    _ => {}
+                }
+            }
+        }
+        out
+    }
+
     /// Feature dimension entering the FC stack (real benchmark weights).
     pub fn feature_dim(&self) -> usize {
         self.layer_plan().feature_dim
@@ -285,12 +326,22 @@ mod tests {
             let mut conv_steps = Vec::new();
             for branch in plan.branches {
                 for step in branch.steps {
-                    if let Step::Conv2d(n) | Step::Conv1d(n) = step {
+                    if let Step::Conv2d(n, _) | Step::Conv1d(n, _) = step {
                         conv_steps.push(*n);
                     }
                 }
             }
             assert_eq!(conv_steps, kind.conv_names());
+            // the conv_steps() walk agrees with the inventory, and every
+            // benchmark checkpoint layer is stride-1 SAME
+            let walked = kind.conv_steps();
+            assert_eq!(
+                walked.iter().map(|(n, _, _)| *n).collect::<Vec<_>>(),
+                kind.conv_names()
+            );
+            for (_, _, geom) in walked {
+                assert_eq!(geom, ConvGeom::UNIT_SAME);
+            }
             // every branch ends in a feature-producing step
             for branch in plan.branches {
                 assert!(matches!(

@@ -5,13 +5,19 @@
 //! whole system without PJRT (degraded speed, zero dependencies).
 //!
 //! Layouts match the JAX side exactly: images NHWC, conv2d weights
-//! HWIO, conv1d weights WIO (width, in, out), SAME padding, stride 1.
+//! HWIO, conv1d weights WIO (width, in, out). Stride and padding are
+//! taken per layer from the [`ConvGeom`] in the layer plan; the padding
+//! arithmetic here is written out independently of
+//! [`crate::nn::lowering::ConvSpec`] so the two implementations can
+//! cross-check each other (both follow the TF convention: SAME pads
+//! `(k-1)/2` *before* at stride 1 — even kernels pad the remainder
+//! after, never before).
 
 use anyhow::{bail, Context, Result};
 
 use crate::io::Archive;
 use crate::mat::Mat;
-use crate::nn::lowering::{self, ActView, PlanInput};
+use crate::nn::lowering::{self, ActView, Padding, PlanInput};
 use crate::nn::model::{Branch, BranchInput, ModelKind, Step};
 
 /// A dense NHWC activation tensor.
@@ -40,27 +46,56 @@ impl Act4 {
     }
 }
 
-/// SAME-padded stride-1 conv2d (HWIO weights) + bias + optional ReLU.
-/// Bias + activation are fused into the accumulation walk: each output
-/// position is finished (accumulated, biased, activated) before the
-/// loop moves on, so the tensor is traversed exactly once.
-pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -> Act4 {
+/// Independent output-extent + leading-pad math for one axis (the
+/// oracle's own spelling of the TF convention, deliberately not shared
+/// with `lowering::ConvSpec`).
+fn axis_geom(input: usize, k: usize, stride: usize, padding: Padding) -> (usize, usize) {
+    assert!(input > 0 && k > 0 && stride > 0, "degenerate conv axis");
+    match padding {
+        Padding::Same => {
+            let out = input.div_ceil(stride);
+            let span = (out - 1) * stride + k;
+            let before = span.saturating_sub(input) / 2;
+            (out, before)
+        }
+        Padding::Valid => {
+            assert!(input >= k, "VALID kernel {k} exceeds input {input}");
+            ((input - k) / stride + 1, 0)
+        }
+    }
+}
+
+/// conv2d (HWIO weights) + bias + optional ReLU under an arbitrary
+/// stride/padding. Bias + activation are fused into the accumulation
+/// walk: each output position is finished (accumulated, biased,
+/// activated) before the loop moves on, so the tensor is traversed
+/// exactly once.
+pub fn conv2d(
+    x: &Act4,
+    w: &[f32],
+    wshape: &[usize],
+    bias: &[f32],
+    relu: bool,
+    stride: (usize, usize),
+    padding: Padding,
+) -> Act4 {
     let (kh, kw, cin, cout) = (wshape[0], wshape[1], wshape[2], wshape[3]);
     assert_eq!(cin, x.c, "conv2d channel mismatch");
     assert_eq!(bias.len(), cout);
-    let (ph, pw) = (kh / 2, kw / 2);
-    let mut out = Act4::zeros(x.n, x.h, x.w, cout);
+    let (oh, ph) = axis_geom(x.h, kh, stride.0, padding);
+    let (ow, pw) = axis_geom(x.w, kw, stride.1, padding);
+    let mut out = Act4::zeros(x.n, oh, ow, cout);
     for b in 0..x.n {
-        for oy in 0..x.h {
-            for ox in 0..x.w {
+        for oy in 0..oh {
+            for ox in 0..ow {
                 let out_base = out.idx(b, oy, ox, 0);
                 for dy in 0..kh {
-                    let iy = oy as isize + dy as isize - ph as isize;
+                    let iy = (oy * stride.0 + dy) as isize - ph as isize;
                     if iy < 0 || iy >= x.h as isize {
                         continue;
                     }
                     for dx in 0..kw {
-                        let ix = ox as isize + dx as isize - pw as isize;
+                        let ix = (ox * stride.1 + dx) as isize - pw as isize;
                         if ix < 0 || ix >= x.w as isize {
                             continue;
                         }
@@ -91,8 +126,15 @@ pub fn conv2d(x: &Act4, w: &[f32], wshape: &[usize], bias: &[f32], relu: bool) -
 
 /// 2×2 max pool, stride 2 (VALID). The output is written through one
 /// linearly advancing index; the four input taps share one base index
-/// per window instead of recomputing `idx` per element.
+/// per window instead of recomputing `idx` per element. Odd spatial
+/// dims are rejected (they would silently drop the last row/column).
 pub fn maxpool2(x: &Act4) -> Act4 {
+    assert!(
+        x.h % 2 == 0 && x.w % 2 == 0,
+        "maxpool2 requires even spatial dims, got {}x{}",
+        x.h,
+        x.w
+    );
     let (oh, ow) = (x.h / 2, x.w / 2);
     let mut out = Act4::zeros(x.n, oh, ow, x.c);
     let c = x.c;
@@ -117,8 +159,11 @@ pub fn maxpool2(x: &Act4) -> Act4 {
     out
 }
 
-/// SAME-padded stride-1 conv1d (WIO weights) + bias + ReLU over an
-/// (n, len, c) activation stored flat.
+/// conv1d (WIO weights) + bias + ReLU over an (n, len, c) activation
+/// stored flat, under an arbitrary time-axis stride/padding. Returns
+/// the flattened (n, out_len, cout) activation; the output length is
+/// `axis_geom(len, kw, stride, padding).0`.
+#[allow(clippy::too_many_arguments)]
 pub fn conv1d_relu(
     x: &[f32],
     n: usize,
@@ -127,16 +172,18 @@ pub fn conv1d_relu(
     w: &[f32],
     wshape: &[usize],
     bias: &[f32],
+    stride: usize,
+    padding: Padding,
 ) -> Vec<f32> {
     let (kw, wcin, cout) = (wshape[0], wshape[1], wshape[2]);
     assert_eq!(wcin, cin);
-    let pad = kw / 2;
-    let mut out = vec![0.0f32; n * len * cout];
+    let (olen, pad) = axis_geom(len, kw, stride, padding);
+    let mut out = vec![0.0f32; n * olen * cout];
     for b in 0..n {
-        for t in 0..len {
-            let obase = (b * len + t) * cout;
+        for t in 0..olen {
+            let obase = (b * olen + t) * cout;
             for dk in 0..kw {
-                let it = t as isize + dk as isize - pad as isize;
+                let it = (t * stride + dk) as isize - pad as isize;
                 if it < 0 || it >= len as isize {
                     continue;
                 }
@@ -161,6 +208,11 @@ pub fn conv1d_relu(
     out
 }
 
+/// Output length of [`conv1d_relu`] for a given time axis.
+pub fn conv1d_out_len(len: usize, kw: usize, stride: usize, padding: Padding) -> usize {
+    axis_geom(len, kw, stride, padding).0
+}
+
 fn tensor<'a>(params: &'a Archive, name: &str) -> Result<(&'a Vec<usize>, Vec<f32>)> {
     let t = params.get(name).with_context(|| format!("missing {name}"))?;
     Ok((&t.shape, t.as_f32()?))
@@ -178,7 +230,7 @@ pub fn vgg_features(params: &Archive, images: &Act4) -> Result<Mat> {
     ] {
         let (wshape, w) = tensor(params, &format!("{name}.w"))?;
         let (_, b) = tensor(params, &format!("{name}.b"))?;
-        h = conv2d(&h, &w, wshape, &b, true);
+        h = conv2d(&h, &w, wshape, &b, true, (1, 1), Padding::Same);
         if pool {
             h = maxpool2(&h);
         }
@@ -215,7 +267,7 @@ pub fn dta_features(
         for conv in ["c1", "c2", "c3"] {
             let (wshape, w) = tensor(params, &format!("{branch}_{conv}.w"))?;
             let (_, b) = tensor(params, &format!("{branch}_{conv}.b"))?;
-            h = conv1d_relu(&h, batch, len, cin, &w, wshape, &b);
+            h = conv1d_relu(&h, batch, len, cin, &w, wshape, &b, 1, Padding::Same);
             cin = wshape[2];
         }
         // global max pool over time
@@ -291,20 +343,32 @@ fn run_steps(
                 lowering::embed_into(tokens, n, len, &emb, edim, &mut out)?;
                 act = Act4 { n, h: 1, w: len, c: edim, data: out.data };
             }
-            Step::Conv2d(name) => {
+            Step::Conv2d(name, geom) => {
                 let (wshape, w) = tensor(params, &format!("{name}.w"))?;
                 let (_, b) = tensor(params, &format!("{name}.b"))?;
-                act = conv2d(&act, &w, wshape, &b, true);
+                act = conv2d(&act, &w, wshape, &b, true, geom.stride, geom.padding);
             }
-            Step::Conv1d(name) => {
+            Step::Conv1d(name, geom) => {
                 let (wshape, w) = tensor(params, &format!("{name}.w"))?;
                 let (_, b) = tensor(params, &format!("{name}.b"))?;
+                let olen =
+                    conv1d_out_len(act.w, wshape[0], geom.stride.1, geom.padding);
                 act = Act4 {
                     n,
                     h: 1,
-                    w: act.w,
+                    w: olen,
                     c: wshape[2],
-                    data: conv1d_relu(&act.data, n, act.w, act.c, &w, wshape, &b),
+                    data: conv1d_relu(
+                        &act.data,
+                        n,
+                        act.w,
+                        act.c,
+                        &w,
+                        wshape,
+                        &b,
+                        geom.stride.1,
+                        geom.padding,
+                    ),
                 };
             }
             Step::MaxPool2 => act = maxpool2(&act),
@@ -412,7 +476,7 @@ mod tests {
         for c in 0..3 {
             w[c * 3 + c] = 1.0; // (1,1,3,3) identity
         }
-        let out = conv2d(&x, &w, &[1, 1, 3, 3], &[0.0; 3], false);
+        let out = conv2d(&x, &w, &[1, 1, 3, 3], &[0.0; 3], false, (1, 1), Padding::Same);
         for (a, b) in out.data.iter().zip(x.data.iter()) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -423,10 +487,63 @@ mod tests {
         // all-ones 3×3 kernel on all-ones input: interior = 9, corner = 4
         let x = Act4 { n: 1, h: 4, w: 4, c: 1, data: vec![1.0; 16] };
         let w = vec![1.0f32; 9];
-        let out = conv2d(&x, &w, &[3, 3, 1, 1], &[0.0], false);
+        let out = conv2d(&x, &w, &[3, 3, 1, 1], &[0.0], false, (1, 1), Padding::Same);
         assert!((out.get(0, 1, 1, 0) - 9.0).abs() < 1e-6);
         assert!((out.get(0, 0, 0, 0) - 4.0).abs() < 1e-6);
         assert!((out.get(0, 0, 1, 0) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv2d_even_kernel_matches_hand_fixture() {
+        // 2×2 all-ones kernel, stride 1 SAME on the 3×3 ramp 1..9. The
+        // TF convention pads 0 before / 1 after on both axes, so every
+        // window reads input {oy, oy+1} × {ox, ox+1} (clipped at the
+        // bottom/right edge) — hand-computed expected sums:
+        //   12 16  9      (1+2+4+5, 2+3+5+6, 3+6)
+        //   24 28 15      (4+5+7+8, 5+6+8+9, 6+9)
+        //   15 17  9      (7+8,     8+9,     9)
+        // The pre-fix top/left-heavy padding (pad 1 before) instead
+        // yields 1 at (0,0) — one whole pixel of misalignment.
+        let x = Act4 {
+            n: 1,
+            h: 3,
+            w: 3,
+            c: 1,
+            data: (1..=9).map(|v| v as f32).collect(),
+        };
+        let w = vec![1.0f32; 4];
+        let out = conv2d(&x, &w, &[2, 2, 1, 1], &[0.0], false, (1, 1), Padding::Same);
+        let want = [12.0, 16.0, 9.0, 24.0, 28.0, 15.0, 15.0, 17.0, 9.0];
+        assert_eq!(out.data, want);
+    }
+
+    #[test]
+    fn conv2d_strided_valid_matches_hand_fixture() {
+        // 2×2 ones kernel, stride 2 VALID on the 4×4 ramp 1..16: four
+        // disjoint windows → 1+2+5+6, 3+4+7+8, 9+10+13+14, 11+12+15+16.
+        let x = Act4 {
+            n: 1,
+            h: 4,
+            w: 4,
+            c: 1,
+            data: (1..=16).map(|v| v as f32).collect(),
+        };
+        let w = vec![1.0f32; 4];
+        let out =
+            conv2d(&x, &w, &[2, 2, 1, 1], &[0.0], false, (2, 2), Padding::Valid);
+        assert_eq!((out.h, out.w), (2, 2));
+        assert_eq!(out.data, [14.0, 22.0, 46.0, 54.0]);
+    }
+
+    #[test]
+    fn conv1d_even_kernel_follows_tf_convention() {
+        // kw=2 ones kernel on [1,2,3]: windows {1+2, 2+3, 3} — the taps
+        // never reach *before* t (pad-after only).
+        let x = [1.0f32, 2.0, 3.0];
+        let w = [1.0f32, 1.0];
+        let out =
+            conv1d_relu(&x, 1, 3, 1, &w, &[2, 1, 1], &[0.0], 1, Padding::Same);
+        assert_eq!(out, vec![3.0, 5.0, 3.0]);
     }
 
     #[test]
@@ -440,6 +557,13 @@ mod tests {
         };
         let out = maxpool2(&x);
         assert_eq!(out.data, vec![5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "even spatial dims")]
+    fn maxpool_rejects_odd_dims() {
+        let x = Act4 { n: 1, h: 3, w: 2, c: 1, data: vec![0.0; 6] };
+        let _ = maxpool2(&x);
     }
 
     fn synthetic_vgg_params(rng: &mut Prng) -> Archive {

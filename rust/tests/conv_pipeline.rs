@@ -1,16 +1,18 @@
 //! End-to-end tests of the lowered conv pipeline: property tests of
 //! im2col-compressed convolution against the direct-loop oracle (every
-//! registry format, dirty reused buffers, randomized shapes/batches),
-//! whole-model pure-Rust forward passes, and the `.sham` whole-model
-//! round-trip including conv layers. No artifacts or PJRT needed.
+//! registry format, dirty reused buffers, randomized shapes, batches,
+//! strides, paddings, and even/odd kernels), whole-model pure-Rust
+//! forward passes, and the `.sham` whole-model round-trip including
+//! conv layers — one of them re-speced to strided VALID. No artifacts
+//! or PJRT needed.
 
 use sham::formats::{all_formats, FormatId, Workspace};
 use sham::io::{Archive, Tensor};
 use sham::mat::Mat;
-use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
 use sham::nn::lowering::{conv_lowered_into, lower_conv1d, lower_conv2d, ActView};
 use sham::nn::reference::{conv1d_relu, conv2d, plan_features, Act4};
-use sham::nn::{CompressedModel, ModelKind, PlanInput};
+use sham::nn::{CompressedModel, ConvSpec, ModelKind, Padding, PlanInput};
 use sham::quant::Kind;
 use sham::util::prng::Prng;
 
@@ -23,22 +25,30 @@ fn nan_mat() -> Mat {
     m
 }
 
-/// Property: for randomized shapes, batches, and sparsity/quantization
-/// levels, the lowered convolution matches the dense triple-loop oracle
-/// within 1e-4 for every registry format — with NaN-poisoned reused
-/// buffers, so any kernel that fails to fully overwrite is caught.
+/// Property: for randomized shapes, batches, strides, paddings (SAME
+/// and VALID), even and odd kernels, and sparsity/quantization levels,
+/// the lowered convolution matches the dense direct-loop oracle within
+/// 1e-4 for every registry format — with NaN-poisoned reused buffers,
+/// so any kernel that fails to fully overwrite is caught.
 #[test]
 fn lowered_conv2d_matches_oracle_property() {
     let mut rng = Prng::seeded(0x10_2C01);
     let mut patches = nan_mat();
     let mut out = nan_mat();
-    for case in 0..12 {
+    for case in 0..16 {
         let n = 1 + rng.gen_range(3);
-        let h = 1 + rng.gen_range(7);
-        let w = 1 + rng.gen_range(7);
         let cin = 1 + rng.gen_range(4);
         let cout = 1 + rng.gen_range(5);
-        let (kh, kw) = ([1, 3, 5][rng.gen_range(3)], [1, 3, 5][rng.gen_range(3)]);
+        // even kernels included: their SAME padding is the TF
+        // pad-after-heavy convention
+        let kernels = [1, 2, 3, 4, 5];
+        let (kh, kw) = (kernels[rng.gen_range(5)], kernels[rng.gen_range(5)]);
+        let stride = (1 + rng.gen_range(3), 1 + rng.gen_range(3));
+        let padding = if rng.gen_range(2) == 0 { Padding::Same } else { Padding::Valid };
+        // VALID requires input ≥ kernel
+        let h = kh + rng.gen_range(7);
+        let w = kw + rng.gen_range(7);
+        let spec = ConvSpec::new(kh, kw, stride, padding);
         // quantized/sparse weights: the regime the compressed formats
         // are built for
         let wmat = Mat::sparse_quantized(kh * kw * cin, cout, 0.4, 8, &mut rng);
@@ -51,12 +61,13 @@ fn lowered_conv2d_matches_oracle_property() {
             c: cin,
             data: (0..n * h * w * cin).map(|_| rng.normal() as f32).collect(),
         };
-        let want = conv2d(&x, &wmat.data, &wshape, &bias, true);
+        let want = conv2d(&x, &wmat.data, &wshape, &bias, true, stride, padding);
+        let (oh, ow) = spec.out_dims(h, w);
+        assert_eq!((want.h, want.w), (oh, ow), "oracle/spec shape drift");
         for f in all_formats(&wmat) {
             conv_lowered_into(
                 f.as_ref(),
-                kh,
-                kw,
+                &spec,
                 ActView::new(n, h, w, cin, &x.data),
                 &bias,
                 true,
@@ -64,11 +75,11 @@ fn lowered_conv2d_matches_oracle_property() {
                 &mut patches,
                 &mut out,
             );
-            assert_eq!((out.rows, out.cols), (n * h * w, cout));
+            assert_eq!((out.rows, out.cols), (n * oh * ow, cout));
             for (a, b) in out.data.iter().zip(want.data.iter()) {
                 assert!(
                     (a - b).abs() < 1e-4,
-                    "case {case} {}: {a} vs {b} (shape {n}x{h}x{w}x{cin}->{cout}, k {kh}x{kw})",
+                    "case {case} {}: {a} vs {b} (shape {n}x{h}x{w}x{cin}->{cout}, {spec})",
                     f.name()
                 );
             }
@@ -81,22 +92,25 @@ fn lowered_conv1d_matches_oracle_property() {
     let mut rng = Prng::seeded(0x10_2C02);
     let mut patches = nan_mat();
     let mut out = nan_mat();
-    for case in 0..10 {
+    for case in 0..12 {
         let n = 1 + rng.gen_range(3);
-        let len = 1 + rng.gen_range(12);
         let cin = 1 + rng.gen_range(5);
         let cout = 1 + rng.gen_range(6);
-        let kw = [1, 3, 5, 7][rng.gen_range(4)];
+        let kw = [1, 2, 3, 4, 5, 7][rng.gen_range(6)];
+        let stride = 1 + rng.gen_range(3);
+        let padding = if rng.gen_range(2) == 0 { Padding::Same } else { Padding::Valid };
+        let len = kw + rng.gen_range(12);
+        let spec = ConvSpec::new(1, kw, (1, stride), padding);
         let wmat = Mat::sparse_quantized(kw * cin, cout, 0.5, 6, &mut rng);
         let wshape = [kw, cin, cout];
         let bias: Vec<f32> = (0..cout).map(|_| rng.normal() as f32).collect();
         let xd: Vec<f32> = (0..n * len * cin).map(|_| rng.normal() as f32).collect();
-        let want = conv1d_relu(&xd, n, len, cin, &wmat.data, &wshape, &bias);
+        let want =
+            conv1d_relu(&xd, n, len, cin, &wmat.data, &wshape, &bias, stride, padding);
         for f in all_formats(&wmat) {
             conv_lowered_into(
                 f.as_ref(),
-                1,
-                kw,
+                &spec,
                 ActView::new(n, 1, len, cin, &xd),
                 &bias,
                 true,
@@ -104,10 +118,11 @@ fn lowered_conv1d_matches_oracle_property() {
                 &mut patches,
                 &mut out,
             );
+            assert_eq!(out.data.len(), want.len());
             for (a, b) in out.data.iter().zip(want.iter()) {
                 assert!(
                     (a - b).abs() < 1e-4,
-                    "case {case} {}: {a} vs {b} (len {len}, {cin}->{cout}, kw {kw})",
+                    "case {case} {}: {a} vs {b} (len {len}, {cin}->{cout}, {spec})",
                     f.name()
                 );
             }
@@ -177,7 +192,7 @@ fn dta_pure_forward_matches_dense_reference() {
     for fmt in [FormatId::Dense, FormatId::Hac, FormatId::Shac, FormatId::RelIdx] {
         let cfg = CompressionCfg {
             fc_format: FcFormat::Fixed(fmt),
-            conv_format: FcFormat::Fixed(fmt),
+            conv_format: ConvFormat::Fixed(fmt),
             ..Default::default()
         };
         let mut rng2 = Prng::seeded(9);
@@ -218,11 +233,29 @@ fn empty_token_batch_errors_instead_of_panicking() {
     assert!(m.forward_into(&input, 1, &mut ws).is_err());
 }
 
-/// Whole-model `.sham` round-trip including conv layers: the loaded
-/// model keeps every layer's format, produces identical outputs, and
-/// re-derives identical ψ accounting.
 #[test]
-fn whole_model_sham_roundtrip_with_conv() {
+fn valid_kernel_larger_than_input_errors_instead_of_panicking() {
+    // A VALID conv whose input is shorter than the kernel must error
+    // through the serving path (checked_out_dims), not panic.
+    let mut rng = Prng::seeded(0x10_2C07);
+    let a = synthetic_dta_archive(&mut rng);
+    let mut m = CompressedModel::baseline(ModelKind::DtaKiba, &a).unwrap();
+    m.conv[0].spec = ConvSpec::new(1, 3, (1, 1), Padding::Valid);
+    let mut ws = Workspace::new();
+    // sequences of length 2 < kw 3
+    let lig = [0i32; 2];
+    let prot = [0i32; 2];
+    let input = PlanInput::Tokens { n: 1, lig: &lig, prot: &prot };
+    assert!(m.forward_into(&input, 1, &mut ws).is_err());
+}
+
+/// Whole-model `.sham` round-trip including conv layers — one of them
+/// re-speced to a *strided VALID* geometry before saving: the loaded
+/// model keeps every layer's format AND geometry, produces identical
+/// outputs (the strided layer actually executes), and re-derives
+/// identical ψ accounting.
+#[test]
+fn whole_model_sham_roundtrip_with_strided_valid_conv() {
     let dir = std::env::temp_dir().join("sham_conv_pipeline_test");
     std::fs::create_dir_all(&dir).unwrap();
 
@@ -230,27 +263,39 @@ fn whole_model_sham_roundtrip_with_conv() {
     let a = synthetic_dta_archive(&mut rng);
     let cfg = CompressionCfg {
         conv_quant: Some((Kind::Cws, 8)),
-        conv_format: FcFormat::Fixed(FormatId::Shac),
+        conv_format: ConvFormat::Fixed(FormatId::Shac),
         fc_prune: Some(60.0),
         fc_quant: Some((Kind::Cws, 8)),
         fc_format: FcFormat::Auto,
         ..Default::default()
     };
-    let model = CompressedModel::build(ModelKind::DtaKiba, &a, &cfg, &mut rng).unwrap();
+    let mut model =
+        CompressedModel::build(ModelKind::DtaKiba, &a, &cfg, &mut rng).unwrap();
+    // Re-spec the last lig conv to stride-2 VALID. The branch ends in a
+    // global max pool over time, so the geometry change shortens the
+    // time axis without touching the feature dim — the whole model
+    // still runs end-to-end.
+    let strided = ConvSpec::new(1, 3, (1, 2), Padding::Valid);
+    model.conv[2].spec = strided;
+    assert_eq!(model.conv[2].name, "lig_c3");
+
     let path = dir.join("dta_full.sham");
     model.save_sham(&path).unwrap();
     // same layer names, different benchmark: must be rejected
     assert!(CompressedModel::load_sham(ModelKind::DtaDavis, &path).is_err());
     let loaded = CompressedModel::load_sham(ModelKind::DtaKiba, &path).unwrap();
 
-    // formats survive (no recompression into something else)
+    // formats AND geometry survive (no recompression, no spec reset to
+    // the plan's stride-1 SAME default)
     assert_eq!(loaded.fc.len(), model.fc.len());
     assert_eq!(loaded.conv.len(), model.conv.len());
     for (l, m) in loaded.conv.iter().zip(model.conv.iter()) {
         assert_eq!(l.w.id(), m.w.id(), "conv {}", m.name);
         assert_eq!(l.w.decompress(), m.w.decompress(), "conv {}", m.name);
-        assert_eq!((l.kh, l.kw, l.cin, l.cout), (m.kh, m.kw, m.cin, m.cout));
+        assert_eq!(l.spec, m.spec, "conv {} spec", m.name);
+        assert_eq!((l.cin, l.cout), (m.cin, m.cout));
     }
+    assert_eq!(loaded.conv[2].spec, strided);
     for (l, m) in loaded.fc.iter().zip(model.fc.iter()) {
         assert_eq!(l.w.id(), m.w.id(), "fc {}", m.name);
         assert_eq!(l.w.decompress(), m.w.decompress(), "fc {}", m.name);
@@ -258,7 +303,8 @@ fn whole_model_sham_roundtrip_with_conv() {
     // accounting is re-derived bit-identically
     assert!((loaded.psi_fc() - model.psi_fc()).abs() < 1e-12);
     assert!((loaded.psi_total() - model.psi_total()).abs() < 1e-12);
-    // and the loaded model is executable with identical outputs
+    // and the loaded model is executable with identical outputs —
+    // including the strided VALID layer (len 9 → (9-3)/2+1 = 4 steps)
     let n = 2usize;
     let lig: Vec<i32> = (0..n * 9).map(|i| (i % 16) as i32).collect();
     let prot: Vec<i32> = (0..n * 7).map(|i| (i % 16) as i32).collect();
@@ -281,7 +327,7 @@ fn vgg_model_sham_roundtrip_keeps_hwio_shape() {
     // chain-consistent VGG-like archive (8×8 input → 1×1×5 → fc 5→…→4)
     let a = synthetic_vgg_archive(&mut rng);
     let cfg = CompressionCfg {
-        conv_format: FcFormat::Fixed(FormatId::Hac),
+        conv_format: ConvFormat::Fixed(FormatId::Hac),
         fc_format: FcFormat::Fixed(FormatId::Hac),
         ..Default::default()
     };
@@ -290,6 +336,7 @@ fn vgg_model_sham_roundtrip_keeps_hwio_shape() {
     model.save_sham(&path).unwrap();
     let loaded = CompressedModel::load_sham(ModelKind::VggMnist, &path).unwrap();
     assert_eq!(loaded.params["c1a.w"].shape, vec![3, 3, 1, 3]);
+    assert_eq!(loaded.conv[0].spec, ConvSpec::unit(3, 3));
     let images: Vec<f32> = (0..2 * 8 * 8).map(|_| rng.normal() as f32).collect();
     let input = PlanInput::Images { n: 2, h: 8, w: 8, c: 1, data: &images };
     let mut ws1 = Workspace::new();

@@ -80,7 +80,7 @@ fn pure_variant_serves_batches_without_pjrt() {
     let a = synthetic_vgg_archive(&mut rng);
     let ccfg = CompressionCfg {
         conv_quant: Some((Kind::Cws, 8)),
-        conv_format: FcFormat::Fixed(sham::formats::FormatId::Shac),
+        conv_format: sham::nn::ConvFormat::Fixed(sham::formats::FormatId::Shac),
         fc_quant: Some((Kind::Cws, 8)),
         fc_format: FcFormat::Auto,
         ..Default::default()
