@@ -12,7 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use sham::formats::{FormatId, Workspace};
+use sham::formats::{decode_stats, pool, FormatId, Workspace};
 use sham::io::{Archive, Tensor};
 use sham::mat::Mat;
 use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
@@ -133,6 +133,8 @@ struct Row {
     name: String,
     summary: Summary,
     steady_allocs: Option<u64>,
+    /// Counted weight-stream decode passes of one forward (None = n/a).
+    decodes: Option<u64>,
 }
 
 /// Strided SAME / strided VALID single-layer shapes through
@@ -187,6 +189,7 @@ fn bench_strided(rows: &mut Vec<Row>) {
                 name: format!("strided/{label}_{fmt}"),
                 summary: s,
                 steady_allocs: Some(steady),
+                decodes: None,
             });
         }
     }
@@ -214,6 +217,7 @@ fn bench_model(
         name: format!("{label}/dense_loop_reference"),
         summary: s_ref,
         steady_allocs: None,
+        decodes: None,
     });
     for fmt in [FormatId::Dense, FormatId::IndexMap, FormatId::Hac, FormatId::Shac] {
         let cfg = CompressionCfg {
@@ -249,12 +253,80 @@ fn bench_model(
             name: format!("{label}/im2col_{fmt}"),
             summary: s,
             steady_allocs: Some(steady),
+            decodes: None,
         });
     }
 }
 
+/// Decode-count + per-thread-scaling section: for the entropy-coded
+/// conv formats, count (via `formats::decode_stats`, not inferred from
+/// timings) how many weight-stream decode passes one whole conv
+/// forward performs. Acceptance: exactly ONE pass per entropy layer
+/// per invocation at every thread count — the serial path through the
+/// decode-once blocked kernel, the parallel path through the shared
+/// decode reused by all patch-row chunks. Returns false on violation.
+fn bench_decode_scaling(
+    archive: &Archive,
+    input: &PlanInput<'_>,
+    rows: &mut Vec<Row>,
+) -> bool {
+    let mut ok = true;
+    for fmt in [FormatId::Hac, FormatId::Shac] {
+        let cfg = CompressionCfg {
+            conv_format: ConvFormat::Fixed(fmt),
+            fc_format: FcFormat::Fixed(fmt),
+            ..Default::default()
+        };
+        let mut rng = Prng::seeded(11);
+        let model =
+            CompressedModel::build(ModelKind::VggMnist, archive, &cfg, &mut rng)
+                .unwrap();
+        let layers = model.conv.len() as u64;
+        for threads in [1usize, 2, 4] {
+            let mut ws = Workspace::new();
+            for _ in 0..2 {
+                model.conv_features_into(input, threads, &mut ws).unwrap();
+            }
+            let mark = decode_stats::total();
+            model.conv_features_into(input, threads, &mut ws).unwrap();
+            let decodes = decode_stats::since(mark);
+            if decodes != layers {
+                ok = false;
+                eprintln!(
+                    "decode-once VIOLATION: {fmt} t={threads} decoded {decodes}x \
+                     for {layers} conv layers"
+                );
+            }
+            let s = bench(1, bench_iters(), || {
+                black_box(
+                    model.conv_features_into(black_box(input), threads, &mut ws)
+                        .unwrap(),
+                );
+            });
+            println!(
+                "{:<40} {:>12} {:>12} {:>8}",
+                format!("scaling/vgg_{fmt}_t{threads}"),
+                fmt_ns(s.p50),
+                fmt_ns(s.p95),
+                format!("{decodes}dec"),
+            );
+            rows.push(Row {
+                name: format!("scaling/vgg_{fmt}_t{threads}"),
+                summary: s,
+                // the pooled path allocates its scope bookkeeping; the
+                // zero-alloc criterion is asserted on the serial rows
+                steady_allocs: None,
+                decodes: Some(decodes),
+            });
+        }
+    }
+    ok
+}
+
 fn main() {
     let batch = 8usize;
+    // deterministic pool size for the scaling section
+    let _ = pool::configure_threads(4);
     println!("# compressed_conv — im2col-lowered conv vs dense loops, batch={batch}");
     println!(
         "{:<40} {:>12} {:>12} {:>8}",
@@ -279,10 +351,16 @@ fn main() {
 
     bench_strided(&mut rows);
 
+    let decode_once_ok = bench_decode_scaling(&vgg, &vgg_input, &mut rows);
+
     let zero_alloc_ok = rows.iter().all(|r| r.steady_allocs.unwrap_or(0) == 0);
     println!(
         "\nsteady-state conv hot path allocation-free: {}",
         if zero_alloc_ok { "YES" } else { "NO (regression!)" }
+    );
+    println!(
+        "entropy conv layers decode once per invocation (counted): {}",
+        if decode_once_ok { "YES" } else { "NO (regression!)" }
     );
 
     // hand-rolled JSON (no serde in the offline registry)
@@ -290,19 +368,25 @@ fn main() {
     json.push_str("  \"bench\": \"compressed_conv\",\n");
     json.push_str(&format!("  \"batch\": {batch},\n"));
     json.push_str(&format!("  \"steady_state_alloc_free\": {zero_alloc_ok},\n"));
+    json.push_str(&format!("  \"decode_once_per_layer\": {decode_once_ok},\n"));
     json.push_str("  \"results\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let allocs = r
             .steady_allocs
             .map(|n| n.to_string())
             .unwrap_or_else(|| "null".to_string());
+        let decodes = r
+            .decodes
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "null".to_string());
         json.push_str(&format!(
-            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}, \"steady_allocs\": {}}}{}\n",
+            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}, \"steady_allocs\": {}, \"decodes\": {}}}{}\n",
             r.name,
             r.summary.p50,
             r.summary.p95,
             r.summary.mean,
             allocs,
+            decodes,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -312,9 +396,10 @@ fn main() {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
-    // make the zero-alloc acceptance criterion a hard failure so the CI
-    // smoke run catches regressions, not just records them
-    if !zero_alloc_ok {
+    // make the zero-alloc and decode-once acceptance criteria hard
+    // failures so the CI smoke run catches regressions, not just
+    // records them
+    if !zero_alloc_ok || !decode_once_ok {
         std::process::exit(1);
     }
 }

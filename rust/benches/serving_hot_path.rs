@@ -1,11 +1,30 @@
 //! Bench: the steady-state serving hot path — alloc-per-call kernels +
 //! per-call thread spawning (the pre-redesign shape) vs the
-//! allocation-free `vecmat_into`/`matmul_batch_into` kernels + pooled
-//! `par_matmul_into`, on HAC and sHAC at serving-realistic shapes.
-//! Results are printed as a table and written to
-//! `BENCH_serving_hot_path.json` so the win is tracked across PRs.
+//! allocation-free decode-once kernels, on HAC and sHAC at
+//! serving-realistic shapes. Three parallel paths are compared:
+//!
+//! - `par_spawn_per_call` — spawn OS threads per call (pre-PR-1);
+//! - `par_pooled_into`    — pooled Alg. 3, per-row `vecmat_into` inside
+//!   each chunk, i.e. ONE STREAM DECODE PER BATCH ROW (pre-PR-5);
+//! - `par_batch_pooled`   — pooled chunk-parallel `par_matmul_batch_into`
+//!   where each worker runs the register-blocked *batched* kernel on its
+//!   chunk — decode amortized per chunk;
+//! - `dispatch_shared_decode` — the full serving dispatch
+//!   (`batched_product_into`, what `fc_forward_into` and the conv
+//!   pipeline execute): ONE shared stream decode reused by every
+//!   chunk-parallel blocked product.
+//!
+//! Every variant also reports its *counted* weight-stream decode passes
+//! per product (`formats::decode_stats`), so the decode-once claims are
+//! measured, not inferred. A `scaling/` section times the batched
+//! parallel path across thread counts. Results are printed as a table
+//! and written to `BENCH_serving_hot_path.json`; CI diffs that file
+//! against `benches/baselines/` via `scripts/compare_bench.py`.
 
-use sham::formats::{par_matmul_into, CompressedMatrix, Hac, Shac};
+use sham::formats::{
+    batched_product_into, decode_stats, par_matmul_batch_into, par_matmul_into,
+    pool, CompressedMatrix, Hac, Shac,
+};
 use sham::mat::Mat;
 use sham::quant::{self, Kind, Options};
 use sham::util::prng::Prng;
@@ -75,6 +94,8 @@ fn par_matmul_spawning(f: &dyn CompressedMatrix, x: &Mat, threads: usize) -> Mat
 struct Row {
     name: String,
     summary: Summary,
+    /// Counted weight-stream decode passes of one call (None = not measured).
+    decodes: Option<u64>,
 }
 
 /// CI smoke mode: fewer timing iterations. Only `SHAM_BENCH_QUICK=1`
@@ -86,10 +107,19 @@ fn bench_iters() -> usize {
     }
 }
 
+/// Count the decode passes of one invocation of `f`.
+fn count_decodes(mut f: impl FnMut()) -> u64 {
+    let mark = decode_stats::total();
+    f();
+    decode_stats::since(mark)
+}
+
 fn main() {
     let mut rng = Prng::seeded(0x5E41);
-    let threads = 8usize;
+    // the acceptance shape: batch ≥ 32 with 4 pool threads
+    let threads = 4usize;
     let batch = 32usize;
+    let _ = pool::configure_threads(threads);
     println!(
         "# serving_hot_path — 1024×1024, CWS k=32, batch={batch}, threads={threads}"
     );
@@ -100,52 +130,123 @@ fn main() {
         let formats: Vec<Box<dyn CompressedMatrix>> =
             vec![Box::new(Hac::compress(&w)), Box::new(Shac::compress(&w))];
         println!("\n## pruning p={p:.0} (s={:.3})", w.nonzero_ratio());
-        println!("{:<34} {:>12} {:>12}", "variant", "median", "p95");
+        println!(
+            "{:<34} {:>12} {:>12} {:>8}",
+            "variant", "median", "p95", "decodes"
+        );
         for f in &formats {
             let fname = f.name();
             // 1. batched, alloc per call (old default matmul_batch shape)
             let s_alloc = bench(2, bench_iters(), || {
                 black_box(matmul_alloc_per_call(f.as_ref(), black_box(&xb)));
             });
-            // 2. batched, allocation-free into a reused Mat
+            let d_alloc = count_decodes(|| {
+                black_box(matmul_alloc_per_call(f.as_ref(), &xb));
+            });
+            // 2. batched, allocation-free into a reused Mat (decode-once
+            //    register-blocked kernel)
             let mut out = Mat::zeros(0, 0);
             let s_into = bench(2, bench_iters(), || {
                 f.matmul_batch_into(black_box(&xb), &mut out);
                 black_box(&out);
             });
+            let d_into = count_decodes(|| f.matmul_batch_into(&xb, &mut out));
             // 3. Alg. 3, spawning threads per call (old par_matmul)
             let s_spawn = bench(2, bench_iters(), || {
                 black_box(par_matmul_spawning(f.as_ref(), black_box(&xb), threads));
             });
-            // 4. Alg. 3 on the persistent pool, reused output
+            let d_spawn = count_decodes(|| {
+                black_box(par_matmul_spawning(f.as_ref(), &xb, threads));
+            });
+            // 4. Alg. 3 on the persistent pool, per-row kernels inside
+            //    each chunk — the pre-PR-5 parallel serving path
             let mut pout = Mat::zeros(0, 0);
             let s_pool = bench(2, bench_iters(), || {
                 par_matmul_into(f.as_ref(), black_box(&xb), &mut pout, threads);
                 black_box(&pout);
             });
-            for (label, s) in [
-                ("batch_alloc_per_call", &s_alloc),
-                ("batch_into_reused", &s_into),
-                ("par_spawn_per_call", &s_spawn),
-                ("par_pooled_into", &s_pool),
+            let d_pool =
+                count_decodes(|| par_matmul_into(f.as_ref(), &xb, &mut pout, threads));
+            // 5. chunk-parallel batched: each worker runs the blocked
+            //    decode-once kernel on its chunk — the PR-5 serving path
+            let mut bout = Mat::zeros(0, 0);
+            let s_batch = bench(2, bench_iters(), || {
+                par_matmul_batch_into(f.as_ref(), black_box(&xb), &mut bout, threads);
+                black_box(&bout);
+            });
+            let d_batch = count_decodes(|| {
+                par_matmul_batch_into(f.as_ref(), &xb, &mut bout, threads)
+            });
+            // 6. the full serving dispatch (what fc_forward_into and the
+            //    conv pipeline actually execute): ONE shared decode +
+            //    chunk-parallel blocked products on the decoded non-zeros
+            let mut dout = Mat::zeros(0, 0);
+            let s_disp = bench(2, bench_iters(), || {
+                batched_product_into(f.as_ref(), black_box(&xb), &mut dout, threads);
+                black_box(&dout);
+            });
+            let d_disp = count_decodes(|| {
+                batched_product_into(f.as_ref(), &xb, &mut dout, threads)
+            });
+            for (label, s, d) in [
+                ("batch_alloc_per_call", &s_alloc, d_alloc),
+                ("batch_into_reused", &s_into, d_into),
+                ("par_spawn_per_call", &s_spawn, d_spawn),
+                ("par_pooled_into", &s_pool, d_pool),
+                ("par_batch_pooled", &s_batch, d_batch),
+                ("dispatch_shared_decode", &s_disp, d_disp),
             ] {
                 println!(
-                    "{:<34} {:>12} {:>12}",
+                    "{:<34} {:>12} {:>12} {:>8}",
                     format!("{fname}/{label}"),
                     fmt_ns(s.p50),
-                    fmt_ns(s.p95)
+                    fmt_ns(s.p95),
+                    d,
                 );
                 rows.push(Row {
                     name: format!("p{p:.0}/{fname}/{label}"),
                     summary: s.clone(),
+                    decodes: Some(d),
                 });
             }
             println!(
-                "{:<34} into {:.2}x vs alloc, pooled {:.2}x vs spawn",
+                "{:<34} into {:.2}x vs alloc, pooled {:.2}x vs spawn, batch-pooled {:.2}x vs per-row pooled",
                 format!("{fname}/speedup"),
                 s_alloc.p50 / s_into.p50,
                 s_spawn.p50 / s_pool.p50,
+                s_pool.p50 / s_batch.p50,
             );
+        }
+    }
+
+    // per-thread scaling of the chunk-parallel batched path (p=90 shape)
+    println!("\n## thread scaling — par_matmul_batch_into, batch={batch}");
+    println!("{:<34} {:>12} {:>12} {:>8}", "variant", "median", "p95", "decodes");
+    let w = workload(90.0, 32, &mut rng);
+    let xb = Mat::gaussian(batch, 1024, 1.0, &mut rng);
+    let formats: Vec<Box<dyn CompressedMatrix>> =
+        vec![Box::new(Hac::compress(&w)), Box::new(Shac::compress(&w))];
+    for f in &formats {
+        let fname = f.name();
+        for t in [1usize, 2, 4, 8] {
+            let mut out = Mat::zeros(0, 0);
+            let s = bench(2, bench_iters(), || {
+                par_matmul_batch_into(f.as_ref(), black_box(&xb), &mut out, t);
+                black_box(&out);
+            });
+            let d = count_decodes(|| par_matmul_batch_into(f.as_ref(), &xb, &mut out, t));
+            println!(
+                "{:<34} {:>12} {:>12} {:>8}",
+                format!("scaling/{fname}/t{t}"),
+                fmt_ns(s.p50),
+                fmt_ns(s.p95),
+                d,
+            );
+            rows.push(Row {
+                name: format!("scaling/{fname}/t{t}"),
+                summary: s,
+                decodes: Some(d),
+            });
         }
     }
 
@@ -155,12 +256,17 @@ fn main() {
     json.push_str(&format!("  \"threads\": {threads},\n  \"batch\": {batch},\n"));
     json.push_str("  \"results\": {\n");
     for (i, r) in rows.iter().enumerate() {
+        let decodes = r
+            .decodes
+            .map(|d| d.to_string())
+            .unwrap_or_else(|| "null".to_string());
         json.push_str(&format!(
-            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}}}{}\n",
+            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}, \"decodes\": {}}}{}\n",
             r.name,
             r.summary.p50,
             r.summary.p95,
             r.summary.mean,
+            decodes,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -12,7 +12,10 @@
 //! formats and HAC/sHAC in size; competitive dot speed) is preserved.
 //! See DESIGN.md §2 for the substitution note.
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, scatter_col, stage_transposed, with_batch_scratch, BatchScratch,
+    CompressedMatrix, FormatId,
+};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
@@ -88,6 +91,49 @@ impl ColEnc {
             }
             ColEnc::Uc(vals) => {
                 vals.iter().zip(x.iter()).map(|(&v, &xi)| v * xi).sum()
+            }
+        }
+    }
+
+    /// Column dot over all batch lanes: `acc[b] += Σ_i xt[i·batch+b]·col[i]`
+    /// where `xt` is the transposed (`rows × batch`) staged activation —
+    /// the register-blocked companion of [`ColEnc::dot`]; each stored
+    /// value streams against one contiguous lane tile per touched row.
+    fn dot_batch(&self, xt: &[f32], batch: usize, acc: &mut [f32]) {
+        match self {
+            ColEnc::Rle(runs) => {
+                let mut i = 0usize;
+                for &(v, run) in runs {
+                    if v != 0.0 {
+                        for r in i..i + run as usize {
+                            axpy_lanes(acc, &xt[r * batch..(r + 1) * batch], v);
+                        }
+                    }
+                    i += run as usize;
+                }
+            }
+            ColEnc::Ole { values, offsets } => {
+                for (v, offs) in values.iter().zip(offsets.iter()) {
+                    for &o in offs {
+                        let r = o as usize;
+                        axpy_lanes(acc, &xt[r * batch..(r + 1) * batch], *v);
+                    }
+                }
+            }
+            ColEnc::Ddc { dict, idx } => {
+                for (i, &p) in idx.iter().enumerate() {
+                    let v = dict[p as usize];
+                    if v != 0.0 {
+                        axpy_lanes(acc, &xt[i * batch..(i + 1) * batch], v);
+                    }
+                }
+            }
+            ColEnc::Uc(vals) => {
+                for (i, &v) in vals.iter().enumerate() {
+                    if v != 0.0 {
+                        axpy_lanes(acc, &xt[i * batch..(i + 1) * batch], v);
+                    }
+                }
             }
         }
     }
@@ -248,6 +294,32 @@ impl CompressedMatrix for Cla {
         for (o, c) in out.iter_mut().zip(self.columns.iter()) {
             *o = c.dot(x);
         }
+    }
+
+    /// Register-blocked batched product: each column encoding is walked
+    /// ONCE (instead of once per batch row), streaming against the
+    /// staged batch-lane tiles.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            for (j, enc) in self.columns.iter().enumerate() {
+                acc.fill(0.0);
+                enc.dot_batch(xt, batch, acc);
+                scatter_col(acc, out, j, self.cols);
+            }
+        });
     }
 
     fn decompress(&self) -> Mat {

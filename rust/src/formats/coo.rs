@@ -1,7 +1,10 @@
 //! Coordinate-list format (COO): each non-zero stored as a
 //! (row, column, value) triple — the third Scipy baseline of Fig. 1.
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, stage_transposed, unstage_transposed, with_batch_scratch,
+    BatchScratch, CompressedMatrix, FormatId,
+};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -76,6 +79,38 @@ impl CompressedMatrix for Coo {
         for t in 0..self.v.len() {
             out[self.ci[t] as usize] += x[self.ri[t] as usize] * self.v[t];
         }
+    }
+
+    /// Register-blocked batched product: one pass over the triples
+    /// (instead of one per batch row), accumulating into a
+    /// `cols × batch` staged output transposed back at the end — the
+    /// triples can arrive in any order, so the full staged output is
+    /// the only layout that keeps every update a contiguous lane tile.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut ot, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            ot.clear();
+            ot.resize(self.cols * batch, 0.0);
+            for t in 0..self.v.len() {
+                let (i, j) = (self.ri[t] as usize, self.ci[t] as usize);
+                axpy_lanes(
+                    &mut ot[j * batch..(j + 1) * batch],
+                    &xt[i * batch..(i + 1) * batch],
+                    self.v[t],
+                );
+            }
+            unstage_transposed(ot, batch, self.cols, out);
+        });
     }
 
     fn decompress(&self) -> Mat {

@@ -3,7 +3,7 @@
 //! Occupancy ψ_CSC = (2q + m + 1)/(nm) under b-bit-per-element accounting
 //! (the paper's footnote 1 charges `ri` at b bits as well).
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{csc_batch_blocked, with_batch_scratch, BatchScratch, CompressedMatrix, FormatId};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -87,6 +87,28 @@ impl CompressedMatrix for Csc {
             }
             *oj = sum;
         }
+    }
+
+    /// Register-blocked batched product: one pass over the non-zeros
+    /// (instead of one per batch row), each streamed against a
+    /// contiguous batch-lane tile of the staged activation.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            csc_batch_blocked(
+                self.rows, self.cols, &self.nz, &self.ri, &self.cb, x, batch, out,
+                xt, acc,
+            );
+        });
     }
 
     fn decompress(&self) -> Mat {

@@ -1,7 +1,10 @@
 //! Compressed Sparse Row — the CSC dual used as a Fig. 1 baseline
 //! (stores column indices of non-zeros, rows delimited by `rb`).
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, stage_transposed, unstage_transposed, with_batch_scratch,
+    BatchScratch, CompressedMatrix, FormatId,
+};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 
@@ -87,6 +90,39 @@ impl CompressedMatrix for Csr {
                 out[self.ci[t] as usize] += xi * self.nz[t];
             }
         }
+    }
+
+    /// Register-blocked batched product: one pass over the row-major
+    /// non-zeros accumulating into a `cols × batch` staged output
+    /// (contiguous batch-lane tiles), transposed back once at the end.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut ot, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            ot.clear();
+            ot.resize(self.cols * batch, 0.0);
+            for i in 0..self.rows {
+                let (lo, hi) = (self.rb[i] as usize, self.rb[i + 1] as usize);
+                if lo == hi {
+                    continue;
+                }
+                let src = &xt[i * batch..(i + 1) * batch];
+                for t in lo..hi {
+                    let j = self.ci[t] as usize;
+                    axpy_lanes(&mut ot[j * batch..(j + 1) * batch], src, self.nz[t]);
+                }
+            }
+            unstage_transposed(ot, batch, self.cols, out);
+        });
     }
 
     fn decompress(&self) -> Mat {

@@ -13,7 +13,10 @@
 //! column-parallel dot [`Hac::vecmat_par_cols`]; the extra m words are
 //! charged in `size_bits` when the index is built.
 
-use crate::formats::{pool, CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, decode_stats, pool, scatter_col, stage_transposed,
+    with_batch_scratch, BatchScratch, CompressedMatrix, DecodedWeights, FormatId,
+};
 use crate::huffman::bounds::{dict_bits, WORD_BITS};
 use crate::huffman::Code;
 use crate::mat::Mat;
@@ -252,6 +255,7 @@ impl CompressedMatrix for Hac {
         if self.rows == 0 || self.cols == 0 {
             return;
         }
+        decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let total = self.rows * self.cols;
         let mut run = [0u32; 8];
@@ -298,23 +302,86 @@ impl CompressedMatrix for Hac {
         m
     }
 
-    /// Decode-once batched product: the stream is scanned a single time
-    /// and each decoded weight is applied to every batch row (an AXPY
-    /// over the batch), amortizing the Huffman decode B× (§Perf).
-    fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
-        assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
-        let batch = x.rows;
-        out.resize(batch, self.cols);
-        out.data.fill(0.0);
-        if self.rows == 0 || self.cols == 0 || batch == 0 {
+    /// Decode-once register-blocked batched product: the stream is
+    /// scanned a single time; each decoded weight streams against a
+    /// contiguous batch-lane tile of the transposed activation staged
+    /// in this thread's [`BatchScratch`], and each finished column
+    /// accumulator scatters back to the batch-major output — amortizing
+    /// the Huffman decode B× with unit-stride inner loops (§Perf).
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
             return;
         }
+        if self.rows == 0 {
+            out.fill(0.0);
+            return;
+        }
+        if batch == 1 {
+            // one lane: the vecmat kernel is the same scan without staging
+            self.vecmat_into(x, out);
+            return;
+        }
+        decode_stats::record();
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            let mut r = BitReader::new(&self.stream);
+            let total = self.rows * self.cols;
+            let mut run = [0u32; 8];
+            let mut t = 0usize;
+            let mut row = 0usize;
+            let mut col = 0usize;
+            while t < total {
+                let n = if t + 8 <= total {
+                    self.code.decode_run(&mut r, &mut run)
+                } else {
+                    0
+                };
+                let n = if n == 0 {
+                    run[0] = self.code.decode_next(&mut r).expect("truncated");
+                    1
+                } else {
+                    n
+                };
+                for &s in &run[..n] {
+                    let v = self.alphabet[s as usize];
+                    if v != 0.0 {
+                        axpy_lanes(acc, &xt[row * batch..(row + 1) * batch], v);
+                    }
+                    row += 1;
+                    if row == self.rows {
+                        scatter_col(acc, out, col, self.cols);
+                        acc.fill(0.0);
+                        row = 0;
+                        col += 1;
+                    }
+                }
+                t += n;
+            }
+        });
+    }
+
+    /// Shared-decode support: one pass over the Huffman stream fills
+    /// the CSC-shaped scratch every patch-row chunk then reuses — the
+    /// whole layer invocation costs exactly one decode.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        dec.reset(self.rows, self.cols);
+        if self.rows == 0 || self.cols == 0 {
+            for _ in 0..self.cols {
+                dec.close_col();
+            }
+            return true;
+        }
+        decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let total = self.rows * self.cols;
         let mut run = [0u32; 8];
         let mut t = 0usize;
         let mut row = 0usize;
-        let mut col = 0usize;
         while t < total {
             let n = if t + 8 <= total {
                 self.code.decode_run(&mut r, &mut run)
@@ -330,19 +397,17 @@ impl CompressedMatrix for Hac {
             for &s in &run[..n] {
                 let v = self.alphabet[s as usize];
                 if v != 0.0 {
-                    for b in 0..batch {
-                        out.data[b * self.cols + col] +=
-                            v * x.data[b * self.rows + row];
-                    }
+                    dec.push(row as u32, v);
                 }
                 row += 1;
                 if row == self.rows {
+                    dec.close_col();
                     row = 0;
-                    col += 1;
                 }
             }
             t += n;
         }
+        true
     }
 }
 

@@ -5,7 +5,10 @@
 //! just another codebook value — IM does not exploit sparsity, which is
 //! exactly why it loses to sHAC at high pruning in Fig. 1.
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, stage_transposed, unstage_transposed, with_batch_scratch,
+    BatchScratch, CompressedMatrix, FormatId,
+};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
@@ -140,6 +143,55 @@ impl CompressedMatrix for IndexMap {
                 }
             }
         }
+    }
+
+    /// Register-blocked batched product: ONE pass over the pointer
+    /// matrix Π (the default per-row path re-reads all n·m pointers once
+    /// per batch row), each dereferenced weight streamed against a
+    /// contiguous batch-lane tile into the `cols × batch` staged output.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut ot, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            ot.clear();
+            ot.resize(self.cols * batch, 0.0);
+            match &self.idx {
+                Pointers::U8(idx) => {
+                    for i in 0..self.rows {
+                        let src = &xt[i * batch..(i + 1) * batch];
+                        let prow = &idx[i * self.cols..(i + 1) * self.cols];
+                        for (j, &p) in prow.iter().enumerate() {
+                            let v = self.codebook[p as usize];
+                            if v != 0.0 {
+                                axpy_lanes(&mut ot[j * batch..(j + 1) * batch], src, v);
+                            }
+                        }
+                    }
+                }
+                Pointers::U16(idx) => {
+                    for i in 0..self.rows {
+                        let src = &xt[i * batch..(i + 1) * batch];
+                        let prow = &idx[i * self.cols..(i + 1) * self.cols];
+                        for (j, &p) in prow.iter().enumerate() {
+                            let v = self.codebook[p as usize];
+                            if v != 0.0 {
+                                axpy_lanes(&mut ot[j * batch..(j + 1) * batch], src, v);
+                            }
+                        }
+                    }
+                }
+            }
+            unstage_transposed(ot, batch, self.cols, out);
+        });
     }
 
     fn decompress(&self) -> Mat {

@@ -15,7 +15,10 @@
 //! as the dictionary fills (up to [`MAX_DICT_BITS`], then the dictionary
 //! freezes — the classic GIF-style variant without CLEAR codes).
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, decode_stats, scatter_col, stage_transposed, with_batch_scratch,
+    BatchScratch, CompressedMatrix, DecodedWeights, FormatId,
+};
 use crate::huffman::bounds::WORD_BITS;
 use crate::mat::Mat;
 use crate::util::bits::{BitBuf, BitReader, BitWriter};
@@ -65,29 +68,58 @@ fn lzw_encode(symbols: &[u32], k: usize) -> BitBuf {
     w.finish()
 }
 
-/// Streaming LZW decoder yielding one symbol at a time.
-struct LzwDecoder<'a> {
-    reader: BitReader<'a>,
-    k: usize,
-    /// phrase table: (prefix code, first missing symbol resolved later)
-    parents: Vec<(u32, u32)>, // (prefix code, appended symbol)
-    next_code: u32,
-    prev: Option<u32>,
+/// Reusable dictionary scratch of the streaming LZW decoder. A fresh
+/// decoder used to allocate these tables on every `vecmat_into` call —
+/// hoisted into a per-thread grow-only buffer so the
+/// zero-steady-state-allocation guarantee actually holds for LZ-AC (the
+/// counting-allocator sections of `benches/compressed_conv.rs`).
+#[derive(Debug, Default)]
+struct LzwScratch {
+    /// phrase table: (prefix code, appended symbol)
+    parents: Vec<(u32, u32)>,
     /// pending symbols of the current phrase (reversed for pop order)
     pending: Vec<u32>,
+}
+
+thread_local! {
+    static LZW_SCRATCH: std::cell::RefCell<LzwScratch> =
+        std::cell::RefCell::new(LzwScratch::default());
+}
+
+/// Run `f` with this thread's LZW dictionary scratch (take/put-back, so
+/// the capacity survives across calls and re-entry degrades to a fresh
+/// scratch instead of panicking).
+fn with_lzw_scratch<R>(f: impl FnOnce(&mut LzwScratch) -> R) -> R {
+    LZW_SCRATCH.with(|cell| {
+        let mut scratch = cell.take();
+        let r = f(&mut scratch);
+        cell.replace(scratch);
+        r
+    })
+}
+
+/// Streaming LZW decoder yielding one symbol at a time; dictionary
+/// state lives in a borrowed [`LzwScratch`] (cleared on construction).
+struct LzwDecoder<'a, 's> {
+    reader: BitReader<'a>,
+    k: usize,
+    scratch: &'s mut LzwScratch,
+    next_code: u32,
+    prev: Option<u32>,
     total: usize,
     emitted: usize,
 }
 
-impl<'a> LzwDecoder<'a> {
-    fn new(buf: &'a BitBuf, k: usize, total: usize) -> Self {
+impl<'a, 's> LzwDecoder<'a, 's> {
+    fn new(buf: &'a BitBuf, k: usize, total: usize, scratch: &'s mut LzwScratch) -> Self {
+        scratch.parents.clear();
+        scratch.pending.clear();
         LzwDecoder {
             reader: BitReader::new(buf),
             k,
-            parents: Vec::new(),
+            scratch,
             next_code: k as u32,
             prev: None,
-            pending: Vec::new(),
             total,
             emitted: 0,
         }
@@ -96,27 +128,27 @@ impl<'a> LzwDecoder<'a> {
     /// First symbol of phrase `code`.
     fn phrase_head(&self, mut code: u32) -> u32 {
         while code >= self.k as u32 {
-            code = self.parents[(code - self.k as u32) as usize].0;
+            code = self.scratch.parents[(code - self.k as u32) as usize].0;
         }
         code
     }
 
-    /// Expand phrase `code` into `self.pending` (reversed).
+    /// Expand phrase `code` into the pending buffer (reversed).
     fn expand(&mut self, mut code: u32) {
-        debug_assert!(self.pending.is_empty());
+        debug_assert!(self.scratch.pending.is_empty());
         while code >= self.k as u32 {
-            let (prefix, sym) = self.parents[(code - self.k as u32) as usize];
-            self.pending.push(sym);
+            let (prefix, sym) = self.scratch.parents[(code - self.k as u32) as usize];
+            self.scratch.pending.push(sym);
             code = prefix;
         }
-        self.pending.push(code);
+        self.scratch.pending.push(code);
     }
 
     fn next_symbol(&mut self) -> Option<u32> {
         if self.emitted >= self.total {
             return None;
         }
-        if self.pending.is_empty() {
+        if self.scratch.pending.is_empty() {
             let max_codes = 1u32 << MAX_DICT_BITS;
             // The decoder's dictionary lags the encoder's by exactly one
             // entry at read time (the pending entry is completed only
@@ -143,14 +175,14 @@ impl<'a> LzwDecoder<'a> {
                         // known phrase
                         let head = self.phrase_head(code);
                         if self.next_code < max_codes {
-                            self.parents.push((prev, head));
+                            self.scratch.parents.push((prev, head));
                             self.next_code += 1;
                         }
                         self.expand(code);
                     } else if code == self.next_code && self.next_code < max_codes {
                         // the KwKwK special case: phrase = prev + head(prev)
                         let head = self.phrase_head(prev);
-                        self.parents.push((prev, head));
+                        self.scratch.parents.push((prev, head));
                         self.next_code += 1;
                         self.expand(code);
                     } else {
@@ -163,7 +195,7 @@ impl<'a> LzwDecoder<'a> {
             self.prev = Some(code);
         }
         self.emitted += 1;
-        self.pending.pop()
+        self.scratch.pending.pop()
     }
 }
 
@@ -239,18 +271,20 @@ impl LzAc {
     /// container with an error instead of panicking on first use.
     pub fn validate_stream(&self) -> bool {
         let k = self.alphabet.len().max(1);
-        let mut dec = LzwDecoder::new(&self.stream, k, self.nnz);
-        for _ in 0..self.nnz {
-            match dec.next_symbol() {
-                Some(s) => {
-                    if s as usize >= self.alphabet.len() {
-                        return false;
+        with_lzw_scratch(|scratch| {
+            let mut dec = LzwDecoder::new(&self.stream, k, self.nnz, scratch);
+            for _ in 0..self.nnz {
+                match dec.next_symbol() {
+                    Some(s) => {
+                        if s as usize >= self.alphabet.len() {
+                            return false;
+                        }
                     }
+                    None => return false,
                 }
-                None => return false,
             }
-        }
-        true
+            true
+        })
     }
 }
 
@@ -278,34 +312,118 @@ impl CompressedMatrix for LzAc {
     fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        let k = self.alphabet.len().max(1);
-        let mut dec = LzwDecoder::new(&self.stream, k, self.nnz);
-        let mut pos = 0usize;
-        for (j, oj) in out.iter_mut().enumerate() {
-            let end = self.cb[j + 1] as usize;
-            let mut sum = 0.0f32;
-            while pos < end {
-                let s = dec.next_symbol().expect("truncated lzw stream");
-                sum += x[self.ri[pos] as usize] * self.alphabet[s as usize];
-                pos += 1;
-            }
-            *oj = sum;
+        if self.nnz > 0 {
+            decode_stats::record();
         }
+        let k = self.alphabet.len().max(1);
+        with_lzw_scratch(|scratch| {
+            let mut dec = LzwDecoder::new(&self.stream, k, self.nnz, scratch);
+            let mut pos = 0usize;
+            for (j, oj) in out.iter_mut().enumerate() {
+                let end = self.cb[j + 1] as usize;
+                let mut sum = 0.0f32;
+                while pos < end {
+                    let s = dec.next_symbol().expect("truncated lzw stream");
+                    sum += x[self.ri[pos] as usize] * self.alphabet[s as usize];
+                    pos += 1;
+                }
+                *oj = sum;
+            }
+        });
+    }
+
+    /// Decode-once register-blocked batched product: the LZW stream is
+    /// decoded a single time (amortized B×), each non-zero streamed
+    /// against a contiguous batch-lane tile of the staged activation.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        out.fill(0.0);
+        if self.nnz == 0 {
+            return;
+        }
+        decode_stats::record();
+        let k = self.alphabet.len().max(1);
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            with_lzw_scratch(|lz| {
+                let mut dec = LzwDecoder::new(&self.stream, k, self.nnz, lz);
+                let mut pos = 0usize;
+                for j in 0..self.cols {
+                    let end = self.cb[j + 1] as usize;
+                    if pos == end {
+                        continue; // empty column stays zero
+                    }
+                    while pos < end {
+                        let s = dec.next_symbol().expect("truncated lzw stream");
+                        let row = self.ri[pos] as usize;
+                        axpy_lanes(
+                            acc,
+                            &xt[row * batch..(row + 1) * batch],
+                            self.alphabet[s as usize],
+                        );
+                        pos += 1;
+                    }
+                    scatter_col(acc, out, j, self.cols);
+                    acc.fill(0.0);
+                }
+            });
+        });
+    }
+
+    /// Shared-decode support: one pass over the LZW stream fills the
+    /// CSC-shaped scratch every patch-row chunk then reuses.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        dec.reset(self.rows, self.cols);
+        if self.nnz == 0 || self.cols == 0 {
+            for _ in 0..self.cols {
+                dec.close_col();
+            }
+            return true;
+        }
+        decode_stats::record();
+        let k = self.alphabet.len().max(1);
+        with_lzw_scratch(|lz| {
+            let mut d = LzwDecoder::new(&self.stream, k, self.nnz, lz);
+            let mut pos = 0usize;
+            for j in 0..self.cols {
+                let end = self.cb[j + 1] as usize;
+                while pos < end {
+                    let s = d.next_symbol().expect("truncated lzw stream");
+                    dec.push(self.ri[pos], self.alphabet[s as usize]);
+                    pos += 1;
+                }
+                dec.close_col();
+            }
+        });
+        true
     }
 
     fn decompress(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
         let k = self.alphabet.len().max(1);
-        let mut dec = LzwDecoder::new(&self.stream, k, self.nnz);
-        let mut pos = 0usize;
-        for j in 0..self.cols {
-            let end = self.cb[j + 1] as usize;
-            while pos < end {
-                let s = dec.next_symbol().expect("truncated lzw stream");
-                m.set(self.ri[pos] as usize, j, self.alphabet[s as usize]);
-                pos += 1;
+        with_lzw_scratch(|scratch| {
+            let mut dec = LzwDecoder::new(&self.stream, k, self.nnz, scratch);
+            let mut pos = 0usize;
+            for j in 0..self.cols {
+                let end = self.cb[j + 1] as usize;
+                while pos < end {
+                    let s = dec.next_symbol().expect("truncated lzw stream");
+                    m.set(self.ri[pos] as usize, j, self.alphabet[s as usize]);
+                    pos += 1;
+                }
             }
-        }
+        });
         m
     }
 }
@@ -329,11 +447,33 @@ mod tests {
         // classic LZW check incl. the KwKwK case: "ababababa" over {a,b}
         let symbols = [0u32, 1, 0, 1, 0, 1, 0, 1, 0];
         let buf = lzw_encode(&symbols, 2);
-        let mut dec = LzwDecoder::new(&buf, 2, symbols.len());
+        let mut scratch = LzwScratch::default();
+        let mut dec = LzwDecoder::new(&buf, 2, symbols.len(), &mut scratch);
         let got: Vec<u32> =
             (0..symbols.len()).map(|_| dec.next_symbol().unwrap()).collect();
         assert_eq!(got, symbols);
         assert!(dec.next_symbol().is_none());
+    }
+
+    #[test]
+    fn decoder_scratch_is_reusable_across_streams() {
+        // the hoisted dictionary scratch must reset cleanly between
+        // decodes of different streams (and different alphabets)
+        let mut scratch = LzwScratch::default();
+        let a = [0u32, 1, 0, 1, 0];
+        let buf_a = lzw_encode(&a, 2);
+        {
+            let mut dec = LzwDecoder::new(&buf_a, 2, a.len(), &mut scratch);
+            let got: Vec<u32> = (0..a.len()).map(|_| dec.next_symbol().unwrap()).collect();
+            assert_eq!(got, a);
+        }
+        let b = [3u32, 3, 3, 2, 1, 0, 3, 3, 3];
+        let buf_b = lzw_encode(&b, 4);
+        {
+            let mut dec = LzwDecoder::new(&buf_b, 4, b.len(), &mut scratch);
+            let got: Vec<u32> = (0..b.len()).map(|_| dec.next_symbol().unwrap()).collect();
+            assert_eq!(got, b);
+        }
     }
 
     #[test]
@@ -352,7 +492,8 @@ mod tests {
                 })
                 .collect();
             let buf = lzw_encode(&symbols, k);
-            let mut dec = LzwDecoder::new(&buf, k, n);
+            let mut scratch = LzwScratch::default();
+            let mut dec = LzwDecoder::new(&buf, k, n, &mut scratch);
             for (i, &want) in symbols.iter().enumerate() {
                 match dec.next_symbol() {
                     Some(s) => crate::prop_assert!(s == want, "mismatch at {i}"),

@@ -14,9 +14,17 @@
 //! accounting (`size_bits`, with `b = 32`-bit memory words), the
 //! sequential dot `x^T W` computed *directly on the compressed data*
 //! through the allocation-free kernel [`CompressedMatrix::vecmat_into`],
-//! and `decompress` for lossless round-trip checks. [`par_matmul_into`]
-//! is the paper's Alg. 3 (row-chunk parallel `X W`) running on the
-//! persistent worker [`pool`] instead of spawning threads per call.
+//! the decode-once register-blocked batched kernel
+//! [`CompressedMatrix::matmul_batch_slice`], and `decompress` for
+//! lossless round-trip checks. [`par_matmul_into`] is the paper's
+//! Alg. 3 (row-chunk parallel `X W`) running on the persistent worker
+//! [`pool`] instead of spawning threads per call;
+//! [`par_matmul_batch_into`] is the serving variant where each worker
+//! chunk runs the *batched* kernel, so the entropy formats decode their
+//! stream once per chunk instead of once per batch row; and
+//! [`batched_product_into`] is the full serving dispatch, which for
+//! stream-decoded formats decodes ONCE per product into a shared
+//! [`DecodedWeights`] scratch reused by every chunk. See DESIGN.md §7.
 //!
 //! [`FormatId`] is the single registry every surface derives from:
 //! parse-by-name (CLI / [`crate::nn::compressed::FcFormat`]), the Fig. 1
@@ -175,6 +183,287 @@ impl std::fmt::Display for FormatId {
     }
 }
 
+/// Width of the register lane tiles the blocked batched kernels stream
+/// against (8 f32 lanes — one AVX2 vector, two NEON vectors), with a
+/// scalar tail for batch remainders.
+pub const BATCH_TILE: usize = 8;
+
+/// Counters for weight-stream decode passes — the "counted, not
+/// inferred" evidence behind the decode-once guarantees. Every
+/// entropy-coded kernel (HAC / sHAC / LZ-AC `vecmat_into`,
+/// `matmul_batch_slice`, and `decode_once_into`) records exactly one
+/// pass per full scan of its compressed stream, so benches and the CLI
+/// can assert *how many times* a product decoded instead of guessing
+/// from timings. The counter is process-global and monotonic; callers
+/// measure deltas around the region of interest.
+pub mod decode_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PASSES: AtomicU64 = AtomicU64::new(0);
+
+    /// Record one full weight-stream decode pass.
+    #[inline]
+    pub fn record() {
+        PASSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total decode passes since process start (monotonic).
+    #[inline]
+    pub fn total() -> u64 {
+        PASSES.load(Ordering::Relaxed)
+    }
+
+    /// Decode passes since a mark taken with [`total`].
+    #[inline]
+    pub fn since(mark: u64) -> u64 {
+        total() - mark
+    }
+}
+
+/// Per-thread staging buffers for the register-blocked batched kernels,
+/// all grow-only:
+///
+/// - `xt` — the activation chunk staged *tile-contiguous* (transposed to
+///   `rows × batch`), so each decoded `(row, col, weight)` streams one
+///   contiguous batch-lane tile instead of a strided whole-batch sweep;
+/// - `acc` — the per-column accumulator (`batch` lanes) used by the
+///   column-major streams (HAC, sHAC, CSC, LZ-AC, CLA, DC-RI);
+/// - `ot` — the output staged `cols × batch` for the row-major /
+///   unordered streams (CSR, COO, IM), transposed back once at the end.
+///
+/// Thread-local rather than part of the caller's `Workspace` because
+/// the chunk-parallel drivers run one kernel per pool worker — each
+/// worker needs its own staging, which a single shared workspace cannot
+/// provide without aliasing. Access goes through take/put-back (never a
+/// held borrow), so a re-entrant kernel degrades to a fresh scratch
+/// instead of panicking.
+#[derive(Debug, Default)]
+pub(crate) struct BatchScratch {
+    pub(crate) xt: Vec<f32>,
+    pub(crate) acc: Vec<f32>,
+    pub(crate) ot: Vec<f32>,
+}
+
+thread_local! {
+    static BATCH_SCRATCH: std::cell::RefCell<BatchScratch> =
+        std::cell::RefCell::new(BatchScratch::default());
+}
+
+/// Run `f` with this thread's batch-kernel staging buffers (grow-only —
+/// steady state allocates nothing once warmed up).
+pub(crate) fn with_batch_scratch<R>(f: impl FnOnce(&mut BatchScratch) -> R) -> R {
+    BATCH_SCRATCH.with(|cell| {
+        let mut scratch = cell.take();
+        let r = f(&mut scratch);
+        cell.replace(scratch);
+        r
+    })
+}
+
+/// Stage a `batch × rows` row-major activation chunk transposed into
+/// `xt` (`rows × batch`, grow-only), making each matrix row's batch
+/// lanes contiguous — the layout the blocked kernels stream against.
+pub(crate) fn stage_transposed(x: &[f32], batch: usize, rows: usize, xt: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), batch * rows);
+    // no zero fill: the transpose loop assigns every element, so stale
+    // contents from a previous (differently shaped) product are fine
+    if xt.len() != rows * batch {
+        xt.resize(rows * batch, 0.0);
+    }
+    for b in 0..batch {
+        let row = &x[b * rows..(b + 1) * rows];
+        for (i, &v) in row.iter().enumerate() {
+            xt[i * batch + b] = v;
+        }
+    }
+}
+
+/// Lane-tiled AXPY `acc += v · src` over the batch lanes: fixed
+/// [`BATCH_TILE`]-wide register tiles with a scalar tail, so the
+/// compiler keeps one vector tile live per iteration.
+#[inline]
+pub(crate) fn axpy_lanes(acc: &mut [f32], src: &[f32], v: f32) {
+    debug_assert_eq!(acc.len(), src.len());
+    let tiles = acc.len() / BATCH_TILE * BATCH_TILE;
+    let (ah, at) = acc.split_at_mut(tiles);
+    let (sh, st) = src.split_at(tiles);
+    for (a8, s8) in ah.chunks_exact_mut(BATCH_TILE).zip(sh.chunks_exact(BATCH_TILE)) {
+        for l in 0..BATCH_TILE {
+            a8[l] += v * s8[l];
+        }
+    }
+    for (a, s) in at.iter_mut().zip(st.iter()) {
+        *a += v * *s;
+    }
+}
+
+/// Write a finished `batch`-lane column accumulator back into the
+/// batch-major output at column `col`.
+#[inline]
+pub(crate) fn scatter_col(acc: &[f32], out: &mut [f32], col: usize, cols: usize) {
+    for (b, &v) in acc.iter().enumerate() {
+        out[b * cols + col] = v;
+    }
+}
+
+/// Inverse of [`stage_transposed`] for the `cols × batch` staged output
+/// of the row-major/unordered kernels (CSR, COO, IM): write every lane
+/// of `ot` back into the batch-major `out`, fully overwriting it. Kept
+/// next to its twin so a staging-layout change touches exactly one
+/// module.
+#[inline]
+pub(crate) fn unstage_transposed(ot: &[f32], batch: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(ot.len(), cols * batch);
+    debug_assert_eq!(out.len(), batch * cols);
+    for b in 0..batch {
+        let orow = &mut out[b * cols..(b + 1) * cols];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = ot[j * batch + b];
+        }
+    }
+}
+
+/// The shared register-blocked batched product over a CSC skeleton
+/// (`nz`/`ri` column-major, `cb` column boundaries): one pass over the
+/// non-zeros, each streamed against a contiguous batch-lane tile of the
+/// staged activation. Used by [`Csc`] and by [`DecodedWeights`] (the
+/// shared-decode path of the entropy formats). `out` is fully
+/// overwritten.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn csc_batch_blocked(
+    rows: usize,
+    cols: usize,
+    nz: &[f32],
+    ri: &[u32],
+    cb: &[u32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    xt: &mut Vec<f32>,
+    acc: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), batch * rows);
+    debug_assert_eq!(out.len(), batch * cols);
+    if batch == 0 || cols == 0 {
+        return;
+    }
+    stage_transposed(x, batch, rows, xt);
+    acc.clear();
+    acc.resize(batch, 0.0);
+    for j in 0..cols {
+        let (lo, hi) = (cb[j] as usize, cb[j + 1] as usize);
+        if lo == hi {
+            for b in 0..batch {
+                out[b * cols + j] = 0.0;
+            }
+            continue;
+        }
+        acc.fill(0.0);
+        for t in lo..hi {
+            let row = ri[t] as usize;
+            axpy_lanes(acc, &xt[row * batch..(row + 1) * batch], nz[t]);
+        }
+        scatter_col(acc, out, j, cols);
+    }
+}
+
+/// A weight stream decoded ONCE into CSC-shaped scratch arrays
+/// (column-major non-zeros, grow-only), shared read-only by every
+/// patch-row chunk of one layer invocation — the ROADMAP's
+/// "shared-decode im2col". Obtained from
+/// [`CompressedMatrix::decode_once_into`]; products run through the
+/// same register-blocked kernel as [`Csc`].
+#[derive(Debug, Default)]
+pub struct DecodedWeights {
+    rows: usize,
+    cols: usize,
+    nz: Vec<f32>,
+    ri: Vec<u32>,
+    cb: Vec<u32>,
+}
+
+impl DecodedWeights {
+    pub fn new() -> DecodedWeights {
+        DecodedWeights::default()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Decoded non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nz.len()
+    }
+
+    /// Begin a fresh decode for a `rows × cols` matrix (capacity kept).
+    pub(crate) fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.nz.clear();
+        self.ri.clear();
+        self.cb.clear();
+        self.cb.push(0);
+    }
+
+    /// Append one decoded non-zero of the current column.
+    #[inline]
+    pub(crate) fn push(&mut self, row: u32, v: f32) {
+        self.nz.push(v);
+        self.ri.push(row);
+    }
+
+    /// Close the current column (must be called exactly `cols` times).
+    #[inline]
+    pub(crate) fn close_col(&mut self) {
+        self.cb.push(self.nz.len() as u32);
+    }
+
+    /// Register-blocked batched product on the decoded non-zeros
+    /// (`x` is `batch × rows` row-major; `out` fully overwritten).
+    pub fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "decoded matmul input shape");
+        assert_eq!(out.len(), batch * self.cols, "decoded matmul output shape");
+        debug_assert_eq!(self.cb.len(), self.cols + 1, "unfinished decode");
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            csc_batch_blocked(
+                self.rows, self.cols, &self.nz, &self.ri, &self.cb, x, batch, out,
+                xt, acc,
+            );
+        });
+    }
+
+    /// Convenience wrapper resizing `out` (grow-only) to `batch × cols`.
+    pub fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.rows, "decoded matmul dimension mismatch");
+        out.resize(x.rows, self.cols);
+        self.matmul_batch_slice(&x.data, x.rows, &mut out.data);
+    }
+}
+
+thread_local! {
+    static DECODE_SCRATCH: std::cell::RefCell<DecodedWeights> =
+        std::cell::RefCell::new(DecodedWeights::new());
+}
+
+/// Run `f` with this thread's shared-decode scratch (grow-only). The
+/// scratch is taken out of thread-local storage for the duration of
+/// `f`, so pool workers reading `&DecodedWeights` during a chunked
+/// product never contend with it.
+pub(crate) fn with_decode_scratch<R>(f: impl FnOnce(&mut DecodedWeights) -> R) -> R {
+    DECODE_SCRATCH.with(|cell| {
+        let mut dec = cell.take();
+        let r = f(&mut dec);
+        cell.replace(dec);
+        r
+    })
+}
+
 /// A weight matrix stored in a compressed representation that supports
 /// linear algebra directly on the compressed data.
 ///
@@ -215,20 +504,49 @@ pub trait CompressedMatrix: Send + Sync {
     /// Lossless reconstruction of the stored matrix.
     fn decompress(&self) -> Mat;
 
+    /// Batched product `X W` on raw row-major slices: `x` is
+    /// `batch × rows()`, `out` is `batch × cols()`, fully overwritten
+    /// (dirty buffers are fine). This is THE batched kernel: the serial
+    /// [`Self::matmul_batch_into`] and the chunk-parallel
+    /// [`par_matmul_batch_into`] both route every batch (or batch
+    /// chunk) through it, so decode-once is an invariant of every
+    /// batched product rather than a property of one call path.
+    ///
+    /// Default: one `vecmat_into` per batch row. Every compact format
+    /// overrides it with a register-blocked kernel that scans the
+    /// compressed data ONCE and streams each `(row, col, weight)`
+    /// against a contiguous [`BATCH_TILE`]-lane tile of the staged
+    /// activation ([`BatchScratch`]) — decode cost amortized B×,
+    /// memory traffic unit-stride (EXPERIMENTS.md §Perf, DESIGN.md §7).
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(x.len(), batch * rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * cols, "matmul_batch output shape");
+        for b in 0..batch {
+            self.vecmat_into(&x[b * rows..(b + 1) * rows], &mut out[b * cols..(b + 1) * cols]);
+        }
+    }
+
     /// Batched product `X W` (X is `batch × rows`) into `out`, which is
     /// resized to `batch × cols` in place (grow-only capacity — pass the
     /// same `Mat` every call and steady state allocates nothing).
-    /// Default: one `vecmat_into` per batch row, written directly into
-    /// the output row. Entropy-coded formats override this to decode the
-    /// bitstream ONCE for the whole batch (decode cost amortized B×) —
-    /// the coordinator's FC hot path (EXPERIMENTS.md §Perf).
+    /// Provided wrapper over [`Self::matmul_batch_slice`] — the
+    /// coordinator's FC hot path (EXPERIMENTS.md §Perf).
     fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.rows(), "matmul_batch dimension mismatch");
-        let cols = self.cols();
-        out.resize(x.rows, cols);
-        for b in 0..x.rows {
-            self.vecmat_into(x.row(b), &mut out.data[b * cols..(b + 1) * cols]);
-        }
+        out.resize(x.rows, self.cols());
+        self.matmul_batch_slice(&x.data, x.rows, &mut out.data);
+    }
+
+    /// Decode the weight stream ONCE into CSC-shaped scratch (grow-only)
+    /// so one decode pass can service every chunk of a chunk-parallel
+    /// product — the shared-decode path of [`batched_product_into`].
+    /// Returns `false` (the default) for formats with no per-product
+    /// stream decode worth amortizing; callers then use the regular
+    /// kernels, which already scan the stored arrays in place.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        let _ = dec;
+        false
     }
 
     /// Allocating convenience wrapper over [`Self::matmul_batch_into`].
@@ -326,36 +644,15 @@ pub fn par_matmul_into_on<F: CompressedMatrix + ?Sized>(
     }
     let t = threads.max(1).min(x.rows);
     if t == 1 {
-        for b in 0..x.rows {
-            w.vecmat_into(x.row(b), &mut out.data[b * cols..(b + 1) * cols]);
-        }
+        // Single-threaded callers of the parallel API get the batched
+        // decode-once kernel, not a per-row sweep that would re-decode
+        // the stream once per batch row.
+        w.matmul_batch_slice(&x.data, x.rows, &mut out.data);
         return;
     }
-    let chunk = (x.rows + t - 1) / t; // ceil(n/q), paper line 1
-    let out_chunks: Vec<(usize, &mut [f32])> = {
-        let mut rem: &mut [f32] = &mut out.data;
-        let mut v = Vec::new();
-        let mut start = 0usize;
-        while start < x.rows {
-            let rows_here = chunk.min(x.rows - start);
-            let (head, tail) = rem.split_at_mut(rows_here * cols);
-            v.push((start, head));
-            rem = tail;
-            start += rows_here;
-        }
-        v
-    };
-    pool.scope(|scope| {
-        for (start, out_slice) in out_chunks {
-            scope.spawn(move || {
-                let rows_here = out_slice.len() / cols;
-                for r in 0..rows_here {
-                    w.vecmat_into(
-                        x.row(start + r),
-                        &mut out_slice[r * cols..(r + 1) * cols],
-                    );
-                }
-            });
+    par_row_chunks_on(pool, x.rows, cols, &mut out.data, t, &|start, n, os: &mut [f32]| {
+        for r in 0..n {
+            w.vecmat_into(x.row(start + r), &mut os[r * cols..(r + 1) * cols]);
         }
     });
 }
@@ -365,6 +662,158 @@ pub fn par_matmul<F: CompressedMatrix + ?Sized>(w: &F, x: &Mat, threads: usize) 
     let mut out = Mat::zeros(0, 0);
     par_matmul_into(w, x, &mut out, threads);
     out
+}
+
+/// Split `out` (`rows_total × cols` row-major) into up to `t`
+/// contiguous row chunks (ceil split, paper Alg. 3 line 1) and run
+/// `kernel(start_row, rows_here, out_chunk)` for each on the pool.
+fn par_row_chunks_on(
+    pool: &Pool,
+    rows_total: usize,
+    cols: usize,
+    out: &mut [f32],
+    t: usize,
+    kernel: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
+) {
+    debug_assert!(cols > 0 && rows_total > 0);
+    debug_assert_eq!(out.len(), rows_total * cols);
+    let chunk = (rows_total + t - 1) / t;
+    let tasks: Vec<(usize, &mut [f32])> = {
+        let mut rem: &mut [f32] = out;
+        let mut v = Vec::new();
+        let mut start = 0usize;
+        while start < rows_total {
+            let rows_here = chunk.min(rows_total - start);
+            let (head, tail) = rem.split_at_mut(rows_here * cols);
+            v.push((start, head));
+            rem = tail;
+            start += rows_here;
+        }
+        v
+    };
+    pool.scope(|scope| {
+        for (start, out_slice) in tasks {
+            scope.spawn(move || {
+                let rows_here = out_slice.len() / cols;
+                kernel(start, rows_here, out_slice);
+            });
+        }
+    });
+}
+
+/// Chunk-parallel *batched* product `X W` into `out`: the batch rows
+/// are split into up to `threads` chunks and each worker runs the
+/// format's register-blocked [`CompressedMatrix::matmul_batch_slice`]
+/// on its whole chunk — so an entropy-coded stream is decoded once per
+/// CHUNK (≤ `threads` passes per product) instead of once per batch row
+/// as under [`par_matmul_into`]. Runs on the persistent [`pool`];
+/// steady state spawns zero threads and allocates nothing beyond
+/// `out`'s first growth and each worker's grow-only [`BatchScratch`].
+pub fn par_matmul_batch_into<F: CompressedMatrix + ?Sized>(
+    w: &F,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    par_matmul_batch_into_on(pool::global(), w, x, out, threads);
+}
+
+/// [`par_matmul_batch_into`] on an explicit pool.
+pub fn par_matmul_batch_into_on<F: CompressedMatrix + ?Sized>(
+    pool: &Pool,
+    w: &F,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    assert_eq!(x.cols, w.rows(), "par_matmul_batch dimension mismatch");
+    let (rows, cols) = (w.rows(), w.cols());
+    out.resize(x.rows, cols);
+    if x.rows == 0 || cols == 0 {
+        return;
+    }
+    let t = threads.max(1).min(x.rows);
+    if t == 1 {
+        w.matmul_batch_slice(&x.data, x.rows, &mut out.data);
+        return;
+    }
+    par_row_chunks_on(pool, x.rows, cols, &mut out.data, t, &|start, n, os: &mut [f32]| {
+        w.matmul_batch_slice(&x.data[start * rows..(start + n) * rows], n, os);
+    });
+}
+
+/// Chunk-parallel batched product against a [`DecodedWeights`] decoded
+/// once by the caller — every chunk reuses the same decoded non-zeros,
+/// so the whole product costs exactly ONE stream decode.
+pub fn par_decoded_matmul_batch_into(
+    dec: &DecodedWeights,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    par_decoded_matmul_batch_into_on(pool::global(), dec, x, out, threads);
+}
+
+/// [`par_decoded_matmul_batch_into`] on an explicit pool.
+pub fn par_decoded_matmul_batch_into_on(
+    pool: &Pool,
+    dec: &DecodedWeights,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    assert_eq!(x.cols, dec.rows(), "par_decoded_matmul dimension mismatch");
+    let (rows, cols) = (dec.rows(), dec.cols());
+    out.resize(x.rows, cols);
+    if x.rows == 0 || cols == 0 {
+        return;
+    }
+    let t = threads.max(1).min(x.rows);
+    if t == 1 {
+        dec.matmul_batch_slice(&x.data, x.rows, &mut out.data);
+        return;
+    }
+    par_row_chunks_on(pool, x.rows, cols, &mut out.data, t, &|start, n, os: &mut [f32]| {
+        dec.matmul_batch_slice(&x.data[start * rows..(start + n) * rows], n, os);
+    });
+}
+
+/// The serving dispatch for one batched product — decode-once as the
+/// invariant at every parallelism level:
+///
+/// - `threads ≤ 1` (or a 1-row batch): the format's serial decode-once
+///   blocked kernel — 1 stream decode per product;
+/// - `threads > 1`, format has a stream decode
+///   ([`CompressedMatrix::decode_once_into`]): decode ONCE into this
+///   thread's shared [`DecodedWeights`] scratch, then chunk-parallel
+///   blocked products against the decoded non-zeros — still 1 decode;
+/// - `threads > 1`, decode-free format: [`par_matmul_batch_into`]
+///   (each chunk scans the stored arrays in place).
+///
+/// The conv im2col pipeline and the measured `conv_format: Auto` race
+/// both run through here, so the policy times exactly what serving
+/// executes.
+pub fn batched_product_into<F: CompressedMatrix + ?Sized>(
+    w: &F,
+    x: &Mat,
+    out: &mut Mat,
+    threads: usize,
+) {
+    if threads > 1 && x.rows > 1 {
+        let shared = with_decode_scratch(|dec| {
+            if w.decode_once_into(dec) {
+                par_decoded_matmul_batch_into(dec, x, out, threads);
+                true
+            } else {
+                false
+            }
+        });
+        if !shared {
+            par_matmul_batch_into(w, x, out, threads);
+        }
+    } else {
+        w.matmul_batch_into(x, out);
+    }
 }
 
 /// All comparison formats built from the same matrix — the Fig. 1 suite,
@@ -495,6 +944,38 @@ pub(crate) mod test_support {
                 "{}: matmul_batch_into on a dirty Mat diverges",
                 f.name()
             );
+            // chunk-parallel batched path: each worker runs the same
+            // blocked kernel on its chunk (NaN poison again — a lane
+            // left unwritten surfaces as a NaN diff)
+            let mut par_b = Mat::zeros(2, 9);
+            par_b.data.fill(f32::NAN);
+            par_matmul_batch_into(&f, &xb, &mut par_b, 2);
+            assert_eq!((par_b.rows, par_b.cols), (3, cols));
+            assert!(
+                par_b.max_abs_diff(&seq) < 1e-3,
+                "{}: par_matmul_batch_into mismatch",
+                f.name()
+            );
+            // the full serving dispatch (shared decode when available)
+            let mut disp = Mat::zeros(0, 0);
+            batched_product_into(&f, &xb, &mut disp, 2);
+            assert!(
+                disp.max_abs_diff(&seq) < 1e-3,
+                "{}: batched_product_into mismatch",
+                f.name()
+            );
+            // shared-decode equivalence for stream-decoded formats
+            let mut dec = DecodedWeights::new();
+            if f.decode_once_into(&mut dec) {
+                let mut dout = Mat::zeros(1, 1);
+                dout.data.fill(f32::NAN);
+                dec.matmul_batch_into(&xb, &mut dout);
+                assert!(
+                    dout.max_abs_diff(&seq) < 1e-3,
+                    "{}: decoded product mismatch",
+                    f.name()
+                );
+            }
         }
     }
 }
@@ -597,6 +1078,66 @@ mod tests {
             distinct <= cap,
             "thread set grew to {distinct} (> pool {cap}) across 40 calls"
         );
+    }
+
+    #[test]
+    fn par_matmul_batch_empty_and_thread_excess() {
+        let w = Dense::compress(&Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]));
+        let x = Mat::zeros(0, 2);
+        let mut out = Mat::zeros(3, 3);
+        par_matmul_batch_into(&w, &x, &mut out, 4);
+        assert_eq!((out.rows, out.cols), (0, 2));
+        let mut rng = Prng::seeded(21);
+        let m = Mat::gaussian(6, 4, 1.0, &mut rng);
+        let w = Hac::compress(&m);
+        let x = Mat::gaussian(2, 6, 1.0, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        par_matmul_batch_into(&w, &x, &mut out, 16);
+        assert!(out.max_abs_diff(&m.matmul(&x)) < 1e-4);
+    }
+
+    #[test]
+    fn decoded_weights_match_the_stream_kernels() {
+        let mut rng = Prng::seeded(0xDEC0);
+        for _ in 0..4 {
+            let m = Mat::sparse_quantized(30, 24, 0.3, 8, &mut rng);
+            let xb = Mat::gaussian(5, 30, 1.0, &mut rng);
+            let seq = m.matmul(&xb);
+            for id in [FormatId::Hac, FormatId::Shac, FormatId::LzAc] {
+                let f = id.compress(&m);
+                let mut dec = DecodedWeights::new();
+                assert!(f.decode_once_into(&mut dec), "{id}: no shared decode");
+                assert_eq!((dec.rows(), dec.cols()), (30, 24));
+                assert_eq!(dec.nnz(), m.nnz(), "{id}: decoded nnz");
+                let mut out = Mat::zeros(2, 2);
+                out.data.fill(f32::NAN);
+                dec.matmul_batch_into(&xb, &mut out);
+                assert!(out.max_abs_diff(&seq) < 1e-3, "{id}: decoded product");
+                // decode-free formats opt out
+                let c = FormatId::Csc.compress(&m);
+                assert!(!c.decode_once_into(&mut dec));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_product_dispatch_matches_serial() {
+        let mut rng = Prng::seeded(0xD15);
+        let m = Mat::sparse_quantized(48, 32, 0.25, 16, &mut rng);
+        let xb = Mat::gaussian(9, 48, 1.0, &mut rng);
+        let seq = m.matmul(&xb);
+        for f in all_formats(&m) {
+            for threads in [1, 2, 5] {
+                let mut out = Mat::zeros(3, 1);
+                out.data.fill(f32::NAN);
+                batched_product_into(f.as_ref(), &xb, &mut out, threads);
+                assert!(
+                    out.max_abs_diff(&seq) < 1e-3,
+                    "{} t={threads}: dispatch mismatch",
+                    f.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! deployed between pruning and Huffman coding, sitting between IM
 //! (dense pointers) and sHAC (entropy-coded values) in Fig. 1 terms.
 
-use crate::formats::{CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, scatter_col, stage_transposed, with_batch_scratch, BatchScratch,
+    CompressedMatrix, FormatId,
+};
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
 
@@ -135,6 +138,46 @@ impl CompressedMatrix for RelIdx {
             }
             *oj = sum;
         }
+    }
+
+    /// Register-blocked batched product: one walk of the (gap, pointer)
+    /// entry stream — each real entry's codebook weight streams against
+    /// a contiguous batch-lane tile; filler entries only advance the
+    /// row cursor (their padding zero is skipped by the `v != 0` test).
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        if self.rows == 0 {
+            out.fill(0.0);
+            return;
+        }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            for j in 0..self.cols {
+                let (lo, hi) = (self.centry[j] as usize, self.centry[j + 1] as usize);
+                acc.fill(0.0);
+                let mut row = 0usize;
+                for &(gap, ptr) in &self.entries[lo..hi] {
+                    row += gap as usize;
+                    let v = self.codebook[ptr as usize];
+                    if v != 0.0 {
+                        axpy_lanes(acc, &xt[row * batch..(row + 1) * batch], v);
+                    }
+                    row += 1;
+                }
+                scatter_col(acc, out, j, self.cols);
+            }
+        });
     }
 
     fn decompress(&self) -> Mat {

@@ -6,7 +6,10 @@
 //! compressed `nz` stream once, using `cb` to skip empty columns and
 //! `ri` to address the input vector.
 
-use crate::formats::{pool, CompressedMatrix, FormatId};
+use crate::formats::{
+    axpy_lanes, decode_stats, pool, scatter_col, stage_transposed,
+    with_batch_scratch, BatchScratch, CompressedMatrix, DecodedWeights, FormatId,
+};
 use crate::huffman::bounds::{dict_bits, WORD_BITS};
 use crate::huffman::Code;
 use crate::mat::Mat;
@@ -236,6 +239,7 @@ impl CompressedMatrix for Shac {
         if q == 0 || self.cols == 0 {
             return;
         }
+        decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let mut run = [0u32; 8];
         let mut pos = 0usize; // index into nz, the paper's `pos`
@@ -284,18 +288,84 @@ impl CompressedMatrix for Shac {
         m
     }
 
-    /// Decode-once batched product (see `Hac::matmul_batch_into`): one
-    /// pass over the compressed nz stream, each non-zero applied across
-    /// the whole batch.
-    fn matmul_batch_into(&self, x: &Mat, out: &mut Mat) {
-        assert_eq!(x.cols, self.rows, "matmul_batch dimension mismatch");
-        let batch = x.rows;
-        out.resize(batch, self.cols);
-        out.data.fill(0.0);
-        let q = self.ri.len();
-        if q == 0 || self.cols == 0 || batch == 0 {
+    /// Decode-once register-blocked batched product (see
+    /// `Hac::matmul_batch_slice`): one pass over the compressed nz
+    /// stream, each non-zero streamed against a contiguous batch-lane
+    /// tile of the staged activation; `cb` skips empty columns exactly
+    /// as in Alg. 2.
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), batch * self.rows, "matmul_batch input shape");
+        assert_eq!(out.len(), batch * self.cols, "matmul_batch output shape");
+        if batch == 0 || self.cols == 0 {
             return;
         }
+        if batch == 1 {
+            self.vecmat_into(x, out);
+            return;
+        }
+        out.fill(0.0);
+        let q = self.ri.len();
+        if q == 0 {
+            return;
+        }
+        decode_stats::record();
+        with_batch_scratch(|scratch| {
+            let BatchScratch { ref mut xt, ref mut acc, .. } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            let mut r = BitReader::new(&self.stream);
+            let mut run = [0u32; 8];
+            let mut pos = 0usize;
+            let mut col = 0usize;
+            let mut end = self.cb[1] as usize;
+            while pos < q {
+                let n = if pos + 8 <= q {
+                    self.code.decode_run(&mut r, &mut run)
+                } else {
+                    0
+                };
+                let n = if n == 0 {
+                    run[0] = self.code.decode_next(&mut r).expect("truncated");
+                    1
+                } else {
+                    n
+                };
+                for &s in &run[..n] {
+                    while pos >= end {
+                        scatter_col(acc, out, col, self.cols);
+                        acc.fill(0.0);
+                        col += 1;
+                        end = self.cb[col + 1] as usize;
+                    }
+                    let row = self.ri[pos] as usize;
+                    axpy_lanes(
+                        acc,
+                        &xt[row * batch..(row + 1) * batch],
+                        self.alphabet[s as usize],
+                    );
+                    pos += 1;
+                }
+            }
+            // flush the final non-empty column (zeroed tail columns are
+            // already correct from the up-front fill)
+            scatter_col(acc, out, col, self.cols);
+        });
+    }
+
+    /// Shared-decode support: one pass over the Huffman-coded nz stream
+    /// (ri/cb copied positionally) fills the CSC-shaped scratch — the
+    /// whole layer invocation costs exactly one decode.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        dec.reset(self.rows, self.cols);
+        let q = self.ri.len();
+        if q == 0 || self.cols == 0 {
+            for _ in 0..self.cols {
+                dec.close_col();
+            }
+            return true;
+        }
+        decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let mut run = [0u32; 8];
         let mut pos = 0usize;
@@ -315,17 +385,19 @@ impl CompressedMatrix for Shac {
             };
             for &s in &run[..n] {
                 while pos >= end {
+                    dec.close_col();
                     col += 1;
                     end = self.cb[col + 1] as usize;
                 }
-                let v = self.alphabet[s as usize];
-                let row = self.ri[pos] as usize;
-                for b in 0..batch {
-                    out.data[b * self.cols + col] += v * x.data[b * self.rows + row];
-                }
+                dec.push(self.ri[pos], self.alphabet[s as usize]);
                 pos += 1;
             }
         }
+        while col < self.cols {
+            dec.close_col();
+            col += 1;
+        }
+        true
     }
 }
 

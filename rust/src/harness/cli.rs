@@ -342,9 +342,15 @@ fn eval_one(flags: &Flags, threads: usize) -> Result<()> {
         let mut rng = Prng::seeded(0xE7A1);
         let model = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
         let (psi_fc, psi_total) = (model.psi_fc(), model.psi_total());
+        // counted (not inferred) weight-stream decode passes during the
+        // eval, so the measured-Auto decisions are explainable: the
+        // decode-once paths do one pass per entropy layer per batch
+        let dec_mark = crate::formats::decode_stats::total();
         let (m, secs) = crate::nn::evaluate_pure(&model, &test, 32, threads)?;
+        let decodes = crate::formats::decode_stats::since(dec_mark);
         println!("benchmark : {} (pure-Rust compressed pipeline)", kind.name());
         println!("conv fmts : {}", model.conv_format_report());
+        println!("decodes   : {decodes} weight-stream decode passes during eval");
         println!("compressed: {m}  ({secs:.3}s end-to-end)");
         println!("ψ_fc      : {psi_fc:.4}  ({:.1}× smaller FC block)", 1.0 / psi_fc);
         println!(

@@ -633,7 +633,8 @@ pub fn s8_prune_grid(kind: ModelKind) -> Vec<f64> {
 /// winner — which format ran fastest within the size budget on that
 /// layer's lowered matrix (DESIGN.md §6).
 pub fn s8_conv_format_report(ctx: &mut Ctx, kind: ModelKind, ks: &[usize]) -> Result<Table> {
-    let mut t = Table::new(&["k", "layer", "spec", "format", "kbits", "dot_p50"]);
+    let mut t =
+        Table::new(&["k", "layer", "spec", "format", "kbits", "dot_p50", "dec/call"]);
     for &k in ks {
         let cfg = CompressionCfg {
             conv_quant: Some((Kind::Cws, k)),
@@ -654,6 +655,12 @@ pub fn s8_conv_format_report(ctx: &mut Ctx, kind: ModelKind, ks: &[usize]) -> Re
                 choice
                     .measured_ns
                     .map(crate::util::timer::fmt_ns)
+                    .unwrap_or_else(|| "-".into()),
+                // counted weight-stream decode passes per batched
+                // product through the serving dispatch (0 = decode-free)
+                choice
+                    .decodes_per_call
+                    .map(|d| d.to_string())
                     .unwrap_or_else(|| "-".into()),
             ]);
         }

@@ -13,9 +13,13 @@
 //! - `util`, `mat`, `huffman` — substrates (bitstreams, PRNG, coding).
 //! - `formats` — the paper's contribution as allocation-free kernels:
 //!   CSC/CSR/COO/IM/CLA baselines, HAC (Alg. 1), sHAC (Alg. 2), all
-//!   behind `CompressedMatrix::{vecmat_into, matmul_batch_into}`.
+//!   behind `CompressedMatrix::{vecmat_into, matmul_batch_slice}` —
+//!   the batched kernels are decode-once and register-blocked
+//!   (DESIGN.md §7), with `decode_stats` counting stream decodes.
 //! - `formats::pool` — the persistent worker pool backing the parallel
-//!   dot (Alg. 3) and the §VI column-parallel dots.
+//!   dots: Alg. 3 (`par_matmul_into`), the chunk-parallel batched
+//!   `par_matmul_batch_into`, the shared-decode serving dispatch
+//!   `batched_product_into`, and the §VI column-parallel dots.
 //! - `formats::FormatId` — the single format registry: parse-by-name,
 //!   the Fig. 1 suite (`all_formats`), FC format selection, and `.sham`
 //!   kind tags all derive from it; `formats::{LzAc, RelIdx}` extend the

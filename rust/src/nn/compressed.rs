@@ -8,7 +8,8 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::formats::{
-    par_matmul_into, CompressedMatrix, FormatId, Hac, Shac, Workspace,
+    batched_product_into, decode_stats, pool, CompressedMatrix, FormatId, Hac,
+    Shac, Workspace,
 };
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::io::{Archive, Tensor};
@@ -81,10 +82,13 @@ pub enum ConvFormat {
     /// Store every lowered conv matrix in one fixed registry format.
     Fixed(FormatId),
     /// Measured policy: compress the lowered matrix in every
-    /// [`CONV_AUTO_CANDIDATES`] format, time `matmul_batch_into` on a
-    /// representative im2col patch batch, and keep the fastest whose
-    /// size is within [`CONV_AUTO_SIZE_SLACK`]× of the smallest
-    /// candidate. The per-layer outcome is recorded in
+    /// [`CONV_AUTO_CANDIDATES`] format, time the serving dispatch
+    /// (`formats::batched_product_into` at the persistent pool's
+    /// thread count — chunk-parallel blocked kernels, shared decode
+    /// for the entropy formats) on a representative im2col patch
+    /// batch, and keep the fastest whose size is within
+    /// [`CONV_AUTO_SIZE_SLACK`]× of the smallest candidate. The
+    /// per-layer outcome is recorded in
     /// [`CompressedModel::conv_choices`].
     Auto,
 }
@@ -133,10 +137,10 @@ pub const CONV_AUTO_CANDIDATES: [FormatId; 6] = [
 pub const CONV_AUTO_SIZE_SLACK: f64 = 2.0;
 
 /// Rows of the representative im2col patch batch the Auto policy times
-/// against (≈ one 8×8 output tile × batch 1 — big enough to amortize
-/// the entropy formats' batched decode, small enough to keep model
-/// builds fast).
-const CONV_AUTO_PATCH_ROWS: usize = 64;
+/// against (≈ one 8×8 output tile × batch 4 — big enough that the
+/// chunk-parallel dispatch actually splits work across the pool the
+/// way serving does, small enough to keep model builds fast).
+const CONV_AUTO_PATCH_ROWS: usize = 256;
 
 /// How one conv layer's executable format was decided — the model
 /// report behind `conv_format: Auto` (surfaced by `sham s8`,
@@ -146,20 +150,33 @@ pub struct ConvChoice {
     pub name: String,
     pub format: FormatId,
     pub size_bits: u64,
-    /// Median `matmul_batch_into` time (ns) of the winner on the
-    /// representative patch batch — `None` when the format was fixed
-    /// (or reloaded from a container), not measured.
+    /// Median time (ns) of the winner's batched product *through the
+    /// serving dispatch* (`batched_product_into` at the pool's thread
+    /// count — shared decode included) on the representative patch
+    /// batch — `None` when the format was fixed (or reloaded from a
+    /// container), not measured.
     pub measured_ns: Option<f64>,
+    /// Weight-stream decode passes one such product performs (counted
+    /// via `formats::decode_stats`, not inferred): 0 for decode-free
+    /// formats, 1 for the entropy formats on the decode-once paths —
+    /// `None` when not measured.
+    pub decodes_per_call: Option<u64>,
 }
 
-/// Race the Auto candidates on one lowered conv matrix. Returns the
-/// winner plus its report entry.
+/// Race the Auto candidates on one lowered conv matrix, timing the
+/// exact dispatch serving executes — `batched_product_into` at the
+/// persistent pool's thread count, i.e. the chunk-parallel blocked
+/// kernels with shared decode for the entropy formats (a serial 64-row
+/// `matmul_batch_into` race, as before PR 5, rewarded formats that the
+/// parallel path then ran differently). Returns the winner plus its
+/// report entry.
 fn pick_conv_format_measured(
     name: &str,
     lowered: &Mat,
 ) -> (Box<dyn CompressedMatrix>, ConvChoice) {
     let mut rng = Prng::seeded(0xA07_0F0);
     let patches = Mat::gaussian(CONV_AUTO_PATCH_ROWS, lowered.rows, 1.0, &mut rng);
+    let threads = pool::global().threads();
     let candidates: Vec<Box<dyn CompressedMatrix>> =
         CONV_AUTO_CANDIDATES.iter().map(|id| id.compress(lowered)).collect();
     let min_bits = candidates.iter().map(|c| c.size_bits()).min().unwrap_or(0);
@@ -171,7 +188,9 @@ fn pick_conv_format_measured(
         if c.size_bits() > budget {
             continue;
         }
-        let s = bench(1, 3, || c.matmul_batch_into(&patches, &mut out));
+        let s = bench(1, 3, || {
+            batched_product_into(c.as_ref(), &patches, &mut out, threads)
+        });
         if s.p50 < best_ns {
             best_ns = s.p50;
             best = Some(i);
@@ -182,11 +201,16 @@ fn pick_conv_format_measured(
     let ns = best_ns;
     let mut candidates = candidates;
     let w = candidates.swap_remove(i);
+    // decode passes of one serving-shaped product, counted not inferred
+    let mark = decode_stats::total();
+    batched_product_into(w.as_ref(), &patches, &mut out, threads);
+    let decodes = decode_stats::since(mark);
     let choice = ConvChoice {
         name: name.to_string(),
         format: w.id(),
         size_bits: w.size_bits(),
         measured_ns: Some(ns),
+        decodes_per_call: Some(decodes),
     };
     (w, choice)
 }
@@ -281,11 +305,11 @@ fn fc_stack_into(fc: &[FcLayer], feats: &Mat, threads: usize, a: &mut Mat, b: &m
         } else {
             (&*a, &mut *b)
         };
-        if threads > 1 && src.rows > 1 {
-            par_matmul_into(layer.w.as_ref(), src, dst, threads);
-        } else {
-            layer.w.matmul_batch_into(src, dst);
-        }
+        // the full serving dispatch: serial decode-once blocked kernel
+        // at threads ≤ 1, shared decode + chunk-parallel blocked
+        // products at threads > 1 — one stream decode per layer per
+        // batch either way
+        batched_product_into(layer.w.as_ref(), src, dst, threads);
         bias_act(dst, &layer.b, li != last);
         dst_is_a = !dst_is_a;
     }
@@ -481,6 +505,7 @@ impl CompressedModel {
                         format: id,
                         size_bits: bits,
                         measured_ns: None,
+                        decodes_per_call: None,
                     })
                 }
                 ConvFormat::Auto => pick_conv_format_measured(name, &lowered),
@@ -542,8 +567,10 @@ impl CompressedModel {
 
     /// One-line per-layer summary of the executable conv formats (the
     /// `conv_format: Auto` model report): `name=fmt` per layer, with
-    /// `@t` appended when the choice was measured. Sizes live in
-    /// [`Self::conv_choices`] (the `sham s8` report table prints them).
+    /// `@t` appended when the choice was measured and `/Ndec` — the
+    /// counted weight-stream decode passes per batched product — when
+    /// the race recorded them. Sizes live in [`Self::conv_choices`]
+    /// (the `sham s8` report table prints them).
     pub fn conv_format_report(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::new();
@@ -554,6 +581,9 @@ impl CompressedModel {
             let _ = write!(s, "{}={}", c.name, c.format);
             if let Some(ns) = c.measured_ns {
                 let _ = write!(s, "@{}", crate::util::timer::fmt_ns(ns));
+            }
+            if let Some(d) = c.decodes_per_call {
+                let _ = write!(s, "/{d}dec");
             }
         }
         s
@@ -579,14 +609,15 @@ impl CompressedModel {
     }
 
     /// Allocation-free FC forward: activations ping-pong between the two
-    /// grow-only buffers of `ws`, each layer running the decode-once
-    /// `matmul_batch_into` (the entropy formats amortize their bitstream
-    /// decode across the batch); `threads > 1` switches to the paper's
-    /// row-parallel Alg. 3 on the persistent pool (pays decode per row —
-    /// better only when cores outnumber the amortization factor). In
-    /// steady state (same batch shape, reused `ws`) this performs zero
-    /// output allocations and spawns zero threads — the coordinator's FC
-    /// hot path.
+    /// grow-only buffers of `ws`, each layer running through the serving
+    /// dispatch (`formats::batched_product_into`) — the decode-once
+    /// register-blocked batched kernel at `threads ≤ 1`, and at
+    /// `threads > 1` one shared weight-stream decode reused by all
+    /// chunk-parallel blocked products on the persistent pool. Either
+    /// way an entropy-coded layer decodes its stream exactly ONCE per
+    /// batch, never per row or per chunk. In steady state (same batch
+    /// shape, reused `ws`) this performs zero output allocations and
+    /// spawns zero threads — the coordinator's FC hot path.
     pub fn fc_forward_into<'w>(
         &self,
         feats: &Mat,
@@ -1048,6 +1079,7 @@ impl CompressedModel {
                 format: w.id(),
                 size_bits: w.size_bits(),
                 measured_ns: None,
+                decodes_per_call: None,
             });
             conv.push(ConvLayer { name: name.to_string(), w, b, spec, cin, cout });
         }
@@ -1399,6 +1431,7 @@ mod tests {
             assert_eq!(c.name, l.name);
             assert_eq!(c.format, l.w.id(), "report/layer format mismatch");
             assert!(c.measured_ns.is_some(), "auto choice was not measured");
+            assert!(c.decodes_per_call.is_some(), "auto choice decode count missing");
             // within the size budget relative to the smallest candidate
             assert!(
                 c.size_bits as f64 <= *min as f64 * CONV_AUTO_SIZE_SLACK + 1.0,

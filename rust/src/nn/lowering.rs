@@ -9,10 +9,16 @@
 //! matching im2col patch matrix for any [`ConvSpec`] — arbitrary
 //! `(stride_h, stride_w)` with SAME or VALID padding — into a
 //! caller-provided grow-only buffer, so any [`CompressedMatrix`] format
-//! can execute convolutions through its allocation-free
-//! `matmul_batch_into` kernel (or the pooled `par_matmul_into`,
-//! Alg. 3). In steady state the conv hot path allocates nothing and
-//! spawns no threads. See DESIGN.md §6.
+//! can execute convolutions through its allocation-free decode-once
+//! batched kernel. The product runs through
+//! [`crate::formats::batched_product_into`]: serial blocked kernel at
+//! `threads ≤ 1`; at `threads > 1` the quantized-codebook formats
+//! decode their weight stream ONCE per layer invocation into a shared
+//! [`crate::formats::DecodedWeights`] scratch reused by every
+//! patch-row chunk (the ROADMAP's "shared-decode im2col"), while
+//! decode-free formats chunk straight onto the pool. In steady state
+//! the conv hot path allocates nothing and spawns no threads. See
+//! DESIGN.md §6–§7.
 //!
 //! Layout invariant that makes this a pure reshape: a row-major HWIO
 //! tensor `[kh, kw, cin, cout]` flattened is already the row-major
@@ -22,7 +28,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::formats::{par_matmul_into, CompressedMatrix};
+use crate::formats::{batched_product_into, CompressedMatrix};
 use crate::mat::Mat;
 
 /// Padding scheme of a convolution, matching the TF/XLA semantics the
@@ -253,10 +259,12 @@ pub(crate) fn bias_act(y: &mut Mat, bias: &[f32], relu: bool) {
 
 /// Convolution under an arbitrary [`ConvSpec`] executed on a lowered
 /// compressed weight matrix: im2col into `patches`, multiply through
-/// the format's allocation-free batched kernel (or the pooled Alg. 3
-/// when `threads > 1`), bias + activation fused on the way out. `out`
-/// ends up `(n·oh·ow) × cout` — the flattened NHWC output activation.
-/// Both buffers are resized in place (grow-only) and fully overwritten.
+/// the serving dispatch (`batched_product_into` — the format's serial
+/// decode-once blocked kernel, or at `threads > 1` one shared weight
+/// decode reused by all chunk-parallel patch-row products), bias +
+/// activation fused on the way out. `out` ends up `(n·oh·ow) × cout` —
+/// the flattened NHWC output activation. Both buffers are resized in
+/// place (grow-only) and fully overwritten.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_lowered_into(
     w: &dyn CompressedMatrix,
@@ -275,11 +283,7 @@ pub fn conv_lowered_into(
     );
     assert_eq!(bias.len(), w.cols(), "conv bias length mismatch");
     im2col_into(x, spec, patches);
-    if threads > 1 && patches.rows > 1 {
-        par_matmul_into(w, patches, out, threads);
-    } else {
-        w.matmul_batch_into(patches, out);
-    }
+    batched_product_into(w, patches, out, threads);
     bias_act(out, bias, relu);
 }
 

@@ -1,0 +1,179 @@
+//! Property tests of the decode-once register-blocked batched kernels
+//! and the chunk-parallel drivers: for EVERY registry format, the
+//! batched products must match the per-row `vecmat_into` oracle within
+//! floating-point tolerance, across
+//!
+//! - batch sizes that are not multiples of the 8-lane tile width
+//!   (1, 7, 8, 9, 33),
+//! - thread counts {1, 2, 5} through `par_matmul_batch_into` and the
+//!   full serving dispatch `batched_product_into`,
+//! - NaN-poisoned reused output matrices (a lane any kernel fails to
+//!   overwrite surfaces as a NaN diff),
+//! - matrices with entirely empty columns/rows, all-zero matrices, and
+//!   randomized pruned+quantized shapes,
+//!
+//! plus the shared-decode path: `decode_once_into` on the
+//! quantized-codebook formats must reproduce the same products from the
+//! decoded non-zeros.
+
+use sham::formats::{
+    all_formats, batched_product_into, par_matmul_batch_into, CompressedMatrix,
+    DecodedWeights, FormatId,
+};
+use sham::mat::Mat;
+use sham::util::prng::Prng;
+
+const BATCHES: [usize; 5] = [1, 7, 8, 9, 33];
+const THREADS: [usize; 3] = [1, 2, 5];
+
+/// Per-row oracle: one `vecmat_into` per batch row.
+fn oracle(f: &dyn CompressedMatrix, xb: &Mat) -> Mat {
+    let mut out = Mat::zeros(xb.rows, f.cols());
+    for b in 0..xb.rows {
+        f.vecmat_into(xb.row(b), &mut out.data[b * f.cols()..(b + 1) * f.cols()]);
+    }
+    out
+}
+
+fn nan_filled(rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    m.data.fill(f32::NAN);
+    m
+}
+
+/// Assert `got` matches `want` everywhere (NaN anywhere fails).
+fn assert_close(got: &Mat, want: &Mat, what: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what}: shape");
+    for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "{what}: entry {i} diverged ({a} vs {b})"
+        );
+    }
+}
+
+/// The test-matrix zoo: randomized pruned+quantized shapes plus the
+/// degenerate structures the blocked kernels special-case.
+fn zoo(rng: &mut Prng) -> Vec<(String, Mat)> {
+    let mut v: Vec<(String, Mat)> = Vec::new();
+    // matrix with fully empty columns AND fully empty rows
+    let mut gaps = Mat::zeros(11, 6);
+    gaps.set(3, 1, 2.0);
+    gaps.set(7, 4, -1.5);
+    gaps.set(9, 4, 3.0);
+    gaps.set(0, 0, 0.5);
+    v.push(("empty-cols".into(), gaps));
+    v.push(("all-zero".into(), Mat::zeros(9, 5)));
+    v.push(("single".into(), Mat::from_vec(1, 1, vec![2.5])));
+    v.push(("one-col".into(), Mat::from_vec(4, 1, vec![0.0, -1.0, 0.0, 3.0])));
+    v.push(("one-row".into(), Mat::from_vec(1, 5, vec![1.0, 0.0, 2.0, 0.0, -3.0])));
+    for case in 0..6 {
+        let rows = 1 + rng.gen_range(50);
+        let cols = 1 + rng.gen_range(50);
+        let s = 0.05 + 0.9 * rng.next_f64();
+        let k = 1 + rng.gen_range(24);
+        v.push((
+            format!("rand{case}-{rows}x{cols}"),
+            Mat::sparse_quantized(rows, cols, s, k, rng),
+        ));
+    }
+    v
+}
+
+#[test]
+fn blocked_batched_kernels_match_per_row_oracle() {
+    let mut rng = Prng::seeded(0xB10C);
+    for (mname, m) in zoo(&mut rng) {
+        for f in all_formats(&m) {
+            for &batch in &BATCHES {
+                let xb = Mat::gaussian(batch, m.rows, 1.0, &mut rng);
+                let want = oracle(f.as_ref(), &xb);
+                // serial decode-once blocked kernel, NaN-poisoned reuse
+                let mut got = nan_filled(3, 2);
+                f.matmul_batch_into(&xb, &mut got);
+                assert_close(&got, &want, &format!("{mname}/{} serial b{batch}", f.name()));
+                // chunk-parallel batched across thread counts
+                for &t in &THREADS {
+                    let mut pout = nan_filled(1, 7);
+                    par_matmul_batch_into(f.as_ref(), &xb, &mut pout, t);
+                    assert_close(
+                        &pout,
+                        &want,
+                        &format!("{mname}/{} par b{batch} t{t}", f.name()),
+                    );
+                    let mut dout = nan_filled(2, 3);
+                    batched_product_into(f.as_ref(), &xb, &mut dout, t);
+                    assert_close(
+                        &dout,
+                        &want,
+                        &format!("{mname}/{} dispatch b{batch} t{t}", f.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_decode_reproduces_the_stream_products() {
+    let mut rng = Prng::seeded(0xDEC0DE);
+    for (mname, m) in zoo(&mut rng) {
+        for id in [FormatId::Hac, FormatId::Shac, FormatId::LzAc] {
+            let f = id.compress(&m);
+            let mut dec = DecodedWeights::new();
+            assert!(
+                f.decode_once_into(&mut dec),
+                "{mname}/{id}: entropy format must support shared decode"
+            );
+            assert_eq!((dec.rows(), dec.cols()), (m.rows, m.cols), "{mname}/{id}");
+            assert_eq!(dec.nnz(), m.nnz(), "{mname}/{id}: decoded nnz");
+            for &batch in &[1usize, 8, 9] {
+                let xb = Mat::gaussian(batch, m.rows, 1.0, &mut rng);
+                let want = oracle(f.as_ref(), &xb);
+                let mut got = nan_filled(4, 4);
+                dec.matmul_batch_into(&xb, &mut got);
+                assert_close(&got, &want, &format!("{mname}/{id} decoded b{batch}"));
+            }
+        }
+        // decode-free formats opt out of the shared-decode path
+        for id in [FormatId::Dense, FormatId::Csc, FormatId::Csr, FormatId::Coo] {
+            let f = id.compress(&m);
+            let mut dec = DecodedWeights::new();
+            assert!(!f.decode_once_into(&mut dec), "{mname}/{id}: unexpected decode");
+        }
+    }
+}
+
+#[test]
+fn decoded_scratch_is_reusable_across_matrices() {
+    // one DecodedWeights buffer reused across layers of different
+    // shapes — exactly how the conv pipeline's thread-local scratch is
+    // exercised — must not leak state between decodes
+    let mut rng = Prng::seeded(0x5C4A7C);
+    let mut dec = DecodedWeights::new();
+    for _ in 0..6 {
+        let rows = 1 + rng.gen_range(40);
+        let cols = 1 + rng.gen_range(40);
+        let m = Mat::sparse_quantized(rows, cols, 0.4, 8, &mut rng);
+        let f = FormatId::Shac.compress(&m);
+        assert!(f.decode_once_into(&mut dec));
+        let xb = Mat::gaussian(5, rows, 1.0, &mut rng);
+        let want = oracle(f.as_ref(), &xb);
+        let mut got = nan_filled(1, 1);
+        dec.matmul_batch_into(&xb, &mut got);
+        assert_close(&got, &want, "reused decode scratch");
+    }
+}
+
+#[test]
+fn parallel_batched_handles_batch_smaller_than_threads() {
+    let mut rng = Prng::seeded(0x7B);
+    let m = Mat::sparse_quantized(20, 15, 0.3, 6, &mut rng);
+    for f in all_formats(&m) {
+        let xb = Mat::gaussian(2, 20, 1.0, &mut rng);
+        let want = oracle(f.as_ref(), &xb);
+        let mut out = nan_filled(9, 9);
+        par_matmul_batch_into(f.as_ref(), &xb, &mut out, 16);
+        assert_close(&out, &want, &format!("{} threads>batch", f.name()));
+    }
+}

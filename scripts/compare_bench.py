@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Compare the current BENCH_*.json runs against the committed baselines.
+
+The CI workflow has uploaded BENCH_*.json artifacts since PR 3, but
+nothing read them — this script closes the loop: it diffs the current
+run against `rust/benches/baselines/` and FAILS (exit 1) on a >25%
+p50 regression in any hot-path section, so a perf regression breaks the
+build instead of silently accumulating in artifact storage.
+
+Semantics:
+  - Only keys matching the HOT_PREFIXES of each bench gate the build;
+    everything else is reported informationally.
+  - A baseline file marked `"provisional": true` (or a key missing from
+    the baseline) records the current numbers without gating — this is
+    how the first committed baseline behaves until someone refreshes it
+    from a real run with `--refresh`.
+  - Structural fields are always checked when present: the conv bench's
+    `steady_state_alloc_free` and `decode_once_per_layer` must be true.
+
+Usage:
+  python3 scripts/compare_bench.py [--baseline DIR] [--current DIR]
+                                   [--threshold 1.25] [--refresh]
+
+  --refresh  copy the current BENCH_*.json files over the baselines
+             (run locally on a quiet machine, then commit the result).
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BENCHES = ["BENCH_serving_hot_path.json", "BENCH_compressed_conv.json"]
+
+# Key prefixes whose p50 regressions gate the build (the hot-path
+# sections of each bench). Reference/diagnostic rows stay informational.
+HOT_PREFIXES = {
+    "BENCH_serving_hot_path.json": [
+        "p90/", "p99/",          # HAC/sHAC batched FC products
+        "scaling/",              # per-thread scaling of the batched path
+    ],
+    "BENCH_compressed_conv.json": [
+        "vgg/im2col_", "dta/im2col_",   # whole-model conv front-ends
+        "strided/",                      # generalized-geometry layers
+        "scaling/",                      # shared-decode parallel conv
+    ],
+}
+
+# Structural booleans that must hold in the current run when present.
+REQUIRED_TRUE = {
+    "BENCH_compressed_conv.json": [
+        "steady_state_alloc_free",
+        "decode_once_per_layer",
+    ],
+}
+
+
+def load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def is_hot(bench, key):
+    return any(key.startswith(p) for p in HOT_PREFIXES.get(bench, []))
+
+
+def compare_one(bench, baseline, current, threshold):
+    """Returns (regressions, notes) for one bench file."""
+    regressions, notes = [], []
+    for field in REQUIRED_TRUE.get(bench, []):
+        if field in current and current[field] is not True:
+            regressions.append(f"{bench}: {field} is {current[field]!r}, expected true")
+    if baseline is None:
+        notes.append(f"{bench}: no baseline committed — recording only")
+        return regressions, notes
+    if baseline.get("provisional"):
+        notes.append(
+            f"{bench}: baseline is provisional — recording only "
+            "(refresh with `python3 scripts/compare_bench.py --refresh` "
+            "on a quiet machine and commit the result)"
+        )
+        return regressions, notes
+    base_results = baseline.get("results", {})
+    cur_results = current.get("results", {})
+    for key, cur in sorted(cur_results.items()):
+        base = base_results.get(key)
+        cur_p50 = (cur or {}).get("p50_ns")
+        base_p50 = (base or {}).get("p50_ns")
+        if not isinstance(cur_p50, (int, float)) or not isinstance(base_p50, (int, float)):
+            notes.append(f"{bench}: {key}: no comparable baseline p50 — recorded only")
+            continue
+        if base_p50 <= 0:
+            continue
+        ratio = cur_p50 / base_p50
+        line = f"{bench}: {key}: p50 {base_p50:.0f}ns -> {cur_p50:.0f}ns ({ratio:.2f}x)"
+        if ratio > threshold and is_hot(bench, key):
+            regressions.append(line + f"  REGRESSION (> {threshold:.2f}x)")
+        elif ratio > threshold:
+            notes.append(line + "  (informational section, not gated)")
+    # hot-path keys that disappeared are suspicious: a renamed section
+    # silently un-gates itself
+    for key in sorted(base_results):
+        if key not in cur_results and is_hot(bench, key):
+            regressions.append(f"{bench}: hot-path section `{key}` missing from current run")
+    return regressions, notes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benches/baselines",
+                    help="directory holding the committed baseline JSONs")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="p50 ratio above which a hot-path section fails (default 1.25)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="overwrite the baselines with the current run")
+    args = ap.parse_args()
+
+    if args.refresh:
+        os.makedirs(args.baseline, exist_ok=True)
+        for bench in BENCHES:
+            src = os.path.join(args.current, bench)
+            if not os.path.exists(src):
+                print(f"refresh: {src} not found (run the bench first)", file=sys.stderr)
+                return 1
+            data = load(src)
+            data.pop("provisional", None)
+            with open(os.path.join(args.baseline, bench), "w") as fh:
+                json.dump(data, fh, indent=2)
+                fh.write("\n")
+            print(f"refreshed baseline {bench} ({len(data.get('results', {}))} sections)")
+        return 0
+
+    all_regressions, all_notes = [], []
+    missing = 0
+    for bench in BENCHES:
+        current = load(os.path.join(args.current, bench))
+        if current is None:
+            print(f"SKIP {bench}: current run not found in {args.current}")
+            missing += 1
+            continue
+        baseline = load(os.path.join(args.baseline, bench))
+        regressions, notes = compare_one(bench, baseline, current, args.threshold)
+        all_regressions += regressions
+        all_notes += notes
+
+    for n in all_notes:
+        print("note:", n)
+    if all_regressions:
+        print(f"\n{len(all_regressions)} hot-path regression(s) above "
+              f"{args.threshold:.2f}x:", file=sys.stderr)
+        for r in all_regressions:
+            print(" ", r, file=sys.stderr)
+        return 1
+    if missing == len(BENCHES):
+        print("no current bench results found — nothing compared", file=sys.stderr)
+        return 1
+    print("bench compare: OK (no hot-path regression above "
+          f"{args.threshold:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
