@@ -1,0 +1,510 @@
+//! Load generator for the reactor serving tier: closed-loop concurrency
+//! sweep, open-loop offered-load run with thousands of concurrent
+//! connections, and an overload segment that must shed.
+//!
+//! The client engine reuses the coordinator's own [`Poller`]
+//! abstraction — one thread drives every connection non-blocking, so
+//! the generator itself stays O(1) threads and the process thread count
+//! observed mid-run is the *server's* footprint (shards + workers), not
+//! O(connections). Client-side latencies go into a [`LogHistogram`]
+//! (p50/p99/p999, never saturating); open-loop latencies are measured
+//! from the *scheduled* send time, so queueing delay is charged to the
+//! server instead of silently omitted.
+//!
+//! Writes `BENCH_coordinator.json` (gated by `scripts/compare_bench.py`
+//! on the `closed/` and `open/` sections plus the `sheds_on_overload`
+//! and `bounded_threads` structural booleans). `SHAM_BENCH_QUICK=1`
+//! shrinks the sweep for CI; the full run drives ≥ 1024 open-loop
+//! connections.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sham::coordinator::frame::{self, STATUS_OK, STATUS_OVERLOADED};
+use sham::coordinator::poll::{fd_of, Event, Interest, Poller};
+use sham::coordinator::reactor::{self, ReactorConfig};
+use sham::coordinator::{Input, LogHistogram, Policy, Server, ServerConfig, VariantOpts};
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+use sham::util::timer::fmt_ns;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+const PER: usize = 8 * 8; // one 8×8×1 synthetic image
+
+// ---------------------------------------------------------------- client --
+
+/// One load-generator connection: non-blocking stream, a write queue of
+/// pre-encoded request frames, a read buffer parsed for response
+/// frames, and the send timestamps of in-flight requests (responses
+/// arrive strictly in order per connection).
+struct Conn {
+    stream: TcpStream,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    rbuf: Vec<u8>,
+    pending: VecDeque<Instant>,
+    /// Open-loop send schedule (unused in closed-loop mode).
+    next_due: Instant,
+    interest: Interest,
+    done: bool,
+    released: bool,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// One request in flight per connection; respond → send next.
+    Closed,
+    /// Fire per the schedule regardless of responses (pipelined).
+    Open { interval: Duration },
+}
+
+struct LoadStats {
+    completed: u64,
+    sheds: u64,
+    errors: u64,
+    /// Open-loop sends skipped because a connection's backlog exceeded
+    /// its bounds (kept so client memory stays bounded under overload).
+    skipped: u64,
+    /// Requests still unanswered when the drain deadline expired.
+    lost: u64,
+    elapsed_s: f64,
+    hist: LogHistogram,
+    /// Process thread count sampled mid-run (`/proc/self/status`).
+    threads: Option<u64>,
+}
+
+impl LoadStats {
+    fn new() -> LoadStats {
+        LoadStats {
+            completed: 0,
+            sheds: 0,
+            errors: 0,
+            skipped: 0,
+            lost: 0,
+            elapsed_s: 0.0,
+            hist: LogHistogram::new(),
+            threads: None,
+        }
+    }
+
+    fn rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.completed as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `Some((status, total_frame_len))` once a complete response frame is
+/// buffered. Response payloads are `n` f32 words on OK, `n` message
+/// bytes otherwise.
+fn parse_resp(buf: &[u8]) -> Option<(u8, usize)> {
+    if buf.len() < 5 {
+        return None;
+    }
+    let st = buf[0];
+    let n = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+    let body = if st == STATUS_OK { n * 4 } else { n };
+    if buf.len() < 5 + body {
+        None
+    } else {
+        Some((st, 5 + body))
+    }
+}
+
+fn flush(c: &mut Conn) {
+    while c.wpos < c.wbuf.len() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.done = true;
+                break;
+            }
+            Ok(n) => c.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.done = true;
+                break;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    } else if c.wpos > 1 << 16 {
+        c.wbuf.drain(..c.wpos);
+        c.wpos = 0;
+    }
+}
+
+fn read_some(c: &mut Conn) {
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match c.stream.read(&mut tmp) {
+            Ok(0) => {
+                c.done = true;
+                break;
+            }
+            Ok(n) => c.rbuf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.done = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Parse every complete response out of `c.rbuf`; in closed-loop mode
+/// each response (while still in the send phase) triggers the next
+/// request immediately.
+fn drain_responses(c: &mut Conn, stats: &mut LoadStats, req: &[u8], closed: bool, sending: bool) {
+    let mut pos = 0usize;
+    while let Some((st, len)) = parse_resp(&c.rbuf[pos..]) {
+        pos += len;
+        let ts = c.pending.pop_front();
+        match st {
+            STATUS_OK => {
+                stats.completed += 1;
+                if let Some(ts) = ts {
+                    stats.hist.record(ts.elapsed().as_nanos() as u64);
+                }
+            }
+            STATUS_OVERLOADED => stats.sheds += 1,
+            _ => stats.errors += 1,
+        }
+        if closed && sending {
+            c.wbuf.extend_from_slice(req);
+            c.pending.push_back(Instant::now());
+        }
+    }
+    if pos > 0 {
+        c.rbuf.drain(..pos);
+    }
+}
+
+fn thread_count() -> Option<u64> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    s.lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|rest| rest.trim().parse().ok())
+}
+
+/// Drive `nconns` connections against `addr` for `run_for`, then drain
+/// outstanding responses (bounded). Single thread, poller-based.
+fn run_load(
+    addr: SocketAddr,
+    nconns: usize,
+    mode: Mode,
+    run_for: Duration,
+    req: &[u8],
+) -> LoadStats {
+    let mut stats = LoadStats::new();
+    let mut poller = Poller::new().expect("poller");
+    let mut conns: Vec<Conn> = Vec::with_capacity(nconns);
+    let start = Instant::now();
+    for i in 0..nconns {
+        // pace the connect burst so the listen backlog never overflows
+        if i > 0 && i % 128 == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut attempt = 0;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if attempt < 3 => {
+                    attempt += 1;
+                    eprintln!("connect retry {attempt}: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => panic!("connect: {e}"),
+            }
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).expect("nonblocking");
+        poller
+            .register(fd_of(&stream), i, Interest::READ)
+            .expect("register");
+        let next_due = match mode {
+            Mode::Closed => start,
+            Mode::Open { interval } => start + interval.mul_f64(i as f64 / nconns as f64),
+        };
+        conns.push(Conn {
+            stream,
+            wbuf: Vec::new(),
+            wpos: 0,
+            rbuf: Vec::new(),
+            pending: VecDeque::new(),
+            next_due,
+            interest: Interest::READ,
+            done: false,
+            released: false,
+        });
+    }
+
+    let closed = matches!(mode, Mode::Closed);
+    let loop_start = Instant::now();
+    if closed {
+        for c in conns.iter_mut() {
+            c.wbuf.extend_from_slice(req);
+            c.pending.push_back(Instant::now());
+            flush(c);
+        }
+    }
+
+    let send_end = loop_start + run_for;
+    let sample_at = loop_start + run_for / 2;
+    let drain_end = send_end + Duration::from_secs(5);
+    let mut events: Vec<Event> = Vec::new();
+    let mut live = nconns;
+
+    loop {
+        let now = Instant::now();
+        let sending = now < send_end;
+        if stats.threads.is_none() && now >= sample_at {
+            stats.threads = thread_count();
+        }
+        if !sending {
+            let outstanding: usize = conns.iter().map(|c| c.pending.len()).sum();
+            if outstanding == 0 || live == 0 || now > drain_end {
+                break;
+            }
+        }
+
+        if sending {
+            if let Mode::Open { interval } = mode {
+                for c in conns.iter_mut() {
+                    if c.done {
+                        continue;
+                    }
+                    while c.next_due <= now {
+                        // bound client memory under overload: skip the
+                        // tick instead of queueing without limit
+                        if c.wbuf.len() - c.wpos > (1 << 20) || c.pending.len() >= 1024 {
+                            stats.skipped += 1;
+                        } else {
+                            c.wbuf.extend_from_slice(req);
+                            c.pending.push_back(c.next_due);
+                        }
+                        c.next_due += interval;
+                    }
+                    flush(c);
+                }
+            }
+        }
+
+        poller
+            .poll(&mut events, Duration::from_millis(1))
+            .expect("poll");
+        for ev in events.iter().copied() {
+            let i = ev.token;
+            if i >= conns.len() || conns[i].done {
+                continue;
+            }
+            let c = &mut conns[i];
+            if ev.readable {
+                read_some(c);
+                drain_responses(c, &mut stats, req, closed, sending);
+            }
+            if ev.writable || !c.wbuf.is_empty() {
+                flush(c);
+            }
+        }
+
+        // settle interest changes and dead connections
+        for i in 0..conns.len() {
+            let c = &mut conns[i];
+            if c.released {
+                continue;
+            }
+            if c.done {
+                poller.deregister(fd_of(&c.stream), i).ok();
+                stats.lost += c.pending.len() as u64;
+                c.pending.clear();
+                c.released = true;
+                live -= 1;
+                continue;
+            }
+            let want = Interest { read: true, write: c.wpos < c.wbuf.len() };
+            if want != c.interest {
+                poller.reregister(fd_of(&c.stream), i, want).ok();
+                c.interest = want;
+            }
+        }
+    }
+
+    stats.lost += conns.iter().map(|c| c.pending.len() as u64).sum::<u64>();
+    stats.elapsed_s = loop_start.elapsed().as_secs_f64();
+    stats
+}
+
+// ----------------------------------------------------------------- bench --
+
+fn stats_json(s: &LoadStats, conns: usize) -> String {
+    let (p50, p99, p999, mean, max) = match s.hist.summary() {
+        Some(h) => (h.p50, h.p99, h.p999, h.mean, h.max),
+        None => (0.0, 0.0, 0.0, 0.0, 0.0),
+    };
+    format!(
+        "{{\"conns\": {}, \"completed\": {}, \"sheds\": {}, \"errors\": {}, \
+         \"skipped\": {}, \"lost\": {}, \"rps\": {:.1}, \"p50_ns\": {:.0}, \
+         \"p99_ns\": {:.0}, \"p999_ns\": {:.0}, \"mean_ns\": {:.0}, \"max_ns\": {:.0}}}",
+        conns, s.completed, s.sheds, s.errors, s.skipped, s.lost,
+        s.rps(), p50, p99, p999, mean, max
+    )
+}
+
+fn report(label: &str, s: &LoadStats) {
+    let (p50, p99, p999) = match s.hist.summary() {
+        Some(h) => (h.p50, h.p99, h.p999),
+        None => (0.0, 0.0, 0.0),
+    };
+    println!(
+        "  {label:<14} {:>8.0} req/s  p50 {:>9}  p99 {:>9}  p999 {:>9}  \
+         sheds {}  errors {}  lost {}",
+        s.rps(),
+        fmt_ns(p50),
+        fmt_ns(p99),
+        fmt_ns(p999),
+        s.sheds,
+        s.errors,
+        s.lost,
+    );
+}
+
+fn build_model(rng: &mut Prng) -> CompressedModel {
+    let a = common::synthetic_vgg_archive(rng);
+    let ccfg = CompressionCfg {
+        fc_quant: Some((Kind::Cws, 8)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    CompressedModel::build(ModelKind::VggMnist, &a, &ccfg, rng).unwrap()
+}
+
+fn main() {
+    let quick = std::env::var("SHAM_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let backend = Poller::new().map(|p| p.backend_name()).unwrap_or("none");
+    println!(
+        "== coordinator_load: reactor serving tier ({} mode, {} poller) ==",
+        if quick { "quick" } else { "full" },
+        backend
+    );
+
+    let mut rng = Prng::seeded(0xC0FFEE);
+    let mut server = Server::new(ServerConfig { policy: Policy::default(), fc_threads: 1 });
+    let main_policy = Policy {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 4096,
+    };
+    server
+        .add_variant_pure_opts(
+            "vgg",
+            build_model(&mut rng),
+            VariantOpts { policy: Some(main_policy), replicas: 2 },
+        )
+        .unwrap();
+    // deliberately starved variant for the overload segment
+    let tiny_policy = Policy {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap: 1,
+    };
+    server
+        .add_variant_pure_opts(
+            "tiny",
+            build_model(&mut rng),
+            VariantOpts { policy: Some(tiny_policy), replicas: 1 },
+        )
+        .unwrap();
+    let server = Arc::new(server);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let stop2 = stop.clone();
+    let cfg = ReactorConfig { max_conns: 8192, ..Default::default() };
+    let handle = std::thread::spawn(move || {
+        reactor::serve("127.0.0.1:0", srv, cfg, stop2, move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let img: Vec<f32> = (0..PER).map(|_| rng.normal() as f32).collect();
+    let mut req_vgg = Vec::new();
+    frame::encode_request(&mut req_vgg, "vgg", &Input::Image(img.clone()));
+    let mut req_tiny = Vec::new();
+    frame::encode_request(&mut req_tiny, "tiny", &Input::Image(img));
+
+    let mut results: Vec<(String, String)> = Vec::new();
+
+    println!("-- closed loop (one in-flight request per connection) --");
+    let closed_conns: &[usize] = if quick { &[1, 8, 32] } else { &[1, 16, 64, 256] };
+    let closed_dur = Duration::from_millis(if quick { 200 } else { 1000 });
+    for &n in closed_conns {
+        let s = run_load(addr, n, Mode::Closed, closed_dur, &req_vgg);
+        report(&format!("c{n}"), &s);
+        results.push((format!("closed/c{n}"), stats_json(&s, n)));
+    }
+
+    println!("-- open loop (scheduled offered load, pipelined) --");
+    let open_conns = if quick { 64 } else { 1024 };
+    let rate = if quick { 500.0 } else { 4000.0 };
+    let interval = Duration::from_secs_f64(open_conns as f64 / rate);
+    let open_dur = Duration::from_millis(if quick { 600 } else { 3000 });
+    let open = run_load(addr, open_conns, Mode::Open { interval }, open_dur, &req_vgg);
+    report(&format!("c{open_conns}@{rate:.0}rps"), &open);
+    let threads = open.threads;
+    // the engine is single-threaded, so mid-run process threads are the
+    // server footprint: O(shards + workers), never O(connections)
+    let bounded_threads = threads.map_or(true, |t| t <= 64 && (t as usize) < open_conns.max(64));
+    println!(
+        "  threads mid-run: {} (conns: {open_conns}) -> bounded: {bounded_threads}",
+        threads.map(|t| t.to_string()).unwrap_or_else(|| "n/a".into()),
+    );
+    results.push((format!("open/c{open_conns}"), stats_json(&open, open_conns)));
+
+    println!("-- overload (starved variant: queue_cap 1, batch 1) --");
+    let shed = run_load(addr, 32, Mode::Closed, Duration::from_millis(200), &req_tiny);
+    report("tiny c32", &shed);
+    let sheds_on_overload =
+        shed.sheds > 0 && server.metrics.rejected_total.load(Ordering::Relaxed) > 0;
+    results.push(("overload/tiny_c32".into(), stats_json(&shed, 32)));
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+
+    let mut json = String::from("{\n  \"bench\": \"coordinator_load\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!("  \"poll_backend\": \"{backend}\",\n"));
+    json.push_str(&format!("  \"open_loop_conns\": {open_conns},\n"));
+    json.push_str(&format!(
+        "  \"threads_during_open_loop\": {},\n",
+        threads.map(|t| t.to_string()).unwrap_or_else(|| "null".into())
+    ));
+    json.push_str(&format!("  \"bounded_threads\": {bounded_threads},\n"));
+    json.push_str(&format!("  \"sheds_on_overload\": {sheds_on_overload},\n"));
+    json.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        json.push_str(&format!("    \"{k}\": {v}{sep}\n"));
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write("BENCH_coordinator.json", &json).expect("write BENCH_coordinator.json");
+    println!("wrote BENCH_coordinator.json");
+}

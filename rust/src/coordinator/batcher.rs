@@ -1,9 +1,17 @@
-//! Dynamic batcher: the per-variant queue + batch-forming loop.
+//! Dynamic batcher: the per-variant (per-replica) queue + batch-forming
+//! loop.
 //!
 //! Requests accumulate in a bounded queue; a batch is dispatched when
 //! either `max_batch` requests are waiting or the oldest request has
-//! waited `max_wait`. Admission control rejects on a full queue
-//! (backpressure to the caller) instead of queueing unboundedly.
+//! waited `max_wait` (the per-variant latency deadline). Admission
+//! control rejects on a full queue (backpressure to the caller) instead
+//! of queueing unboundedly.
+//!
+//! A request answers through a [`Responder`]: either a rendezvous
+//! channel (the blocking `Server::infer` path) or a boxed callback (the
+//! reactor path — the callback enqueues the encoded response on the
+//! owning connection's shard and wakes its poller, so no reactor thread
+//! ever blocks on an inference).
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -20,14 +28,46 @@ pub enum Input {
     Tokens { lig: Vec<i32>, prot: Vec<i32> },
 }
 
-/// A queued request: payload + response channel + enqueue timestamp.
+/// How a finished request delivers its result.
+pub enum Responder {
+    /// Blocking callers: send into a 1-slot rendezvous channel.
+    Channel(SyncSender<anyhow::Result<Vec<f32>>>),
+    /// Event-driven callers: invoke a completion callback (must not
+    /// block; the reactor's pushes onto a mutex-guarded completion list
+    /// and wakes the shard poller).
+    Callback(Box<dyn FnOnce(anyhow::Result<Vec<f32>>) + Send>),
+}
+
+impl Responder {
+    /// Deliver the result, consuming the responder.
+    pub fn respond(self, r: anyhow::Result<Vec<f32>>) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Responder::Callback(f) => f(r),
+        }
+    }
+}
+
+impl std::fmt::Debug for Responder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Responder::Channel(_) => f.write_str("Responder::Channel"),
+            Responder::Callback(_) => f.write_str("Responder::Callback"),
+        }
+    }
+}
+
+/// A queued request: payload + responder + enqueue timestamp.
+#[derive(Debug)]
 pub struct Request {
     pub input: Input,
-    pub resp: SyncSender<anyhow::Result<Vec<f32>>>,
+    pub resp: Responder,
     pub enqueued: Instant,
 }
 
-/// Handle used by frontends to submit work to one variant's queue.
+/// Handle used by frontends to submit work to one replica's queue.
 #[derive(Clone)]
 pub struct QueueHandle {
     tx: SyncSender<Request>,
@@ -35,30 +75,61 @@ pub struct QueueHandle {
 }
 
 impl QueueHandle {
-    /// Submit a request; returns the response receiver, or `None` if the
-    /// queue is full (backpressure) or shut down.
+    /// Enqueue without touching the request counters (used by the
+    /// server's replica-failover loop, which counts a request once no
+    /// matter how many replicas it probes). On a full or closed queue
+    /// the whole request is handed back.
+    pub fn try_enqueue(&self, req: Request) -> Result<(), Request> {
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.queue_enter();
+                Ok(())
+            }
+            Err(TrySendError::Full(req)) | Err(TrySendError::Disconnected(req)) => Err(req),
+        }
+    }
+
+    /// Submit a request with an arbitrary responder. On a full or
+    /// closed queue the input and responder are handed back (`Err`) so
+    /// the caller can answer "overloaded" itself; the shed is counted.
+    pub fn submit_with(
+        &self,
+        input: Input,
+        resp: Responder,
+    ) -> Result<(), (Input, Responder)> {
+        use std::sync::atomic::Ordering;
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let req = Request { input, resp, enqueued: Instant::now() };
+        match self.try_enqueue(req) {
+            Ok(()) => Ok(()),
+            Err(req) => {
+                self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+                Err((req.input, req.resp))
+            }
+        }
+    }
+
+    /// Blocking-caller convenience: submit and get the response
+    /// receiver, or `None` if the queue is full (backpressure) or shut
+    /// down.
     pub fn submit(
         &self,
         input: Input,
     ) -> Option<std::sync::mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
-        use std::sync::atomic::Ordering;
-        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { input, resp: rtx, enqueued: Instant::now() };
-        match self.tx.try_send(req) {
+        match self.submit_with(input, Responder::Channel(rtx)) {
             Ok(()) => Some(rrx),
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+            Err(_) => None,
         }
     }
 }
 
-/// Batching policy knobs.
+/// Batching policy knobs (per variant; replicas share their variant's).
 #[derive(Debug, Clone, Copy)]
 pub struct Policy {
     pub max_batch: usize,
+    /// Latency deadline: a non-full batch dispatches once its oldest
+    /// request has waited this long.
     pub max_wait: Duration,
     pub queue_cap: usize,
 }
@@ -73,7 +144,7 @@ impl Default for Policy {
     }
 }
 
-/// Create the queue pair for one variant.
+/// Create the queue pair for one variant replica.
 pub fn queue(policy: Policy, metrics: Arc<Metrics>) -> (QueueHandle, Receiver<Request>) {
     let (tx, rx) = sync_channel(policy.queue_cap);
     (QueueHandle { tx, metrics }, rx)
@@ -81,7 +152,9 @@ pub fn queue(policy: Policy, metrics: Arc<Metrics>) -> (QueueHandle, Receiver<Re
 
 /// Collect the next batch from `rx` under `policy`. Blocks for the first
 /// request; then fills up to `max_batch` until `max_wait` has elapsed
-/// since the batch opened. Returns `None` when the channel closed.
+/// since the batch opened. Returns `None` when the channel closed *and*
+/// drained — on shutdown every queued request is still formed into
+/// batches and answered before the worker exits.
 pub fn next_batch(rx: &Receiver<Request>, policy: &Policy) -> Option<Vec<Request>> {
     let first = rx.recv().ok()?;
     let opened = Instant::now();
@@ -161,6 +234,44 @@ mod tests {
         let policy = Policy::default();
         let (h, rx) = queue(policy, metrics);
         drop(h);
+        assert!(next_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
+    fn shed_returns_the_callback_responder() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy { queue_cap: 1, ..Default::default() };
+        let (h, _rx) = queue(policy, metrics.clone());
+        assert!(h
+            .submit_with(dummy_input(), Responder::Callback(Box::new(|_| {})))
+            .is_ok());
+        let hit = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let hit2 = hit.clone();
+        match h.submit_with(
+            dummy_input(),
+            Responder::Callback(Box::new(move |r| {
+                assert!(r.is_err());
+                hit2.store(true, std::sync::atomic::Ordering::SeqCst);
+            })),
+        ) {
+            Ok(()) => panic!("second submit must shed"),
+            Err((_input, resp)) => resp.respond(Err(anyhow::anyhow!("overloaded"))),
+        }
+        assert!(hit.load(std::sync::atomic::Ordering::SeqCst));
+        assert_eq!(metrics.queue_depth.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drains_queued_requests_after_close() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = Policy { max_batch: 2, ..Default::default() };
+        let (h, rx) = queue(policy, metrics);
+        let _r1 = h.submit(dummy_input()).unwrap();
+        let _r2 = h.submit(dummy_input()).unwrap();
+        let _r3 = h.submit(dummy_input()).unwrap();
+        drop(h); // front end gone; queued work must still be served
+        assert_eq!(next_batch(&rx, &policy).unwrap().len(), 2);
+        assert_eq!(next_batch(&rx, &policy).unwrap().len(), 1);
         assert!(next_batch(&rx, &policy).is_none());
     }
 }

@@ -1,0 +1,383 @@
+//! Wire protocol v2: the length-prefixed request/response frames spoken
+//! by the reactor front-end and the blocking [`crate::coordinator::tcp::Client`].
+//!
+//! Request frame (little-endian, unchanged from v1):
+//!   u16  variant-name length, then the name bytes
+//!   u8   input kind: 0 = image, 1 = tokens
+//!   kind 0: u32 n, then n f32
+//!   kind 1: u32 n_lig, n_lig i32, u32 n_prot, n_prot i32
+//! Response frame (v2 adds status 2):
+//!   u8   status: 0 = ok, 1 = error, 2 = overloaded (load shed)
+//!   ok:         u32 n, then n f32 (model outputs)
+//!   error/shed: u32 len, then utf-8 message
+//!
+//! v2 hardens the decode side against untrusted lengths: payload sizes
+//! are capped (`max_frame_bytes`, default 1 MiB) *before* any
+//! allocation, and an oversized-but-well-framed request yields a clean
+//! error frame plus a [`Resync`] recipe so the connection can skip the
+//! declared payload and keep serving instead of being torn down. A v1
+//! client still interoperates: it reads any non-zero status as an error
+//! message, so status 2 degrades to an "overloaded" error string.
+
+use crate::coordinator::batcher::Input;
+
+/// Response status byte: request served, payload follows.
+pub const STATUS_OK: u8 = 0;
+/// Response status byte: request failed, utf-8 message follows.
+pub const STATUS_ERR: u8 = 1;
+/// Response status byte (v2): request shed by admission control before
+/// reaching a worker — retry later; utf-8 message follows.
+pub const STATUS_OVERLOADED: u8 = 2;
+
+/// Default cap on a single request's payload bytes (each length-prefixed
+/// vector is checked against this before allocating).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// How a connection can recover framing after a rejected request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resync {
+    /// Skip exactly this many payload bytes; the next byte starts a
+    /// fresh frame.
+    Skip(u64),
+    /// Skip `first` payload bytes, then read a little-endian u32 count
+    /// and skip a further `count * 4` bytes (the token frame's second
+    /// vector), after which the next byte starts a fresh frame.
+    SkipThenLenPrefixed(u64),
+}
+
+/// Outcome of trying to parse one request frame from a byte buffer.
+#[derive(Debug)]
+pub enum Parse {
+    /// Not enough bytes buffered yet — read more and retry.
+    Incomplete,
+    /// One complete, well-formed request; `consumed` bytes were used.
+    Request {
+        name: String,
+        input: Input,
+        consumed: usize,
+    },
+    /// A protocol violation. `consumed` buffer bytes belong to the bad
+    /// frame's header; `resync` (when `Some`) tells the connection how
+    /// to skip the rest of the frame and keep serving. `None` means
+    /// framing is unrecoverable: reply, flush, and close.
+    Malformed {
+        reason: String,
+        consumed: usize,
+        resync: Option<Resync>,
+    },
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.buf.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|b| u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return Parse::Incomplete,
+        }
+    };
+}
+
+/// Try to parse one request frame from the front of `buf` without ever
+/// allocating more than `max_frame_bytes` for a payload vector.
+pub fn parse_request(buf: &[u8], max_frame_bytes: usize) -> Parse {
+    let mut c = Cursor { buf, pos: 0 };
+    let nlen = need!(c.u16()) as usize;
+    let name_bytes = need!(c.take(nlen));
+    let name = match std::str::from_utf8(name_bytes) {
+        Ok(s) => s.to_string(),
+        // The rest of the frame is still structurally parseable, but a
+        // non-utf8 name suggests a desynced or hostile peer — close.
+        Err(_) => {
+            return Parse::Malformed {
+                reason: "variant name not utf-8".into(),
+                consumed: c.pos,
+                resync: None,
+            }
+        }
+    };
+    let kind = need!(c.u8());
+    match kind {
+        0 => {
+            let n = need!(c.u32()) as u64;
+            let bytes = n * 4;
+            if bytes > max_frame_bytes as u64 {
+                return Parse::Malformed {
+                    reason: format!(
+                        "image payload {bytes} bytes exceeds the {max_frame_bytes}-byte frame cap"
+                    ),
+                    consumed: c.pos,
+                    resync: Some(Resync::Skip(bytes)),
+                };
+            }
+            let data = need!(c.take(bytes as usize));
+            let v: Vec<f32> = data
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Parse::Request { name, input: Input::Image(v), consumed: c.pos }
+        }
+        1 => {
+            let nl = need!(c.u32()) as u64;
+            let lig_bytes = nl * 4;
+            if lig_bytes > max_frame_bytes as u64 {
+                return Parse::Malformed {
+                    reason: format!(
+                        "token payload {lig_bytes} bytes exceeds the {max_frame_bytes}-byte frame cap"
+                    ),
+                    consumed: c.pos,
+                    // after the lig vector comes `u32 n_prot` + payload
+                    resync: Some(Resync::SkipThenLenPrefixed(lig_bytes)),
+                };
+            }
+            let lig_data = need!(c.take(lig_bytes as usize));
+            let np = need!(c.u32()) as u64;
+            let prot_bytes = np * 4;
+            if prot_bytes > max_frame_bytes as u64 {
+                return Parse::Malformed {
+                    reason: format!(
+                        "token payload {prot_bytes} bytes exceeds the {max_frame_bytes}-byte frame cap"
+                    ),
+                    consumed: c.pos,
+                    resync: Some(Resync::Skip(prot_bytes)),
+                };
+            }
+            let prot_data = need!(c.take(prot_bytes as usize));
+            let de = |d: &[u8]| -> Vec<i32> {
+                d.chunks_exact(4)
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect()
+            };
+            Parse::Request {
+                name,
+                input: Input::Tokens { lig: de(lig_data), prot: de(prot_data) },
+                consumed: c.pos,
+            }
+        }
+        k => Parse::Malformed {
+            // the payload length depends on the kind — framing is lost
+            reason: format!("unknown input kind {k}"),
+            consumed: c.pos,
+            resync: None,
+        },
+    }
+}
+
+/// Append an encoded request frame (the client-side encoder).
+pub fn encode_request(out: &mut Vec<u8>, variant: &str, input: &Input) {
+    let nb = variant.as_bytes();
+    out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+    out.extend_from_slice(nb);
+    match input {
+        Input::Image(v) => {
+            out.push(0);
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Input::Tokens { lig, prot } => {
+            out.push(1);
+            out.extend_from_slice(&(lig.len() as u32).to_le_bytes());
+            for x in lig {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out.extend_from_slice(&(prot.len() as u32).to_le_bytes());
+            for x in prot {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Append an ok-response frame.
+pub fn encode_ok(out: &mut Vec<u8>, vals: &[f32]) {
+    out.push(STATUS_OK);
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append an error-class response frame (`STATUS_ERR` or
+/// `STATUS_OVERLOADED`) carrying a utf-8 message.
+pub fn encode_status(out: &mut Vec<u8>, status: u8, msg: &str) {
+    debug_assert!(status != STATUS_OK);
+    out.push(status);
+    let b = msg.as_bytes();
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image_frame(name: &str, vals: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        encode_request(&mut b, name, &Input::Image(vals.to_vec()));
+        b
+    }
+
+    #[test]
+    fn frame_roundtrip_image() {
+        let buf = image_frame("mnist", &[1.5, -2.5]);
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Request { name, input, consumed } => {
+                assert_eq!(name, "mnist");
+                assert_eq!(consumed, buf.len());
+                match input {
+                    Input::Image(v) => assert_eq!(v, vec![1.5, -2.5]),
+                    _ => panic!(),
+                }
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_tokens() {
+        let mut buf = Vec::new();
+        encode_request(
+            &mut buf,
+            "kiba",
+            &Input::Tokens { lig: vec![3, 4], prot: vec![9] },
+        );
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Request { name, input, consumed } => {
+                assert_eq!(name, "kiba");
+                assert_eq!(consumed, buf.len());
+                match input {
+                    Input::Tokens { lig, prot } => {
+                        assert_eq!(lig, vec![3, 4]);
+                        assert_eq!(prot, vec![9]);
+                    }
+                    _ => panic!(),
+                }
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_incomplete_not_errors() {
+        let buf = image_frame("mnist", &[1.0, 2.0, 3.0]);
+        for cut in 0..buf.len() {
+            match parse_request(&buf[..cut], DEFAULT_MAX_FRAME_BYTES) {
+                Parse::Incomplete => {}
+                p => panic!("prefix of {cut} bytes parsed as {p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back_consume_exactly_one() {
+        let mut buf = image_frame("a", &[1.0]);
+        let first = buf.len();
+        buf.extend_from_slice(&image_frame("b", &[2.0]));
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Request { name, consumed, .. } => {
+                assert_eq!(name, "a");
+                assert_eq!(consumed, first);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_kind_fatally() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(7); // bogus kind
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Malformed { resync: None, .. } => {}
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_image_is_rejected_before_allocation_with_resync() {
+        // header claims u32::MAX floats — must NOT allocate ~16 GiB
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(0);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Malformed { consumed, resync, .. } => {
+                assert_eq!(consumed, buf.len());
+                assert_eq!(resync, Some(Resync::Skip(u32::MAX as u64 * 4)));
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_lig_resyncs_through_second_vector() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(1);
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        match parse_request(&buf, 1024) {
+            Parse::Malformed { resync, .. } => {
+                assert_eq!(
+                    resync,
+                    Some(Resync::SkipThenLenPrefixed(4_000_000))
+                );
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_at_cap_is_accepted() {
+        let n = DEFAULT_MAX_FRAME_BYTES / 4;
+        let buf = image_frame("m", &vec![0.25; n]);
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Request { input: Input::Image(v), .. } => assert_eq!(v.len(), n),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn response_encoding() {
+        let mut buf = Vec::new();
+        encode_ok(&mut buf, &[1.0, 2.0]);
+        assert_eq!(buf[0], STATUS_OK);
+        assert_eq!(u32::from_le_bytes(buf[1..5].try_into().unwrap()), 2);
+        let mut ebuf = Vec::new();
+        encode_status(&mut ebuf, STATUS_ERR, "nope");
+        assert_eq!(ebuf[0], STATUS_ERR);
+        assert_eq!(&ebuf[5..], b"nope");
+        let mut obuf = Vec::new();
+        encode_status(&mut obuf, STATUS_OVERLOADED, "shed");
+        assert_eq!(obuf[0], STATUS_OVERLOADED);
+        assert_eq!(&obuf[5..], b"shed");
+    }
+}

@@ -1,25 +1,161 @@
-//! Serving metrics: lock-free counters + a bounded latency reservoir,
-//! snapshotted for the CLI / bench reports.
+//! Serving metrics: lock-free counters plus log-bucketed latency/batch
+//! histograms, snapshotted for the CLI / bench reports.
+//!
+//! The pre-reactor implementation kept a bounded `Mutex<Vec<f64>>`
+//! reservoir that silently stopped recording after 65,536 samples — a
+//! long-running server reported percentiles of its *first minute*. The
+//! [`LogHistogram`] replacing it never saturates: values are bucketed
+//! geometrically (16 sub-buckets per power of two ⇒ ≤ 6.25% relative
+//! error), recording is a single relaxed `fetch_add`, and quantiles are
+//! computed from the bucket counts at snapshot time, so p50/p99/p999
+//! stay true over days of traffic with no locks on the hot path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
-use crate::util::stats::Summary;
+/// Sub-bucket resolution: 2^4 = 16 linear sub-buckets per octave.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Covers values up to 2^44 ns ≈ 4.9 hours; larger values clamp into
+/// the top bucket (still counted, never dropped).
+const GROUPS: usize = 44 - SUB_BITS as usize + 1;
+const BUCKETS: usize = SUB + GROUPS * SUB;
 
-const RESERVOIR_CAP: usize = 65_536;
+/// Lock-free, never-saturating histogram over `u64` values with
+/// bounded relative error. Shared freely across threads; all methods
+/// take `&self`.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
 
-/// Metrics shared across coordinator threads.
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// Quantile snapshot of one histogram.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSummary {
+    pub n: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize; // exact below one octave of sub-buckets
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let group = (msb - SUB_BITS + 1) as usize;
+    let mantissa = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (group * SUB + mantissa).min(BUCKETS - 1)
+}
+
+/// Midpoint of a bucket's value range (its representative value).
+fn bucket_value(idx: usize) -> f64 {
+    if idx < SUB {
+        return idx as f64;
+    }
+    let group = idx / SUB;
+    let mantissa = (idx % SUB) as u64;
+    let width = 1u64 << (group - 1);
+    let lower = (SUB as u64 + mantissa) * width;
+    lower as f64 + width as f64 / 2.0
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// q in [0,1]; `None` when empty. Exact rank over the bucket
+    /// counts, bucket-midpoint value (≤ 6.25% relative error).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        // rank of the q-quantile among `total` ordered samples
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Some(bucket_value(i));
+            }
+        }
+        Some(bucket_value(BUCKETS - 1))
+    }
+
+    pub fn summary(&self) -> Option<HistSummary> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(HistSummary {
+            n,
+            mean: self.sum.load(Ordering::Relaxed) as f64 / n as f64,
+            p50: self.quantile(0.5).unwrap(),
+            p95: self.quantile(0.95).unwrap(),
+            p99: self.quantile(0.99).unwrap(),
+            p999: self.quantile(0.999).unwrap(),
+            max: self.max.load(Ordering::Relaxed) as f64,
+        })
+    }
+}
+
+/// Metrics shared across coordinator threads. Every field is lock-free;
+/// the whole struct is safe to hammer from reactor shards, batcher
+/// queues, and worker threads concurrently.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_total: AtomicU64,
     pub responses_total: AtomicU64,
+    /// Requests shed by admission control (bounded queue full /
+    /// connection cap) — answered with status 2, never queued.
     pub rejected_total: AtomicU64,
     pub batches_total: AtomicU64,
     pub batched_requests_total: AtomicU64,
-    /// Per-request end-to-end latency in ns (bounded reservoir).
-    latencies_ns: Mutex<Vec<f64>>,
-    /// Batch sizes (bounded reservoir).
-    batch_sizes: Mutex<Vec<f64>>,
+    /// Malformed / oversized frames answered with an error frame.
+    pub protocol_errors_total: AtomicU64,
+    /// Reactor connection counters.
+    pub conns_open: AtomicU64,
+    pub conns_total: AtomicU64,
+    /// Connections refused at the connection cap.
+    pub conns_refused_total: AtomicU64,
+    /// Requests currently queued across all variant queues (gauge).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_depth_peak: AtomicU64,
+    /// Per-request end-to-end latency in ns.
+    latency: LogHistogram,
+    /// Dispatched batch sizes.
+    batch_sizes: LogHistogram,
 }
 
 impl Metrics {
@@ -29,10 +165,7 @@ impl Metrics {
 
     #[inline]
     pub fn record_latency_ns(&self, ns: f64) {
-        let mut l = self.latencies_ns.lock().unwrap();
-        if l.len() < RESERVOIR_CAP {
-            l.push(ns);
-        }
+        self.latency.record(ns.max(0.0) as u64);
     }
 
     #[inline]
@@ -40,27 +173,49 @@ impl Metrics {
         self.batches_total.fetch_add(1, Ordering::Relaxed);
         self.batched_requests_total
             .fetch_add(size as u64, Ordering::Relaxed);
-        let mut b = self.batch_sizes.lock().unwrap();
-        if b.len() < RESERVOIR_CAP {
-            b.push(size as f64);
+        self.batch_sizes.record(size as u64);
+    }
+
+    /// A request entered a variant queue.
+    #[inline]
+    pub fn queue_enter(&self) {
+        let d = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_depth_peak.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// `n` requests left a variant queue (formed into a batch).
+    #[inline]
+    pub fn queue_leave(&self, n: usize) {
+        // saturating: a racing snapshot must never underflow the gauge
+        let mut cur = self.queue_depth.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n as u64);
+            match self.queue_depth.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
         }
     }
 
-    pub fn latency_summary(&self) -> Option<Summary> {
-        let l = self.latencies_ns.lock().unwrap();
-        if l.is_empty() {
-            None
-        } else {
-            Some(Summary::from(&l))
-        }
+    pub fn latency_summary(&self) -> Option<HistSummary> {
+        self.latency.summary()
+    }
+
+    pub fn batch_summary(&self) -> Option<HistSummary> {
+        self.batch_sizes.summary()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batch_sizes.lock().unwrap();
-        if b.is_empty() {
+        let b = self.batches_total.load(Ordering::Relaxed);
+        if b == 0 {
             0.0
         } else {
-            b.iter().sum::<f64>() / b.len() as f64
+            self.batched_requests_total.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
 
@@ -71,17 +226,24 @@ impl Metrics {
         let resp = self.responses_total.load(Ordering::Relaxed);
         let rej = self.rejected_total.load(Ordering::Relaxed);
         let batches = self.batches_total.load(Ordering::Relaxed);
+        let perr = self.protocol_errors_total.load(Ordering::Relaxed);
+        let copen = self.conns_open.load(Ordering::Relaxed);
+        let ctotal = self.conns_total.load(Ordering::Relaxed);
+        let qd = self.queue_depth.load(Ordering::Relaxed);
+        let qpk = self.queue_depth_peak.load(Ordering::Relaxed);
         let mut s = format!(
-            "requests={req} responses={resp} rejected={rej} batches={batches} \
-             mean_batch={:.2}",
+            "requests={req} responses={resp} shed={rej} batches={batches} \
+             mean_batch={:.2} proto_errs={perr} conns={copen}/{ctotal} \
+             queue={qd} (peak {qpk})",
             self.mean_batch_size()
         );
         if let Some(lat) = self.latency_summary() {
             s.push_str(&format!(
-                " latency[p50={} p95={} p99={} max={}]",
+                " latency[p50={} p95={} p99={} p999={} max={}]",
                 fmt_ns(lat.p50),
                 fmt_ns(lat.p95),
                 fmt_ns(lat.p99),
+                fmt_ns(lat.p999),
                 fmt_ns(lat.max),
             ));
         }
@@ -94,7 +256,69 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_and_reservoirs() {
+    fn bucket_index_is_monotonic_and_total() {
+        let mut last = 0usize;
+        let mut v = 0u64;
+        // exhaustive over small values, geometric over large ones
+        while v < 1 << 20 {
+            let idx = bucket_index(v);
+            assert!(idx >= last, "index regressed at {v}");
+            assert!(idx < BUCKETS);
+            last = idx;
+            v += 1 + v / 64;
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_value_bounds_relative_error() {
+        for v in [1u64, 15, 16, 17, 100, 1000, 65_537, 1_000_000, 123_456_789] {
+            let est = bucket_value(bucket_index(v));
+            let rel = (est - v as f64).abs() / v as f64;
+            assert!(rel <= 1.0 / SUB as f64, "v={v} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantiles_of_a_known_distribution() {
+        let h = LogHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000); // 1µs .. 1ms uniform
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 1000);
+        let check = |got: f64, want: f64| {
+            assert!(
+                (got - want).abs() / want < 0.10,
+                "got {got}, want ~{want}"
+            );
+        };
+        check(s.p50, 500_000.0);
+        check(s.p99, 990_000.0);
+        check(s.p999, 999_000.0);
+        check(s.max, 1_000_000.0);
+        check(s.mean, 500_500.0);
+    }
+
+    #[test]
+    fn histogram_never_saturates() {
+        // the old reservoir stopped at 65,536 samples: a later regime
+        // change was invisible. Record 100k fast samples then 100k slow
+        // ones — p50 must reflect the mixture, p99 the slow half.
+        let h = LogHistogram::new();
+        for _ in 0..100_000 {
+            h.record(1_000);
+        }
+        for _ in 0..100_000 {
+            h.record(1_000_000);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 200_000);
+        assert!(s.p99 > 900_000.0, "p99 {0} ignores the slow half", s.p99);
+    }
+
+    #[test]
+    fn counters_and_histograms() {
         let m = Metrics::new();
         m.requests_total.fetch_add(3, Ordering::Relaxed);
         m.record_batch(4);
@@ -110,6 +334,21 @@ mod tests {
         let text = m.render();
         assert!(text.contains("requests=3"));
         assert!(text.contains("mean_batch=3.00"));
+        assert!(text.contains("p999="));
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_peak_and_never_underflows() {
+        let m = Metrics::new();
+        m.queue_enter();
+        m.queue_enter();
+        m.queue_enter();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 3);
+        m.queue_leave(2);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        m.queue_leave(5); // over-leave must clamp, not wrap
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(m.queue_depth_peak.load(Ordering::Relaxed), 3);
     }
 
     #[test]

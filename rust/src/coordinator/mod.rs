@@ -1,13 +1,19 @@
 //! L3 coordinator: the serving layer that runs compressed models behind
-//! a dynamic batcher — router over model variants, per-variant worker
-//! threads owning PJRT engines, admission control, metrics, and a
-//! std-net TCP front-end. Python never runs on this path.
+//! a dynamic batcher — router over model variants, per-variant replica
+//! workers owning PJRT engines (or the pure-Rust pipeline), admission
+//! control with load shedding, lock-free metrics, and an event-driven
+//! sharded TCP front-end (epoll-backed reactor; portable fallback).
+//! Python never runs on this path.
 
 pub mod batcher;
+pub mod frame;
 pub mod metrics;
+pub mod poll;
+pub mod reactor;
 pub mod server;
 pub mod tcp;
 
-pub use batcher::{Input, Policy};
-pub use metrics::Metrics;
-pub use server::{Server, ServerConfig};
+pub use batcher::{Input, Policy, Responder};
+pub use metrics::{HistSummary, LogHistogram, Metrics};
+pub use reactor::ReactorConfig;
+pub use server::{Server, ServerConfig, SubmitOutcome, VariantOpts};

@@ -1,0 +1,512 @@
+//! Tiny readiness-polling abstraction for the reactor (no tokio/mio in
+//! the offline registry).
+//!
+//! Two interchangeable backends behind one [`Poller`] type:
+//!
+//! - **epoll** (Linux): raw `extern "C"` FFI onto `epoll_create1` /
+//!   `epoll_ctl` / `epoll_wait` plus an `eventfd`-backed [`Waker`] —
+//!   level-triggered, O(ready) wakeups, thousands of fds per shard.
+//! - **scan** (portable fallback, any platform / `SHAM_PORTABLE_POLL=1`):
+//!   keeps the registered token set and, after a short condvar wait
+//!   (woken early by its [`Waker`]), reports every registration as ready
+//!   per its interest. Spurious readiness is safe by construction — all
+//!   reactor I/O is non-blocking and treats `WouldBlock` as "not yet".
+//!
+//! The epoll backend is also resilient to spurious events, so reactor
+//! code is written once against level-triggered may-be-ready semantics.
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Opaque per-registration identifier chosen by the caller (the
+/// reactor uses connection-slab indices; `usize::MAX` is reserved for
+/// the internal waker).
+pub type Token = usize;
+
+pub(crate) const WAKE_TOKEN: Token = usize::MAX;
+
+/// Which readiness directions a registration cares about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const BOTH: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness event out of [`Poller::poll`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: Token,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Raw socket handle as the poller sees it. On unix this is the real
+/// file descriptor; elsewhere it is ignored (the scan backend tracks
+/// tokens only), so a dummy value is fine.
+pub type Fd = i32;
+
+/// Extract the poller-facing fd of any socket-like std type.
+#[cfg(unix)]
+pub fn fd_of<T: std::os::unix::io::AsRawFd>(s: &T) -> Fd {
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn fd_of<T>(_s: &T) -> Fd {
+    -1
+}
+
+/// Cross-thread wakeup handle: `wake()` makes a concurrent or future
+/// `poll` return promptly. Cheap to clone, safe after the poller is
+/// gone (a wake then simply has no listener).
+#[derive(Clone)]
+pub struct Waker {
+    inner: WakerInner,
+}
+
+#[derive(Clone)]
+enum WakerInner {
+    #[cfg(target_os = "linux")]
+    EventFd(Arc<OwnedFd>),
+    Flag(Arc<WakeFlag>),
+}
+
+struct WakeFlag {
+    woken: Mutex<bool>,
+    cv: Condvar,
+    pending: AtomicBool,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        match &self.inner {
+            #[cfg(target_os = "linux")]
+            WakerInner::EventFd(fd) => {
+                let one: u64 = 1;
+                // a full eventfd counter already guarantees a wakeup
+                unsafe {
+                    sys::write(fd.0, (&one as *const u64).cast(), 8);
+                }
+            }
+            WakerInner::Flag(f) => {
+                f.pending.store(true, Ordering::SeqCst);
+                let mut g = f.woken.lock().unwrap();
+                *g = true;
+                f.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Readiness poller: epoll on Linux, portable scan elsewhere (or when
+/// forced). Construct per event-loop thread; [`Waker`]s may be shared.
+pub enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Scan(ScanPoller),
+}
+
+impl Poller {
+    /// Platform default backend; `SHAM_PORTABLE_POLL=1` forces the
+    /// portable scan backend even on Linux (used by tests to cover both).
+    pub fn new() -> io::Result<Poller> {
+        let force = std::env::var("SHAM_PORTABLE_POLL")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if force {
+            return Ok(Poller::portable());
+        }
+        #[cfg(target_os = "linux")]
+        {
+            EpollPoller::new().map(Poller::Epoll)
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Ok(Poller::portable())
+        }
+    }
+
+    /// The portable scan backend, explicitly.
+    pub fn portable() -> Poller {
+        Poller::Scan(ScanPoller::new())
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(_) => "epoll",
+            Poller::Scan(_) => "scan",
+        }
+    }
+
+    pub fn waker(&self) -> Waker {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => Waker { inner: WakerInner::EventFd(p.wake_fd.clone()) },
+            Poller::Scan(p) => Waker { inner: WakerInner::Flag(p.flag.clone()) },
+        }
+    }
+
+    pub fn register(&mut self, fd: Fd, token: Token, interest: Interest) -> io::Result<()> {
+        assert_ne!(token, WAKE_TOKEN, "token {WAKE_TOKEN} is reserved");
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(sys::EPOLL_CTL_ADD, fd, token, interest),
+            Poller::Scan(p) => {
+                p.members.insert(token, interest);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn reregister(&mut self, fd: Fd, token: Token, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(sys::EPOLL_CTL_MOD, fd, token, interest),
+            Poller::Scan(p) => {
+                p.members.insert(token, interest);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn deregister(&mut self, fd: Fd, token: Token) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(sys::EPOLL_CTL_DEL, fd, token, Interest::READ),
+            Poller::Scan(p) => {
+                p.members.remove(&token);
+                Ok(())
+            }
+        }
+    }
+
+    /// Wait up to `timeout` for readiness, filling `events` (cleared
+    /// first). Returns `true` when a [`Waker`] fired — wake bookkeeping
+    /// is drained internally and never surfaces as an event.
+    pub fn poll(&mut self, events: &mut Vec<Event>, timeout: Duration) -> io::Result<bool> {
+        events.clear();
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.poll(events, timeout),
+            Poller::Scan(p) => p.poll(events, timeout),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- scan --
+
+/// Portable fallback backend: short condvar wait, then report every
+/// registration as ready for its interest (spurious-safe over
+/// non-blocking sockets). Caps the wait at 1 ms so socket readiness —
+/// which cannot signal the condvar — is noticed promptly.
+pub struct ScanPoller {
+    members: HashMap<Token, Interest>,
+    flag: Arc<WakeFlag>,
+}
+
+impl ScanPoller {
+    fn new() -> ScanPoller {
+        ScanPoller {
+            members: HashMap::new(),
+            flag: Arc::new(WakeFlag {
+                woken: Mutex::new(false),
+                cv: Condvar::new(),
+                pending: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    fn poll(&mut self, events: &mut Vec<Event>, timeout: Duration) -> io::Result<bool> {
+        let wait = timeout.min(Duration::from_millis(1));
+        let mut g = self.flag.woken.lock().unwrap();
+        if !*g && !wait.is_zero() {
+            let (g2, _timed_out) = self.flag.cv.wait_timeout(g, wait).unwrap();
+            g = g2;
+        }
+        let woken = *g;
+        *g = false;
+        drop(g);
+        self.flag.pending.store(false, Ordering::SeqCst);
+        for (&token, &i) in &self.members {
+            events.push(Event { token, readable: i.read, writable: i.write });
+        }
+        Ok(woken)
+    }
+}
+
+// --------------------------------------------------------------- epoll --
+
+#[cfg(target_os = "linux")]
+pub use linux::EpollPoller;
+
+#[cfg(target_os = "linux")]
+use linux::{sys, OwnedFd};
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::{Event, Interest, Token, WAKE_TOKEN};
+    use std::io;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Raw syscall surface (the offline registry has no libc crate; these
+    /// are the stable kernel/libc symbols, declared directly).
+    pub(super) mod sys {
+        use std::os::raw::{c_int, c_uint, c_void};
+
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLL_CLOEXEC: c_int = 0x80000;
+        pub const EFD_CLOEXEC: c_int = 0x80000;
+        pub const EFD_NONBLOCK: c_int = 0x800;
+
+        /// Kernel ABI: packed on x86_64 only (`EPOLL_PACKED`).
+        #[repr(C)]
+        #[cfg_attr(target_arch = "x86_64", repr(packed))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout_ms: c_int,
+            ) -> c_int;
+            pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+            pub fn close(fd: c_int) -> c_int;
+            pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+            pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        }
+    }
+
+    /// An fd we own and close on drop (epoll instance, eventfd).
+    pub(super) struct OwnedFd(pub(super) i32);
+
+    impl Drop for OwnedFd {
+        fn drop(&mut self) {
+            unsafe {
+                sys::close(self.0);
+            }
+        }
+    }
+
+    pub struct EpollPoller {
+        ep: OwnedFd,
+        pub(super) wake_fd: Arc<OwnedFd>,
+        buf: Vec<sys::EpollEvent>,
+    }
+
+    fn events_mask(i: Interest) -> u32 {
+        let mut m = 0;
+        if i.read {
+            m |= sys::EPOLLIN;
+        }
+        if i.write {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    impl EpollPoller {
+        pub(super) fn new() -> io::Result<EpollPoller> {
+            let ep = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            if ep < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let ep = OwnedFd(ep);
+            let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+            if efd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let wake_fd = Arc::new(OwnedFd(efd));
+            let mut p = EpollPoller { ep, wake_fd, buf: Vec::new() };
+            p.ctl(sys::EPOLL_CTL_ADD, p.wake_fd.0, WAKE_TOKEN, Interest::READ)?;
+            Ok(p)
+        }
+
+        pub(super) fn ctl(
+            &mut self,
+            op: std::os::raw::c_int,
+            fd: i32,
+            token: Token,
+            interest: Interest,
+        ) -> io::Result<()> {
+            let mut ev = sys::EpollEvent {
+                events: events_mask(interest),
+                data: token as u64,
+            };
+            let r = unsafe { sys::epoll_ctl(self.ep.0, op, fd, &mut ev) };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(super) fn poll(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Duration,
+        ) -> io::Result<bool> {
+            const CAP: usize = 1024;
+            self.buf.resize(CAP, sys::EpollEvent { events: 0, data: 0 });
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = loop {
+                let n = unsafe {
+                    sys::epoll_wait(self.ep.0, self.buf.as_mut_ptr(), CAP as i32, ms)
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            };
+            let mut woken = false;
+            for ev in &self.buf[..n] {
+                // copy out of the (possibly packed) struct first
+                let (mask, data) = (ev.events, ev.data);
+                if data == WAKE_TOKEN as u64 {
+                    woken = true;
+                    // drain the eventfd counter so level-triggering rests
+                    let mut v: u64 = 0;
+                    unsafe {
+                        sys::read(self.wake_fd.0, (&mut v as *mut u64).cast(), 8);
+                    }
+                    continue;
+                }
+                let err = mask & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+                events.push(Event {
+                    token: data as usize,
+                    // errors/hangups surface as readable+writable so the
+                    // state machine hits the failing syscall and closes
+                    readable: mask & sys::EPOLLIN != 0 || err,
+                    writable: mask & sys::EPOLLOUT != 0 || err,
+                });
+            }
+            Ok(woken)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn backend_cases() -> Vec<Poller> {
+        let mut v = vec![Poller::portable()];
+        #[cfg(target_os = "linux")]
+        v.push(Poller::Epoll(EpollPoller::new().unwrap()));
+        v
+    }
+
+    #[test]
+    fn waker_wakes_a_poll() {
+        for mut p in backend_cases() {
+            let waker = p.waker();
+            let name = p.backend_name();
+            waker.wake();
+            let mut events = Vec::new();
+            let woken = p.poll(&mut events, Duration::from_millis(200)).unwrap();
+            assert!(woken, "{name}: wake before poll must be observed");
+            // and the wake state resets
+            let woken2 = p.poll(&mut events, Duration::from_millis(0)).unwrap();
+            assert!(!woken2, "{name}: wake must not persist");
+        }
+    }
+
+    #[test]
+    fn readable_socket_reports_ready() {
+        for mut p in backend_cases() {
+            let name = p.backend_name();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut client = TcpStream::connect(addr).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+            p.register(fd_of(&server), 7, Interest::READ).unwrap();
+            client.write_all(b"ping").unwrap();
+            client.flush().unwrap();
+            // the scan backend reports unconditionally; epoll needs the
+            // kernel to see the bytes — allow a few rounds
+            let mut events = Vec::new();
+            let mut ready = false;
+            for _ in 0..100 {
+                p.poll(&mut events, Duration::from_millis(20)).unwrap();
+                if events.iter().any(|e| e.token == 7 && e.readable) {
+                    ready = true;
+                    break;
+                }
+            }
+            assert!(ready, "{name}: write must surface as readable");
+            // the scan backend reports ready unconditionally, so the
+            // bytes may still be in flight — retry on WouldBlock
+            let mut buf = [0u8; 4];
+            let mut srv = &server;
+            let mut got = 0usize;
+            while got < 4 {
+                match srv.read(&mut buf[got..]) {
+                    Ok(n) => got += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1))
+                    }
+                    Err(e) => panic!("{name}: {e}"),
+                }
+            }
+            assert_eq!(&buf, b"ping");
+            p.deregister(fd_of(&server), 7).unwrap();
+        }
+    }
+
+    #[test]
+    fn reregister_changes_interest() {
+        for mut p in backend_cases() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let _client = TcpStream::connect(addr).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+            p.register(fd_of(&server), 3, Interest::READ).unwrap();
+            p.reregister(fd_of(&server), 3, Interest::BOTH).unwrap();
+            let mut events = Vec::new();
+            let mut writable = false;
+            for _ in 0..100 {
+                p.poll(&mut events, Duration::from_millis(20)).unwrap();
+                if events.iter().any(|e| e.token == 3 && e.writable) {
+                    writable = true;
+                    break;
+                }
+            }
+            assert!(writable, "{}: idle socket must be writable", p.backend_name());
+        }
+    }
+}

@@ -1,0 +1,754 @@
+//! Event-driven sharded TCP front-end: the reactor that replaced the
+//! thread-per-connection server.
+//!
+//! Layout:
+//!
+//! - The **accept loop** runs on the caller's thread: a non-blocking
+//!   listener behind its own [`Poller`], enforcing the connection cap
+//!   (over-cap peers get a best-effort `STATUS_OVERLOADED` frame and are
+//!   closed — [`Metrics::conns_refused_total`]) and handing admitted
+//!   sockets to the least-loaded shard.
+//! - **N connection shards**, each one thread with its own poller and a
+//!   slab of non-blocking connections. A shard never blocks on
+//!   inference: parsed requests go to [`Server::try_submit`] with a
+//!   callback [`Responder`]; the worker's completion is pushed onto the
+//!   shard's inbox and the shard poller is woken ([`Waker`]). Thread
+//!   count is O(shards + workers), not O(connections).
+//! - Per-connection **state machines**: a read buffer parsed by
+//!   [`frame::parse_request`] (payload caps enforced before any
+//!   allocation), a discard state that skips oversized payloads so the
+//!   connection survives a rejected frame, in-order response slots for
+//!   pipelined requests, and a write buffer flushed as the socket
+//!   drains. A connection with `max_inflight_per_conn` unanswered
+//!   requests stops reading (per-connection backpressure) until
+//!   completions free slots.
+//!
+//! Shutdown: flipping `stop` stops the accept loop, wakes every shard,
+//! and each shard *drains* — no new requests are parsed, in-flight
+//! completions are flushed to their sockets — until idle or the bounded
+//! `drain` deadline passes.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Responder;
+use crate::coordinator::frame::{self, Parse, Resync};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::poll::{fd_of, Event, Interest, Poller, Waker};
+use crate::coordinator::server::{Server, SubmitOutcome};
+
+/// Reactor knobs. `Default` is sized for tests and modest hosts; the
+/// CLI exposes each as a flag.
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// Connection-shard threads (each runs one poll loop).
+    pub shards: usize,
+    /// Open-connection cap; peers beyond it are refused with a
+    /// `STATUS_OVERLOADED` frame at accept time.
+    pub max_conns: usize,
+    /// Per-payload byte cap checked before any allocation
+    /// ([`frame::DEFAULT_MAX_FRAME_BYTES`] by default).
+    pub max_frame_bytes: usize,
+    /// Unanswered pipelined requests per connection before the reactor
+    /// stops reading from it (per-connection backpressure).
+    pub max_inflight_per_conn: usize,
+    /// Graceful-shutdown bound: how long shards keep flushing in-flight
+    /// responses after `stop` flips.
+    pub drain: Duration,
+    /// Force the portable scan poller even where epoll is available
+    /// (tests cover both backends through this).
+    pub portable_poll: bool,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        let shards = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(1, 4);
+        ReactorConfig {
+            shards,
+            max_conns: 4096,
+            max_frame_bytes: frame::DEFAULT_MAX_FRAME_BYTES,
+            max_inflight_per_conn: 32,
+            drain: Duration::from_secs(5),
+            portable_poll: false,
+        }
+    }
+}
+
+/// Work handed to a shard from outside its thread.
+enum ShardMsg {
+    /// A freshly accepted (already non-blocking) connection.
+    Accept(TcpStream),
+    /// A completed inference: the encoded response frame for request
+    /// `seq` on connection slab slot `slot` (guarded by `gen` so a
+    /// recycled slot never receives a dead connection's response).
+    Done { slot: usize, gen: u64, seq: u64, frame: Vec<u8> },
+}
+
+/// The cross-thread face of one shard: its inbox + waker, shared with
+/// the accept loop and with worker completion callbacks.
+struct ShardShared {
+    inbox: Mutex<Vec<ShardMsg>>,
+    waker: Waker,
+    /// Connections currently assigned to this shard (for least-loaded
+    /// placement).
+    conns: AtomicUsize,
+}
+
+/// Skip state for resynchronizing after an oversized payload
+/// ([`Resync`]): the declared bytes are consumed from the wire without
+/// ever being buffered.
+#[derive(Debug, PartialEq, Eq)]
+enum Discard {
+    /// Skip this many raw bytes.
+    Bytes(u64),
+    /// Skip this many bytes, then a length-prefixed vector follows
+    /// (`u32` count, then `count * 4` bytes) — the token frame's second
+    /// half.
+    BytesThenLen(u64),
+    /// Accumulating the 4-byte length prefix of the follow-on vector.
+    Len { hdr: [u8; 4], have: usize },
+}
+
+/// Advance the discard state machine over `rbuf[*rpos..]`. Returns
+/// `true` when the discard completed (`*discard` is `None`), `false`
+/// when more bytes are needed.
+fn advance_discard(discard: &mut Option<Discard>, rbuf: &[u8], rpos: &mut usize) -> bool {
+    loop {
+        match discard.take() {
+            None => return true,
+            Some(Discard::Bytes(n)) => {
+                let avail = (rbuf.len() - *rpos) as u64;
+                let take = avail.min(n);
+                *rpos += take as usize;
+                let left = n - take;
+                if left > 0 {
+                    *discard = Some(Discard::Bytes(left));
+                    return false;
+                }
+                return true;
+            }
+            Some(Discard::BytesThenLen(n)) => {
+                let avail = (rbuf.len() - *rpos) as u64;
+                let take = avail.min(n);
+                *rpos += take as usize;
+                let left = n - take;
+                if left > 0 {
+                    *discard = Some(Discard::BytesThenLen(left));
+                    return false;
+                }
+                *discard = Some(Discard::Len { hdr: [0; 4], have: 0 });
+            }
+            Some(Discard::Len { mut hdr, mut have }) => {
+                while have < 4 && *rpos < rbuf.len() {
+                    hdr[have] = rbuf[*rpos];
+                    have += 1;
+                    *rpos += 1;
+                }
+                if have < 4 {
+                    *discard = Some(Discard::Len { hdr, have });
+                    return false;
+                }
+                let bytes = u32::from_le_bytes(hdr) as u64 * 4;
+                if bytes > 0 {
+                    *discard = Some(Discard::Bytes(bytes));
+                }
+            }
+        }
+    }
+}
+
+/// One connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// In-order response slots for pipelined requests: slot `i` holds
+    /// the (encoded) response to request `base_seq + i`, filled as
+    /// completions land, flushed strictly front-to-back.
+    pending: VecDeque<Option<Vec<u8>>>,
+    base_seq: u64,
+    next_seq: u64,
+    discard: Option<Discard>,
+    interest: Interest,
+    read_eof: bool,
+    /// Unrecoverable protocol violation: flush what we owe, then close.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, interest: Interest) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            base_seq: 0,
+            next_seq: 0,
+            discard: None,
+            interest,
+            read_eof: false,
+            closing: false,
+        }
+    }
+
+    /// Fill the response slot for `seq` (ignored when the slot is
+    /// already flushed — cannot happen in practice, but must not panic).
+    fn fill(&mut self, seq: u64, frame_bytes: Vec<u8>) {
+        if seq < self.base_seq {
+            return;
+        }
+        let idx = (seq - self.base_seq) as usize;
+        if idx < self.pending.len() {
+            self.pending[idx] = Some(frame_bytes);
+        }
+    }
+
+    /// Non-blocking read until `WouldBlock`/EOF or the buffer cap.
+    fn read_some(&mut self, cap: usize) -> io::Result<()> {
+        let mut tmp = [0u8; 16384];
+        loop {
+            if self.rbuf.len() - self.rpos >= cap {
+                return Ok(()); // fairness/memory bound; resume next event
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.read_eof = true;
+                    return Ok(());
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Parse as many buffered requests as the inflight cap allows,
+    /// submitting each to the server with a completion callback keyed
+    /// by (slot, gen, seq).
+    #[allow(clippy::too_many_arguments)]
+    fn parse_loop(
+        &mut self,
+        slot: usize,
+        gen: u64,
+        server: &Server,
+        metrics: &Metrics,
+        shared: &Arc<ShardShared>,
+        cfg: &ReactorConfig,
+    ) {
+        loop {
+            if self.discard.is_some()
+                && !advance_discard(&mut self.discard, &self.rbuf, &mut self.rpos)
+            {
+                break; // mid-skip, need more bytes
+            }
+            if self.closing {
+                // framing is lost: drop whatever the peer keeps sending
+                self.rpos = self.rbuf.len();
+                break;
+            }
+            if self.pending.len() >= cfg.max_inflight_per_conn {
+                break; // per-connection backpressure: stop parsing
+            }
+            match frame::parse_request(&self.rbuf[self.rpos..], cfg.max_frame_bytes) {
+                Parse::Incomplete => break,
+                Parse::Request { name, input, consumed } => {
+                    self.rpos += consumed;
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    self.pending.push_back(None);
+                    let sh = shared.clone();
+                    let resp = Responder::Callback(Box::new(move |r| {
+                        let mut f = Vec::new();
+                        match r {
+                            Ok(v) => frame::encode_ok(&mut f, &v),
+                            Err(e) => frame::encode_status(
+                                &mut f,
+                                frame::STATUS_ERR,
+                                &format!("{e:#}"),
+                            ),
+                        }
+                        sh.inbox
+                            .lock()
+                            .unwrap()
+                            .push(ShardMsg::Done { slot, gen, seq, frame: f });
+                        sh.waker.wake();
+                    }));
+                    match server.try_submit(&name, input, resp) {
+                        SubmitOutcome::Accepted => {}
+                        SubmitOutcome::Overloaded(_) => {
+                            let mut f = Vec::new();
+                            frame::encode_status(
+                                &mut f,
+                                frame::STATUS_OVERLOADED,
+                                &format!("variant `{name}` saturated — retry later"),
+                            );
+                            self.fill(seq, f);
+                        }
+                        SubmitOutcome::UnknownVariant(_) => {
+                            let mut f = Vec::new();
+                            frame::encode_status(
+                                &mut f,
+                                frame::STATUS_ERR,
+                                &format!("unknown variant `{name}`"),
+                            );
+                            self.fill(seq, f);
+                        }
+                    }
+                }
+                Parse::Malformed { reason, consumed, resync } => {
+                    metrics.protocol_errors_total.fetch_add(1, Ordering::Relaxed);
+                    self.rpos += consumed;
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    self.pending.push_back(None);
+                    let mut f = Vec::new();
+                    frame::encode_status(&mut f, frame::STATUS_ERR, &reason);
+                    self.fill(seq, f);
+                    match resync {
+                        Some(Resync::Skip(b)) => {
+                            self.discard = if b > 0 { Some(Discard::Bytes(b)) } else { None };
+                        }
+                        Some(Resync::SkipThenLenPrefixed(b)) => {
+                            self.discard = Some(Discard::BytesThenLen(b));
+                        }
+                        None => self.closing = true,
+                    }
+                }
+            }
+        }
+        if self.rpos > 0 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+    }
+
+    /// Move contiguously-ready responses into the write buffer and
+    /// write until `WouldBlock` or empty.
+    fn flush(&mut self) -> io::Result<()> {
+        loop {
+            while matches!(self.pending.front(), Some(Some(_))) {
+                let f = self.pending.pop_front().unwrap().unwrap();
+                self.base_seq += 1;
+                self.wbuf.extend_from_slice(&f);
+            }
+            if self.wpos >= self.wbuf.len() {
+                self.wbuf.clear();
+                self.wpos = 0;
+                return Ok(());
+            }
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if self.wpos > 1 << 16 {
+                        self.wbuf.drain(..self.wpos);
+                        self.wpos = 0;
+                    }
+                    return Ok(());
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// The readiness the poller should watch for given current state.
+    fn desired_interest(&self, cfg: &ReactorConfig, draining: bool) -> Interest {
+        let read = !self.read_eof
+            && !self.closing
+            && !draining
+            && (self.discard.is_some() || self.pending.len() < cfg.max_inflight_per_conn);
+        let write = self.wpos < self.wbuf.len()
+            || matches!(self.pending.front(), Some(Some(_)));
+        Interest { read, write }
+    }
+}
+
+/// Read → parse/submit → flush one connection. Returns `Ok(false)` when
+/// the connection should close (cleanly drained or peer gone), `Err` on
+/// a hard socket error (also close).
+#[allow(clippy::too_many_arguments)]
+fn process_conn(
+    conn: &mut Conn,
+    slot: usize,
+    gen: u64,
+    server: &Server,
+    metrics: &Metrics,
+    shared: &Arc<ShardShared>,
+    cfg: &ReactorConfig,
+    draining: bool,
+) -> io::Result<bool> {
+    if !conn.read_eof && !conn.closing && !draining {
+        let cap = cfg.max_frame_bytes.saturating_mul(2).max(1 << 16);
+        conn.read_some(cap)?;
+    }
+    if !draining {
+        conn.parse_loop(slot, gen, server, metrics, shared, cfg);
+    }
+    conn.flush()?;
+    let owed = !conn.pending.is_empty() || conn.wpos < conn.wbuf.len();
+    if (conn.closing || conn.read_eof || draining) && !owed {
+        return Ok(false);
+    }
+    Ok(true)
+}
+
+/// One connection shard: poller + slab, run on its own thread.
+struct Shard {
+    poller: Poller,
+    shared: Arc<ShardShared>,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    cfg: ReactorConfig,
+    slots: Vec<Option<Conn>>,
+    /// Per-slot generation, bumped on close so stale completions and
+    /// poll events for a recycled slot are ignored.
+    gens: Vec<u64>,
+    free: Vec<usize>,
+    live: usize,
+}
+
+impl Shard {
+    fn accept(&mut self, stream: TcpStream) -> Option<usize> {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.slots.push(None);
+            self.gens.push(0);
+            self.slots.len() - 1
+        });
+        stream.set_nodelay(true).ok();
+        if let Err(e) = self.poller.register(fd_of(&stream), slot, Interest::READ) {
+            eprintln!("reactor: register connection: {e}");
+            self.free.push(slot);
+            self.release_conn_counts();
+            return None;
+        }
+        self.slots[slot] = Some(Conn::new(stream, Interest::READ));
+        self.live += 1;
+        Some(slot)
+    }
+
+    /// Undo the accept loop's bookkeeping for a connection this shard
+    /// will not keep.
+    fn release_conn_counts(&self) {
+        self.metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+        self.shared.conns.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn close(&mut self, slot: usize) {
+        if let Some(conn) = self.slots[slot].take() {
+            let _ = self.poller.deregister(fd_of(&conn.stream), slot);
+            self.gens[slot] = self.gens[slot].wrapping_add(1);
+            self.free.push(slot);
+            self.live -= 1;
+            self.release_conn_counts();
+        }
+    }
+
+    fn on_done(&mut self, slot: usize, gen: u64, seq: u64, frame_bytes: Vec<u8>) -> bool {
+        if slot >= self.slots.len() || self.gens[slot] != gen {
+            return false; // connection is gone; drop the response
+        }
+        match self.slots[slot].as_mut() {
+            Some(conn) => {
+                conn.fill(seq, frame_bytes);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run one connection's state machine and apply the outcome
+    /// (interest change or close).
+    fn step(&mut self, slot: usize, draining: bool) {
+        let gen = self.gens[slot];
+        let keep = match self.slots[slot].as_mut() {
+            None => return,
+            Some(conn) => process_conn(
+                conn,
+                slot,
+                gen,
+                &self.server,
+                &self.metrics,
+                &self.shared,
+                &self.cfg,
+                draining,
+            ),
+        };
+        match keep {
+            Ok(true) => {
+                let conn = self.slots[slot].as_mut().expect("conn still present");
+                let want = conn.desired_interest(&self.cfg, draining);
+                if want != conn.interest {
+                    let fd = fd_of(&conn.stream);
+                    conn.interest = want;
+                    let _ = self.poller.reregister(fd, slot, want);
+                }
+            }
+            Ok(false) | Err(_) => self.close(slot),
+        }
+    }
+
+    fn run(mut self, stop: Arc<AtomicBool>) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut dirty: Vec<usize> = Vec::new();
+        let mut draining: Option<Instant> = None;
+        loop {
+            if draining.is_none() && stop.load(Ordering::SeqCst) {
+                // enter drain: stop reading, flush what's in flight
+                draining = Some(Instant::now() + self.cfg.drain);
+                for s in 0..self.slots.len() {
+                    if self.slots[s].is_some() {
+                        dirty.push(s);
+                    }
+                }
+            }
+            if let Some(deadline) = draining {
+                if self.live == 0 || Instant::now() >= deadline {
+                    break;
+                }
+            }
+            let timeout = if draining.is_some() {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(200)
+            };
+            if let Err(e) = self.poller.poll(&mut events, timeout) {
+                eprintln!("reactor shard poll: {e}");
+                break;
+            }
+            let msgs = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            for msg in msgs {
+                match msg {
+                    ShardMsg::Accept(stream) => {
+                        if draining.is_some() {
+                            self.release_conn_counts();
+                            drop(stream);
+                        } else if let Some(slot) = self.accept(stream) {
+                            dirty.push(slot);
+                        }
+                    }
+                    ShardMsg::Done { slot, gen, seq, frame } => {
+                        if self.on_done(slot, gen, seq, frame) {
+                            dirty.push(slot);
+                        }
+                    }
+                }
+            }
+            for ev in &events {
+                if ev.token < self.slots.len() && self.slots[ev.token].is_some() {
+                    dirty.push(ev.token);
+                }
+            }
+            dirty.sort_unstable();
+            dirty.dedup();
+            let drain_mode = draining.is_some();
+            for slot in dirty.drain(..) {
+                self.step(slot, drain_mode);
+            }
+        }
+        // hard-close whatever the drain deadline left behind
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
+                self.close(slot);
+            }
+        }
+    }
+}
+
+/// Best-effort refusal of an over-cap connection: one bounded blocking
+/// write of a `STATUS_OVERLOADED` frame, then close.
+fn refuse(stream: TcpStream) {
+    let mut f = Vec::new();
+    frame::encode_status(&mut f, frame::STATUS_OVERLOADED, "server at connection capacity");
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let mut s = stream;
+    let _ = s.write_all(&f);
+}
+
+/// Serve on `addr` until `stop` flips, then drain and join the shards.
+/// `on_listen` receives the bound address once the listener is live.
+pub fn serve(
+    addr: &str,
+    server: Arc<Server>,
+    cfg: ReactorConfig,
+    stop: Arc<AtomicBool>,
+    on_listen: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    anyhow::ensure!(cfg.shards >= 1, "reactor needs at least one shard");
+    anyhow::ensure!(cfg.max_inflight_per_conn >= 1, "max_inflight_per_conn must be ≥ 1");
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let metrics = server.metrics.clone();
+
+    let mut shareds: Vec<Arc<ShardShared>> = Vec::with_capacity(cfg.shards);
+    let mut handles: Vec<JoinHandle<()>> = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let poller = if cfg.portable_poll {
+            Poller::portable()
+        } else {
+            Poller::new().context("create shard poller")?
+        };
+        let shared = Arc::new(ShardShared {
+            inbox: Mutex::new(Vec::new()),
+            waker: poller.waker(),
+            conns: AtomicUsize::new(0),
+        });
+        let shard = Shard {
+            poller,
+            shared: shared.clone(),
+            server: server.clone(),
+            metrics: metrics.clone(),
+            cfg: cfg.clone(),
+            slots: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        };
+        let stop2 = stop.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("sham-shard-{i}"))
+                .spawn(move || shard.run(stop2))
+                .context("spawn shard")?,
+        );
+        shareds.push(shared);
+    }
+
+    on_listen(local);
+
+    let mut apoller = if cfg.portable_poll {
+        Poller::portable()
+    } else {
+        Poller::new().context("create accept poller")?
+    };
+    apoller.register(fd_of(&listener), 0, Interest::READ)?;
+    let mut events = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        if let Err(e) = apoller.poll(&mut events, Duration::from_millis(100)) {
+            if e.kind() != io::ErrorKind::Interrupted {
+                eprintln!("reactor accept poll: {e}");
+            }
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    metrics.conns_total.fetch_add(1, Ordering::Relaxed);
+                    if metrics.conns_open.load(Ordering::Relaxed) >= cfg.max_conns as u64 {
+                        metrics.conns_refused_total.fetch_add(1, Ordering::Relaxed);
+                        refuse(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let si = shareds
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, s)| s.conns.load(Ordering::Relaxed))
+                        .map(|(i, _)| i)
+                        .expect("at least one shard");
+                    metrics.conns_open.fetch_add(1, Ordering::Relaxed);
+                    shareds[si].conns.fetch_add(1, Ordering::Relaxed);
+                    shareds[si].inbox.lock().unwrap().push(ShardMsg::Accept(stream));
+                    shareds[si].waker.wake();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("reactor accept: {e}");
+                    break;
+                }
+            }
+        }
+    }
+    for s in &shareds {
+        s.waker.wake();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discard_skips_exact_bytes() {
+        let mut d = Some(Discard::Bytes(6));
+        let buf = [0u8; 10];
+        let mut pos = 0usize;
+        assert!(advance_discard(&mut d, &buf, &mut pos));
+        assert_eq!(pos, 6, "exactly the declared bytes are consumed");
+        assert!(d.is_none());
+    }
+
+    #[test]
+    fn discard_bytes_across_chunks() {
+        let mut d = Some(Discard::Bytes(6));
+        let mut pos = 0usize;
+        assert!(!advance_discard(&mut d, &[0u8; 4], &mut pos));
+        assert_eq!(pos, 4);
+        // fresh chunk (connection compacted its buffer)
+        pos = 0;
+        assert!(advance_discard(&mut d, &[0u8; 8], &mut pos));
+        assert_eq!(pos, 2);
+        assert!(d.is_none());
+    }
+
+    #[test]
+    fn discard_then_len_prefixed_vector() {
+        // skip 3 payload bytes, then a u32 count of 2 → 8 more bytes
+        let mut d = Some(Discard::BytesThenLen(3));
+        let mut buf = vec![9u8; 3];
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[7u8; 8]);
+        buf.extend_from_slice(b"XY"); // next frame's bytes, untouched
+        let mut pos = 0usize;
+        assert!(advance_discard(&mut d, &buf, &mut pos));
+        assert!(d.is_none());
+        assert_eq!(&buf[pos..], b"XY");
+    }
+
+    #[test]
+    fn discard_len_prefix_split_across_reads() {
+        let mut d = Some(Discard::BytesThenLen(1));
+        let mut first = vec![0u8; 1];
+        first.extend_from_slice(&1u32.to_le_bytes()[..2]); // half the count
+        let mut pos = 0usize;
+        assert!(!advance_discard(&mut d, &first, &mut pos));
+        let mut second = 1u32.to_le_bytes()[2..].to_vec(); // rest of count
+        second.extend_from_slice(&[0u8; 4]); // the 1 * 4 payload bytes
+        pos = 0;
+        assert!(advance_discard(&mut d, &second, &mut pos));
+        assert_eq!(pos, second.len());
+        assert!(d.is_none());
+    }
+
+    #[test]
+    fn zero_count_len_prefix_ends_discard() {
+        let mut d = Some(Discard::BytesThenLen(0));
+        let buf = 0u32.to_le_bytes();
+        let mut pos = 0usize;
+        assert!(advance_discard(&mut d, &buf, &mut pos));
+        assert_eq!(pos, 4);
+        assert!(d.is_none());
+    }
+}

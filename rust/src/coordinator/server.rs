@@ -1,29 +1,39 @@
-//! The inference server: a router over model variants, each with its own
-//! dynamic-batching worker thread. A variant's worker either owns a PJRT
-//! engine for the conv front-end (engines are not `Send`, so each worker
-//! constructs its own client + executable) or runs the whole network on
-//! the pure-Rust lowered-conv pipeline ([`Server::add_variant_pure`]) —
-//! full compressed serving with zero PJRT dependency. Python never runs
-//! here — the artifacts are self-contained.
+//! The inference server: a router over model variants, each with one or
+//! more *replica* worker threads behind bounded batching queues. A
+//! replica's worker either owns a PJRT engine for the conv front-end
+//! (engines are not `Send`, so each worker constructs its own client +
+//! executable) or runs the whole network on the pure-Rust lowered-conv
+//! pipeline ([`Server::add_variant_pure`]) — full compressed serving
+//! with zero PJRT dependency. Python never runs here — the artifacts
+//! are self-contained.
+//!
+//! Hot variants can be registered with `replicas > 1`
+//! ([`Server::add_variant_pure_opts`]): the replicas share one
+//! `Arc<CompressedModel>` (weights resident once) but each owns a
+//! private queue + worker, and submissions round-robin across them —
+//! falling over to the next replica when one queue is full, shedding
+//! only when *all* replicas are saturated.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::batcher::{self, Input, Policy, QueueHandle, Request};
+use crate::coordinator::batcher::{self, Input, Policy, QueueHandle, Request, Responder};
 use crate::coordinator::metrics::Metrics;
 use crate::formats::{pool, Workspace};
+use crate::io::TestSet;
 use crate::mat::Mat;
 use crate::nn::compressed::CompressedModel;
 use crate::nn::lowering::PlanInput;
 use crate::nn::model::BranchInput;
-use crate::io::TestSet;
 use crate::runtime::{lit_f32, lit_i32, Engine, Literal, PjRtClient};
 
 /// How a variant executes its conv front-end.
+#[derive(Clone)]
 enum Backend {
     /// AOT-compiled HLO through a per-worker PJRT engine.
     Pjrt(PathBuf),
@@ -47,9 +57,37 @@ impl Default for ServerConfig {
     }
 }
 
+/// Per-variant registration options.
+#[derive(Debug, Clone)]
+pub struct VariantOpts {
+    /// Batching policy override (deadline, batch size, queue bound);
+    /// `None` inherits the server's default policy.
+    pub policy: Option<Policy>,
+    /// Number of replica queues/workers (≥ 1) round-robined per request.
+    pub replicas: usize,
+}
+
+impl Default for VariantOpts {
+    fn default() -> Self {
+        VariantOpts { policy: None, replicas: 1 }
+    }
+}
+
+/// Outcome of a typed, non-blocking submission.
+pub enum SubmitOutcome {
+    /// Queued on a replica; the responder fires when the batch runs.
+    Accepted,
+    /// Every replica queue is full — the responder is handed back so
+    /// the front end can answer `STATUS_OVERLOADED` itself.
+    Overloaded(Responder),
+    /// No such variant; responder handed back for an error reply.
+    UnknownVariant(Responder),
+}
+
 struct VariantHandle {
-    queue: QueueHandle,
-    worker: Option<JoinHandle<()>>,
+    queues: Vec<QueueHandle>,
+    workers: Vec<JoinHandle<()>>,
+    rr: AtomicUsize,
 }
 
 /// Multi-variant inference server.
@@ -81,14 +119,42 @@ impl Server {
         model: CompressedModel,
         features_hlo: PathBuf,
     ) -> Result<()> {
-        self.add_variant_backend(name, model, Backend::Pjrt(features_hlo))
+        self.add_variant_backend(
+            name,
+            model,
+            Backend::Pjrt(features_hlo),
+            VariantOpts::default(),
+        )
     }
 
     /// Register a *pure-Rust* full-network variant: conv layers execute
     /// on their lowered compressed matrices (im2col pipeline), FC on the
     /// compressed stack — serving with zero PJRT dependency.
     pub fn add_variant_pure(&mut self, name: &str, model: CompressedModel) -> Result<()> {
-        self.add_variant_backend(name, model, Backend::Pure)
+        self.add_variant_backend(name, model, Backend::Pure, VariantOpts::default())
+    }
+
+    /// [`Server::add_variant_pure`] with a per-variant batching policy
+    /// (latency deadline, queue bound) and replica count.
+    pub fn add_variant_pure_opts(
+        &mut self,
+        name: &str,
+        model: CompressedModel,
+        opts: VariantOpts,
+    ) -> Result<()> {
+        self.add_variant_backend(name, model, Backend::Pure, opts)
+    }
+
+    /// [`Server::add_variant`] (PJRT conv front-end) with per-variant
+    /// options.
+    pub fn add_variant_opts(
+        &mut self,
+        name: &str,
+        model: CompressedModel,
+        features_hlo: PathBuf,
+        opts: VariantOpts,
+    ) -> Result<()> {
+        self.add_variant_backend(name, model, Backend::Pjrt(features_hlo), opts)
     }
 
     fn add_variant_backend(
@@ -96,50 +162,92 @@ impl Server {
         name: &str,
         model: CompressedModel,
         backend: Backend,
+        opts: VariantOpts,
     ) -> Result<()> {
         if self.variants.contains_key(name) {
             bail!("variant `{name}` already registered");
         }
-        let (queue, rx) = batcher::queue(self.cfg.policy, self.metrics.clone());
-        let metrics = self.metrics.clone();
-        let policy = self.cfg.policy;
+        anyhow::ensure!(opts.replicas >= 1, "variant `{name}`: replicas must be ≥ 1");
+        let policy = opts.policy.unwrap_or(self.cfg.policy);
         let fc_threads = self.cfg.fc_threads;
-        let vname = name.to_string();
-        let worker = std::thread::Builder::new()
-            .name(format!("sham-worker-{name}"))
-            .spawn(move || {
-                let r = match backend {
-                    Backend::Pjrt(hlo) => {
-                        worker_loop(model, &hlo, rx, policy, metrics, fc_threads)
+        let model = Arc::new(model);
+        let mut queues = Vec::with_capacity(opts.replicas);
+        let mut workers = Vec::with_capacity(opts.replicas);
+        for r in 0..opts.replicas {
+            let (queue, rx) = batcher::queue(policy, self.metrics.clone());
+            let metrics = self.metrics.clone();
+            let vname = name.to_string();
+            let model = model.clone();
+            let backend = backend.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("sham-worker-{name}-{r}"))
+                .spawn(move || {
+                    let result = match backend {
+                        Backend::Pjrt(hlo) => {
+                            worker_loop(&model, &hlo, rx, policy, metrics, fc_threads)
+                        }
+                        Backend::Pure => {
+                            worker_loop_pure(&model, rx, policy, metrics, fc_threads)
+                        }
+                    };
+                    if let Err(e) = result {
+                        eprintln!("worker `{vname}`/{r} exited with error: {e:#}");
                     }
-                    Backend::Pure => {
-                        worker_loop_pure(model, rx, policy, metrics, fc_threads)
-                    }
-                };
-                if let Err(e) = r {
-                    eprintln!("worker `{vname}` exited with error: {e:#}");
-                }
-            })
-            .context("spawn worker")?;
-        self.variants
-            .insert(name.to_string(), VariantHandle { queue, worker: Some(worker) });
+                })
+                .context("spawn worker")?;
+            queues.push(queue);
+            workers.push(worker);
+        }
+        self.variants.insert(
+            name.to_string(),
+            VariantHandle { queues, workers, rr: AtomicUsize::new(0) },
+        );
         Ok(())
     }
 
+    /// Typed, non-blocking submission used by the reactor front end:
+    /// round-robins over the variant's replicas, falling over to the
+    /// next replica when one queue is full, and hands the responder
+    /// back instead of queueing unboundedly when all are saturated.
+    pub fn try_submit(&self, variant: &str, input: Input, resp: Responder) -> SubmitOutcome {
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let v = match self.variants.get(variant) {
+            Some(v) => v,
+            None => return SubmitOutcome::UnknownVariant(resp),
+        };
+        let n = v.queues.len();
+        let start = v.rr.fetch_add(1, Ordering::Relaxed);
+        let mut req =
+            Request { input, resp, enqueued: std::time::Instant::now() };
+        for i in 0..n {
+            match v.queues[(start + i) % n].try_enqueue(req) {
+                Ok(()) => return SubmitOutcome::Accepted,
+                Err(r) => req = r,
+            }
+        }
+        self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+        SubmitOutcome::Overloaded(req.resp)
+    }
+
     /// Route a request to a variant. Returns the response receiver or an
-    /// error when the variant is unknown / the queue is saturated.
+    /// error when the variant is unknown / every replica queue is
+    /// saturated.
     pub fn submit(
         &self,
         variant: &str,
         input: Input,
     ) -> Result<std::sync::mpsc::Receiver<Result<Vec<f32>>>> {
-        let v = self
-            .variants
-            .get(variant)
-            .ok_or_else(|| anyhow!("unknown variant `{variant}`"))?;
-        v.queue
-            .submit(input)
-            .ok_or_else(|| anyhow!("variant `{variant}` saturated (backpressure)"))
+        use std::sync::mpsc::sync_channel;
+        let (rtx, rrx) = sync_channel(1);
+        match self.try_submit(variant, input, Responder::Channel(rtx)) {
+            SubmitOutcome::Accepted => Ok(rrx),
+            SubmitOutcome::Overloaded(_) => {
+                Err(anyhow!("variant `{variant}` saturated (backpressure)"))
+            }
+            SubmitOutcome::UnknownVariant(_) => {
+                Err(anyhow!("unknown variant `{variant}`"))
+            }
+        }
     }
 
     /// Blocking convenience: submit and wait.
@@ -153,15 +261,24 @@ impl Server {
         v.sort();
         v
     }
+
+    /// Replica count of a registered variant (0 when unknown).
+    pub fn replica_count(&self, variant: &str) -> usize {
+        self.variants.get(variant).map(|v| v.queues.len()).unwrap_or(0)
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // Closing the queues (dropping senders) ends the worker loops.
+        // Closing the queues (dropping senders) ends the worker loops
+        // after they drain any queued requests.
         let workers: Vec<JoinHandle<()>> = self
             .variants
             .drain()
-            .filter_map(|(_, mut v)| v.worker.take())
+            .flat_map(|(_, v)| {
+                drop(v.queues);
+                v.workers
+            })
             .collect();
         for w in workers {
             let _ = w.join();
@@ -169,10 +286,10 @@ impl Drop for Server {
     }
 }
 
-/// Per-variant worker: builds its own PJRT engine, then loops forming
+/// Per-replica worker: builds its own PJRT engine, then loops forming
 /// batches and answering requests.
 fn worker_loop(
-    model: CompressedModel,
+    model: &CompressedModel,
     features_hlo: &PathBuf,
     rx: std::sync::mpsc::Receiver<Request>,
     policy: Policy,
@@ -209,12 +326,13 @@ fn worker_loop(
     // runs with zero output allocations per batch.
     let mut ws = Workspace::new();
     while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+        metrics.queue_leave(reqs.len());
         metrics.record_batch(reqs.len());
         let result = run_batch(
-            &model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
+            model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
             &mut ws,
         );
-        answer_batch(&reqs, result, &metrics);
+        answer_batch(reqs, result, &metrics);
     }
     Ok(())
 }
@@ -229,11 +347,11 @@ struct PureScratch {
     prot: Vec<i32>,
 }
 
-/// Per-variant worker for the pure-Rust backend: no engine, no
+/// Per-replica worker for the pure-Rust backend: no engine, no
 /// artifacts — batches run end-to-end on the compressed formats into the
 /// worker's reusable workspace.
 fn worker_loop_pure(
-    model: CompressedModel,
+    model: &CompressedModel,
     rx: std::sync::mpsc::Receiver<Request>,
     policy: Policy,
     metrics: Arc<Metrics>,
@@ -246,30 +364,30 @@ fn worker_loop_pure(
         prot: Vec::new(),
     };
     while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+        metrics.queue_leave(reqs.len());
         metrics.record_batch(reqs.len());
-        let result = run_batch_pure(&model, &reqs, fc_threads, &mut scratch);
-        answer_batch(&reqs, result, &metrics);
+        let result = run_batch_pure(model, &reqs, fc_threads, &mut scratch);
+        answer_batch(reqs, result, &metrics);
     }
     Ok(())
 }
 
 /// Fan one batch result out to its requests (per-request rows on
-/// success, a shared error otherwise).
-fn answer_batch(reqs: &[Request], result: Result<&Mat>, metrics: &Metrics) {
-    use std::sync::atomic::Ordering;
+/// success, a shared error otherwise), consuming each responder.
+fn answer_batch(reqs: Vec<Request>, result: Result<&Mat>, metrics: &Metrics) {
     match result {
         Ok(outputs) => {
-            for (i, req) in reqs.iter().enumerate() {
+            for (i, req) in reqs.into_iter().enumerate() {
                 let row = outputs.row(i).to_vec();
-                let _ = req.resp.send(Ok(row));
                 metrics.responses_total.fetch_add(1, Ordering::Relaxed);
                 metrics.record_latency_ns(req.enqueued.elapsed().as_nanos() as f64);
+                req.resp.respond(Ok(row));
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
             for req in reqs {
-                let _ = req.resp.send(Err(anyhow!("{msg}")));
+                req.resp.respond(Err(anyhow!("{msg}")));
             }
         }
     }

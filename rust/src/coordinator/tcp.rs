@@ -1,25 +1,59 @@
-//! TCP front-end: a minimal length-prefixed binary protocol (std::net;
-//! no tokio in the offline registry). One thread per connection.
+//! Blocking TCP client + the classic `serve` entry point.
 //!
-//! Request frame (little-endian):
-//!   u16  variant-name length, then the name bytes
-//!   u8   input kind: 0 = image, 1 = tokens
-//!   kind 0: u32 n, then n f32
-//!   kind 1: u32 n_lig, n_lig i32, u32 n_prot, n_prot i32
-//! Response frame:
-//!   u8   status: 0 = ok, 1 = error
-//!   ok:    u32 n, then n f32 (model outputs)
-//!   error: u32 len, then utf-8 message
+//! The thread-per-connection server that used to live here is gone:
+//! [`serve`] now delegates to the event-driven sharded
+//! [`crate::coordinator::reactor`] with its default configuration, so
+//! existing callers (tests, examples, the CLI) keep their exact
+//! signature while getting O(shards) threads instead of
+//! O(connections). Frame encoding/decoding lives in
+//! [`crate::coordinator::frame`].
+//!
+//! [`Client`] stays the minimal *blocking* client for examples, tests
+//! and benches — one in-flight request at a time, v2-status aware
+//! (ok / error / overloaded), with every length it reads off the wire
+//! capped before allocation.
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::Input;
+use crate::coordinator::frame::{self, STATUS_OK, STATUS_OVERLOADED};
+use crate::coordinator::reactor::{self, ReactorConfig};
 use crate::coordinator::server::Server;
+
+/// Serve until `stop` goes true. Returns the bound local address via
+/// the callback once listening. Thin wrapper over
+/// [`reactor::serve`] with [`ReactorConfig::default`]; use the reactor
+/// directly to tune shards, caps, or the drain deadline.
+pub fn serve(
+    addr: &str,
+    server: Arc<Server>,
+    stop: Arc<AtomicBool>,
+    on_listen: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    reactor::serve(addr, server, ReactorConfig::default(), stop, on_listen)
+}
+
+/// A decoded response frame, status made explicit so load-generators
+/// can count sheds without string-matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Status 0: model outputs.
+    Ok(Vec<f32>),
+    /// Status 1: server-side error message.
+    Err(String),
+    /// Status 2: shed by admission control — retry later.
+    Overloaded(String),
+}
+
+/// Cap on response payloads the client will allocate for (the server
+/// is trusted more than a client, but a desynced stream must not OOM
+/// us either).
+const MAX_RESPONSE_BYTES: usize = 16 << 20;
 
 fn read_exact_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
@@ -27,126 +61,11 @@ fn read_exact_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
-
-fn read_i32s(r: &mut impl Read, n: usize) -> Result<Vec<i32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
-
-/// Read one request frame; `Ok(None)` on clean EOF.
-fn read_request(r: &mut impl Read) -> Result<Option<(String, Input)>> {
-    let mut lenb = [0u8; 2];
-    match r.read_exact(&mut lenb) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
-    }
-    let nlen = u16::from_le_bytes(lenb) as usize;
-    let mut name = vec![0u8; nlen];
-    r.read_exact(&mut name)?;
-    let name = String::from_utf8(name).context("variant name not utf-8")?;
-    let mut kind = [0u8; 1];
-    r.read_exact(&mut kind)?;
-    let input = match kind[0] {
-        0 => {
-            let n = read_exact_u32(r)? as usize;
-            Input::Image(read_f32s(r, n)?)
-        }
-        1 => {
-            let nl = read_exact_u32(r)? as usize;
-            let lig = read_i32s(r, nl)?;
-            let np = read_exact_u32(r)? as usize;
-            let prot = read_i32s(r, np)?;
-            Input::Tokens { lig, prot }
-        }
-        k => anyhow::bail!("unknown input kind {k}"),
-    };
-    Ok(Some((name, input)))
-}
-
-fn write_ok(w: &mut impl Write, out: &[f32]) -> Result<()> {
-    w.write_all(&[0u8])?;
-    w.write_all(&(out.len() as u32).to_le_bytes())?;
-    for v in out {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    w.flush()?;
-    Ok(())
-}
-
-fn write_err(w: &mut impl Write, msg: &str) -> Result<()> {
-    w.write_all(&[1u8])?;
-    let b = msg.as_bytes();
-    w.write_all(&(b.len() as u32).to_le_bytes())?;
-    w.write_all(b)?;
-    w.flush()?;
-    Ok(())
-}
-
-fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    while let Some((variant, input)) = read_request(&mut reader)? {
-        match server.infer(&variant, input) {
-            Ok(out) => write_ok(&mut writer, &out)?,
-            Err(e) => write_err(&mut writer, &format!("{e:#}"))?,
-        }
-    }
-    Ok(())
-}
-
-/// Serve until `stop` goes true (checked between accepts). Returns the
-/// bound local address via the callback once listening.
-pub fn serve(
-    addr: &str,
-    server: Arc<Server>,
-    stop: Arc<AtomicBool>,
-    on_listen: impl FnOnce(std::net::SocketAddr),
-) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    listener.set_nonblocking(true)?;
-    on_listen(listener.local_addr()?);
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                stream.set_nonblocking(false)?;
-                let srv = server.clone();
-                conns.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, &srv) {
-                        eprintln!("connection error: {e:#}");
-                    }
-                }));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    for c in conns {
-        let _ = c.join();
-    }
-    Ok(())
-}
-
 /// Minimal blocking client for examples / tests / benches.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    ebuf: Vec<u8>,
 }
 
 impl Client {
@@ -156,114 +75,59 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            ebuf: Vec::new(),
         })
     }
 
-    pub fn infer(&mut self, variant: &str, input: &Input) -> Result<Vec<f32>> {
-        let nb = variant.as_bytes();
-        self.writer.write_all(&(nb.len() as u16).to_le_bytes())?;
-        self.writer.write_all(nb)?;
-        match input {
-            Input::Image(v) => {
-                self.writer.write_all(&[0u8])?;
-                self.writer.write_all(&(v.len() as u32).to_le_bytes())?;
-                for x in v {
-                    self.writer.write_all(&x.to_le_bytes())?;
-                }
-            }
-            Input::Tokens { lig, prot } => {
-                self.writer.write_all(&[1u8])?;
-                self.writer.write_all(&(lig.len() as u32).to_le_bytes())?;
-                for x in lig {
-                    self.writer.write_all(&x.to_le_bytes())?;
-                }
-                self.writer.write_all(&(prot.len() as u32).to_le_bytes())?;
-                for x in prot {
-                    self.writer.write_all(&x.to_le_bytes())?;
-                }
-            }
-        }
+    /// Send one request and decode the response frame, statuses
+    /// surfaced as data (I/O trouble is the only `Err`).
+    pub fn infer_response(&mut self, variant: &str, input: &Input) -> Result<Response> {
+        self.ebuf.clear();
+        frame::encode_request(&mut self.ebuf, variant, input);
+        self.writer.write_all(&self.ebuf)?;
         self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// Backwards-compatible convenience: any non-ok status becomes an
+    /// `Err` with the server's message.
+    pub fn infer(&mut self, variant: &str, input: &Input) -> Result<Vec<f32>> {
+        match self.infer_response(variant, input)? {
+            Response::Ok(v) => Ok(v),
+            Response::Err(m) => anyhow::bail!("server error: {m}"),
+            Response::Overloaded(m) => anyhow::bail!("server overloaded: {m}"),
+        }
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
         let mut status = [0u8; 1];
         self.reader.read_exact(&mut status)?;
         let n = read_exact_u32(&mut self.reader)? as usize;
-        if status[0] == 0 {
-            read_f32s(&mut self.reader, n)
+        if status[0] == STATUS_OK {
+            let bytes = n
+                .checked_mul(4)
+                .filter(|&b| b <= MAX_RESPONSE_BYTES)
+                .context("response payload exceeds client cap")?;
+            let mut buf = vec![0u8; bytes];
+            self.reader.read_exact(&mut buf)?;
+            Ok(Response::Ok(
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ))
         } else {
+            anyhow::ensure!(
+                n <= MAX_RESPONSE_BYTES,
+                "error message exceeds client cap"
+            );
             let mut msg = vec![0u8; n];
             self.reader.read_exact(&mut msg)?;
-            anyhow::bail!("server error: {}", String::from_utf8_lossy(&msg))
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn frame_roundtrip_image() {
-        let mut buf = Vec::new();
-        // hand-encode a frame
-        buf.extend_from_slice(&5u16.to_le_bytes());
-        buf.extend_from_slice(b"mnist");
-        buf.push(0);
-        buf.extend_from_slice(&2u32.to_le_bytes());
-        buf.extend_from_slice(&1.5f32.to_le_bytes());
-        buf.extend_from_slice(&(-2.5f32).to_le_bytes());
-        let mut r = std::io::Cursor::new(buf);
-        let (name, input) = read_request(&mut r).unwrap().unwrap();
-        assert_eq!(name, "mnist");
-        match input {
-            Input::Image(v) => assert_eq!(v, vec![1.5, -2.5]),
-            _ => panic!(),
-        }
-        // clean EOF afterwards
-        assert!(read_request(&mut r).unwrap().is_none());
-    }
-
-    #[test]
-    fn frame_roundtrip_tokens() {
-        let mut buf = Vec::new();
-        buf.extend_from_slice(&4u16.to_le_bytes());
-        buf.extend_from_slice(b"kiba");
-        buf.push(1);
-        buf.extend_from_slice(&2u32.to_le_bytes());
-        buf.extend_from_slice(&3i32.to_le_bytes());
-        buf.extend_from_slice(&4i32.to_le_bytes());
-        buf.extend_from_slice(&1u32.to_le_bytes());
-        buf.extend_from_slice(&9i32.to_le_bytes());
-        let mut r = std::io::Cursor::new(buf);
-        let (name, input) = read_request(&mut r).unwrap().unwrap();
-        assert_eq!(name, "kiba");
-        match input {
-            Input::Tokens { lig, prot } => {
-                assert_eq!(lig, vec![3, 4]);
-                assert_eq!(prot, vec![9]);
+            let msg = String::from_utf8_lossy(&msg).into_owned();
+            if status[0] == STATUS_OVERLOADED {
+                Ok(Response::Overloaded(msg))
+            } else {
+                Ok(Response::Err(msg))
             }
-            _ => panic!(),
         }
-    }
-
-    #[test]
-    fn rejects_unknown_kind() {
-        let mut buf = Vec::new();
-        buf.extend_from_slice(&1u16.to_le_bytes());
-        buf.push(b'x');
-        buf.push(7); // bogus kind
-        let mut r = std::io::Cursor::new(buf);
-        assert!(read_request(&mut r).is_err());
-    }
-
-    #[test]
-    fn response_encoding() {
-        let mut buf = Vec::new();
-        write_ok(&mut buf, &[1.0, 2.0]).unwrap();
-        assert_eq!(buf[0], 0);
-        assert_eq!(u32::from_le_bytes(buf[1..5].try_into().unwrap()), 2);
-        let mut ebuf = Vec::new();
-        write_err(&mut ebuf, "nope").unwrap();
-        assert_eq!(ebuf[0], 1);
-        assert_eq!(&ebuf[5..], b"nope");
     }
 }

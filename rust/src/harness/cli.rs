@@ -55,11 +55,21 @@ On-disk compressed models:
   inspect <file.sham> list container entries, formats, and sizes
 
 Serving:
-  serve [--addr 127.0.0.1:7410] [--pure]
-                      run the batching inference server over TCP; every
-                      benchmark gets a `<ds>-full` pure-Rust compressed
-                      variant (conv included); --pure skips the
-                      PJRT-backed variants entirely
+  serve [--addr 127.0.0.1:7410] [--pure] [--shards N] [--replicas N]
+        [--max-conns N] [--deadline-ms MS] [--queue-cap N] [--max-batch N]
+        [--max-frame-kib KIB] [--status-secs S]
+                      run the event-driven sharded inference server over
+                      TCP: N reactor shards (epoll; SHAM_PORTABLE_POLL=1
+                      forces the portable poller), per-variant replica
+                      workers, deadline-based dynamic batching
+                      (--deadline-ms), bounded queues with load shedding
+                      (--queue-cap; shed replies get status 2), and a
+                      connection cap (--max-conns). Every benchmark gets
+                      a `<ds>-full` pure-Rust compressed variant (conv
+                      included); --pure skips the PJRT-backed variants
+                      entirely. A status line with queue depth, shed
+                      counts, and p50/p95/p99/p999 latency prints every
+                      --status-secs seconds (default 30; 0 disables)
 
 Common options:
   --artifacts <dir>   artifacts directory (default: artifacts/ or $SHAM_ARTIFACTS)
@@ -442,14 +452,25 @@ fn inspect_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse an integer flag with a default; malformed values are errors.
+fn usize_flag(flags: &Flags, name: &str, default: usize) -> Result<usize> {
+    match flags.get(name) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got `{s}`")),
+    }
+}
+
 fn serve(flags: &Flags, threads: usize) -> Result<()> {
-    use crate::coordinator::{tcp, Policy, Server, ServerConfig};
+    use crate::coordinator::{reactor, Policy, ReactorConfig, Server, ServerConfig, VariantOpts};
     use crate::nn::compressed::{CompressionCfg, FcFormat};
     use crate::nn::CompressedModel;
     use crate::quant::Kind;
-    use crate::util::prng::Prng;
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
+    use std::time::Duration;
+    use crate::util::prng::Prng;
 
     let art = artifacts_dir(flags);
     if !art.join("manifest.txt").exists() {
@@ -458,20 +479,40 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
     let addr = flags
         .get("addr")
         .unwrap_or_else(|| "127.0.0.1:7410".to_string());
+    let rcfg_default = ReactorConfig::default();
+    let rcfg = ReactorConfig {
+        shards: usize_flag(flags, "shards", rcfg_default.shards)?,
+        max_conns: usize_flag(flags, "max-conns", rcfg_default.max_conns)?,
+        max_frame_bytes: usize_flag(
+            flags,
+            "max-frame-kib",
+            rcfg_default.max_frame_bytes >> 10,
+        )? << 10,
+        ..rcfg_default
+    };
+    let policy = Policy {
+        max_batch: usize_flag(flags, "max-batch", Policy::default().max_batch)?,
+        max_wait: Duration::from_millis(usize_flag(flags, "deadline-ms", 2)? as u64),
+        queue_cap: usize_flag(flags, "queue-cap", Policy::default().queue_cap)?,
+    };
+    let replicas = usize_flag(flags, "replicas", 1)?;
+    let status_secs = usize_flag(flags, "status-secs", 30)?;
     let cfg = ServerConfig {
-        policy: Policy::default(),
+        policy,
         fc_threads: threads,
     };
+    let vopts = VariantOpts { policy: None, replicas };
     let mut server = Server::new(cfg);
     let pure_only = flags.has("pure");
     for kind in ModelKind::ALL {
         let params = kind.load_weights(&art)?;
         if !pure_only {
             let baseline = CompressedModel::baseline(kind, &params)?;
-            server.add_variant(
+            server.add_variant_opts(
                 &format!("{}-baseline", kind.dataset()),
                 baseline,
                 kind.features_hlo(&art, 32),
+                vopts.clone(),
             )?;
             let ccfg = CompressionCfg {
                 fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
@@ -481,10 +522,11 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
             };
             let mut rng = Prng::seeded(42);
             let compressed = CompressedModel::build(kind, &params, &ccfg, &mut rng)?;
-            server.add_variant(
+            server.add_variant_opts(
                 &format!("{}-compressed", kind.dataset()),
                 compressed,
                 kind.features_hlo(&art, 32),
+                vopts.clone(),
             )?;
         }
         // full-network compressed variant on the pure-Rust im2col
@@ -507,15 +549,46 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
             kind.dataset(),
             full.conv_format_report()
         );
-        server.add_variant_pure(&format!("{}-full", kind.dataset()), full)?;
+        server.add_variant_pure_opts(
+            &format!("{}-full", kind.dataset()),
+            full,
+            vopts.clone(),
+        )?;
     }
     println!("variants: {:?}", server.variant_names());
     let server = Arc::new(server);
     let stop = Arc::new(AtomicBool::new(false));
-    println!("serving on {addr} (ctrl-c to stop)");
-    tcp::serve(&addr, server.clone(), stop, |a| {
+    println!(
+        "serving on {addr}: {} shards, {replicas} replica(s)/variant, \
+         max_batch={} deadline={:?} queue_cap={} max_conns={} (ctrl-c to stop)",
+        rcfg.shards, policy.max_batch, policy.max_wait, policy.queue_cap, rcfg.max_conns
+    );
+    // periodic status line: queue depth, shed counts, latency quantiles
+    let status = if status_secs > 0 {
+        let srv = server.clone();
+        let stop2 = stop.clone();
+        Some(std::thread::spawn(move || {
+            let tick = Duration::from_millis(250);
+            let mut since = Duration::ZERO;
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                since += tick;
+                if since >= Duration::from_secs(status_secs as u64) {
+                    since = Duration::ZERO;
+                    println!("status: {}", srv.metrics.render());
+                }
+            }
+        }))
+    } else {
+        None
+    };
+    reactor::serve(&addr, server.clone(), rcfg, stop.clone(), |a| {
         println!("listening on {a}");
     })?;
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    if let Some(h) = status {
+        let _ = h.join();
+    }
     println!("{}", server.metrics.render());
     Ok(())
 }

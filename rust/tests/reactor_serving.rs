@@ -1,0 +1,483 @@
+//! Reactor front-end integration tests: protocol hardening, pipelined
+//! ordering, deadline batching, load shedding, connection caps, and
+//! graceful shutdown — all against an in-process server on an ephemeral
+//! port, no artifacts needed (synthetic model).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sham::coordinator::frame::{self, STATUS_ERR, STATUS_OK, STATUS_OVERLOADED};
+use sham::coordinator::reactor::{self, ReactorConfig};
+use sham::coordinator::{Input, Policy, Server, ServerConfig, VariantOpts};
+use sham::nn::compressed::{CompressionCfg, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::quant::Kind;
+use sham::util::prng::Prng;
+
+mod common;
+use common::synthetic_vgg_archive;
+
+const PER: usize = 8 * 8; // one 8×8×1 synthetic image
+
+fn build_model(seed: u64) -> CompressedModel {
+    let mut rng = Prng::seeded(seed);
+    let a = synthetic_vgg_archive(&mut rng);
+    let ccfg = CompressionCfg {
+        fc_quant: Some((Kind::Cws, 8)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    CompressedModel::build(ModelKind::VggMnist, &a, &ccfg, &mut rng).unwrap()
+}
+
+/// Server with one pure variant "vgg" under `opts`.
+fn build_server(policy: Policy, opts: VariantOpts) -> Server {
+    let mut server = Server::new(ServerConfig { policy, fc_threads: 1 });
+    server.add_variant_pure_opts("vgg", build_model(0xBEEF), opts).unwrap();
+    server
+}
+
+struct Running {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+    server: Arc<Server>,
+}
+
+impl Running {
+    fn start(server: Server, cfg: ReactorConfig) -> Running {
+        let server = Arc::new(server);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            reactor::serve("127.0.0.1:0", srv, cfg, stop2, move |a| {
+                tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        Running { addr, stop, handle, server }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let s = TcpStream::connect(self.addr).unwrap();
+        s.set_nodelay(true).ok();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s
+    }
+
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().unwrap();
+    }
+}
+
+fn image(rng: &mut Prng) -> Vec<f32> {
+    (0..PER).map(|_| rng.normal() as f32).collect()
+}
+
+fn send_image(s: &mut TcpStream, variant: &str, img: &[f32]) {
+    let mut b = Vec::new();
+    frame::encode_request(&mut b, variant, &Input::Image(img.to_vec()));
+    s.write_all(&b).unwrap();
+}
+
+/// Read one response frame: (status, ok-floats or message bytes).
+fn read_response(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut st = [0u8; 1];
+    s.read_exact(&mut st)?;
+    let mut nb = [0u8; 4];
+    s.read_exact(&mut nb)?;
+    let n = u32::from_le_bytes(nb) as usize;
+    let mut payload = vec![0u8; if st[0] == STATUS_OK { n * 4 } else { n }];
+    s.read_exact(&mut payload)?;
+    Ok((st[0], payload))
+}
+
+fn floats(payload: &[u8]) -> Vec<f32> {
+    payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+// ---- protocol hardening -------------------------------------------------
+
+#[test]
+fn oversized_image_gets_error_and_connection_survives() {
+    let cfg = ReactorConfig { max_frame_bytes: 4096, ..Default::default() };
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        cfg,
+    );
+    let mut s = run.connect();
+    // 2000 floats = 8000 bytes > the 4096-byte cap; send the whole
+    // declared payload so the reactor must skip it to stay in sync
+    let big = vec![0.125f32; 2000];
+    send_image(&mut s, "vgg", &big);
+    let (st, msg) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&msg).contains("frame cap"),
+        "unexpected message: {}",
+        String::from_utf8_lossy(&msg)
+    );
+    // the same connection still serves a valid request afterwards
+    let mut rng = Prng::seeded(1);
+    let img = image(&mut rng);
+    send_image(&mut s, "vgg", &img);
+    let (st, payload) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK, "connection must survive an oversized frame");
+    assert_eq!(floats(&payload).len(), 4);
+    assert!(
+        run.server.metrics.protocol_errors_total.load(Ordering::Relaxed) >= 1
+    );
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn oversized_token_vector_resyncs_through_both_vectors() {
+    let cfg = ReactorConfig { max_frame_bytes: 4096, ..Default::default() };
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        cfg,
+    );
+    let mut s = run.connect();
+    // token frame whose lig vector (2000 i32 = 8000 B) busts the cap;
+    // the reactor must skip it AND the length-prefixed prot vector
+    let mut b = Vec::new();
+    frame::encode_request(
+        &mut b,
+        "vgg",
+        &Input::Tokens { lig: vec![7; 2000], prot: vec![9; 3] },
+    );
+    s.write_all(&b).unwrap();
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_ERR);
+    // framing must be intact: a valid request still round-trips
+    let mut rng = Prng::seeded(2);
+    let img = image(&mut rng);
+    send_image(&mut s, "vgg", &img);
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK);
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn unknown_kind_gets_error_then_close() {
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        ReactorConfig::default(),
+    );
+    let mut s = run.connect();
+    let mut b = Vec::new();
+    b.extend_from_slice(&3u16.to_le_bytes());
+    b.extend_from_slice(b"vgg");
+    b.push(9); // bogus input kind — framing is unrecoverable
+    s.write_all(&b).unwrap();
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_ERR);
+    // server must close after flushing the error
+    let mut one = [0u8; 1];
+    match s.read(&mut one) {
+        Ok(0) => {}
+        Ok(_) => panic!("expected close after unrecoverable frame"),
+        Err(e) => panic!("expected clean EOF, got {e}"),
+    }
+    run.shutdown();
+}
+
+#[test]
+fn truncated_frame_then_disconnect_is_clean() {
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        ReactorConfig::default(),
+    );
+    {
+        let mut s = run.connect();
+        // half a header, then vanish
+        s.write_all(&[42u8]).unwrap();
+    }
+    // the server keeps serving fresh connections
+    let mut s = run.connect();
+    let mut rng = Prng::seeded(3);
+    let img = image(&mut rng);
+    send_image(&mut s, "vgg", &img);
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK);
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn unknown_variant_is_an_error_frame_not_a_close() {
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        ReactorConfig::default(),
+    );
+    let mut s = run.connect();
+    let mut rng = Prng::seeded(4);
+    let img = image(&mut rng);
+    send_image(&mut s, "ghost", &img);
+    let (st, msg) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_ERR);
+    assert!(String::from_utf8_lossy(&msg).contains("unknown variant"));
+    send_image(&mut s, "vgg", &img);
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK);
+    drop(s);
+    run.shutdown();
+}
+
+// ---- pipelining & batching ---------------------------------------------
+
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let run = Running::start(
+        build_server(
+            Policy { max_batch: 8, max_wait: Duration::from_millis(2), queue_cap: 256 },
+            VariantOpts::default(),
+        ),
+        ReactorConfig::default(),
+    );
+    let mut rng = Prng::seeded(5);
+    let imgs: Vec<Vec<f32>> = (0..16).map(|_| image(&mut rng)).collect();
+    // ground truth through the same server, sequentially
+    let want: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|im| run.server.infer("vgg", Input::Image(im.clone())).unwrap())
+        .collect();
+    // all 16 interleaved on ONE connection, written before any read
+    let mut s = run.connect();
+    let mut burst = Vec::new();
+    for im in &imgs {
+        frame::encode_request(&mut burst, "vgg", &Input::Image(im.clone()));
+    }
+    s.write_all(&burst).unwrap();
+    for (i, w) in want.iter().enumerate() {
+        let (st, payload) = read_response(&mut s).unwrap();
+        assert_eq!(st, STATUS_OK, "request {i}");
+        let got = floats(&payload);
+        assert_eq!(got.len(), w.len());
+        for (a, b) in got.iter().zip(w.iter()) {
+            assert!((a - b).abs() < 1e-4, "request {i} out of order: {a} vs {b}");
+        }
+    }
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn deadline_dispatches_partial_batches() {
+    // max_batch is far above the traffic level: only the deadline can
+    // dispatch, so a response proves deadline-based batching works.
+    let run = Running::start(
+        build_server(
+            Policy { max_batch: 64, max_wait: Duration::from_millis(10), queue_cap: 64 },
+            VariantOpts::default(),
+        ),
+        ReactorConfig::default(),
+    );
+    let mut s = run.connect();
+    let mut rng = Prng::seeded(6);
+    let img = image(&mut rng);
+    let t = Instant::now();
+    send_image(&mut s, "vgg", &img);
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK);
+    assert!(
+        t.elapsed() < Duration::from_secs(5),
+        "deadline dispatch took {:?}",
+        t.elapsed()
+    );
+    let m = &run.server.metrics;
+    assert_eq!(m.batches_total.load(Ordering::Relaxed), 1);
+    assert_eq!(m.batched_requests_total.load(Ordering::Relaxed), 1);
+    drop(s);
+    run.shutdown();
+}
+
+// ---- admission control --------------------------------------------------
+
+#[test]
+fn overload_sheds_with_status_2() {
+    // queue_cap 1 + batch 1: the worker serves one request at a time
+    // while the shard's parse loop submits as fast as it can — most of
+    // a pipelined burst must shed.
+    let opts = VariantOpts {
+        policy: Some(Policy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            queue_cap: 1,
+        }),
+        replicas: 1,
+    };
+    let run = Running::start(
+        build_server(Policy::default(), opts),
+        ReactorConfig::default(),
+    );
+    let mut rng = Prng::seeded(7);
+    let img = image(&mut rng);
+    let n = 128usize;
+    let mut burst = Vec::new();
+    for _ in 0..n {
+        frame::encode_request(&mut burst, "vgg", &Input::Image(img.clone()));
+    }
+    let mut s = run.connect();
+    let mut ws = s.try_clone().unwrap();
+    // write from a helper thread so reading can drain responses
+    // concurrently (the burst exceeds what kernel buffers may hold)
+    let writer = std::thread::spawn(move || {
+        ws.write_all(&burst).unwrap();
+    });
+    let (mut oks, mut sheds) = (0usize, 0usize);
+    for _ in 0..n {
+        let (st, _) = read_response(&mut s).unwrap();
+        match st {
+            STATUS_OK => oks += 1,
+            STATUS_OVERLOADED => sheds += 1,
+            other => panic!("unexpected status {other}"),
+        }
+    }
+    writer.join().unwrap();
+    assert!(oks >= 1, "at least the first request must be served");
+    assert!(sheds >= 1, "a saturated queue must shed ({oks} ok / {sheds} shed)");
+    assert!(
+        run.server.metrics.rejected_total.load(Ordering::Relaxed) >= sheds as u64
+    );
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn connection_cap_refuses_with_status_2() {
+    let cfg = ReactorConfig { max_conns: 1, ..Default::default() };
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        cfg,
+    );
+    // first connection occupies the only slot (round-trip proves it is
+    // registered before the second connect)
+    let mut a = run.connect();
+    let mut rng = Prng::seeded(8);
+    let img = image(&mut rng);
+    send_image(&mut a, "vgg", &img);
+    let (st, _) = read_response(&mut a).unwrap();
+    assert_eq!(st, STATUS_OK);
+    // second connection is refused with a status-2 frame, then closed
+    let mut b = run.connect();
+    let (st, msg) = read_response(&mut b).unwrap();
+    assert_eq!(st, STATUS_OVERLOADED);
+    assert!(String::from_utf8_lossy(&msg).contains("capacity"));
+    let mut one = [0u8; 1];
+    assert_eq!(b.read(&mut one).unwrap(), 0, "refused conn must be closed");
+    assert!(
+        run.server.metrics.conns_refused_total.load(Ordering::Relaxed) >= 1
+    );
+    drop(a);
+    drop(b);
+    run.shutdown();
+}
+
+// ---- shutdown & portability --------------------------------------------
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let run = Running::start(
+        build_server(
+            Policy { max_batch: 4, max_wait: Duration::from_millis(2), queue_cap: 256 },
+            VariantOpts::default(),
+        ),
+        ReactorConfig { drain: Duration::from_secs(5), ..Default::default() },
+    );
+    let mut rng = Prng::seeded(9);
+    let img = image(&mut rng);
+    let mut s = run.connect();
+    // one pipelined burst: a single small write lands in one read, so
+    // reading response #1 implies every request was parsed + submitted
+    let mut burst = Vec::new();
+    for _ in 0..8 {
+        frame::encode_request(&mut burst, "vgg", &Input::Image(img.clone()));
+    }
+    s.write_all(&burst).unwrap();
+    let (st, _) = read_response(&mut s).unwrap();
+    assert_eq!(st, STATUS_OK);
+    // stop NOW: the remaining 7 are in flight and must still arrive
+    let t = Instant::now();
+    run.stop.store(true, Ordering::SeqCst);
+    for i in 1..8 {
+        let (st, _) = read_response(&mut s)
+            .unwrap_or_else(|e| panic!("response {i} lost in shutdown: {e}"));
+        assert_eq!(st, STATUS_OK, "response {i}");
+    }
+    run.handle.join().unwrap();
+    assert!(
+        t.elapsed() < Duration::from_secs(10),
+        "shutdown not bounded: {:?}",
+        t.elapsed()
+    );
+    assert_eq!(
+        run.server.metrics.responses_total.load(Ordering::Relaxed),
+        8,
+        "every submitted request must be answered"
+    );
+}
+
+#[test]
+fn portable_poller_serves_round_trips() {
+    let cfg = ReactorConfig { portable_poll: true, shards: 1, ..Default::default() };
+    let run = Running::start(
+        build_server(Policy::default(), VariantOpts::default()),
+        cfg,
+    );
+    let mut s = run.connect();
+    let mut rng = Prng::seeded(10);
+    for i in 0..4 {
+        let img = image(&mut rng);
+        send_image(&mut s, "vgg", &img);
+        let (st, payload) = read_response(&mut s).unwrap();
+        assert_eq!(st, STATUS_OK, "request {i} on the scan poller");
+        assert_eq!(floats(&payload).len(), 4);
+    }
+    drop(s);
+    run.shutdown();
+}
+
+#[test]
+fn replicated_variant_serves_and_reports_replicas() {
+    let opts = VariantOpts { policy: None, replicas: 3 };
+    let run = Running::start(
+        build_server(Policy::default(), opts),
+        ReactorConfig::default(),
+    );
+    assert_eq!(run.server.replica_count("vgg"), 3);
+    let mut rng = Prng::seeded(11);
+    let imgs: Vec<Vec<f32>> = (0..12).map(|_| image(&mut rng)).collect();
+    let want: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|im| run.server.infer("vgg", Input::Image(im.clone())).unwrap())
+        .collect();
+    let mut s = run.connect();
+    let mut burst = Vec::new();
+    for im in &imgs {
+        frame::encode_request(&mut burst, "vgg", &Input::Image(im.clone()));
+    }
+    s.write_all(&burst).unwrap();
+    for (i, w) in want.iter().enumerate() {
+        let (st, payload) = read_response(&mut s).unwrap();
+        assert_eq!(st, STATUS_OK, "request {i}");
+        let got = floats(&payload);
+        for (a, b) in got.iter().zip(w.iter()) {
+            assert!((a - b).abs() < 1e-4, "request {i}: {a} vs {b}");
+        }
+    }
+    drop(s);
+    run.shutdown();
+}

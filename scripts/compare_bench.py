@@ -31,7 +31,11 @@ import os
 import shutil
 import sys
 
-BENCHES = ["BENCH_serving_hot_path.json", "BENCH_compressed_conv.json"]
+BENCHES = [
+    "BENCH_serving_hot_path.json",
+    "BENCH_compressed_conv.json",
+    "BENCH_coordinator.json",
+]
 
 # Key prefixes whose p50 regressions gate the build (the hot-path
 # sections of each bench). Reference/diagnostic rows stay informational.
@@ -45,6 +49,9 @@ HOT_PREFIXES = {
         "strided/",                      # generalized-geometry layers
         "scaling/",                      # shared-decode parallel conv
     ],
+    "BENCH_coordinator.json": [
+        "closed/", "open/",              # reactor end-to-end latency
+    ],
 }
 
 # Structural booleans that must hold in the current run when present.
@@ -52,6 +59,12 @@ REQUIRED_TRUE = {
     "BENCH_compressed_conv.json": [
         "steady_state_alloc_free",
         "decode_once_per_layer",
+    ],
+    "BENCH_coordinator.json": [
+        # admission control must actually shed under overload, and the
+        # reactor's thread count must stay O(shards+pool)
+        "sheds_on_overload",
+        "bounded_threads",
     ],
 }
 
