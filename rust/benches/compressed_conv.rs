@@ -12,7 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use sham::formats::{decode_stats, pool, FormatId, Workspace};
+use sham::formats::{decode_stats, pool, DecodedWeights, FormatId, Workspace};
 use sham::io::{Archive, Tensor};
 use sham::mat::Mat;
 use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
@@ -323,6 +323,103 @@ fn bench_decode_scaling(
     ok
 }
 
+/// Centroid-factorized conv section (DESIGN.md §9): a small-codebook
+/// VGG-like stack — k=8 (b=3 pointer bits) at s=0.5, the regime the
+/// crossover (`nnz ≥ 4·k·cols`) targets; `vgg_archive`'s k=32 at
+/// s=0.25 misses it on purpose. Times the whole conv forward through
+/// the Auto dispatch (which runs the factorized kernel on the eligible
+/// layers) and structurally verifies the crossover engages on every
+/// conv layer big enough to qualify — the `centroid_kernel_used` JSON
+/// boolean. The rows also feed the zero-alloc gate: the factorized
+/// kernel's per-symbol scratch is grow-only thread-local state, so the
+/// steady state must stay allocation-free.
+fn bench_centroid_conv(rows: &mut Vec<Row>) -> bool {
+    let mut rng = Prng::seeded(0xCE2701D);
+    let mut a = Archive::new();
+    let conv_dims = [
+        ("c1a", 1usize, 16usize),
+        ("c1b", 16, 16),
+        ("c2a", 16, 32),
+        ("c2b", 32, 32),
+        ("c3a", 32, 32),
+    ];
+    for (name, cin, cout) in conv_dims {
+        let w = Mat::sparse_quantized(3 * 3 * cin, cout, 0.5, 8, &mut rng);
+        a.insert(
+            format!("{name}.w"),
+            Tensor::from_f32(vec![3, 3, cin, cout], &w.data),
+        );
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![cout], &vec![0.01; cout]));
+    }
+    for (name, &(nin, nout)) in ModelKind::VggMnist
+        .fc_names()
+        .iter()
+        .zip([(512usize, 128usize), (128, 64), (64, 10)].iter())
+    {
+        let w = Mat::sparse_quantized(nin, nout, 0.5, 8, &mut rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(format!("{name}.b"), Tensor::from_f32(vec![nout], &vec![0.01; nout]));
+    }
+    let batch = 8usize;
+    let images: Vec<f32> =
+        (0..batch * 32 * 32).map(|_| rng.normal() as f32).collect();
+    let input = PlanInput::Images { n: batch, h: 32, w: 32, c: 1, data: &images };
+
+    let mut engaged = true;
+    for fmt in [FormatId::IndexMap, FormatId::Hac, FormatId::Shac] {
+        let cfg = CompressionCfg {
+            conv_format: ConvFormat::Fixed(fmt),
+            fc_format: FcFormat::Fixed(fmt),
+            ..Default::default()
+        };
+        let mut rng_m = Prng::seeded(13);
+        let model = CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng_m)
+            .unwrap();
+        // structural check: every conv layer tall enough to qualify
+        // (the 9-row stem never can) must meet the crossover at the
+        // im2col patch-batch sizes the pipeline uses
+        for layer in &model.conv {
+            if layer.w.rows() < 64 {
+                continue;
+            }
+            let mut dec = DecodedWeights::new();
+            if !layer.w.decode_once_into(&mut dec) || !dec.use_centroid(64) {
+                engaged = false;
+                eprintln!(
+                    "centroid crossover NOT engaged: {fmt} conv layer {}",
+                    layer.name
+                );
+            }
+        }
+        let mut ws = Workspace::new();
+        for _ in 0..2 {
+            model.conv_features_into(&input, 1, &mut ws).unwrap();
+        }
+        let before = allocs();
+        for _ in 0..5 {
+            black_box(model.conv_features_into(black_box(&input), 1, &mut ws).unwrap());
+        }
+        let steady = allocs() - before;
+        let s = bench(1, bench_iters(), || {
+            black_box(model.conv_features_into(black_box(&input), 1, &mut ws).unwrap());
+        });
+        println!(
+            "{:<40} {:>12} {:>12} {:>8}",
+            format!("centroid/vgg_k8_{fmt}"),
+            fmt_ns(s.p50),
+            fmt_ns(s.p95),
+            format!("{steady}"),
+        );
+        rows.push(Row {
+            name: format!("centroid/vgg_k8_{fmt}"),
+            summary: s,
+            steady_allocs: Some(steady),
+            decodes: None,
+        });
+    }
+    engaged
+}
+
 fn main() {
     let batch = 8usize;
     // deterministic pool size for the scaling section
@@ -353,6 +450,8 @@ fn main() {
 
     let decode_once_ok = bench_decode_scaling(&vgg, &vgg_input, &mut rows);
 
+    let centroid_ok = bench_centroid_conv(&mut rows);
+
     let zero_alloc_ok = rows.iter().all(|r| r.steady_allocs.unwrap_or(0) == 0);
     println!(
         "\nsteady-state conv hot path allocation-free: {}",
@@ -362,6 +461,10 @@ fn main() {
         "entropy conv layers decode once per invocation (counted): {}",
         if decode_once_ok { "YES" } else { "NO (regression!)" }
     );
+    println!(
+        "centroid crossover engages on the small-codebook conv stack: {}",
+        if centroid_ok { "YES" } else { "NO (regression!)" }
+    );
 
     // hand-rolled JSON (no serde in the offline registry)
     let mut json = String::from("{\n");
@@ -369,6 +472,7 @@ fn main() {
     json.push_str(&format!("  \"batch\": {batch},\n"));
     json.push_str(&format!("  \"steady_state_alloc_free\": {zero_alloc_ok},\n"));
     json.push_str(&format!("  \"decode_once_per_layer\": {decode_once_ok},\n"));
+    json.push_str(&format!("  \"centroid_kernel_used\": {centroid_ok},\n"));
     json.push_str("  \"results\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let allocs = r
@@ -396,10 +500,10 @@ fn main() {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
-    // make the zero-alloc and decode-once acceptance criteria hard
-    // failures so the CI smoke run catches regressions, not just
-    // records them
-    if !zero_alloc_ok || !decode_once_ok {
+    // make the zero-alloc, decode-once, and centroid-crossover
+    // acceptance criteria hard failures so the CI smoke run catches
+    // regressions, not just records them
+    if !zero_alloc_ok || !decode_once_ok || !centroid_ok {
         std::process::exit(1);
     }
 }

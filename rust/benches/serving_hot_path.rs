@@ -17,13 +17,19 @@
 //! Every variant also reports its *counted* weight-stream decode passes
 //! per product (`formats::decode_stats`), so the decode-once claims are
 //! measured, not inferred. A `scaling/` section times the batched
-//! parallel path across thread counts. Results are printed as a table
-//! and written to `BENCH_serving_hot_path.json`; CI diffs that file
-//! against `benches/baselines/` via `scripts/compare_bench.py`.
+//! parallel path across thread counts, and a `centroid/` section races
+//! the direct blocked kernel against the centroid-factorized kernel
+//! (one multiply per codebook entry, DESIGN.md §9) on a small-codebook
+//! workload where the Auto crossover selects factorization — the
+//! `centroid_kernel_used` JSON boolean asserts it does. Results are
+//! printed as a table and written to `BENCH_serving_hot_path.json`; CI
+//! diffs that file against `benches/baselines/` via
+//! `scripts/compare_bench.py`.
 
 use sham::formats::{
-    batched_product_into, decode_stats, par_matmul_batch_into, par_matmul_into,
-    pool, CompressedMatrix, Hac, Shac,
+    batched_product_into, decode_stats, par_decoded_matmul_batch_into,
+    par_matmul_batch_into, par_matmul_into, pool, BatchKernel, CompressedMatrix,
+    DecodedWeights, Hac, Shac,
 };
 use sham::mat::Mat;
 use sham::quant::{self, Kind, Options};
@@ -250,10 +256,95 @@ fn main() {
         }
     }
 
+    // centroid-factorized vs direct kernel on a small-codebook workload
+    // (k=8 → b=3 bits, p=90): the regime the crossover targets — few
+    // finish multiplies per column, plenty of per-non-zero adds to
+    // convert into multiply-free accumulates. Forced rows time the two
+    // kernels on the same decoded non-zeros (no decode in the window);
+    // the dispatch row is the full serving path under Auto.
+    println!("\n## centroid kernel — 1024×1024, CWS k=8 (b=3), p=90, batch={batch}");
+    println!("{:<34} {:>12} {:>12} {:>8}", "variant", "median", "p95", "decodes");
+    let w8 = workload(90.0, 8, &mut rng);
+    let xb8 = Mat::gaussian(batch, 1024, 1.0, &mut rng);
+    let formats: Vec<Box<dyn CompressedMatrix>> =
+        vec![Box::new(Hac::compress(&w8)), Box::new(Shac::compress(&w8))];
+    let mut centroid_kernel_used = true;
+    for f in &formats {
+        let fname = f.name();
+        let mut dec = DecodedWeights::new();
+        assert!(f.decode_once_into(&mut dec), "{fname}: shared decode required");
+        // structural claim behind the JSON boolean: on this workload the
+        // UNforced crossover must pick the centroid kernel
+        if !dec.use_centroid(batch) {
+            centroid_kernel_used = false;
+            eprintln!("centroid crossover NOT engaged for {fname} at batch {batch}");
+        }
+        let mut out = Mat::zeros(0, 0);
+        let mut kernel_ns = [0.0f64; 2];
+        for (ki, kernel) in [BatchKernel::Direct, BatchKernel::Centroid]
+            .into_iter()
+            .enumerate()
+        {
+            dec.force_kernel(kernel);
+            let s = bench(2, bench_iters(), || {
+                par_decoded_matmul_batch_into(&dec, black_box(&xb8), &mut out, threads);
+                black_box(&out);
+            });
+            kernel_ns[ki] = s.p50;
+            let d = count_decodes(|| {
+                par_decoded_matmul_batch_into(&dec, &xb8, &mut out, threads)
+            });
+            let label = format!("{}_forced", kernel.name());
+            println!(
+                "{:<34} {:>12} {:>12} {:>8}",
+                format!("{fname}/{label}"),
+                fmt_ns(s.p50),
+                fmt_ns(s.p95),
+                d,
+            );
+            rows.push(Row {
+                name: format!("centroid/{fname}/{label}"),
+                summary: s,
+                decodes: Some(d),
+            });
+        }
+        dec.force_kernel(BatchKernel::Auto);
+        let mut dout = Mat::zeros(0, 0);
+        let s_auto = bench(2, bench_iters(), || {
+            batched_product_into(f.as_ref(), black_box(&xb8), &mut dout, threads);
+            black_box(&dout);
+        });
+        let d_auto =
+            count_decodes(|| batched_product_into(f.as_ref(), &xb8, &mut dout, threads));
+        println!(
+            "{:<34} {:>12} {:>12} {:>8}",
+            format!("{fname}/dispatch_auto"),
+            fmt_ns(s_auto.p50),
+            fmt_ns(s_auto.p95),
+            d_auto,
+        );
+        rows.push(Row {
+            name: format!("centroid/{fname}/dispatch_auto"),
+            summary: s_auto,
+            decodes: Some(d_auto),
+        });
+        println!(
+            "{:<34} centroid {:.2}x vs direct ({})",
+            format!("{fname}/speedup"),
+            kernel_ns[0] / kernel_ns[1],
+            if kernel_ns[1] < kernel_ns[0] { "factorization wins" } else { "direct wins" },
+        );
+    }
+    println!(
+        "\ncentroid crossover engaged on the small-codebook workload: {}",
+        if centroid_kernel_used { "YES" } else { "NO (regression!)" }
+    );
+
     // hand-rolled JSON (no serde in the offline registry)
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"serving_hot_path\",\n");
     json.push_str(&format!("  \"threads\": {threads},\n  \"batch\": {batch},\n"));
+    json.push_str(&format!("  \"centroid_kernel_used\": {centroid_kernel_used},\n"));
     json.push_str("  \"results\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let decodes = r

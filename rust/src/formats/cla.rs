@@ -14,7 +14,7 @@
 
 use crate::formats::{
     axpy_lanes, scatter_col, stage_transposed, with_batch_scratch, BatchScratch,
-    CompressedMatrix, FormatId,
+    CompressedMatrix, DecodedWeights, FormatId,
 };
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
@@ -134,6 +134,23 @@ impl ColEnc {
                         axpy_lanes(acc, &xt[i * batch..(i + 1) * batch], v);
                     }
                 }
+            }
+        }
+    }
+
+    /// Append this column's distinct non-zero values (building the
+    /// matrix-wide codebook for the shared-decode symbol view).
+    fn collect_nonzeros(&self, into: &mut Vec<f32>) {
+        match self {
+            ColEnc::Rle(runs) => {
+                into.extend(runs.iter().filter(|(v, _)| *v != 0.0).map(|(v, _)| *v))
+            }
+            ColEnc::Ole { values, .. } => into.extend_from_slice(values),
+            ColEnc::Ddc { dict, .. } => {
+                into.extend(dict.iter().copied().filter(|&v| v != 0.0))
+            }
+            ColEnc::Uc(vals) => {
+                into.extend(vals.iter().copied().filter(|&v| v != 0.0))
             }
         }
     }
@@ -320,6 +337,69 @@ impl CompressedMatrix for Cla {
                 scatter_col(acc, out, j, self.cols);
             }
         });
+    }
+
+    /// Shared-decode support: walk each column encoding once into the
+    /// CSC-shaped scratch, tagging every non-zero with its id in a
+    /// matrix-wide sorted codebook so the centroid-factorized kernel
+    /// applies. Rows inside a column may be pushed out of order (OLE is
+    /// value-grouped) — the batched kernels are pure accumulations, so
+    /// within-column order is irrelevant. CLA has no entropy stream, so
+    /// this does NOT count as a decode pass.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        dec.reset(self.rows, self.cols);
+        let mut book: Vec<f32> = Vec::new();
+        for enc in &self.columns {
+            enc.collect_nonzeros(&mut book);
+        }
+        book.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        book.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        let _ = dec.set_codebook(&book);
+        let sym = |v: f32| -> u32 {
+            book.binary_search_by(|c| c.partial_cmp(&v).unwrap())
+                .expect("value must be in codebook") as u32
+        };
+        for enc in &self.columns {
+            match enc {
+                ColEnc::Rle(runs) => {
+                    let mut i = 0u32;
+                    for &(v, run) in runs {
+                        if v != 0.0 {
+                            let s = sym(v);
+                            for r in i..i + run {
+                                dec.push_sym(r, v, s);
+                            }
+                        }
+                        i += run;
+                    }
+                }
+                ColEnc::Ole { values, offsets } => {
+                    for (v, offs) in values.iter().zip(offsets.iter()) {
+                        let s = sym(*v);
+                        for &o in offs {
+                            dec.push_sym(o, *v, s);
+                        }
+                    }
+                }
+                ColEnc::Ddc { dict, idx } => {
+                    for (i, &p) in idx.iter().enumerate() {
+                        let v = dict[p as usize];
+                        if v != 0.0 {
+                            dec.push_sym(i as u32, v, sym(v));
+                        }
+                    }
+                }
+                ColEnc::Uc(vals) => {
+                    for (i, &v) in vals.iter().enumerate() {
+                        if v != 0.0 {
+                            dec.push_sym(i as u32, v, sym(v));
+                        }
+                    }
+                }
+            }
+            dec.close_col();
+        }
+        true
     }
 
     fn decompress(&self) -> Mat {

@@ -367,7 +367,11 @@ impl CompressedMatrix for Hac {
 
     /// Shared-decode support: one pass over the Huffman stream fills
     /// the CSC-shaped scratch every patch-row chunk then reuses — the
-    /// whole layer invocation costs exactly one decode.
+    /// whole layer invocation costs exactly one decode. The alphabet
+    /// doubles as the symbol codebook (zero entry included but never
+    /// referenced — zeros are skipped), enabling the centroid-factorized
+    /// kernel; an alphabet too large for `u16` ids degrades to a plain
+    /// decode, never an assert.
     fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
         dec.reset(self.rows, self.cols);
         if self.rows == 0 || self.cols == 0 {
@@ -376,6 +380,7 @@ impl CompressedMatrix for Hac {
             }
             return true;
         }
+        let _ = dec.set_codebook(&self.alphabet);
         decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let total = self.rows * self.cols;
@@ -397,7 +402,7 @@ impl CompressedMatrix for Hac {
             for &s in &run[..n] {
                 let v = self.alphabet[s as usize];
                 if v != 0.0 {
-                    dec.push(row as u32, v);
+                    dec.push_sym(row as u32, v, s);
                 }
                 row += 1;
                 if row == self.rows {

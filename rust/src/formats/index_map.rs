@@ -7,7 +7,7 @@
 
 use crate::formats::{
     axpy_lanes, stage_transposed, unstage_transposed, with_batch_scratch,
-    BatchScratch, CompressedMatrix, FormatId,
+    BatchScratch, CompressedMatrix, DecodedWeights, FormatId,
 };
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::mat::Mat;
@@ -192,6 +192,47 @@ impl CompressedMatrix for IndexMap {
             }
             unstage_transposed(ot, batch, self.cols, out);
         });
+    }
+
+    /// Shared-decode support: one strided column-major walk over the
+    /// pointer matrix Π fills the CSC-shaped scratch, recording each
+    /// non-zero's codebook id so the centroid-factorized kernel can
+    /// finish with one multiply per representative value. IM has no
+    /// entropy stream, so this does NOT count as a decode pass —
+    /// decode accounting stays exact.
+    fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
+        dec.reset(self.rows, self.cols);
+        let _ = dec.set_codebook(&self.codebook);
+        if self.cols == 0 {
+            return true;
+        }
+        match &self.idx {
+            Pointers::U8(idx) => {
+                for j in 0..self.cols {
+                    for i in 0..self.rows {
+                        let p = idx[i * self.cols + j] as usize;
+                        let v = self.codebook[p];
+                        if v != 0.0 {
+                            dec.push_sym(i as u32, v, p as u32);
+                        }
+                    }
+                    dec.close_col();
+                }
+            }
+            Pointers::U16(idx) => {
+                for j in 0..self.cols {
+                    for i in 0..self.rows {
+                        let p = idx[i * self.cols + j] as usize;
+                        let v = self.codebook[p];
+                        if v != 0.0 {
+                            dec.push_sym(i as u32, v, p as u32);
+                        }
+                    }
+                    dec.close_col();
+                }
+            }
+        }
+        true
     }
 
     fn decompress(&self) -> Mat {

@@ -382,7 +382,10 @@ impl CompressedMatrix for LzAc {
     }
 
     /// Shared-decode support: one pass over the LZW stream fills the
-    /// CSC-shaped scratch every patch-row chunk then reuses.
+    /// CSC-shaped scratch every patch-row chunk then reuses. The
+    /// non-zero alphabet is installed as the symbol codebook for the
+    /// centroid-factorized kernel; an alphabet too large for `u16` ids
+    /// degrades to a plain decode.
     fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
         dec.reset(self.rows, self.cols);
         if self.nnz == 0 || self.cols == 0 {
@@ -391,6 +394,7 @@ impl CompressedMatrix for LzAc {
             }
             return true;
         }
+        let _ = dec.set_codebook(&self.alphabet);
         decode_stats::record();
         let k = self.alphabet.len().max(1);
         with_lzw_scratch(|lz| {
@@ -400,7 +404,7 @@ impl CompressedMatrix for LzAc {
                 let end = self.cb[j + 1] as usize;
                 while pos < end {
                     let s = d.next_symbol().expect("truncated lzw stream");
-                    dec.push(self.ri[pos], self.alphabet[s as usize]);
+                    dec.push_sym(self.ri[pos], self.alphabet[s as usize], s);
                     pos += 1;
                 }
                 dec.close_col();

@@ -42,6 +42,7 @@ pub mod lzw;
 pub mod pool;
 pub mod relidx;
 pub mod shac;
+pub mod simd;
 pub mod store;
 
 pub use cla::Cla;
@@ -229,7 +230,11 @@ pub mod decode_stats {
 /// - `acc` — the per-column accumulator (`batch` lanes) used by the
 ///   column-major streams (HAC, sHAC, CSC, LZ-AC, CLA, DC-RI);
 /// - `ot` — the output staged `cols × batch` for the row-major /
-///   unordered streams (CSR, COO, IM), transposed back once at the end.
+///   unordered streams (CSR, COO, IM), transposed back once at the end;
+/// - `sym_acc` — the centroid-factorized kernel's per-symbol partial-sum
+///   accumulator (`codebook_len × batch` lanes, ≤ `2^b × BATCH_TILE·⌈B/8⌉`
+///   f32): activation tiles are *added* into their symbol's row, then
+///   one multiply per codebook entry finishes the column.
 ///
 /// Thread-local rather than part of the caller's `Workspace` because
 /// the chunk-parallel drivers run one kernel per pool worker — each
@@ -242,6 +247,7 @@ pub(crate) struct BatchScratch {
     pub(crate) xt: Vec<f32>,
     pub(crate) acc: Vec<f32>,
     pub(crate) ot: Vec<f32>,
+    pub(crate) sym_acc: Vec<f32>,
 }
 
 thread_local! {
@@ -278,24 +284,10 @@ pub(crate) fn stage_transposed(x: &[f32], batch: usize, rows: usize, xt: &mut Ve
     }
 }
 
-/// Lane-tiled AXPY `acc += v · src` over the batch lanes: fixed
-/// [`BATCH_TILE`]-wide register tiles with a scalar tail, so the
-/// compiler keeps one vector tile live per iteration.
-#[inline]
-pub(crate) fn axpy_lanes(acc: &mut [f32], src: &[f32], v: f32) {
-    debug_assert_eq!(acc.len(), src.len());
-    let tiles = acc.len() / BATCH_TILE * BATCH_TILE;
-    let (ah, at) = acc.split_at_mut(tiles);
-    let (sh, st) = src.split_at(tiles);
-    for (a8, s8) in ah.chunks_exact_mut(BATCH_TILE).zip(sh.chunks_exact(BATCH_TILE)) {
-        for l in 0..BATCH_TILE {
-            a8[l] += v * s8[l];
-        }
-    }
-    for (a, s) in at.iter_mut().zip(st.iter()) {
-        *a += v * *s;
-    }
-}
+// The lane primitives (`acc += v·src`, `acc += src`, fused centroid
+// finish) live in [`simd`]: explicit AVX2/NEON behind runtime feature
+// detection, scalar oracles kept for the property tests.
+pub(crate) use simd::{add_lanes, axpy_lanes, fma_drain_lanes};
 
 /// Write a finished `batch`-lane column accumulator back into the
 /// batch-major output at column `col`.
@@ -367,12 +359,55 @@ pub(crate) fn csc_batch_blocked(
     }
 }
 
+/// Which batched kernel a [`DecodedWeights`] product runs. `Auto` (the
+/// default after every decode) applies the codebook-size/batch
+/// crossover heuristic; the forced variants exist for the measured conv
+/// `Auto` race (time both, record the winner) and the property tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchKernel {
+    /// Crossover heuristic: centroid when the codebook is small relative
+    /// to the per-column work and the batch fills at least one tile.
+    #[default]
+    Auto,
+    /// Direct blocked CSC kernel: one multiply per non-zero per lane.
+    Direct,
+    /// Centroid-factorized kernel: adds per non-zero, one multiply per
+    /// codebook entry per column. Ignored (falls back to direct) when
+    /// the decode produced no symbol view.
+    Centroid,
+}
+
+impl BatchKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchKernel::Auto => "auto",
+            BatchKernel::Direct => "direct",
+            BatchKernel::Centroid => "centroid",
+        }
+    }
+}
+
+/// Minimum batch lanes before centroid factorization is considered —
+/// below one full register tile the finish multiplies cannot amortize.
+pub const CENTROID_MIN_BATCH: usize = BATCH_TILE;
+
+/// Factorization pays ~2 extra lane-ops per codebook entry per column
+/// (the fused finish multiply + accumulator drain) on top of the
+/// per-non-zero adds; require the average per-column accumulate work to
+/// dominate that overhead by 2× before switching — i.e. centroid when
+/// `nnz ≥ 4 · k · cols`. Small b (k = 2^b) and dense-ish columns pass;
+/// b near log2(nnz-distinct) does not. See DESIGN.md §9.
+pub const CENTROID_FINISH_SLACK: usize = 4;
+
 /// A weight stream decoded ONCE into CSC-shaped scratch arrays
 /// (column-major non-zeros, grow-only), shared read-only by every
 /// patch-row chunk of one layer invocation — the ROADMAP's
 /// "shared-decode im2col". Obtained from
 /// [`CompressedMatrix::decode_once_into`]; products run through the
-/// same register-blocked kernel as [`Csc`].
+/// same register-blocked kernel as [`Csc`], or — when the decode also
+/// recorded the ≤ 2^b-entry codebook and per-non-zero symbol ids — the
+/// centroid-factorized kernel (one multiply per codebook entry per
+/// column; see DESIGN.md §9).
 #[derive(Debug, Default)]
 pub struct DecodedWeights {
     rows: usize,
@@ -380,6 +415,19 @@ pub struct DecodedWeights {
     nz: Vec<f32>,
     ri: Vec<u32>,
     cb: Vec<u32>,
+    /// Symbol id → centroid value (the quantized format's codebook);
+    /// meaningful only while `sym_on`.
+    codebook: Vec<f32>,
+    /// Per-non-zero symbol id, parallel to `nz`; meaningful only while
+    /// `sym_on`.
+    sym: Vec<u16>,
+    /// Whether the symbol view is valid: set by [`Self::set_codebook`],
+    /// dropped when the codebook overflows `u16` ids or a plain
+    /// [`Self::push`] bypasses symbol tracking.
+    sym_on: bool,
+    /// Kernel override for the measured Auto race; `Auto` after every
+    /// [`Self::reset`] so serving never inherits a forced kernel.
+    forced: BatchKernel,
 }
 
 impl DecodedWeights {
@@ -408,13 +456,51 @@ impl DecodedWeights {
         self.ri.clear();
         self.cb.clear();
         self.cb.push(0);
+        self.codebook.clear();
+        self.sym.clear();
+        self.sym_on = false;
+        self.forced = BatchKernel::Auto;
     }
 
-    /// Append one decoded non-zero of the current column.
+    /// Install the decoding format's codebook (symbol id → value) and
+    /// enable symbol tracking for the following [`Self::push_sym`]
+    /// calls. Returns `false` — symbol view disabled, decode proceeds
+    /// plain — when the codebook cannot be addressed by `u16` ids; the
+    /// dispatch then cleanly stays on the direct kernel.
+    pub(crate) fn set_codebook(&mut self, values: &[f32]) -> bool {
+        self.codebook.clear();
+        self.sym.clear();
+        if values.len() > u16::MAX as usize + 1 {
+            self.sym_on = false;
+            return false;
+        }
+        self.codebook.extend_from_slice(values);
+        self.sym_on = true;
+        true
+    }
+
+    /// Append one decoded non-zero of the current column WITHOUT a
+    /// symbol id — drops the symbol view for this decode (a format with
+    /// no codebook, or a mixed caller).
     #[inline]
     pub(crate) fn push(&mut self, row: u32, v: f32) {
         self.nz.push(v);
         self.ri.push(row);
+        self.sym_on = false;
+    }
+
+    /// Append one decoded non-zero of the current column with its
+    /// codebook symbol id. The id is recorded only while the symbol
+    /// view is enabled (see [`Self::set_codebook`]), so callers can use
+    /// this unconditionally.
+    #[inline]
+    pub(crate) fn push_sym(&mut self, row: u32, v: f32, s: u32) {
+        self.nz.push(v);
+        self.ri.push(row);
+        if self.sym_on {
+            debug_assert!((s as usize) < self.codebook.len(), "symbol out of range");
+            self.sym.push(s as u16);
+        }
     }
 
     /// Close the current column (must be called exactly `cols` times).
@@ -423,9 +509,75 @@ impl DecodedWeights {
         self.cb.push(self.nz.len() as u32);
     }
 
+    /// Whether this decode carries the symbol-indexed view (codebook +
+    /// per-non-zero ids) required by the centroid-factorized kernel.
+    pub fn has_symbols(&self) -> bool {
+        self.sym_on && self.sym.len() == self.nz.len()
+    }
+
+    /// Codebook size k (0 without a symbol view).
+    pub fn codebook_len(&self) -> usize {
+        if self.sym_on {
+            self.codebook.len()
+        } else {
+            0
+        }
+    }
+
+    /// Force a kernel for subsequent products (the measured Auto race
+    /// times both paths through the exact serving dispatch). A forced
+    /// `Centroid` without a symbol view falls back to direct. Cleared
+    /// back to `Auto` by the next decode's [`Self::reset`].
+    pub fn force_kernel(&mut self, k: BatchKernel) {
+        self.forced = k;
+    }
+
+    /// The crossover: would a `batch`-lane product on this decode run
+    /// the centroid-factorized kernel? Small codebooks and large
+    /// batches qualify (`batch ≥` [`CENTROID_MIN_BATCH`] and
+    /// `nnz ≥ `[`CENTROID_FINISH_SLACK`]`· k · cols`); a codebook near
+    /// the non-zero count never pays for its finish multiplies.
+    pub fn use_centroid(&self, batch: usize) -> bool {
+        if !self.has_symbols() {
+            return false;
+        }
+        match self.forced {
+            BatchKernel::Direct => false,
+            BatchKernel::Centroid => true,
+            BatchKernel::Auto => {
+                let k = self.codebook.len();
+                batch >= CENTROID_MIN_BATCH
+                    && k > 0
+                    && self.nz.len() >= CENTROID_FINISH_SLACK * k * self.cols.max(1)
+            }
+        }
+    }
+
+    /// Kernel name a `batch`-lane product would run — for the per-layer
+    /// conv reports.
+    pub fn kernel_name(&self, batch: usize) -> &'static str {
+        if self.use_centroid(batch) {
+            BatchKernel::Centroid.name()
+        } else {
+            BatchKernel::Direct.name()
+        }
+    }
+
     /// Register-blocked batched product on the decoded non-zeros
     /// (`x` is `batch × rows` row-major; `out` fully overwritten).
+    /// Dispatches between the direct and centroid-factorized kernels
+    /// per the crossover (or the forced override).
     pub fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        if self.use_centroid(batch) {
+            self.matmul_batch_centroid(x, batch, out);
+        } else {
+            self.matmul_batch_direct(x, batch, out);
+        }
+    }
+
+    /// The direct blocked CSC kernel (one multiply per non-zero per
+    /// lane) — public so benches and property tests can pin the path.
+    pub fn matmul_batch_direct(&self, x: &[f32], batch: usize, out: &mut [f32]) {
         assert_eq!(x.len(), batch * self.rows, "decoded matmul input shape");
         assert_eq!(out.len(), batch * self.cols, "decoded matmul output shape");
         debug_assert_eq!(self.cb.len(), self.cols + 1, "unfinished decode");
@@ -435,6 +587,69 @@ impl DecodedWeights {
                 self.rows, self.cols, &self.nz, &self.ri, &self.cb, x, batch, out,
                 xt, acc,
             );
+        });
+    }
+
+    /// The centroid-factorized kernel: per column, each non-zero's
+    /// batch-lane tile is *added* into its symbol's partial-sum row of
+    /// the `k × batch` scratch, then one fused multiply-and-drain per
+    /// codebook entry finishes the column — O(nnz·B) adds plus
+    /// O(2^b·B) multiplies instead of O(nnz·B) multiplies. Requires a
+    /// symbol view ([`Self::has_symbols`]).
+    pub fn matmul_batch_centroid(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert!(self.has_symbols(), "centroid kernel needs a symbol view");
+        assert_eq!(x.len(), batch * self.rows, "decoded matmul input shape");
+        assert_eq!(out.len(), batch * self.cols, "decoded matmul output shape");
+        debug_assert_eq!(self.cb.len(), self.cols + 1, "unfinished decode");
+        if batch == 0 || self.cols == 0 {
+            return;
+        }
+        let k = self.codebook.len();
+        with_batch_scratch(|scratch| {
+            let BatchScratch {
+                ref mut xt,
+                ref mut acc,
+                ref mut sym_acc,
+                ..
+            } = *scratch;
+            stage_transposed(x, batch, self.rows, xt);
+            sym_acc.clear();
+            sym_acc.resize(k * batch, 0.0);
+            acc.clear();
+            acc.resize(batch, 0.0);
+            for j in 0..self.cols {
+                let (lo, hi) = (self.cb[j] as usize, self.cb[j + 1] as usize);
+                if lo == hi {
+                    for b in 0..batch {
+                        out[b * self.cols + j] = 0.0;
+                    }
+                    continue;
+                }
+                // accumulate: adds only, one tile per non-zero
+                for t in lo..hi {
+                    let row = self.ri[t] as usize;
+                    let s = self.sym[t] as usize;
+                    add_lanes(
+                        &mut sym_acc[s * batch..(s + 1) * batch],
+                        &xt[row * batch..(row + 1) * batch],
+                    );
+                }
+                // finish: ONE multiply per codebook entry, draining each
+                // partial-sum tile for the next column in the same pass.
+                // A zero centroid is skipped — no non-zero carries its
+                // symbol, so its tile stays all-zero.
+                acc.fill(0.0);
+                for (s, &c) in self.codebook.iter().enumerate() {
+                    if c != 0.0 {
+                        fma_drain_lanes(
+                            acc,
+                            &mut sym_acc[s * batch..(s + 1) * batch],
+                            c,
+                        );
+                    }
+                }
+                scatter_col(acc, out, j, self.cols);
+            }
         });
     }
 
@@ -781,14 +996,21 @@ pub fn par_decoded_matmul_batch_into_on(
 /// The serving dispatch for one batched product — decode-once as the
 /// invariant at every parallelism level:
 ///
-/// - `threads ≤ 1` (or a 1-row batch): the format's serial decode-once
-///   blocked kernel — 1 stream decode per product;
-/// - `threads > 1`, format has a stream decode
+/// - 1-row batch: the format's serial decode-once blocked kernel —
+///   1 stream decode per product;
+/// - batch > 1, format has a stream decode
 ///   ([`CompressedMatrix::decode_once_into`]): decode ONCE into this
-///   thread's shared [`DecodedWeights`] scratch, then chunk-parallel
-///   blocked products against the decoded non-zeros — still 1 decode;
-/// - `threads > 1`, decode-free format: [`par_matmul_batch_into`]
-///   (each chunk scans the stored arrays in place).
+///   thread's shared [`DecodedWeights`] scratch, then blocked products
+///   against the decoded non-zeros — serial at `threads ≤ 1`,
+///   chunk-parallel otherwise, still exactly 1 decode. This is also
+///   where the centroid-factorized kernel engages (the decoded scratch
+///   carries the symbol view; [`DecodedWeights::use_centroid`] picks
+///   per matrix from codebook size and batch), so factorization reaches
+///   the FC stack, the shared-decode im2col conv path, and the reactor
+///   serving tier at ANY thread count;
+/// - batch > 1, decode-free format (or a codebook the symbol ids cannot
+///   address): the direct blocked kernels — [`par_matmul_batch_into`]
+///   when parallel, the format's own `matmul_batch_into` when serial.
 ///
 /// The conv im2col pipeline and the measured `conv_format: Auto` race
 /// both run through here, so the policy times exactly what serving
@@ -799,17 +1021,25 @@ pub fn batched_product_into<F: CompressedMatrix + ?Sized>(
     out: &mut Mat,
     threads: usize,
 ) {
-    if threads > 1 && x.rows > 1 {
+    if x.rows > 1 {
         let shared = with_decode_scratch(|dec| {
             if w.decode_once_into(dec) {
-                par_decoded_matmul_batch_into(dec, x, out, threads);
+                if threads > 1 {
+                    par_decoded_matmul_batch_into(dec, x, out, threads);
+                } else {
+                    dec.matmul_batch_into(x, out);
+                }
                 true
             } else {
                 false
             }
         });
         if !shared {
-            par_matmul_batch_into(w, x, out, threads);
+            if threads > 1 {
+                par_matmul_batch_into(w, x, out, threads);
+            } else {
+                w.matmul_batch_into(x, out);
+            }
         }
     } else {
         w.matmul_batch_into(x, out);
@@ -1118,6 +1348,94 @@ mod tests {
                 assert!(!c.decode_once_into(&mut dec));
             }
         }
+    }
+
+    #[test]
+    fn centroid_crossover_picks_by_codebook_and_batch() {
+        let mut rng = Prng::seeded(0xCE27);
+        // dense-ish, tiny codebook: centroid profitable at full tiles
+        let m = Mat::sparse_quantized(64, 16, 0.9, 4, &mut rng);
+        let f = FormatId::Shac.compress(&m);
+        let mut dec = DecodedWeights::new();
+        assert!(f.decode_once_into(&mut dec));
+        assert!(dec.has_symbols());
+        assert!(dec.codebook_len() >= 1);
+        assert!(dec.use_centroid(32), "small codebook + big batch");
+        assert!(!dec.use_centroid(1), "single lane never factorizes");
+        assert!(
+            !dec.use_centroid(CENTROID_MIN_BATCH - 1),
+            "sub-tile batch never factorizes"
+        );
+        // forced overrides win over the heuristic
+        dec.force_kernel(BatchKernel::Direct);
+        assert!(!dec.use_centroid(32));
+        dec.force_kernel(BatchKernel::Centroid);
+        assert!(dec.use_centroid(2));
+        // a fresh decode clears the force
+        assert!(f.decode_once_into(&mut dec));
+        assert!(dec.use_centroid(32) && !dec.use_centroid(1));
+        // codebook as large as the non-zero pool: finish never amortizes
+        let wide = Mat::gaussian(48, 48, 1.0, &mut rng);
+        let g = FormatId::Shac.compress(&wide);
+        assert!(g.decode_once_into(&mut dec));
+        assert!(!dec.use_centroid(64), "k ≈ nnz must stay direct");
+    }
+
+    #[test]
+    fn centroid_kernel_matches_direct_kernel() {
+        let mut rng = Prng::seeded(0xCE28);
+        for _ in 0..4 {
+            let m = Mat::sparse_quantized(40, 24, 0.6, 8, &mut rng);
+            for id in [FormatId::Hac, FormatId::Shac, FormatId::LzAc] {
+                let f = id.compress(&m);
+                let mut dec = DecodedWeights::new();
+                assert!(f.decode_once_into(&mut dec), "{id}");
+                assert!(dec.has_symbols(), "{id}: symbol view");
+                for batch in [1usize, 8, 9, 33] {
+                    let xb = Mat::gaussian(batch, 40, 1.0, &mut rng);
+                    let mut direct = vec![f32::NAN; batch * 24];
+                    let mut cent = vec![f32::NAN; batch * 24];
+                    dec.matmul_batch_direct(&xb.data, batch, &mut direct);
+                    dec.matmul_batch_centroid(&xb.data, batch, &mut cent);
+                    for (i, (a, b)) in direct.iter().zip(cent.iter()).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                            "{id} b{batch} entry {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_codebook_disables_symbol_view() {
+        let mut dec = DecodedWeights::new();
+        dec.reset(2, 1);
+        let big = vec![1.0f32; u16::MAX as usize + 2];
+        assert!(!dec.set_codebook(&big), "u16 overflow must be rejected");
+        dec.push_sym(0, 1.0, 0);
+        dec.push_sym(1, 1.0, 70_000);
+        dec.close_col();
+        assert!(!dec.has_symbols());
+        assert!(!dec.use_centroid(64));
+        // the product still runs through the direct kernel
+        let x = Mat::from_vec(9, 2, vec![1.0; 18]);
+        let mut out = Mat::zeros(0, 0);
+        dec.matmul_batch_into(&x, &mut out);
+        assert_eq!(out.data, vec![2.0; 9]);
+    }
+
+    #[test]
+    fn plain_push_drops_symbol_view() {
+        let mut dec = DecodedWeights::new();
+        dec.reset(3, 1);
+        assert!(dec.set_codebook(&[0.5, 2.0]));
+        dec.push_sym(0, 0.5, 0);
+        dec.push(1, 2.0); // no symbol: the view must drop, not corrupt
+        dec.close_col();
+        assert!(!dec.has_symbols());
+        assert_eq!(dec.codebook_len(), 0);
     }
 
     #[test]

@@ -355,7 +355,11 @@ impl CompressedMatrix for Shac {
 
     /// Shared-decode support: one pass over the Huffman-coded nz stream
     /// (ri/cb copied positionally) fills the CSC-shaped scratch — the
-    /// whole layer invocation costs exactly one decode.
+    /// whole layer invocation costs exactly one decode. The non-zero
+    /// alphabet is installed as the symbol codebook, so the centroid
+    /// kernel can finish each column with one multiply per distinct
+    /// value; an alphabet too large for `u16` ids degrades to a plain
+    /// decode.
     fn decode_once_into(&self, dec: &mut DecodedWeights) -> bool {
         dec.reset(self.rows, self.cols);
         let q = self.ri.len();
@@ -365,6 +369,7 @@ impl CompressedMatrix for Shac {
             }
             return true;
         }
+        let _ = dec.set_codebook(&self.alphabet);
         decode_stats::record();
         let mut r = BitReader::new(&self.stream);
         let mut run = [0u32; 8];
@@ -389,7 +394,7 @@ impl CompressedMatrix for Shac {
                     col += 1;
                     end = self.cb[col + 1] as usize;
                 }
-                dec.push(self.ri[pos], self.alphabet[s as usize]);
+                dec.push_sym(self.ri[pos], self.alphabet[s as usize], s);
                 pos += 1;
             }
         }

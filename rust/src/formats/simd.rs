@@ -1,0 +1,390 @@
+//! Explicit SIMD lane primitives for the register-blocked batched
+//! kernels (ROADMAP's "explicit SIMD lanes" item, the second half of
+//! the decode/SIMD pairing).
+//!
+//! Every blocked kernel streams [`super::BATCH_TILE`]-wide (8 × f32)
+//! batch-lane tiles through three primitives:
+//!
+//! - [`axpy_lanes`]    — `acc += v · src`, the direct kernels' inner op;
+//! - [`add_lanes`]     — `acc += src`, the centroid-factorized
+//!   *accumulate* step (adds only — the whole point of factorization);
+//! - [`fma_drain_lanes`] — `acc += c · tile; tile = 0`, the factorized
+//!   *finish* step fused with the per-symbol accumulator reset so each
+//!   partial-sum tile is touched once per column instead of twice.
+//!
+//! Each primitive has an `std::arch` implementation (AVX2+FMA on
+//! x86_64 — one 256-bit vector per tile; NEON on aarch64 — two 128-bit
+//! vectors) selected by *runtime* feature detection cached in an
+//! atomic, plus a portable scalar implementation. The `*_scalar`
+//! versions stay `pub(crate)` so the property tests can use them as the
+//! oracle against the vector paths (the FMA forms round once where
+//! mul-then-add rounds twice, so agreement is asserted to within 1 ulp,
+//! not bitwise).
+
+use super::BATCH_TILE;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Cached runtime dispatch level: 0 = undetected, 1 = scalar,
+/// 2 = vector (AVX2+FMA or NEON).
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+const LVL_SCALAR: u8 = 1;
+const LVL_VECTOR: u8 = 2;
+
+#[inline]
+fn detect() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return LVL_VECTOR;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return LVL_VECTOR;
+        }
+    }
+    LVL_SCALAR
+}
+
+/// True when the vector implementations are active on this machine.
+#[inline]
+pub(crate) fn vector_lanes_active() -> bool {
+    level() == LVL_VECTOR
+}
+
+#[inline]
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 0 {
+        return l;
+    }
+    let d = detect();
+    LEVEL.store(d, Ordering::Relaxed);
+    d
+}
+
+// ---- scalar oracles --------------------------------------------------------
+
+/// Lane-tiled AXPY `acc += v · src`: fixed [`BATCH_TILE`]-wide register
+/// tiles with a scalar tail, so the compiler keeps one vector tile live
+/// per iteration. The property-test oracle for [`axpy_lanes`].
+#[inline]
+pub(crate) fn axpy_lanes_scalar(acc: &mut [f32], src: &[f32], v: f32) {
+    debug_assert_eq!(acc.len(), src.len());
+    let tiles = acc.len() / BATCH_TILE * BATCH_TILE;
+    let (ah, at) = acc.split_at_mut(tiles);
+    let (sh, st) = src.split_at(tiles);
+    for (a8, s8) in ah.chunks_exact_mut(BATCH_TILE).zip(sh.chunks_exact(BATCH_TILE)) {
+        for l in 0..BATCH_TILE {
+            a8[l] += v * s8[l];
+        }
+    }
+    for (a, s) in at.iter_mut().zip(st.iter()) {
+        *a += v * *s;
+    }
+}
+
+/// Lane-tiled add `acc += src` — the centroid accumulate step. Oracle
+/// for [`add_lanes`].
+#[inline]
+pub(crate) fn add_lanes_scalar(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let tiles = acc.len() / BATCH_TILE * BATCH_TILE;
+    let (ah, at) = acc.split_at_mut(tiles);
+    let (sh, st) = src.split_at(tiles);
+    for (a8, s8) in ah.chunks_exact_mut(BATCH_TILE).zip(sh.chunks_exact(BATCH_TILE)) {
+        for l in 0..BATCH_TILE {
+            a8[l] += s8[l];
+        }
+    }
+    for (a, s) in at.iter_mut().zip(st.iter()) {
+        *a += *s;
+    }
+}
+
+/// Fused centroid finish: `acc += c · tile`, zeroing `tile` in the same
+/// pass so the per-symbol accumulator is clean for the next column.
+/// Oracle for [`fma_drain_lanes`].
+#[inline]
+pub(crate) fn fma_drain_lanes_scalar(acc: &mut [f32], tile: &mut [f32], c: f32) {
+    debug_assert_eq!(acc.len(), tile.len());
+    for (a, t) in acc.iter_mut().zip(tile.iter_mut()) {
+        *a += c * *t;
+        *t = 0.0;
+    }
+}
+
+// ---- x86_64: AVX2 + FMA ----------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod vec_impl {
+    use super::BATCH_TILE;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy(acc: &mut [f32], src: &[f32], v: f32) {
+        debug_assert_eq!(acc.len(), src.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let vv = _mm256_set1_ps(v);
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            let a = _mm256_loadu_ps(ap.add(o));
+            let s = _mm256_loadu_ps(sp.add(o));
+            _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(vv, s, a));
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn add(acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            let a = _mm256_loadu_ps(ap.add(o));
+            let s = _mm256_loadu_ps(sp.add(o));
+            _mm256_storeu_ps(ap.add(o), _mm256_add_ps(a, s));
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) += *sp.add(i);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn fma_drain(acc: &mut [f32], tile: &mut [f32], c: f32) {
+        debug_assert_eq!(acc.len(), tile.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let cv = _mm256_set1_ps(c);
+        let zero = _mm256_setzero_ps();
+        let ap = acc.as_mut_ptr();
+        let tp = tile.as_mut_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            let a = _mm256_loadu_ps(ap.add(o));
+            let t = _mm256_loadu_ps(tp.add(o));
+            _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(cv, t, a));
+            _mm256_storeu_ps(tp.add(o), zero);
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
+            *tp.add(i) = 0.0;
+        }
+    }
+}
+
+// ---- aarch64: NEON ---------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod vec_impl {
+    use super::BATCH_TILE;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must have verified `neon` at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(acc: &mut [f32], src: &[f32], v: f32) {
+        debug_assert_eq!(acc.len(), src.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let vv = vdupq_n_f32(v);
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            // one 8-lane tile = two 128-bit NEON vectors
+            let a0 = vld1q_f32(ap.add(o));
+            let a1 = vld1q_f32(ap.add(o + 4));
+            let s0 = vld1q_f32(sp.add(o));
+            let s1 = vld1q_f32(sp.add(o + 4));
+            vst1q_f32(ap.add(o), vfmaq_f32(a0, vv, s0));
+            vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, vv, s1));
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified `neon` at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add(acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            let a0 = vld1q_f32(ap.add(o));
+            let a1 = vld1q_f32(ap.add(o + 4));
+            let s0 = vld1q_f32(sp.add(o));
+            let s1 = vld1q_f32(sp.add(o + 4));
+            vst1q_f32(ap.add(o), vaddq_f32(a0, s0));
+            vst1q_f32(ap.add(o + 4), vaddq_f32(a1, s1));
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) += *sp.add(i);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified `neon` at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn fma_drain(acc: &mut [f32], tile: &mut [f32], c: f32) {
+        debug_assert_eq!(acc.len(), tile.len());
+        let n = acc.len();
+        let tiles = n / BATCH_TILE;
+        let cv = vdupq_n_f32(c);
+        let zero = vdupq_n_f32(0.0);
+        let ap = acc.as_mut_ptr();
+        let tp = tile.as_mut_ptr();
+        for i in 0..tiles {
+            let o = i * BATCH_TILE;
+            let a0 = vld1q_f32(ap.add(o));
+            let a1 = vld1q_f32(ap.add(o + 4));
+            let t0 = vld1q_f32(tp.add(o));
+            let t1 = vld1q_f32(tp.add(o + 4));
+            vst1q_f32(ap.add(o), vfmaq_f32(a0, cv, t0));
+            vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, cv, t1));
+            vst1q_f32(tp.add(o), zero);
+            vst1q_f32(tp.add(o + 4), zero);
+        }
+        for i in tiles * BATCH_TILE..n {
+            *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
+            *tp.add(i) = 0.0;
+        }
+    }
+}
+
+// ---- public dispatchers ----------------------------------------------------
+
+/// Lane-tiled AXPY `acc += v · src` over the batch lanes. Vector path
+/// when the CPU supports it (runtime-detected once), scalar otherwise.
+#[inline]
+pub(crate) fn axpy_lanes(acc: &mut [f32], src: &[f32], v: f32) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if level() == LVL_VECTOR {
+            // SAFETY: LVL_VECTOR is only set after the runtime feature
+            // check in `detect` succeeded on this machine.
+            unsafe { vec_impl::axpy(acc, src, v) };
+            return;
+        }
+    }
+    axpy_lanes_scalar(acc, src, v)
+}
+
+/// Lane-tiled add `acc += src` — the centroid-factorized accumulate
+/// step (no multiply).
+#[inline]
+pub(crate) fn add_lanes(acc: &mut [f32], src: &[f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if level() == LVL_VECTOR {
+            // SAFETY: see `axpy_lanes`.
+            unsafe { vec_impl::add(acc, src) };
+            return;
+        }
+    }
+    add_lanes_scalar(acc, src)
+}
+
+/// Fused centroid finish `acc += c · tile; tile = 0` — one multiply per
+/// codebook entry, and the per-symbol accumulator is reset in the same
+/// pass.
+#[inline]
+pub(crate) fn fma_drain_lanes(acc: &mut [f32], tile: &mut [f32], c: f32) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if level() == LVL_VECTOR {
+            // SAFETY: see `axpy_lanes`.
+            unsafe { vec_impl::fma_drain(acc, tile, c) };
+            return;
+        }
+    }
+    fma_drain_lanes_scalar(acc, tile, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// FMA rounds once where mul-then-add rounds twice: agreement with
+    /// the scalar oracle is asserted to within 1 ulp per lane.
+    fn assert_within_1ulp(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            let ulps = (g.to_bits() as i64 - w.to_bits() as i64).unsigned_abs();
+            assert!(
+                g == w || ulps <= 1,
+                "{what}: lane {i} diverged beyond 1 ulp ({g} vs {w})"
+            );
+        }
+    }
+
+    fn rand_vec(n: usize, rng: &mut Prng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn vector_paths_match_scalar_oracle_within_1ulp() {
+        let mut rng = Prng::seeded(0x51D);
+        // lengths around and off the 8-lane tile boundary, incl. tails
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 33, 64, 100] {
+            let src = rand_vec(n, &mut rng);
+            let base = rand_vec(n, &mut rng);
+            let v = rng.normal() as f32;
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            axpy_lanes(&mut got, &src, v);
+            axpy_lanes_scalar(&mut want, &src, v);
+            assert_within_1ulp(&got, &want, &format!("axpy n={n}"));
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            add_lanes(&mut got, &src);
+            add_lanes_scalar(&mut want, &src);
+            // pure adds: identical operations, bitwise equal
+            assert_eq!(got, want, "add n={n}");
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            let mut tile_g = src.clone();
+            let mut tile_w = src.clone();
+            fma_drain_lanes(&mut got, &mut tile_g, v);
+            fma_drain_lanes_scalar(&mut want, &mut tile_w, v);
+            assert_within_1ulp(&got, &want, &format!("fma_drain n={n}"));
+            assert!(tile_g.iter().all(|&t| t == 0.0), "tile not drained");
+            assert!(tile_w.iter().all(|&t| t == 0.0), "oracle tile not drained");
+        }
+    }
+
+    #[test]
+    fn detection_is_cached_and_consistent() {
+        let first = vector_lanes_active();
+        for _ in 0..3 {
+            assert_eq!(vector_lanes_active(), first);
+        }
+    }
+}

@@ -631,10 +631,13 @@ pub fn s8_prune_grid(kind: ModelKind) -> Vec<f64> {
 /// Per-layer executable conv-format report for the S8–S11 grids: one
 /// row per (k, conv layer) with the *measured* `conv_format: Auto`
 /// winner — which format ran fastest within the size budget on that
-/// layer's lowered matrix (DESIGN.md §6).
+/// layer's lowered matrix (DESIGN.md §6), plus the batched kernel the
+/// race measured faster on its decoded non-zeros (direct vs
+/// centroid-factorized, DESIGN.md §9).
 pub fn s8_conv_format_report(ctx: &mut Ctx, kind: ModelKind, ks: &[usize]) -> Result<Table> {
-    let mut t =
-        Table::new(&["k", "layer", "spec", "format", "kbits", "dot_p50", "dec/call"]);
+    let mut t = Table::new(&[
+        "k", "layer", "spec", "format", "kbits", "dot_p50", "dec/call", "kernel",
+    ]);
     for &k in ks {
         let cfg = CompressionCfg {
             conv_quant: Some((Kind::Cws, k)),
@@ -662,6 +665,7 @@ pub fn s8_conv_format_report(ctx: &mut Ctx, kind: ModelKind, ks: &[usize]) -> Re
                     .decodes_per_call
                     .map(|d| d.to_string())
                     .unwrap_or_else(|| "-".into()),
+                choice.kernel.map(str::to_string).unwrap_or_else(|| "-".into()),
             ]);
         }
     }

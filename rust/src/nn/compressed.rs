@@ -8,8 +8,9 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::formats::{
-    batched_product_into, decode_stats, pool, CompressedMatrix, FormatId, Hac,
-    Shac, Workspace,
+    batched_product_into, decode_stats, par_decoded_matmul_batch_into, pool,
+    BatchKernel, CompressedMatrix, DecodedWeights, FormatId, Hac, Shac,
+    Workspace,
 };
 use crate::huffman::bounds::{index_map_pointer_bits, WORD_BITS};
 use crate::io::{Archive, Tensor};
@@ -161,6 +162,12 @@ pub struct ConvChoice {
     /// formats, 1 for the entropy formats on the decode-once paths —
     /// `None` when not measured.
     pub decodes_per_call: Option<u64>,
+    /// Which batched kernel the Auto race measured faster on the
+    /// winner's decoded non-zeros — `"centroid"` (factorized, one
+    /// multiply per codebook entry) or `"direct"` (one multiply per
+    /// non-zero). `"direct"` without a race when the format carries no
+    /// symbol view; `None` when the choice was fixed or reloaded.
+    pub kernel: Option<&'static str>,
 }
 
 /// Race the Auto candidates on one lowered conv matrix, timing the
@@ -205,12 +212,44 @@ fn pick_conv_format_measured(
     let mark = decode_stats::total();
     batched_product_into(w.as_ref(), &patches, &mut out, threads);
     let decodes = decode_stats::since(mark);
+    // kernel race: when the winner's decode carries a symbol view, time
+    // the direct vs the centroid-factorized kernel on the decoded
+    // non-zeros (decode cost is identical either way) through the same
+    // chunk-parallel dispatch serving uses, and record which won. The
+    // scratch is local, so the forced override never leaks into the
+    // thread-local serving scratch.
+    let kernel = {
+        let mut dec = DecodedWeights::new();
+        if w.decode_once_into(&mut dec) && dec.has_symbols() {
+            let mut time_kernel = |k: BatchKernel| {
+                dec.force_kernel(k);
+                bench(1, 3, || {
+                    if threads > 1 {
+                        par_decoded_matmul_batch_into(&dec, &patches, &mut out, threads);
+                    } else {
+                        dec.matmul_batch_into(&patches, &mut out);
+                    }
+                })
+                .p50
+            };
+            let direct_ns = time_kernel(BatchKernel::Direct);
+            let centroid_ns = time_kernel(BatchKernel::Centroid);
+            if centroid_ns < direct_ns {
+                BatchKernel::Centroid.name()
+            } else {
+                BatchKernel::Direct.name()
+            }
+        } else {
+            BatchKernel::Direct.name()
+        }
+    };
     let choice = ConvChoice {
         name: name.to_string(),
         format: w.id(),
         size_bits: w.size_bits(),
         measured_ns: Some(ns),
         decodes_per_call: Some(decodes),
+        kernel: Some(kernel),
     };
     (w, choice)
 }
@@ -506,6 +545,7 @@ impl CompressedModel {
                         size_bits: bits,
                         measured_ns: None,
                         decodes_per_call: None,
+                        kernel: None,
                     })
                 }
                 ConvFormat::Auto => pick_conv_format_measured(name, &lowered),
@@ -567,10 +607,12 @@ impl CompressedModel {
 
     /// One-line per-layer summary of the executable conv formats (the
     /// `conv_format: Auto` model report): `name=fmt` per layer, with
-    /// `@t` appended when the choice was measured and `/Ndec` — the
+    /// `@t` appended when the choice was measured, `/Ndec` — the
     /// counted weight-stream decode passes per batched product — when
-    /// the race recorded them. Sizes live in [`Self::conv_choices`]
-    /// (the `sham s8` report table prints them).
+    /// the race recorded them, and `+kernel` (the measured direct vs
+    /// centroid-factorized winner) when the kernel race ran. Sizes live
+    /// in [`Self::conv_choices`] (the `sham s8` report table prints
+    /// them).
     pub fn conv_format_report(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::new();
@@ -584,6 +626,9 @@ impl CompressedModel {
             }
             if let Some(d) = c.decodes_per_call {
                 let _ = write!(s, "/{d}dec");
+            }
+            if let Some(k) = c.kernel {
+                let _ = write!(s, "+{k}");
             }
         }
         s
@@ -1080,6 +1125,7 @@ impl CompressedModel {
                 size_bits: w.size_bits(),
                 measured_ns: None,
                 decodes_per_call: None,
+                kernel: None,
             });
             conv.push(ConvLayer { name: name.to_string(), w, b, spec, cin, cout });
         }
@@ -1432,6 +1478,8 @@ mod tests {
             assert_eq!(c.format, l.w.id(), "report/layer format mismatch");
             assert!(c.measured_ns.is_some(), "auto choice was not measured");
             assert!(c.decodes_per_call.is_some(), "auto choice decode count missing");
+            let k = c.kernel.expect("auto choice kernel missing");
+            assert!(k == "direct" || k == "centroid", "unexpected kernel {k}");
             // within the size budget relative to the smallest candidate
             assert!(
                 c.size_bits as f64 <= *min as f64 * CONV_AUTO_SIZE_SLACK + 1.0,

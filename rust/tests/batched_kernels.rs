@@ -14,11 +14,20 @@
 //!
 //! plus the shared-decode path: `decode_once_into` on the
 //! quantized-codebook formats must reproduce the same products from the
-//! decoded non-zeros.
+//! decoded non-zeros, and the centroid-factorized kernel (one multiply
+//! per codebook entry, DESIGN.md §9) must match the direct kernel for
+//! every quantized format — including degenerate codebooks and a
+//! codebook too large for its `u16` symbol ids.
+//!
+//! (The exact decode-pass accounting lives in
+//! `tests/centroid_decode_accounting.rs` — `decode_stats` is a
+//! process-global counter, so it gets a binary of its own where no
+//! sibling test decodes concurrently.)
 
 use sham::formats::{
-    all_formats, batched_product_into, par_matmul_batch_into, CompressedMatrix,
-    DecodedWeights, FormatId,
+    all_formats, batched_product_into, par_decoded_matmul_batch_into,
+    par_matmul_batch_into, BatchKernel, CompressedMatrix, DecodedWeights,
+    FormatId,
 };
 use sham::mat::Mat;
 use sham::util::prng::Prng;
@@ -162,6 +171,157 @@ fn decoded_scratch_is_reusable_across_matrices() {
         let mut got = nan_filled(1, 1);
         dec.matmul_batch_into(&xb, &mut got);
         assert_close(&got, &want, "reused decode scratch");
+    }
+}
+
+/// The five quantized/codebook formats whose shared decode carries the
+/// symbol view the centroid kernel needs.
+const QUANTIZED: [FormatId; 5] = [
+    FormatId::IndexMap,
+    FormatId::Cla,
+    FormatId::Hac,
+    FormatId::Shac,
+    FormatId::LzAc,
+];
+
+#[test]
+fn centroid_kernel_matches_direct_for_every_quantized_format() {
+    // dense-ish with a tiny codebook — the crossover regime
+    // (nnz ≥ 4·k·cols), so Auto itself also picks centroid at batch ≥ 8
+    let mut rng = Prng::seeded(0xCE27);
+    let m = Mat::sparse_quantized(60, 24, 0.85, 4, &mut rng);
+    for id in QUANTIZED {
+        let f = id.compress(&m);
+        let mut dec = DecodedWeights::new();
+        assert!(f.decode_once_into(&mut dec), "{id}: quantized format must decode");
+        assert!(dec.has_symbols(), "{id}: decode must carry the symbol view");
+        for &batch in &BATCHES {
+            let xb = Mat::gaussian(batch, m.rows, 1.0, &mut rng);
+            let want = oracle(f.as_ref(), &xb);
+            dec.force_kernel(BatchKernel::Direct);
+            let mut direct = nan_filled(1, 1);
+            dec.matmul_batch_into(&xb, &mut direct);
+            assert_close(&direct, &want, &format!("{id} direct b{batch}"));
+            dec.force_kernel(BatchKernel::Centroid);
+            let mut cent = nan_filled(2, 2);
+            dec.matmul_batch_into(&xb, &mut cent);
+            assert_close(&cent, &want, &format!("{id} centroid b{batch}"));
+            // forced centroid through the chunk-parallel driver too
+            for &t in &THREADS {
+                let mut pout = nan_filled(1, 3);
+                par_decoded_matmul_batch_into(&dec, &xb, &mut pout, t);
+                assert_close(&pout, &want, &format!("{id} centroid b{batch} t{t}"));
+            }
+            dec.force_kernel(BatchKernel::Auto);
+        }
+    }
+}
+
+#[test]
+fn centroid_kernel_handles_degenerate_codebooks() {
+    let mut rng = Prng::seeded(0xDE6E);
+    // b = 1 (one distinct non-zero value), an all-zero matrix (only the
+    // zero symbol — or no codebook at all for the sparsity-exploiting
+    // formats), and a single non-zero
+    let mut one_value = Mat::zeros(12, 7);
+    for i in 0..12 {
+        one_value.set(i, i % 7, 1.5);
+    }
+    let mut single = Mat::zeros(9, 4);
+    single.set(5, 2, -2.25);
+    let cases =
+        [("b1", one_value), ("all-zero", Mat::zeros(9, 5)), ("single", single)];
+    for (cname, m) in &cases {
+        for id in QUANTIZED {
+            let f = id.compress(m);
+            let mut dec = DecodedWeights::new();
+            assert!(f.decode_once_into(&mut dec), "{cname}/{id}: decode");
+            // an empty stream may legitimately carry no symbol view
+            // (the entropy formats early-return); forcing centroid then
+            // falls back to direct rather than asserting
+            dec.force_kernel(BatchKernel::Centroid);
+            for &batch in &[1usize, 8, 33] {
+                let xb = Mat::gaussian(batch, m.rows, 1.0, &mut rng);
+                let want = oracle(f.as_ref(), &xb);
+                let mut got = nan_filled(1, 1);
+                dec.matmul_batch_into(&xb, &mut got);
+                assert_close(&got, &want, &format!("{cname}/{id} b{batch}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_codebook_degrades_to_the_direct_kernel() {
+    // ~67k distinct values overflow the u16 symbol ids: the decode must
+    // proceed plain (no symbol view) and products stay on the direct
+    // kernel even when centroid is forced — no assert, no wrong answers
+    let mut rng = Prng::seeded(0xB16);
+    let m = Mat::gaussian(260, 260, 1.0, &mut rng);
+    assert!(
+        m.distinct_values() > u16::MAX as usize + 1,
+        "workload must overflow u16 symbol ids"
+    );
+    let f = FormatId::Hac.compress(&m);
+    let mut dec = DecodedWeights::new();
+    assert!(f.decode_once_into(&mut dec));
+    assert!(!dec.has_symbols(), "oversized codebook must disable the symbol view");
+    assert_eq!(dec.codebook_len(), 0);
+    dec.force_kernel(BatchKernel::Centroid);
+    let xb = Mat::gaussian(9, m.rows, 1.0, &mut rng);
+    let want = oracle(f.as_ref(), &xb);
+    let mut got = nan_filled(1, 1);
+    dec.matmul_batch_into(&xb, &mut got);
+    assert_close(&got, &want, "oversized codebook fallback");
+}
+
+#[test]
+fn decode_free_formats_fall_back_cleanly_through_the_dispatch() {
+    // satellite guard: a format without decode_once_into (or whose
+    // decode declines) must flow through batched_product_into's direct
+    // blocked path — same answers, no panic — at every thread count
+    let mut rng = Prng::seeded(0xFA11);
+    let m = Mat::sparse_quantized(40, 22, 0.3, 8, &mut rng);
+    for id in [FormatId::Csc, FormatId::Coo] {
+        let f = id.compress(&m);
+        let mut dec = DecodedWeights::new();
+        assert!(!f.decode_once_into(&mut dec), "{id}: unexpected shared decode");
+        for &batch in &[7usize, 33] {
+            let xb = Mat::gaussian(batch, m.rows, 1.0, &mut rng);
+            let want = oracle(f.as_ref(), &xb);
+            for &t in &THREADS {
+                let mut got = nan_filled(2, 2);
+                batched_product_into(f.as_ref(), &xb, &mut got, t);
+                assert_close(&got, &want, &format!("{id} fallback b{batch} t{t}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_crossover_engages_centroid_through_the_serving_dispatch() {
+    // end-to-end: small codebook + dense columns + batch ≥ 8 meets the
+    // crossover, so the UNforced serving dispatch runs the centroid
+    // kernel (kernel_name confirms) and must still match the oracle
+    let mut rng = Prng::seeded(0xAC70);
+    let m = Mat::sparse_quantized(64, 16, 0.9, 4, &mut rng);
+    for id in QUANTIZED {
+        let f = id.compress(&m);
+        let mut dec = DecodedWeights::new();
+        assert!(f.decode_once_into(&mut dec));
+        assert_eq!(
+            dec.kernel_name(32),
+            "centroid",
+            "{id}: crossover must pick centroid at batch 32"
+        );
+        assert_eq!(dec.kernel_name(1), "direct", "{id}: batch 1 stays direct");
+        let xb = Mat::gaussian(32, m.rows, 1.0, &mut rng);
+        let want = oracle(f.as_ref(), &xb);
+        for &t in &THREADS {
+            let mut got = nan_filled(1, 1);
+            batched_product_into(f.as_ref(), &xb, &mut got, t);
+            assert_close(&got, &want, &format!("{id} auto-centroid t{t}"));
+        }
     }
 }
 

@@ -1,0 +1,80 @@
+//! Exact decode-pass accounting for the centroid-factorized kernel
+//! (DESIGN.md §9): factorization must add ZERO weight-stream decode
+//! passes on top of the decode-once invariant — the symbol view is
+//! recorded during the one shared decode, never by a second pass.
+//!
+//! `formats::decode_stats` is a process-global counter, so these
+//! assertions live in their own test binary: a single `#[test]` means
+//! no sibling test decodes concurrently and the counted deltas are
+//! exact (the same reason `bench_decode_scaling` counts from a
+//! single-threaded control flow).
+
+use sham::formats::{
+    batched_product_into, decode_stats, BatchKernel, DecodedWeights, FormatId,
+};
+use sham::mat::Mat;
+use sham::util::prng::Prng;
+
+#[test]
+fn factorization_adds_no_extra_decode_passes() {
+    let mut rng = Prng::seeded(0x0DEC);
+    // crossover regime: small codebook, dense-ish columns, batch ≥ 8
+    let m = Mat::sparse_quantized(64, 16, 0.9, 4, &mut rng);
+    let xb = Mat::gaussian(32, m.rows, 1.0, &mut rng);
+
+    for id in [FormatId::Hac, FormatId::Shac, FormatId::LzAc] {
+        let f = id.compress(&m);
+
+        // one decode_once_into = exactly one recorded pass, symbol view
+        // and all — recording symbols costs no extra scan
+        let mut dec = DecodedWeights::new();
+        let mark = decode_stats::total();
+        assert!(f.decode_once_into(&mut dec));
+        assert_eq!(decode_stats::since(mark), 1, "{id}: shared decode is one pass");
+        assert!(dec.has_symbols(), "{id}: symbol view missing");
+
+        // products on the decoded scratch — forced centroid, forced
+        // direct, and the Auto crossover — perform no decode at all
+        let mark = decode_stats::total();
+        let mut out = Mat::zeros(0, 0);
+        for k in [BatchKernel::Centroid, BatchKernel::Direct, BatchKernel::Auto] {
+            dec.force_kernel(k);
+            for _ in 0..3 {
+                dec.matmul_batch_into(&xb, &mut out);
+            }
+        }
+        assert_eq!(
+            decode_stats::since(mark),
+            0,
+            "{id}: decoded products must not re-decode"
+        );
+
+        // the full serving dispatch (decode + centroid-eligible product)
+        // stays at exactly one pass per product at every thread count
+        for t in [1usize, 2, 4] {
+            let mark = decode_stats::total();
+            batched_product_into(f.as_ref(), &xb, &mut out, t);
+            assert_eq!(
+                decode_stats::since(mark),
+                1,
+                "{id}: dispatch at t{t} must decode exactly once"
+            );
+        }
+    }
+
+    // the codebook formats without an entropy stream decode for free:
+    // their decode_once_into records no pass, so conv decode accounting
+    // (`decodes_per_call`) stays exact
+    for id in [FormatId::IndexMap, FormatId::Cla] {
+        let f = id.compress(&m);
+        let mut dec = DecodedWeights::new();
+        let mark = decode_stats::total();
+        assert!(f.decode_once_into(&mut dec), "{id}: must shared-decode");
+        assert!(dec.has_symbols(), "{id}: symbol view missing");
+        assert_eq!(
+            decode_stats::since(mark),
+            0,
+            "{id}: no entropy stream, no decode pass"
+        );
+    }
+}

@@ -43,11 +43,13 @@ HOT_PREFIXES = {
     "BENCH_serving_hot_path.json": [
         "p90/", "p99/",          # HAC/sHAC batched FC products
         "scaling/",              # per-thread scaling of the batched path
+        "centroid/",             # centroid-factorized vs direct kernels
     ],
     "BENCH_compressed_conv.json": [
         "vgg/im2col_", "dta/im2col_",   # whole-model conv front-ends
         "strided/",                      # generalized-geometry layers
         "scaling/",                      # shared-decode parallel conv
+        "centroid/",                     # factorized small-codebook stack
     ],
     "BENCH_coordinator.json": [
         "closed/", "open/",              # reactor end-to-end latency
@@ -56,9 +58,15 @@ HOT_PREFIXES = {
 
 # Structural booleans that must hold in the current run when present.
 REQUIRED_TRUE = {
+    "BENCH_serving_hot_path.json": [
+        # the Auto crossover must select the centroid-factorized kernel
+        # on the small-codebook high-batch workload
+        "centroid_kernel_used",
+    ],
     "BENCH_compressed_conv.json": [
         "steady_state_alloc_free",
         "decode_once_per_layer",
+        "centroid_kernel_used",
     ],
     "BENCH_coordinator.json": [
         # admission control must actually shed under overload, and the
