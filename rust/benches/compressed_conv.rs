@@ -40,17 +40,31 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` plus a relaxed counter bump —
+// every GlobalAlloc contract obligation (layout validity, pointer
+// provenance, no unwinding) is delegated unchanged to the system
+// allocator, and the counter allocates nothing.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: signature required by the trait; the body only counts and
+    // delegates (see the inner block).
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: forwarded verbatim — the caller's layout obligations
+        // are exactly `System.alloc`'s.
+        unsafe { System.alloc(layout) }
     }
+    // SAFETY: signature required by the trait; delegation only.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: forwarded verbatim — `ptr`/`layout` came from this
+        // allocator, which always delegated to `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
+    // SAFETY: signature required by the trait; counting + delegation only.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: forwarded verbatim — `ptr`/`layout` came from this
+        // allocator and `new_size` obligations are `System.realloc`'s.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 

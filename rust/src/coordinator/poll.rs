@@ -92,7 +92,11 @@ impl Waker {
             #[cfg(target_os = "linux")]
             WakerInner::EventFd(fd) => {
                 let one: u64 = 1;
-                // a full eventfd counter already guarantees a wakeup
+                // SAFETY: `fd.0` is a live eventfd (the Arc keeps it open
+                // for the call's duration) and the buffer is a stack u64
+                // whose 8 bytes match the count — eventfd's required
+                // write size. A short/failed write is fine: a full
+                // counter (EAGAIN) already guarantees a wakeup.
                 unsafe {
                     sys::write(fd.0, (&one as *const u64).cast(), 8);
                 }
@@ -310,6 +314,10 @@ mod linux {
 
     impl Drop for OwnedFd {
         fn drop(&mut self) {
+            // SAFETY: `self.0` was returned open by epoll_create1 /
+            // eventfd and OwnedFd is the unique owner (never cloned, fd
+            // never exposed for independent closing), so this is the
+            // single close of a valid descriptor.
             unsafe {
                 sys::close(self.0);
             }
@@ -335,11 +343,17 @@ mod linux {
 
     impl EpollPoller {
         pub(super) fn new() -> io::Result<EpollPoller> {
+            // SAFETY: epoll_create1 takes no pointers; the flag is the
+            // kernel-defined EPOLL_CLOEXEC constant and the result is
+            // checked before use.
             let ep = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
             if ep < 0 {
                 return Err(io::Error::last_os_error());
             }
             let ep = OwnedFd(ep);
+            // SAFETY: eventfd takes no pointers; flags are the
+            // kernel-defined EFD_* constants and the result is checked
+            // before use.
             let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
             if efd < 0 {
                 return Err(io::Error::last_os_error());
@@ -361,6 +375,10 @@ mod linux {
                 events: events_mask(interest),
                 data: token as u64,
             };
+            // SAFETY: `self.ep.0` is the live epoll fd owned by this
+            // poller, `ev` is a properly initialized #[repr(C)] event
+            // the kernel only reads during the call, and the result is
+            // checked.
             let r = unsafe { sys::epoll_ctl(self.ep.0, op, fd, &mut ev) };
             if r < 0 {
                 return Err(io::Error::last_os_error());
@@ -377,6 +395,11 @@ mod linux {
             self.buf.resize(CAP, sys::EpollEvent { events: 0, data: 0 });
             let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
             let n = loop {
+                // SAFETY: `self.ep.0` is the live epoll fd owned by this
+                // poller and `buf` was resized to exactly CAP initialized
+                // events above, so the kernel writes at most CAP entries
+                // into owned, in-bounds memory; `n` is checked before the
+                // buffer is read.
                 let n = unsafe {
                     sys::epoll_wait(self.ep.0, self.buf.as_mut_ptr(), CAP as i32, ms)
                 };
@@ -395,8 +418,12 @@ mod linux {
                 let (mask, data) = (ev.events, ev.data);
                 if data == WAKE_TOKEN as u64 {
                     woken = true;
-                    // drain the eventfd counter so level-triggering rests
                     let mut v: u64 = 0;
+                    // SAFETY: `wake_fd.0` is the live eventfd owned by
+                    // this poller and the destination is a stack u64
+                    // whose 8 writable bytes match eventfd's fixed read
+                    // size. Draining resets level-triggering; a failed
+                    // read only means another (harmless) wakeup.
                     unsafe {
                         sys::read(self.wake_fd.0, (&mut v as *mut u64).cast(), 8);
                     }

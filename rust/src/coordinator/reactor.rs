@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::Responder;
-use crate::coordinator::frame::{self, Parse, Resync};
+use crate::coordinator::frame::{self, advance_discard, Discard, Parse};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::poll::{fd_of, Event, Interest, Poller, Waker};
 use crate::coordinator::server::{Server, SubmitOutcome};
@@ -102,69 +102,6 @@ struct ShardShared {
     /// Connections currently assigned to this shard (for least-loaded
     /// placement).
     conns: AtomicUsize,
-}
-
-/// Skip state for resynchronizing after an oversized payload
-/// ([`Resync`]): the declared bytes are consumed from the wire without
-/// ever being buffered.
-#[derive(Debug, PartialEq, Eq)]
-enum Discard {
-    /// Skip this many raw bytes.
-    Bytes(u64),
-    /// Skip this many bytes, then a length-prefixed vector follows
-    /// (`u32` count, then `count * 4` bytes) — the token frame's second
-    /// half.
-    BytesThenLen(u64),
-    /// Accumulating the 4-byte length prefix of the follow-on vector.
-    Len { hdr: [u8; 4], have: usize },
-}
-
-/// Advance the discard state machine over `rbuf[*rpos..]`. Returns
-/// `true` when the discard completed (`*discard` is `None`), `false`
-/// when more bytes are needed.
-fn advance_discard(discard: &mut Option<Discard>, rbuf: &[u8], rpos: &mut usize) -> bool {
-    loop {
-        match discard.take() {
-            None => return true,
-            Some(Discard::Bytes(n)) => {
-                let avail = (rbuf.len() - *rpos) as u64;
-                let take = avail.min(n);
-                *rpos += take as usize;
-                let left = n - take;
-                if left > 0 {
-                    *discard = Some(Discard::Bytes(left));
-                    return false;
-                }
-                return true;
-            }
-            Some(Discard::BytesThenLen(n)) => {
-                let avail = (rbuf.len() - *rpos) as u64;
-                let take = avail.min(n);
-                *rpos += take as usize;
-                let left = n - take;
-                if left > 0 {
-                    *discard = Some(Discard::BytesThenLen(left));
-                    return false;
-                }
-                *discard = Some(Discard::Len { hdr: [0; 4], have: 0 });
-            }
-            Some(Discard::Len { mut hdr, mut have }) => {
-                while have < 4 && *rpos < rbuf.len() {
-                    hdr[have] = rbuf[*rpos];
-                    have += 1;
-                    *rpos += 1;
-                }
-                if have < 4 {
-                    *discard = Some(Discard::Len { hdr, have });
-                    return false;
-                }
-                let bytes = u32::from_le_bytes(hdr) as u64 * 4;
-                if bytes > 0 {
-                    *discard = Some(Discard::Bytes(bytes));
-                }
-            }
-        }
-    }
 }
 
 /// One connection's state machine.
@@ -320,12 +257,7 @@ impl Conn {
                     frame::encode_status(&mut f, frame::STATUS_ERR, &reason);
                     self.fill(seq, f);
                     match resync {
-                        Some(Resync::Skip(b)) => {
-                            self.discard = if b > 0 { Some(Discard::Bytes(b)) } else { None };
-                        }
-                        Some(Resync::SkipThenLenPrefixed(b)) => {
-                            self.discard = Some(Discard::BytesThenLen(b));
-                        }
+                        Some(r) => self.discard = Discard::from_resync(r),
                         None => self.closing = true,
                     }
                 }
@@ -686,69 +618,6 @@ pub fn serve(
     Ok(())
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn discard_skips_exact_bytes() {
-        let mut d = Some(Discard::Bytes(6));
-        let buf = [0u8; 10];
-        let mut pos = 0usize;
-        assert!(advance_discard(&mut d, &buf, &mut pos));
-        assert_eq!(pos, 6, "exactly the declared bytes are consumed");
-        assert!(d.is_none());
-    }
-
-    #[test]
-    fn discard_bytes_across_chunks() {
-        let mut d = Some(Discard::Bytes(6));
-        let mut pos = 0usize;
-        assert!(!advance_discard(&mut d, &[0u8; 4], &mut pos));
-        assert_eq!(pos, 4);
-        // fresh chunk (connection compacted its buffer)
-        pos = 0;
-        assert!(advance_discard(&mut d, &[0u8; 8], &mut pos));
-        assert_eq!(pos, 2);
-        assert!(d.is_none());
-    }
-
-    #[test]
-    fn discard_then_len_prefixed_vector() {
-        // skip 3 payload bytes, then a u32 count of 2 → 8 more bytes
-        let mut d = Some(Discard::BytesThenLen(3));
-        let mut buf = vec![9u8; 3];
-        buf.extend_from_slice(&2u32.to_le_bytes());
-        buf.extend_from_slice(&[7u8; 8]);
-        buf.extend_from_slice(b"XY"); // next frame's bytes, untouched
-        let mut pos = 0usize;
-        assert!(advance_discard(&mut d, &buf, &mut pos));
-        assert!(d.is_none());
-        assert_eq!(&buf[pos..], b"XY");
-    }
-
-    #[test]
-    fn discard_len_prefix_split_across_reads() {
-        let mut d = Some(Discard::BytesThenLen(1));
-        let mut first = vec![0u8; 1];
-        first.extend_from_slice(&1u32.to_le_bytes()[..2]); // half the count
-        let mut pos = 0usize;
-        assert!(!advance_discard(&mut d, &first, &mut pos));
-        let mut second = 1u32.to_le_bytes()[2..].to_vec(); // rest of count
-        second.extend_from_slice(&[0u8; 4]); // the 1 * 4 payload bytes
-        pos = 0;
-        assert!(advance_discard(&mut d, &second, &mut pos));
-        assert_eq!(pos, second.len());
-        assert!(d.is_none());
-    }
-
-    #[test]
-    fn zero_count_len_prefix_ends_discard() {
-        let mut d = Some(Discard::BytesThenLen(0));
-        let buf = 0u32.to_le_bytes();
-        let mut pos = 0usize;
-        assert!(advance_discard(&mut d, &buf, &mut pos));
-        assert_eq!(pos, 4);
-        assert!(d.is_none());
-    }
-}
+// The discard state machine's unit tests moved to `frame::tests` with
+// the machine itself; the reactor-level behavior (a connection surviving
+// an oversized frame) is covered by the integration suite.

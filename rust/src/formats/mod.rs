@@ -195,29 +195,92 @@ pub const BATCH_TILE: usize = 8;
 /// `matmul_batch_slice`, and `decode_once_into`) records exactly one
 /// pass per full scan of its compressed stream, so benches and the CLI
 /// can assert *how many times* a product decoded instead of guessing
-/// from timings. The counter is process-global and monotonic; callers
-/// measure deltas around the region of interest.
+/// from timings.
+///
+/// Accounting is **per-thread with an aggregating reader** (it used to
+/// be one process-global atomic): [`record`] bumps only the calling
+/// thread's counter, so two accounting granularities exist —
+///
+/// - [`total`] / [`since`] aggregate over every thread that ever
+///   recorded (monotonic, process-wide) — what benches and the CLI
+///   report;
+/// - [`thread_scope`] hands out a handle counting only *this thread's*
+///   passes, immune to whatever sibling test threads decode
+///   concurrently. The serving dispatch ([`super::batched_product_into`])
+///   performs its one shared decode on the calling thread, so a
+///   thread scope observes exact decode-once deltas even while the
+///   product itself fans out across the pool — this is what lets
+///   `tests/centroid_decode_accounting.rs` run inside the normal
+///   parallel test run instead of needing a solo test binary.
 pub mod decode_stats {
     use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
 
-    static PASSES: AtomicU64 = AtomicU64::new(0);
+    /// Every thread's counter, registered on that thread's first
+    /// [`record`]/read. Entries are never removed — a finished thread's
+    /// passes stay in the aggregate, keeping [`total`] monotonic (the
+    /// registry is bounded by the number of threads ever created, which
+    /// the persistent pool keeps small).
+    static REGISTRY: Mutex<Vec<Arc<AtomicU64>>> = Mutex::new(Vec::new());
 
-    /// Record one full weight-stream decode pass.
+    thread_local! {
+        static LOCAL: Arc<AtomicU64> = {
+            let slot = Arc::new(AtomicU64::new(0));
+            REGISTRY.lock().unwrap().push(slot.clone());
+            slot
+        };
+    }
+
+    /// Record one full weight-stream decode pass (on this thread's
+    /// counter — an uncontended relaxed add).
     #[inline]
     pub fn record() {
-        PASSES.fetch_add(1, Ordering::Relaxed);
+        LOCAL.with(|c| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
     }
 
-    /// Total decode passes since process start (monotonic).
-    #[inline]
+    /// Total decode passes across all threads since process start
+    /// (monotonic). Aggregates the per-thread counters; not a hot-path
+    /// call — benches and the CLI take marks around regions of interest.
     pub fn total() -> u64 {
-        PASSES.load(Ordering::Relaxed)
+        REGISTRY
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
     }
 
-    /// Decode passes since a mark taken with [`total`].
-    #[inline]
+    /// Decode passes (process-wide) since a mark taken with [`total`].
     pub fn since(mark: u64) -> u64 {
         total() - mark
+    }
+
+    /// This thread's decode passes since its first record (monotonic).
+    #[inline]
+    pub fn local() -> u64 {
+        LOCAL.with(|c| c.load(Ordering::Relaxed))
+    }
+
+    /// Handle-scoped accounting: counts only the calling thread's decode
+    /// passes from the moment the scope was taken. Exact under parallel
+    /// siblings, unlike [`since`].
+    #[derive(Debug, Clone, Copy)]
+    pub struct ThreadScope {
+        start: u64,
+    }
+
+    /// Open a scope over this thread's decode-pass counter.
+    pub fn thread_scope() -> ThreadScope {
+        ThreadScope { start: local() }
+    }
+
+    impl ThreadScope {
+        /// Passes recorded by this thread since the scope was opened.
+        pub fn passes(&self) -> u64 {
+            local() - self.start
+        }
     }
 }
 

@@ -132,17 +132,24 @@ mod vec_impl {
         debug_assert_eq!(acc.len(), src.len());
         let n = acc.len();
         let tiles = n / BATCH_TILE;
-        let vv = _mm256_set1_ps(v);
         let ap = acc.as_mut_ptr();
         let sp = src.as_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            let a = _mm256_loadu_ps(ap.add(o));
-            let s = _mm256_loadu_ps(sp.add(o));
-            _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(vv, s, a));
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+        // SAFETY: the fn contract guarantees AVX2+FMA; every 8-lane
+        // load/store at offset `i * BATCH_TILE` stays within the
+        // `tiles * BATCH_TILE <= n` prefix of both equal-length slices,
+        // the scalar tail indexes `< n`, and `acc`/`src` are disjoint
+        // borrows so the unaligned accesses never alias.
+        unsafe {
+            let vv = _mm256_set1_ps(v);
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                let a = _mm256_loadu_ps(ap.add(o));
+                let s = _mm256_loadu_ps(sp.add(o));
+                _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(vv, s, a));
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+            }
         }
     }
 
@@ -155,14 +162,19 @@ mod vec_impl {
         let tiles = n / BATCH_TILE;
         let ap = acc.as_mut_ptr();
         let sp = src.as_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            let a = _mm256_loadu_ps(ap.add(o));
-            let s = _mm256_loadu_ps(sp.add(o));
-            _mm256_storeu_ps(ap.add(o), _mm256_add_ps(a, s));
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) += *sp.add(i);
+        // SAFETY: the fn contract guarantees AVX2+FMA; tile and tail
+        // offsets stay `< n` on both equal-length, disjoint slices (see
+        // `axpy` — identical indexing).
+        unsafe {
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                let a = _mm256_loadu_ps(ap.add(o));
+                let s = _mm256_loadu_ps(sp.add(o));
+                _mm256_storeu_ps(ap.add(o), _mm256_add_ps(a, s));
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) += *sp.add(i);
+            }
         }
     }
 
@@ -173,20 +185,26 @@ mod vec_impl {
         debug_assert_eq!(acc.len(), tile.len());
         let n = acc.len();
         let tiles = n / BATCH_TILE;
-        let cv = _mm256_set1_ps(c);
-        let zero = _mm256_setzero_ps();
         let ap = acc.as_mut_ptr();
         let tp = tile.as_mut_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            let a = _mm256_loadu_ps(ap.add(o));
-            let t = _mm256_loadu_ps(tp.add(o));
-            _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(cv, t, a));
-            _mm256_storeu_ps(tp.add(o), zero);
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
-            *tp.add(i) = 0.0;
+        // SAFETY: the fn contract guarantees AVX2+FMA; tile and tail
+        // offsets stay `< n` on both equal-length slices, and `acc` and
+        // `tile` are distinct `&mut` borrows so the read-modify-write of
+        // one never aliases the zeroing store of the other.
+        unsafe {
+            let cv = _mm256_set1_ps(c);
+            let zero = _mm256_setzero_ps();
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                let a = _mm256_loadu_ps(ap.add(o));
+                let t = _mm256_loadu_ps(tp.add(o));
+                _mm256_storeu_ps(ap.add(o), _mm256_fmadd_ps(cv, t, a));
+                _mm256_storeu_ps(tp.add(o), zero);
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
+                *tp.add(i) = 0.0;
+            }
         }
     }
 }
@@ -205,21 +223,28 @@ mod vec_impl {
         debug_assert_eq!(acc.len(), src.len());
         let n = acc.len();
         let tiles = n / BATCH_TILE;
-        let vv = vdupq_n_f32(v);
         let ap = acc.as_mut_ptr();
         let sp = src.as_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            // one 8-lane tile = two 128-bit NEON vectors
-            let a0 = vld1q_f32(ap.add(o));
-            let a1 = vld1q_f32(ap.add(o + 4));
-            let s0 = vld1q_f32(sp.add(o));
-            let s1 = vld1q_f32(sp.add(o + 4));
-            vst1q_f32(ap.add(o), vfmaq_f32(a0, vv, s0));
-            vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, vv, s1));
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+        // SAFETY: the fn contract guarantees NEON; each 8-lane tile is
+        // two 128-bit accesses at offsets `o` and `o + 4` that stay
+        // within the `tiles * BATCH_TILE <= n` prefix of both
+        // equal-length slices, the scalar tail indexes `< n`, and
+        // `acc`/`src` are disjoint borrows.
+        unsafe {
+            let vv = vdupq_n_f32(v);
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                // one 8-lane tile = two 128-bit NEON vectors
+                let a0 = vld1q_f32(ap.add(o));
+                let a1 = vld1q_f32(ap.add(o + 4));
+                let s0 = vld1q_f32(sp.add(o));
+                let s1 = vld1q_f32(sp.add(o + 4));
+                vst1q_f32(ap.add(o), vfmaq_f32(a0, vv, s0));
+                vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, vv, s1));
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) = v.mul_add(*sp.add(i), *ap.add(i));
+            }
         }
     }
 
@@ -232,17 +257,22 @@ mod vec_impl {
         let tiles = n / BATCH_TILE;
         let ap = acc.as_mut_ptr();
         let sp = src.as_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            let a0 = vld1q_f32(ap.add(o));
-            let a1 = vld1q_f32(ap.add(o + 4));
-            let s0 = vld1q_f32(sp.add(o));
-            let s1 = vld1q_f32(sp.add(o + 4));
-            vst1q_f32(ap.add(o), vaddq_f32(a0, s0));
-            vst1q_f32(ap.add(o + 4), vaddq_f32(a1, s1));
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) += *sp.add(i);
+        // SAFETY: the fn contract guarantees NEON; tile and tail offsets
+        // stay `< n` on both equal-length, disjoint slices (see `axpy` —
+        // identical indexing).
+        unsafe {
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                let a0 = vld1q_f32(ap.add(o));
+                let a1 = vld1q_f32(ap.add(o + 4));
+                let s0 = vld1q_f32(sp.add(o));
+                let s1 = vld1q_f32(sp.add(o + 4));
+                vst1q_f32(ap.add(o), vaddq_f32(a0, s0));
+                vst1q_f32(ap.add(o + 4), vaddq_f32(a1, s1));
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) += *sp.add(i);
+            }
         }
     }
 
@@ -253,24 +283,30 @@ mod vec_impl {
         debug_assert_eq!(acc.len(), tile.len());
         let n = acc.len();
         let tiles = n / BATCH_TILE;
-        let cv = vdupq_n_f32(c);
-        let zero = vdupq_n_f32(0.0);
         let ap = acc.as_mut_ptr();
         let tp = tile.as_mut_ptr();
-        for i in 0..tiles {
-            let o = i * BATCH_TILE;
-            let a0 = vld1q_f32(ap.add(o));
-            let a1 = vld1q_f32(ap.add(o + 4));
-            let t0 = vld1q_f32(tp.add(o));
-            let t1 = vld1q_f32(tp.add(o + 4));
-            vst1q_f32(ap.add(o), vfmaq_f32(a0, cv, t0));
-            vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, cv, t1));
-            vst1q_f32(tp.add(o), zero);
-            vst1q_f32(tp.add(o + 4), zero);
-        }
-        for i in tiles * BATCH_TILE..n {
-            *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
-            *tp.add(i) = 0.0;
+        // SAFETY: the fn contract guarantees NEON; tile and tail offsets
+        // stay `< n` on both equal-length slices, and `acc`/`tile` are
+        // distinct `&mut` borrows so the accumulate and the zeroing
+        // store never alias.
+        unsafe {
+            let cv = vdupq_n_f32(c);
+            let zero = vdupq_n_f32(0.0);
+            for i in 0..tiles {
+                let o = i * BATCH_TILE;
+                let a0 = vld1q_f32(ap.add(o));
+                let a1 = vld1q_f32(ap.add(o + 4));
+                let t0 = vld1q_f32(tp.add(o));
+                let t1 = vld1q_f32(tp.add(o + 4));
+                vst1q_f32(ap.add(o), vfmaq_f32(a0, cv, t0));
+                vst1q_f32(ap.add(o + 4), vfmaq_f32(a1, cv, t1));
+                vst1q_f32(tp.add(o), zero);
+                vst1q_f32(tp.add(o + 4), zero);
+            }
+            for i in tiles * BATCH_TILE..n {
+                *ap.add(i) = c.mul_add(*tp.add(i), *ap.add(i));
+                *tp.add(i) = 0.0;
+            }
         }
     }
 }
@@ -300,7 +336,8 @@ pub(crate) fn add_lanes(acc: &mut [f32], src: &[f32]) {
     #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     {
         if level() == LVL_VECTOR {
-            // SAFETY: see `axpy_lanes`.
+            // SAFETY: LVL_VECTOR is only set after the runtime feature
+            // check in `detect` succeeded on this machine.
             unsafe { vec_impl::add(acc, src) };
             return;
         }
@@ -316,7 +353,8 @@ pub(crate) fn fma_drain_lanes(acc: &mut [f32], tile: &mut [f32], c: f32) {
     #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     {
         if level() == LVL_VECTOR {
-            // SAFETY: see `axpy_lanes`.
+            // SAFETY: LVL_VECTOR is only set after the runtime feature
+            // check in `detect` succeeded on this machine.
             unsafe { vec_impl::fma_drain(acc, tile, c) };
             return;
         }

@@ -34,6 +34,12 @@
 //! - `coordinator` — batching inference server + CLI surface.
 //! - `harness` — drivers that regenerate every table and figure.
 
+// Also enforced workspace-wide via `[workspace.lints]`; restated here so
+// the contract — every unsafe *operation* sits in its own SAFETY-scoped
+// block, checked by clippy's `undocumented_unsafe_blocks` and offline by
+// `cargo xtask verify` — is visible at the crate root (DESIGN.md §10).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod coordinator;
 pub mod formats;
 pub mod harness;

@@ -19,6 +19,22 @@ impl Default for Config {
     }
 }
 
+impl Config {
+    /// Scale `cases` by the `SHAM_PROPTEST_CASES` environment variable
+    /// when set (interpreted as an absolute case count). CI's Miri lane
+    /// uses this to run the same properties at interpreter-friendly
+    /// counts without a separate harness.
+    pub fn from_env(self) -> Config {
+        match std::env::var("SHAM_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(cases) if cases > 0 => Config { cases, ..self },
+            _ => self,
+        }
+    }
+}
+
 /// Run `prop` for `cfg.cases` cases, each with a fresh deterministic PRNG.
 /// Panics on the first failure with the case index and seed.
 pub fn check<F>(name: &str, cfg: Config, mut prop: F)

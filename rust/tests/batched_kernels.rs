@@ -20,9 +20,9 @@
 //! codebook too large for its `u16` symbol ids.
 //!
 //! (The exact decode-pass accounting lives in
-//! `tests/centroid_decode_accounting.rs` — `decode_stats` is a
-//! process-global counter, so it gets a binary of its own where no
-//! sibling test decodes concurrently.)
+//! `tests/centroid_decode_accounting.rs`, counted through
+//! `decode_stats::thread_scope()` — per-thread counters, so those
+//! assertions stay exact even with sibling tests decoding concurrently.)
 
 use sham::formats::{
     all_formats, batched_product_into, par_decoded_matmul_batch_into,

@@ -3,11 +3,12 @@
 //! passes on top of the decode-once invariant — the symbol view is
 //! recorded during the one shared decode, never by a second pass.
 //!
-//! `formats::decode_stats` is a process-global counter, so these
-//! assertions live in their own test binary: a single `#[test]` means
-//! no sibling test decodes concurrently and the counted deltas are
-//! exact (the same reason `bench_decode_scaling` counts from a
-//! single-threaded control flow).
+//! `formats::decode_stats` keeps per-thread counters with an
+//! aggregating reader, so these assertions use
+//! [`decode_stats::thread_scope`] and stay exact no matter what sibling
+//! tests decode concurrently — this file used to be a solo one-`#[test]`
+//! binary racing a process-global counter; it now runs as a normal
+//! parallel test binary (and proves the isolation below).
 
 use sham::formats::{
     batched_product_into, decode_stats, BatchKernel, DecodedWeights, FormatId,
@@ -28,14 +29,14 @@ fn factorization_adds_no_extra_decode_passes() {
         // one decode_once_into = exactly one recorded pass, symbol view
         // and all — recording symbols costs no extra scan
         let mut dec = DecodedWeights::new();
-        let mark = decode_stats::total();
+        let scope = decode_stats::thread_scope();
         assert!(f.decode_once_into(&mut dec));
-        assert_eq!(decode_stats::since(mark), 1, "{id}: shared decode is one pass");
+        assert_eq!(scope.passes(), 1, "{id}: shared decode is one pass");
         assert!(dec.has_symbols(), "{id}: symbol view missing");
 
         // products on the decoded scratch — forced centroid, forced
         // direct, and the Auto crossover — perform no decode at all
-        let mark = decode_stats::total();
+        let scope = decode_stats::thread_scope();
         let mut out = Mat::zeros(0, 0);
         for k in [BatchKernel::Centroid, BatchKernel::Direct, BatchKernel::Auto] {
             dec.force_kernel(k);
@@ -44,18 +45,20 @@ fn factorization_adds_no_extra_decode_passes() {
             }
         }
         assert_eq!(
-            decode_stats::since(mark),
+            scope.passes(),
             0,
             "{id}: decoded products must not re-decode"
         );
 
         // the full serving dispatch (decode + centroid-eligible product)
-        // stays at exactly one pass per product at every thread count
+        // stays at exactly one pass per product at every thread count —
+        // the shared decode runs on the calling thread, so the thread
+        // scope sees it even when the product fans out across the pool
         for t in [1usize, 2, 4] {
-            let mark = decode_stats::total();
+            let scope = decode_stats::thread_scope();
             batched_product_into(f.as_ref(), &xb, &mut out, t);
             assert_eq!(
-                decode_stats::since(mark),
+                scope.passes(),
                 1,
                 "{id}: dispatch at t{t} must decode exactly once"
             );
@@ -68,13 +71,52 @@ fn factorization_adds_no_extra_decode_passes() {
     for id in [FormatId::IndexMap, FormatId::Cla] {
         let f = id.compress(&m);
         let mut dec = DecodedWeights::new();
-        let mark = decode_stats::total();
+        let scope = decode_stats::thread_scope();
         assert!(f.decode_once_into(&mut dec), "{id}: must shared-decode");
         assert!(dec.has_symbols(), "{id}: symbol view missing");
         assert_eq!(
-            decode_stats::since(mark),
+            scope.passes(),
             0,
             "{id}: no entropy stream, no decode pass"
         );
     }
+}
+
+/// The reason this file no longer needs to be a solo test binary: a
+/// sibling thread hammering entropy decodes is invisible to this
+/// thread's scope, while the aggregating reader still sees every pass.
+#[test]
+fn thread_scopes_are_immune_to_sibling_decodes() {
+    let mut rng = Prng::seeded(0x15_0DEC);
+    let m = Mat::sparse_quantized(48, 12, 0.8, 4, &mut rng);
+    let f = FormatId::Hac.compress(&m);
+
+    let aggregate_mark = decode_stats::total();
+    let scope = decode_stats::thread_scope();
+
+    // a sibling thread performs 16 full decode passes
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut dec = DecodedWeights::new();
+            for _ in 0..16 {
+                assert!(f.decode_once_into(&mut dec));
+            }
+        });
+    });
+
+    assert_eq!(
+        scope.passes(),
+        0,
+        "sibling-thread decodes must not leak into this thread's scope"
+    );
+    // ... but the process-wide aggregate counted all of them
+    assert!(
+        decode_stats::since(aggregate_mark) >= 16,
+        "aggregating reader must see every thread's passes"
+    );
+
+    // and this thread's own decode is seen by both granularities
+    let mut dec = DecodedWeights::new();
+    assert!(f.decode_once_into(&mut dec));
+    assert_eq!(scope.passes(), 1);
 }

@@ -1,0 +1,314 @@
+//! Property fuzzing of the wire protocol's untrusted-input surface
+//! (DESIGN.md §10): [`frame::parse_request`] and the
+//! [`frame::advance_discard`] resync machine are the two functions that
+//! consume attacker-controlled bytes before any trust boundary, so they
+//! get adversarial coverage beyond the example-based unit tests:
+//!
+//! - arbitrary bytes never panic the parser and never over-consume;
+//! - a declared payload beyond `max_frame_bytes` is rejected *before*
+//!   the payload vector is allocated, always with a resync recipe;
+//! - encode → parse round-trips bit-exactly; every strict prefix of a
+//!   valid frame is `Incomplete` (no torn-read misparses);
+//! - after an oversized frame the discard machine converges to the
+//!   exact next-frame boundary under arbitrary read chunkings, and the
+//!   following frame parses cleanly (the connection survives).
+//!
+//! Failures print the failing case's seed; replay it with
+//! `sham::util::proptest::check_one`.
+
+use sham::coordinator::batcher::Input;
+use sham::coordinator::frame::{
+    self, advance_discard, parse_request, Discard, Parse, DEFAULT_MAX_FRAME_BYTES,
+};
+use sham::prop_assert;
+use sham::util::prng::Prng;
+use sham::util::proptest::{check, Config};
+
+fn gen_name(rng: &mut Prng) -> String {
+    let n = rng.gen_range(12);
+    (0..n)
+        .map(|_| (b'a' + rng.gen_range(26) as u8) as char)
+        .collect()
+}
+
+fn gen_input(rng: &mut Prng, max_elems: usize) -> Input {
+    if rng.bernoulli(0.5) {
+        let n = rng.gen_range(max_elems + 1);
+        Input::Image((0..n).map(|_| rng.next_f32()).collect())
+    } else {
+        let nl = rng.gen_range(max_elems + 1);
+        let np = rng.gen_range(max_elems + 1);
+        Input::Tokens {
+            lig: (0..nl).map(|_| rng.next_u64() as i32).collect(),
+            prot: (0..np).map(|_| rng.next_u64() as i32).collect(),
+        }
+    }
+}
+
+/// `Input` deliberately has no `PartialEq`; compare the wire-relevant
+/// payload bit-exactly (the codec is `to_le_bytes`/`from_le_bytes`, so
+/// a round-trip must preserve every bit).
+fn inputs_match(a: &Input, b: &Input) -> bool {
+    match (a, b) {
+        (Input::Image(x), Input::Image(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Input::Tokens { lig: l1, prot: p1 }, Input::Tokens { lig: l2, prot: p2 }) => {
+            l1 == l2 && p1 == p2
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn arbitrary_bytes_never_panic_and_never_overconsume() {
+    check(
+        "frame/arbitrary-bytes",
+        Config { cases: 256, seed: 0xF1A7 }.from_env(),
+        |rng| {
+            let len = rng.gen_range(513);
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let cap = [16usize, 256, DEFAULT_MAX_FRAME_BYTES][rng.gen_range(3)];
+            match parse_request(&buf, cap) {
+                Parse::Incomplete => {}
+                Parse::Request { consumed, .. } | Parse::Malformed { consumed, .. } => {
+                    prop_assert!(
+                        consumed <= buf.len(),
+                        "consumed {consumed} of a {}-byte buffer",
+                        buf.len()
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn payloads_beyond_the_cap_are_rejected_before_allocation() {
+    check(
+        "frame/cap-enforced",
+        Config { cases: 128, seed: 0xF1A8 }.from_env(),
+        |rng| {
+            let name = gen_name(rng);
+            let input = gen_input(rng, 64);
+            let largest_bytes = match &input {
+                Input::Image(v) => v.len(),
+                Input::Tokens { lig, prot } => lig.len().max(prot.len()),
+            } * 4;
+            if largest_bytes == 0 {
+                return Ok(()); // nothing can exceed any cap
+            }
+            let mut buf = Vec::new();
+            frame::encode_request(&mut buf, &name, &input);
+            // a cap strictly below the frame's largest vector
+            let cap = rng.gen_range(largest_bytes);
+            match parse_request(&buf, cap) {
+                Parse::Malformed { consumed, resync, .. } => {
+                    prop_assert!(
+                        consumed <= buf.len(),
+                        "consumed {consumed} of {} bytes",
+                        buf.len()
+                    );
+                    prop_assert!(
+                        resync.is_some(),
+                        "a well-framed oversized payload must carry a resync recipe"
+                    );
+                }
+                Parse::Request { .. } => {
+                    return Err(format!(
+                        "parsed a frame whose {largest_bytes}-byte vector exceeds the {cap}-byte cap"
+                    ));
+                }
+                Parse::Incomplete => {
+                    return Err("complete oversized frame reported Incomplete".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn encode_parse_roundtrip_is_bit_exact() {
+    check(
+        "frame/roundtrip",
+        Config { cases: 128, seed: 0xF1A9 }.from_env(),
+        |rng| {
+            let name = gen_name(rng);
+            let input = gen_input(rng, 32);
+            let mut buf = Vec::new();
+            frame::encode_request(&mut buf, &name, &input);
+            match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+                Parse::Request { name: n2, input: i2, consumed } => {
+                    prop_assert!(n2 == name, "name {n2:?} != {name:?}");
+                    prop_assert!(consumed == buf.len(), "consumed {consumed} != {}", buf.len());
+                    prop_assert!(inputs_match(&input, &i2), "payload mismatch after round-trip");
+                }
+                p => return Err(format!("round-trip parsed as {p:?}")),
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_strict_prefix_is_incomplete() {
+    check(
+        "frame/prefixes-incomplete",
+        Config { cases: 48, seed: 0xF1AA }.from_env(),
+        |rng| {
+            let name = gen_name(rng);
+            let input = gen_input(rng, 16);
+            let mut buf = Vec::new();
+            frame::encode_request(&mut buf, &name, &input);
+            for cut in 0..buf.len() {
+                match parse_request(&buf[..cut], DEFAULT_MAX_FRAME_BYTES) {
+                    Parse::Incomplete => {}
+                    p => {
+                        return Err(format!(
+                            "prefix of {cut}/{} bytes parsed as {p:?}",
+                            buf.len()
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversized_frames_resync_and_the_next_frame_parses() {
+    check(
+        "frame/resync-converges",
+        Config { cases: 96, seed: 0xF1AB }.from_env(),
+        |rng| {
+            let cap = 64usize;
+            // an oversized-but-well-framed request: ≥ 17 elements → the
+            // 68..=160 payload bytes blow the 64-byte cap
+            let bad_name = gen_name(rng);
+            let mut stream = Vec::new();
+            if rng.bernoulli(0.5) {
+                let n = 17 + rng.gen_range(24);
+                let v: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+                frame::encode_request(&mut stream, &bad_name, &Input::Image(v));
+            } else {
+                // oversized lig → resync must skip *through* the
+                // length-prefixed prot vector as well
+                let nl = 17 + rng.gen_range(24);
+                let np = rng.gen_range(8);
+                let lig: Vec<i32> = (0..nl).map(|_| rng.next_u64() as i32).collect();
+                let prot: Vec<i32> = (0..np).map(|_| rng.next_u64() as i32).collect();
+                frame::encode_request(&mut stream, &bad_name, &Input::Tokens { lig, prot });
+            }
+            let good_at = stream.len();
+            let good_name = gen_name(rng);
+            let good_input = gen_input(rng, 8); // ≤ 32 payload bytes: fits
+            frame::encode_request(&mut stream, &good_name, &good_input);
+
+            // 1) the header parse rejects with a resync recipe
+            let (consumed, resync) = match parse_request(&stream, cap) {
+                Parse::Malformed { consumed, resync: Some(r), .. } => (consumed, r),
+                p => return Err(format!("oversized frame parsed as {p:?}")),
+            };
+            // 2) drive the discard over the rest in arbitrary chunkings
+            let mut discard = Discard::from_resync(resync);
+            let mut at = consumed;
+            let mut leftover: Vec<u8> = Vec::new();
+            while discard.is_some() {
+                prop_assert!(
+                    at < stream.len(),
+                    "discard ran past the stream without converging"
+                );
+                let chunk_len = 1 + rng.gen_range((stream.len() - at).min(24));
+                let chunk = &stream[at..at + chunk_len];
+                at += chunk_len;
+                let mut rpos = 0usize;
+                let done = advance_discard(&mut discard, chunk, &mut rpos);
+                prop_assert!(
+                    rpos <= chunk.len(),
+                    "rpos {rpos} overran the {}-byte chunk",
+                    chunk.len()
+                );
+                if done {
+                    leftover = chunk[rpos..].to_vec();
+                } else {
+                    prop_assert!(
+                        rpos == chunk.len(),
+                        "an unfinished discard must consume its whole chunk"
+                    );
+                }
+            }
+            prop_assert!(
+                at - leftover.len() == good_at,
+                "discard converged at {} but the next frame starts at {good_at}",
+                at - leftover.len()
+            );
+            // 3) the connection keeps serving: the next frame parses
+            leftover.extend_from_slice(&stream[at..]);
+            match parse_request(&leftover, cap) {
+                Parse::Request { name, input, consumed } => {
+                    prop_assert!(name == good_name, "post-resync name {name:?}");
+                    prop_assert!(
+                        inputs_match(&input, &good_input),
+                        "post-resync payload mismatch"
+                    );
+                    prop_assert!(
+                        consumed == leftover.len(),
+                        "post-resync consumed {consumed} != {}",
+                        leftover.len()
+                    );
+                }
+                p => return Err(format!("post-resync frame parsed as {p:?}")),
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn advance_discard_never_overruns_from_any_state() {
+    check(
+        "frame/discard-states",
+        Config { cases: 192, seed: 0xF1AC }.from_env(),
+        |rng| {
+            let mut discard = Some(match rng.gen_range(3) {
+                0 => Discard::Bytes(rng.gen_range(64) as u64),
+                1 => Discard::BytesThenLen(rng.gen_range(64) as u64),
+                _ => Discard::Len { hdr: [0; 4], have: rng.gen_range(4) },
+            });
+            // hostile length prefixes may declare far more than we feed;
+            // cut the case off rather than stream gigabytes — the
+            // invariants below must hold at every step regardless
+            let mut budget = 4096usize;
+            loop {
+                let len = rng.gen_range(17);
+                let chunk: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0x3) as u8).collect();
+                let mut rpos = 0usize;
+                let done = advance_discard(&mut discard, &chunk, &mut rpos);
+                prop_assert!(
+                    rpos <= chunk.len(),
+                    "rpos {rpos} overran the {}-byte chunk",
+                    chunk.len()
+                );
+                if done {
+                    prop_assert!(
+                        discard.is_none(),
+                        "converged discard must clear its state"
+                    );
+                    break;
+                }
+                prop_assert!(
+                    rpos == chunk.len(),
+                    "an unfinished discard must consume its whole chunk"
+                );
+                budget = budget.saturating_sub(chunk.len().max(1));
+                if budget == 0 {
+                    break;
+                }
+            }
+            Ok(())
+        },
+    );
+}

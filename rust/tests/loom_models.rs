@@ -1,0 +1,317 @@
+//! Loom models of the repo's three hand-rolled concurrency protocols
+//! (DESIGN.md §10). These are *protocol mirrors*, not instrumentations
+//! of the production types: each model re-states a protocol's moving
+//! parts with `loom` primitives so loom can exhaustively explore the
+//! interleavings (and the relaxed-memory reorderings) and prove the
+//! invariant the production code relies on. The mirrored code is kept
+//! line-for-line close to its source — if the protocol changes, change
+//! the model in the same PR.
+//!
+//! The whole crate is gated on `--cfg loom`, so the normal test run
+//! compiles this file to an empty binary and never resolves the `loom`
+//! dependency. CI's loom lane (and a local run) executes it with:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Models:
+//! 1. reactor shard inbox + waker + slot generations
+//!    (`coordinator::reactor`): no lost wakeup, and a completion
+//!    carrying a stale generation is never delivered to a recycled
+//!    connection slot.
+//! 2. pool scoped dispatch/teardown (`formats::pool`): every spawned
+//!    task runs exactly once (worker or helping caller), the scope's
+//!    wait returns only after all its tasks finished, and stop/join
+//!    cannot deadlock.
+//! 3. `LogHistogram` record/quantile (`coordinator::metrics`): with
+//!    every access `Relaxed`, a concurrent reader may see `count`
+//!    ahead of the bucket stores — the top-bucket fallback must make
+//!    the scan total anyway, and joined totals must agree.
+#![cfg(loom)]
+
+use std::collections::VecDeque;
+
+use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+// ---------------------------------------------------------------------
+// 1. Reactor shard: completion inbox + waker + slot generations
+// ---------------------------------------------------------------------
+
+/// Mirror of `reactor::ShardShared`: the inbox Vec and the waker. The
+/// production waker is an eventfd/pipe write draining into a poller;
+/// its protocol content — a level signal set *after* the inbox push,
+/// consumed before the drain — is a flag + condvar.
+struct ShardModel {
+    inbox: Mutex<Vec<(u64, &'static str)>>,
+    woken: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ShardModel {
+    fn wake(&self) {
+        *self.woken.lock().unwrap() = true;
+        self.cv.notify_one();
+    }
+
+    fn wait_woken(&self) {
+        let mut w = self.woken.lock().unwrap();
+        while !*w {
+            w = self.cv.wait(w).unwrap();
+        }
+        *w = false;
+    }
+}
+
+#[test]
+fn reactor_inbox_no_lost_wakeup_and_stale_gen_is_dropped() {
+    loom::model(|| {
+        let sh = Arc::new(ShardModel {
+            inbox: Mutex::new(Vec::new()),
+            woken: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+
+        // Worker A finished a request for slot 0 *before* the peer hung
+        // up: by the time its completion lands, the shard has recycled
+        // the slot (gen bumped 0 → 1). Worker B serves the slot's new
+        // occupant. Both follow the production order: push, then wake.
+        let a = {
+            let sh = sh.clone();
+            thread::spawn(move || {
+                sh.inbox.lock().unwrap().push((0, "stale"));
+                sh.wake();
+            })
+        };
+        let b = {
+            let sh = sh.clone();
+            thread::spawn(move || {
+                sh.inbox.lock().unwrap().push((1, "fresh"));
+                sh.wake();
+            })
+        };
+
+        // The shard thread (here: the model's main thread) drains until
+        // both completions arrived. Mirrors `on_done`: a message whose
+        // gen differs from the slot's current gen is dropped.
+        let cur_gen = 1u64;
+        let mut delivered = Vec::new();
+        let mut drained = 0usize;
+        while drained < 2 {
+            sh.wait_woken();
+            let msgs = std::mem::take(&mut *sh.inbox.lock().unwrap());
+            drained += msgs.len();
+            for (gen, tag) in msgs {
+                if gen == cur_gen {
+                    delivered.push(tag);
+                }
+            }
+        }
+        a.join().unwrap();
+        b.join().unwrap();
+
+        // loom's deadlock detector proves the push-then-wake discipline
+        // loses no wakeup (the drain loop always terminates); the
+        // assertion proves generation guarding.
+        assert_eq!(delivered, vec!["fresh"]);
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Pool: scoped dispatch, helping wait, stop/join teardown
+// ---------------------------------------------------------------------
+
+/// Mirror of `pool::WaitGroup` (pending count + condvar). The
+/// production `wait_timeout` is defensive; the model waits without a
+/// timeout so loom proves the notify discipline alone suffices.
+struct WgModel {
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl WgModel {
+    fn add(&self) {
+        *self.pending.lock().unwrap() += 1;
+    }
+
+    fn task_done(&self) {
+        let mut p = self.pending.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.pending.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut p = self.pending.lock().unwrap();
+        while *p != 0 {
+            p = self.done_cv.wait(p).unwrap();
+        }
+    }
+}
+
+/// Mirror of `pool::Shared`: the task queue (tasks are just indices
+/// into a run-count table here), its condvar, and the stop flag.
+struct PoolModel {
+    queue: Mutex<VecDeque<usize>>,
+    task_cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl PoolModel {
+    fn push(&self, task: usize) {
+        self.queue.lock().unwrap().push_back(task);
+        self.task_cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<usize> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+#[test]
+fn pool_scope_runs_tasks_exactly_once_and_teardown_joins() {
+    loom::model(|| {
+        let pool = Arc::new(PoolModel {
+            queue: Mutex::new(VecDeque::new()),
+            task_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let wg = Arc::new(WgModel { pending: Mutex::new(0), done_cv: Condvar::new() });
+        let runs = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+
+        // one worker thread: mirrors `pool::worker_loop`
+        let worker = {
+            let pool = pool.clone();
+            let wg = wg.clone();
+            let runs = runs.clone();
+            thread::spawn(move || loop {
+                let task = {
+                    let mut q = pool.queue.lock().unwrap();
+                    loop {
+                        if let Some(t) = q.pop_front() {
+                            break Some(t);
+                        }
+                        if pool.stop.load(Ordering::Acquire) {
+                            break None;
+                        }
+                        q = pool.task_cv.wait(q).unwrap();
+                    }
+                };
+                match task {
+                    Some(t) => {
+                        runs[t].fetch_add(1, Ordering::Relaxed);
+                        wg.task_done();
+                    }
+                    None => return,
+                }
+            })
+        };
+
+        // the scoping caller: spawn two tasks, then `wait_help` — run
+        // still-queued tasks of this scope before blocking on the group
+        for t in 0..2 {
+            wg.add();
+            pool.push(t);
+        }
+        while !wg.is_done() {
+            if let Some(t) = pool.try_pop() {
+                runs[t].fetch_add(1, Ordering::Relaxed);
+                wg.task_done();
+            } else {
+                wg.wait();
+            }
+        }
+        assert_eq!(runs[0].load(Ordering::Relaxed), 1, "task 0 must run exactly once");
+        assert_eq!(runs[1].load(Ordering::Relaxed), 1, "task 1 must run exactly once");
+
+        // teardown: mirrors `Drop for Pool` — must join, not deadlock
+        pool.stop.store(true, Ordering::Release);
+        pool.task_cv.notify_all();
+        worker.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// 3. LogHistogram: relaxed record vs. concurrent quantile scan
+// ---------------------------------------------------------------------
+
+const HB: usize = 3;
+
+/// Mirror of `metrics::LogHistogram`'s protocol core: per-bucket
+/// counters and the total, every access `Relaxed`.
+struct HistModel {
+    buckets: [AtomicU64; HB],
+    count: AtomicU64,
+}
+
+impl HistModel {
+    fn record(&self, bucket: usize) {
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mirror of `quantile`: rank over a snapshot of `count`, cumulative
+    /// scan, top-bucket fallback. Returns the chosen bucket index.
+    fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Some(i);
+            }
+        }
+        // A racing reader can observe `count` ahead of the bucket
+        // stores (both are Relaxed on different locations); the
+        // fallback keeps the scan total — this is the line the model
+        // exists to justify.
+        Some(HB - 1)
+    }
+}
+
+#[test]
+fn histogram_relaxed_scan_never_misses_and_totals_agree() {
+    loom::model(|| {
+        let h = Arc::new(HistModel {
+            buckets: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            count: AtomicU64::new(0),
+        });
+        let r0 = {
+            let h = h.clone();
+            thread::spawn(move || h.record(0))
+        };
+        let r2 = {
+            let h = h.clone();
+            thread::spawn(move || h.record(2))
+        };
+
+        // concurrent reader (the model's main thread): any snapshot must
+        // yield a valid bucket — even when `count` runs ahead
+        if let Some(i) = h.quantile_bucket(1.0) {
+            assert!(i < HB, "quantile scan produced an out-of-range bucket");
+        }
+
+        r0.join().unwrap();
+        r2.join().unwrap();
+
+        // quiescent totals agree bucket-by-bucket and in aggregate
+        let sum: u64 = (0..HB)
+            .map(|i| h.buckets[i].load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(sum, 2);
+        assert_eq!(h.count.load(Ordering::Relaxed), 2);
+        assert_eq!(h.quantile_bucket(0.5), Some(0));
+        assert_eq!(h.quantile_bucket(1.0), Some(2));
+    });
+}

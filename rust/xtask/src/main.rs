@@ -1,0 +1,735 @@
+//! `cargo xtask verify` — the sham-verify static pass (DESIGN.md §10).
+//!
+//! Walks the workspace's Rust sources with a hand-rolled lexer (the
+//! offline registry has no `syn`; the lexer strips strings, raw strings,
+//! char literals, and nested block comments so token scans never match
+//! inside them) and enforces four contracts that `cargo test` cannot:
+//!
+//! 1. **SAFETY comments** — every `unsafe` token (block, fn, impl) must
+//!    carry a `// SAFETY:` comment on the same or an immediately
+//!    preceding line (doc `# Safety` sections count for `unsafe fn`s).
+//!    This is the offline twin of clippy's `undocumented_unsafe_blocks`,
+//!    runnable without a toolchain that has clippy.
+//! 2. **Unsafe budget** — every file containing `unsafe` must be listed
+//!    in `verify/unsafe_budget.toml` with a site cap; exceeding the cap
+//!    or growing unsafe into an unlisted file fails. Shrinking below the
+//!    cap is reported as a note so the allowlist stays tight.
+//! 3. **Kraft call sites** — code under `src/formats/` may only build
+//!    canonical Huffman tables through Kraft-checked constructors:
+//!    `Code::try_from_lengths` (validates the Kraft inequality on
+//!    untrusted lengths) or `Code::from_freqs` (Kraft-valid by
+//!    construction). A bare `from_lengths` call — the assert-only
+//!    constructor — in the formats layer is a violation, and
+//!    `src/formats/store.rs` (the untrusted `.sham` decode path) must
+//!    keep at least one `try_from_lengths` call site.
+//! 4. **Decode-once whitelist** — `decode_stats::record()` may only be
+//!    called from the entropy-coded formats (HAC / sHAC / LZ-AC). The
+//!    decode-free codebook formats (IM / CLA) counting a pass would
+//!    silently corrupt every decode-once assertion and bench boolean.
+//!
+//! Exit status: 0 when the tree is clean, 1 with one line per violation
+//! otherwise. `cargo xtask verify --self-test` additionally runs the
+//! seeded-violation corpus (an uncommented `unsafe`, an unbudgeted
+//! module, a whitelist breach, an unchecked constructor) and fails
+//! unless every seed is caught — the detector proves it can fail.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories (relative to the workspace root `rust/`) scanned by
+/// every check. `target/` is never entered.
+const SCAN_DIRS: &[&str] = &["src", "benches", "tests", "xtask/src"];
+
+/// The only files allowed to call `decode_stats::record()`: the
+/// entropy-coded formats, which pay a real stream decode per pass.
+const DECODE_RECORD_WHITELIST: &[&str] = &[
+    "src/formats/hac.rs",
+    "src/formats/shac.rs",
+    "src/formats/lzw.rs",
+];
+
+/// The untrusted-input file that must keep using the Kraft-checked
+/// canonical-code constructor.
+const KRAFT_REQUIRED_IN: &str = "src/formats/store.rs";
+
+struct Violation {
+    file: String,
+    line: usize,
+    what: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: {}", self.file, self.line, self.what)
+        } else {
+            write!(f, "{}: {}", self.file, self.what)
+        }
+    }
+}
+
+// ---------------------------------------------------------------- lexer --
+
+/// One source line split into executable code and comment text. String
+/// and char literal contents are dropped from `code` (so `"unsafe"` the
+/// string never looks like `unsafe` the keyword); comment text — line,
+/// doc, and block — lands in `comment` (so `// SAFETY:` is findable).
+#[derive(Default)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str { raw_hashes: Option<u8> },
+}
+
+/// Split `src` into per-line (code, comment) pairs. A hand-rolled lexer
+/// rather than `syn`: it only needs to be precise enough that keyword
+/// and call-site scans never match inside literals or comments, and it
+/// must run with zero dependencies in the offline container.
+fn lex_lines(src: &str) -> Vec<Line> {
+    let b: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Str { raw_hashes: None };
+                    cur.code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // raw / byte-string prefixes: r"..", r#".."#, br".."
+                // (only at a word start, so identifiers ending in r/b
+                // never trigger)
+                let word_start =
+                    i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+                if word_start && (c == 'r' || c == 'b') {
+                    let mut j = i + 1;
+                    if c == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u8;
+                    while b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&'"') && (hashes > 0 || b.get(i + 1) == Some(&'"') || (c == 'b' && b.get(i + 1) == Some(&'r'))) {
+                        mode = Mode::Str { raw_hashes: Some(hashes) };
+                        cur.code.push(' ');
+                        i = j + 1;
+                        continue;
+                    }
+                    if c == 'b' && b.get(i + 1) == Some(&'"') {
+                        mode = Mode::Str { raw_hashes: None };
+                        cur.code.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: 'x' / '\n' / b'x' are
+                    // literals; 'ident (no closing quote right after
+                    // one unit) is a lifetime and stays in code.
+                    if b.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != '\'' && b[j] != '\n' {
+                            j += 1;
+                        }
+                        cur.code.push(' ');
+                        i = (j + 1).min(b.len());
+                        continue;
+                    }
+                    if b.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                        continue;
+                    }
+                    cur.code.push(c); // lifetime tick
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                i += 1;
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && b.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str { raw_hashes } => {
+                match raw_hashes {
+                    None => {
+                        if c == '\\' {
+                            i += 2;
+                            continue;
+                        }
+                        if c == '"' {
+                            mode = Mode::Code;
+                        }
+                        i += 1;
+                    }
+                    Some(h) => {
+                        if c == '"' {
+                            let mut j = i + 1;
+                            let mut seen = 0u8;
+                            while seen < h && b.get(j) == Some(&'#') {
+                                seen += 1;
+                                j += 1;
+                            }
+                            if seen == h {
+                                mode = Mode::Code;
+                                i = j;
+                                continue;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Indices (0-based) of lines whose *code* contains the `unsafe`
+/// keyword as a whole word — one entry per occurrence.
+fn unsafe_sites(lines: &[Line]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let mut from = 0;
+        while let Some(p) = code[from..].find("unsafe") {
+            let at = from + p;
+            let before_ok = at == 0
+                || !code[..at]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            let after = code[at + 6..].chars().next();
+            let after_ok = !after.is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if before_ok && after_ok {
+                out.push(idx);
+            }
+            from = at + 6;
+        }
+    }
+    out
+}
+
+/// Does the `unsafe` at `lines[idx]` carry a safety contract? Accepted:
+/// a `SAFETY:` comment on the same line, or `SAFETY:` / `# Safety` in
+/// the contiguous run of comment-only / attribute lines directly above.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    let marks = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if marks(&lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let annotation = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if marks(&lines[j].comment) && (annotation || code.is_empty()) {
+            return true;
+        }
+        if !annotation {
+            return false;
+        }
+    }
+    false
+}
+
+// --------------------------------------------------------------- budget --
+
+/// Parse `verify/unsafe_budget.toml` — a deliberate subset of TOML
+/// (`[budget]` section, `"quoted/path.rs" = N` entries, `#` comments).
+fn parse_budget(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut map = BTreeMap::new();
+    let mut in_budget = false;
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            in_budget = line == "[budget]";
+            continue;
+        }
+        if !in_budget {
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("budget line {}: expected `\"path\" = N`", n + 1))?;
+        let key = key.trim().trim_matches('"').to_string();
+        let val: usize = val
+            .trim()
+            .parse()
+            .map_err(|_| format!("budget line {}: `{}` is not a count", n + 1, val.trim()))?;
+        map.insert(key, val);
+    }
+    Ok(map)
+}
+
+// --------------------------------------------------------------- checks --
+
+struct FileScan {
+    rel: String,
+    lines: Vec<Line>,
+}
+
+fn check_safety_comments(files: &[FileScan], out: &mut Vec<Violation>) {
+    for f in files {
+        for idx in unsafe_sites(&f.lines) {
+            if !has_safety_comment(&f.lines, idx) {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    what: "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc) \
+                           on or directly above the site"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+fn check_unsafe_budget(
+    files: &[FileScan],
+    budget: &BTreeMap<String, usize>,
+    out: &mut Vec<Violation>,
+    notes: &mut Vec<String>,
+) {
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in files {
+        let n = unsafe_sites(&f.lines).len();
+        if n > 0 {
+            seen.insert(&f.rel, n);
+        }
+    }
+    for (rel, n) in &seen {
+        match budget.get(*rel) {
+            None => out.push(Violation {
+                file: rel.to_string(),
+                line: 0,
+                what: format!(
+                    "{n} unsafe site(s) but no entry in verify/unsafe_budget.toml — \
+                     new unsafe must be budgeted explicitly"
+                ),
+            }),
+            Some(cap) if n > cap => out.push(Violation {
+                file: rel.to_string(),
+                line: 0,
+                what: format!("{n} unsafe site(s) exceeds the budget of {cap}"),
+            }),
+            Some(cap) if n < cap => notes.push(format!(
+                "{rel}: {n} unsafe site(s), budget {cap} — tighten the budget"
+            )),
+            Some(_) => {}
+        }
+    }
+    for rel in budget.keys() {
+        if !seen.contains_key(rel.as_str()) {
+            out.push(Violation {
+                file: rel.clone(),
+                line: 0,
+                what: "budgeted in verify/unsafe_budget.toml but has no unsafe sites \
+                       (or no longer exists) — remove the stale entry"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn check_kraft_call_sites(files: &[FileScan], out: &mut Vec<Violation>) {
+    let mut store_has_checked = false;
+    for f in files {
+        let in_formats = f.rel.starts_with("src/formats/");
+        for (idx, line) in f.lines.iter().enumerate() {
+            let code = &line.code;
+            let mut from = 0;
+            while let Some(p) = code[from..].find("from_lengths") {
+                let at = from + p;
+                from = at + "from_lengths".len();
+                let checked = code[..at].ends_with("try_");
+                if checked && f.rel == KRAFT_REQUIRED_IN {
+                    store_has_checked = true;
+                }
+                if !checked && in_formats {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: idx + 1,
+                        what: "canonical code built with the assert-only `from_lengths` \
+                               in the formats layer — untrusted lengths must go through \
+                               the Kraft-checked `Code::try_from_lengths` (or derive via \
+                               `Code::from_freqs`)"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+    if files.iter().any(|f| f.rel == KRAFT_REQUIRED_IN) && !store_has_checked {
+        out.push(Violation {
+            file: KRAFT_REQUIRED_IN.into(),
+            line: 0,
+            what: "no `try_from_lengths` call site left — the `.sham` decode path \
+                   lost its Kraft-inequality enforcement"
+                .into(),
+        });
+    }
+}
+
+fn check_decode_record_whitelist(files: &[FileScan], out: &mut Vec<Violation>) {
+    for f in files {
+        if DECODE_RECORD_WHITELIST.contains(&f.rel.as_str()) {
+            continue;
+        }
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.code.contains("decode_stats::record") {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    what: "`decode_stats::record()` outside the entropy-format \
+                           whitelist (hac/shac/lzw) — decode-free formats must not \
+                           count passes (it would corrupt every decode-once assertion)"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- walk --
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn scan_tree(root: &Path) -> Result<Vec<FileScan>, String> {
+    let mut paths = Vec::new();
+    for d in SCAN_DIRS {
+        collect_rs(&root.join(d), &mut paths);
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let src = fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(FileScan { rel, lines: lex_lines(&src) });
+    }
+    Ok(files)
+}
+
+fn run_verify(root: &Path) -> Result<(Vec<Violation>, Vec<String>), String> {
+    let files = scan_tree(root)?;
+    if files.is_empty() {
+        return Err(format!("no Rust sources found under {}", root.display()));
+    }
+    let budget_path = root.join("verify/unsafe_budget.toml");
+    let budget_text = fs::read_to_string(&budget_path)
+        .map_err(|e| format!("{}: {e}", budget_path.display()))?;
+    let budget = parse_budget(&budget_text)?;
+
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+    check_safety_comments(&files, &mut violations);
+    check_unsafe_budget(&files, &budget, &mut violations, &mut notes);
+    check_kraft_call_sites(&files, &mut violations);
+    check_decode_record_whitelist(&files, &mut violations);
+    Ok((violations, notes))
+}
+
+// ------------------------------------------------------------ self-test --
+
+/// Seeded-violation corpus: each snippet must trip its check, and each
+/// clean twin must not. Run via `cargo xtask verify --self-test` (and as
+/// unit tests) so "exits non-zero on a violation" is itself verified.
+fn self_test() -> Result<(), String> {
+    let fail = |name: &str| Err(format!("self-test `{name}` failed"));
+
+    // 1. uncommented unsafe is caught; commented / doc'd unsafe is not
+    let dirty = lex_lines("fn f() {\n    unsafe { g() }\n}\n");
+    let sites = unsafe_sites(&dirty);
+    if sites.len() != 1 || has_safety_comment(&dirty, sites[0]) {
+        return fail("uncommented-unsafe");
+    }
+    let clean = lex_lines("fn f() {\n    // SAFETY: g upholds its contract.\n    unsafe { g() }\n}\n");
+    if !has_safety_comment(&clean, unsafe_sites(&clean)[0]) {
+        return fail("safety-comment-accepted");
+    }
+    let doc = lex_lines("/// # Safety\n/// Caller checked the CPU.\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}\n");
+    if !has_safety_comment(&doc, unsafe_sites(&doc)[0]) {
+        return fail("safety-doc-accepted");
+    }
+    let masked = lex_lines("fn f() { let s = \"unsafe\"; } // unsafe in a string is no site\n");
+    if !unsafe_sites(&masked).is_empty() {
+        return fail("literal-masking");
+    }
+
+    // 2. an unbudgeted module is caught
+    let files = vec![FileScan {
+        rel: "src/rogue.rs".into(),
+        lines: lex_lines("// SAFETY: fine.\nunsafe fn h() {}\n"),
+    }];
+    let mut v = Vec::new();
+    check_unsafe_budget(&files, &BTreeMap::new(), &mut v, &mut Vec::new());
+    if v.len() != 1 {
+        return fail("unbudgeted-module");
+    }
+    let mut budget = BTreeMap::new();
+    budget.insert("src/rogue.rs".to_string(), 1usize);
+    let mut v = Vec::new();
+    check_unsafe_budget(&files, &budget, &mut v, &mut Vec::new());
+    if !v.is_empty() {
+        return fail("budgeted-module-passes");
+    }
+
+    // 3. decode-once whitelist breach is caught
+    let files = vec![FileScan {
+        rel: "src/formats/index_map.rs".into(),
+        lines: lex_lines("fn d() { decode_stats::record(); }\n"),
+    }];
+    let mut v = Vec::new();
+    check_decode_record_whitelist(&files, &mut v);
+    if v.len() != 1 {
+        return fail("whitelist-breach");
+    }
+
+    // 4. unchecked canonical constructor in formats/ is caught
+    let files = vec![FileScan {
+        rel: "src/formats/store.rs".into(),
+        lines: lex_lines("fn load() { let c = Code::from_lengths(lens); }\n"),
+    }];
+    let mut v = Vec::new();
+    check_kraft_call_sites(&files, &mut v);
+    // bare constructor + store losing its checked site = two violations
+    if v.len() != 2 {
+        return fail("unchecked-kraft");
+    }
+    let files = vec![FileScan {
+        rel: "src/formats/store.rs".into(),
+        lines: lex_lines("fn load() { let c = Code::try_from_lengths(lens)?; }\n"),
+    }];
+    let mut v = Vec::new();
+    check_kraft_call_sites(&files, &mut v);
+    if !v.is_empty() {
+        return fail("checked-kraft-passes");
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- main --
+
+fn usage() -> ! {
+    eprintln!("usage: cargo xtask verify [--root <workspace-dir>] [--self-test]");
+    std::process::exit(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut want_self_test = false;
+    let mut cmd: Option<&str> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "verify" if cmd.is_none() => cmd = Some("verify"),
+            "--root" => root = Some(PathBuf::from(it.next().unwrap_or_else(|| usage()))),
+            "--self-test" => want_self_test = true,
+            _ => usage(),
+        }
+    }
+    if cmd != Some("verify") {
+        usage();
+    }
+    // xtask lives at <workspace>/xtask — default to its parent.
+    let root = root.unwrap_or_else(|| {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask has a parent dir")
+            .to_path_buf()
+    });
+
+    if want_self_test {
+        match self_test() {
+            Ok(()) => println!("verify: self-test OK (all seeded violations caught)"),
+            Err(e) => {
+                eprintln!("verify: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    match run_verify(&root) {
+        Ok((violations, notes)) => {
+            for n in &notes {
+                println!("verify: note: {n}");
+            }
+            if violations.is_empty() {
+                println!("verify: OK (SAFETY comments, unsafe budget, Kraft call sites, decode-once whitelist)");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("verify: {} violation(s):", violations.len());
+                for v in &violations {
+                    eprintln!("  {v}");
+                }
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("verify: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_violations_are_caught() {
+        self_test().unwrap();
+    }
+
+    #[test]
+    fn lexer_strips_strings_and_comments() {
+        let lines = lex_lines(
+            "let a = \"unsafe // not code\"; // trailing SAFETY: no\nlet b = r#\"unsafe\"#;\n/* unsafe\n   spanning */ let c = 'u';\n",
+        );
+        assert!(unsafe_sites(&lines).is_empty());
+        assert!(lines[0].comment.contains("SAFETY:"));
+        assert!(lines[2].comment.contains("unsafe"));
+        assert!(lines[3].code.contains("let c"));
+    }
+
+    #[test]
+    fn lifetimes_do_not_break_the_lexer() {
+        let lines = lex_lines("fn f<'env>(x: &'env str) -> &'env str { x }\nunsafe fn g() {}\n");
+        assert_eq!(unsafe_sites(&lines), vec![1]);
+    }
+
+    #[test]
+    fn budget_parser_reads_entries() {
+        let b = parse_budget(
+            "# comment\n[budget]\n\"src/a.rs\" = 3\n\"src/b c.rs\" = 1 # trailing\n",
+        )
+        .unwrap();
+        assert_eq!(b.get("src/a.rs"), Some(&3));
+        assert_eq!(b.get("src/b c.rs"), Some(&1));
+    }
+
+    #[test]
+    fn budget_parser_rejects_garbage() {
+        assert!(parse_budget("[budget]\nnope\n").is_err());
+        assert!(parse_budget("[budget]\n\"a\" = many\n").is_err());
+    }
+
+    #[test]
+    fn over_budget_and_stale_entries_fail() {
+        let files = vec![FileScan {
+            rel: "src/a.rs".into(),
+            lines: lex_lines("// SAFETY: x.\nunsafe {}\n// SAFETY: y.\nunsafe {}\n"),
+        }];
+        let mut budget = BTreeMap::new();
+        budget.insert("src/a.rs".to_string(), 1usize);
+        budget.insert("src/gone.rs".to_string(), 2usize);
+        let mut v = Vec::new();
+        check_unsafe_budget(&files, &budget, &mut v, &mut Vec::new());
+        assert_eq!(v.len(), 2, "{v:?}"); // over budget + stale entry
+    }
+
+    #[test]
+    fn under_budget_is_a_note_not_a_violation() {
+        let files = vec![FileScan {
+            rel: "src/a.rs".into(),
+            lines: lex_lines("// SAFETY: x.\nunsafe {}\n"),
+        }];
+        let mut budget = BTreeMap::new();
+        budget.insert("src/a.rs".to_string(), 5usize);
+        let (mut v, mut notes) = (Vec::new(), Vec::new());
+        check_unsafe_budget(&files, &budget, &mut v, &mut notes);
+        assert!(v.is_empty());
+        assert_eq!(notes.len(), 1);
+    }
+
+    #[test]
+    fn attribute_between_comment_and_site_is_skipped() {
+        let lines = lex_lines(
+            "// SAFETY: detection ran.\n#[allow(dead_code)]\nunsafe fn f() {}\n",
+        );
+        assert!(has_safety_comment(&lines, unsafe_sites(&lines)[0]));
+    }
+
+    #[test]
+    fn code_line_breaks_the_comment_run() {
+        let lines = lex_lines(
+            "// SAFETY: for the OTHER site.\nlet x = 1;\nunsafe { g() }\n",
+        );
+        assert!(!has_safety_comment(&lines, unsafe_sites(&lines)[0]));
+    }
+}

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench regression gate (scripts/compare_bench.py).
+
+The gate is the only thing standing between a hot-path perf regression
+and a green build, so its own semantics are pinned here: the >25%
+p50 threshold applies to hot-prefixed keys only, provisional/missing
+baselines record without gating, renamed hot sections fail loudly, and
+the REQUIRED_TRUE structural booleans are enforced whenever present.
+
+Run directly (CI does) or via any unittest runner:
+  python3 scripts/test_compare_bench.py
+"""
+
+import sys
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import compare_bench  # noqa: E402
+
+SHP = "BENCH_serving_hot_path.json"
+CONV = "BENCH_compressed_conv.json"
+COORD = "BENCH_coordinator.json"
+
+
+def run(bench, baseline, current, threshold=1.25):
+    return compare_bench.compare_one(bench, baseline, current, threshold)
+
+
+def results(**kv):
+    return {"results": {k: {"p50_ns": v} for k, v in kv.items()}}
+
+
+class HotPathGate(unittest.TestCase):
+    def test_regression_above_threshold_on_hot_key_fails(self):
+        base = results(**{"p90/hac": 100.0})
+        cur = results(**{"p90/hac": 130.0})  # 1.30x > 1.25x
+        regressions, _ = run(SHP, base, cur)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("REGRESSION", regressions[0])
+        self.assertIn("p90/hac", regressions[0])
+
+    def test_regression_at_threshold_passes(self):
+        base = results(**{"p90/hac": 100.0})
+        cur = results(**{"p90/hac": 125.0})  # exactly 1.25x: not > threshold
+        regressions, _ = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+
+    def test_informational_key_never_gates(self):
+        base = results(**{"reference/dense": 100.0})
+        cur = results(**{"reference/dense": 500.0})  # 5x, but not hot
+        regressions, notes = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("informational" in n for n in notes))
+
+    def test_improvement_is_silent(self):
+        base = results(**{"p90/hac": 100.0})
+        cur = results(**{"p90/hac": 60.0})
+        regressions, notes = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+        self.assertEqual(notes, [])
+
+    def test_every_hot_prefix_is_recognized(self):
+        # a typo in HOT_PREFIXES would silently un-gate a section
+        for bench, prefixes in compare_bench.HOT_PREFIXES.items():
+            for p in prefixes:
+                self.assertTrue(compare_bench.is_hot(bench, p + "x"),
+                                f"{bench}: {p} not recognized as hot")
+
+    def test_missing_hot_key_in_current_run_fails(self):
+        base = results(**{"closed/p50": 100.0})
+        cur = results(**{"closed/renamed": 100.0})
+        regressions, _ = run(COORD, base, cur)
+        self.assertTrue(any("missing from current run" in r for r in regressions))
+
+    def test_missing_informational_key_is_ignored(self):
+        base = results(**{"reference/dense": 100.0})
+        cur = results(**{"p90/hac": 100.0})
+        regressions, notes = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("no comparable baseline" in n for n in notes))
+
+
+class BaselineLifecycle(unittest.TestCase):
+    def test_no_baseline_records_without_gating(self):
+        cur = results(**{"p90/hac": 1e9})
+        regressions, notes = run(SHP, None, cur)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("no baseline committed" in n for n in notes))
+
+    def test_provisional_baseline_records_without_gating(self):
+        base = dict(results(**{"p90/hac": 1.0}), provisional=True)
+        cur = results(**{"p90/hac": 1e9})
+        regressions, notes = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("provisional" in n for n in notes))
+
+    def test_provisional_baseline_still_enforces_booleans(self):
+        base = dict(results(), provisional=True)
+        cur = dict(results(), sheds_on_overload=False)
+        regressions, _ = run(COORD, base, cur)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("sheds_on_overload", regressions[0])
+
+    def test_non_numeric_p50_is_recorded_not_compared(self):
+        base = results(**{"p90/hac": 100.0})
+        cur = {"results": {"p90/hac": {"p50_ns": None}}}
+        regressions, notes = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("no comparable baseline" in n for n in notes))
+
+    def test_zero_baseline_p50_never_divides(self):
+        base = results(**{"p90/hac": 0.0})
+        cur = results(**{"p90/hac": 100.0})
+        regressions, _ = run(SHP, base, cur)
+        self.assertEqual(regressions, [])
+
+
+class StructuralBooleans(unittest.TestCase):
+    def test_false_boolean_fails_even_with_good_numbers(self):
+        base = results(**{"vgg/im2col_hac": 100.0})
+        cur = dict(results(**{"vgg/im2col_hac": 100.0}),
+                   steady_state_alloc_free=False)
+        regressions, _ = run(CONV, base, cur)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("steady_state_alloc_free", regressions[0])
+
+    def test_truthy_non_true_fails(self):
+        # `1` would pass an `if current[field]:` check — the gate must
+        # demand the literal JSON true
+        cur = dict(results(), decode_once_per_layer=1)
+        regressions, _ = run(CONV, None, cur)
+        self.assertTrue(any("decode_once_per_layer" in r for r in regressions))
+
+    def test_absent_boolean_is_tolerated(self):
+        # older bench JSONs predate some booleans; absence must not fail
+        regressions, _ = run(CONV, None, results())
+        self.assertEqual(regressions, [])
+
+    def test_all_true_passes(self):
+        cur = dict(results(),
+                   steady_state_alloc_free=True,
+                   decode_once_per_layer=True,
+                   centroid_kernel_used=True)
+        regressions, _ = run(CONV, None, cur)
+        self.assertEqual(regressions, [])
+
+    def test_required_true_covers_all_benches(self):
+        # every gated bench declares its structural booleans — a bench
+        # added to BENCHES without a REQUIRED_TRUE entry is a policy hole
+        for bench in compare_bench.BENCHES:
+            self.assertIn(bench, compare_bench.REQUIRED_TRUE)
+            self.assertTrue(compare_bench.REQUIRED_TRUE[bench])
+            self.assertIn(bench, compare_bench.HOT_PREFIXES)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
