@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 4096,
         },
         fc_threads: 1,
+        cache_bytes: None,
     });
 
     // 1) dense baseline

@@ -1,0 +1,333 @@
+//! Bench: cold start on the mapped v2 `.sham` container vs the eager
+//! copying loader, plus the byte-budgeted multi-tenant residency cache.
+//!
+//! Measured sections:
+//!
+//! - `cold/open_v2`        — `load_sham_lazy`: skeleton validation only
+//!   (magic, section table, shapes, Kraft-checked code lengths); MUST
+//!   perform zero entropy-stream decode passes;
+//! - `cold/first_inference`— one inference on a freshly opened mapped
+//!   model: pays exactly the per-layer first-touch materializations;
+//! - `cold/warm_inference` — the same inference once resident (the
+//!   steady-state floor the lazy path converges to);
+//! - `cold/open_eager`     — the v1-style copying load that decodes
+//!   every stream up front (what cold start cost before the v2 layout);
+//! - `cache/…`             — N mapped variants behind a `ModelCache` at
+//!   budgets {unbounded, N/2-fit}, driven by a randomized access
+//!   sequence; the budgeted run asserts residency never exceeds the
+//!   budget after any access.
+//!
+//! Structural claims are written as JSON booleans and gated by
+//! `scripts/compare_bench.py`:
+//!
+//! - `mmap_used`: the container really is served by the mmap backend
+//!   (not the portable heap fallback);
+//! - `lazy_layers_validated_on_touch`: open decodes nothing, first
+//!   inference decodes every entropy layer (counted, not inferred) and
+//!   leaves the model fully resident;
+//! - `cache_budget_respected`: the budgeted LRU invariant held across
+//!   the whole randomized sequence.
+//!
+//! Results go to `BENCH_cold_start.json`; CI diffs against
+//! `benches/baselines/` via `scripts/compare_bench.py`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sham::coordinator::{infer_pure_once, Input, Metrics, ModelCache};
+use sham::formats::{decode_stats, FormatId};
+use sham::io::{Archive, Tensor};
+use sham::mat::Mat;
+use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::util::prng::Prng;
+use sham::util::stats::Summary;
+use sham::util::timer::{bench, black_box, fmt_bytes, fmt_ns};
+
+/// Shape-consistent synthetic VGG-like archive: 8×8×1 images → three
+/// 2×2 pools → 1×1×5 features → fc 5→6→6→4. Inline mirror of
+/// `tests/common::synthetic_vgg_archive` (benches cannot import the
+/// integration-test fixtures) — keep the dims in sync.
+fn synthetic_archive(rng: &mut Prng) -> Archive {
+    let mut a = Archive::new();
+    let conv_dims = [
+        ("c1a", 1usize, 3usize),
+        ("c1b", 3, 3),
+        ("c2a", 3, 4),
+        ("c2b", 4, 4),
+        ("c3a", 4, 5),
+    ];
+    for (name, cin, cout) in conv_dims {
+        let w = Mat::gaussian(3 * 3 * cin, cout, 0.25, rng);
+        a.insert(
+            format!("{name}.w"),
+            Tensor::from_f32(vec![3, 3, cin, cout], &w.data),
+        );
+        a.insert(
+            format!("{name}.b"),
+            Tensor::from_f32(vec![cout], &vec![0.05; cout]),
+        );
+    }
+    for (name, &(nin, nout)) in ModelKind::VggMnist
+        .fc_names()
+        .iter()
+        .zip([(5usize, 6usize), (6, 6), (6, 4)].iter())
+    {
+        let w = Mat::gaussian(nin, nout, 0.4, rng);
+        a.insert(format!("{name}.w"), Tensor::from_f32(vec![nin, nout], &w.data));
+        a.insert(
+            format!("{name}.b"),
+            Tensor::from_f32(vec![nout], &vec![0.01; nout]),
+        );
+    }
+    a
+}
+
+/// Entropy-heavy compression so lazy materialization is load-bearing:
+/// every FC matrix HAC, every lowered conv matrix sHAC.
+fn build_variant(seed: u64) -> CompressedModel {
+    let mut rng = Prng::seeded(seed);
+    let a = synthetic_archive(&mut rng);
+    let cfg = CompressionCfg {
+        fc_quant: Some((sham::quant::Kind::Cws, 8)),
+        conv_quant: Some((sham::quant::Kind::Cws, 8)),
+        fc_format: FcFormat::Fixed(FormatId::Hac),
+        conv_format: ConvFormat::Fixed(FormatId::Shac),
+        ..Default::default()
+    };
+    CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng)
+        .expect("synthetic build")
+}
+
+fn image_input(rng: &mut Prng) -> Input {
+    Input::Image((0..64).map(|_| rng.next_f32()).collect())
+}
+
+struct Row {
+    name: String,
+    summary: Summary,
+    decodes: Option<u64>,
+}
+
+/// CI smoke mode: fewer timing iterations. Only `SHAM_BENCH_QUICK=1`
+/// (or any non-empty value other than `0`) enables it.
+fn bench_iters() -> usize {
+    match std::env::var("SHAM_BENCH_QUICK") {
+        Ok(v) if !v.is_empty() && v != "0" => 3,
+        _ => 10,
+    }
+}
+
+fn count_decodes(mut f: impl FnMut()) -> u64 {
+    let mark = decode_stats::total();
+    f();
+    decode_stats::since(mark)
+}
+
+fn main() {
+    let n_variants = 4usize;
+    let mut rng = Prng::seeded(0xC01D);
+    println!("# cold_start — {n_variants} synthetic VGG variants, HAC fc + sHAC conv");
+
+    let dir = std::env::temp_dir().join("sham_bench_cold_start");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let paths: Vec<PathBuf> = (0..n_variants)
+        .map(|i| {
+            let m = build_variant(0xC01D_0000 + i as u64);
+            let p = dir.join(format!("variant{i}.sham"));
+            m.save_sham(&p).expect("save v2 container");
+            p
+        })
+        .collect();
+    let kind = ModelKind::VggMnist;
+    let mut rows: Vec<Row> = Vec::new();
+
+    // -- cold/open_v2: skeleton-validating mapped open, zero decodes --
+    let open_decodes = count_decodes(|| {
+        black_box(CompressedModel::load_sham_lazy(kind, &paths[0]).unwrap());
+    });
+    let s_open = bench(2, bench_iters(), || {
+        black_box(CompressedModel::load_sham_lazy(kind, black_box(&paths[0])).unwrap());
+    });
+    rows.push(Row {
+        name: "cold/open_v2".into(),
+        summary: s_open.clone(),
+        decodes: Some(open_decodes),
+    });
+
+    // backend + residency claims behind the JSON booleans
+    let probe = CompressedModel::load_sham_lazy(kind, &paths[0]).unwrap();
+    let mmap_used = probe.mapped_backend() == Some("mmap");
+    if !mmap_used {
+        eprintln!(
+            "mmap backend NOT used (got {:?}) — portable fallback or non-linux",
+            probe.mapped_backend()
+        );
+    }
+    let total_bytes = probe.total_weight_bytes();
+    let input = image_input(&mut rng);
+
+    // -- cold/first_inference: fresh open per iteration, time only the
+    //    inference (which pays every per-layer materialization) --
+    let first_decodes = {
+        let m = CompressedModel::load_sham_lazy(kind, &paths[0]).unwrap();
+        count_decodes(|| {
+            black_box(infer_pure_once(&m, input.clone()).unwrap());
+        })
+    };
+    let mut lazy_layers_validated_on_touch =
+        open_decodes == 0 && first_decodes > 0;
+    let mut first_samples = Vec::with_capacity(bench_iters());
+    for _ in 0..bench_iters() {
+        let m = CompressedModel::load_sham_lazy(kind, &paths[0]).unwrap();
+        let t = std::time::Instant::now();
+        black_box(infer_pure_once(&m, input.clone()).unwrap());
+        first_samples.push(t.elapsed().as_nanos() as f64);
+        if m.resident_weight_bytes() != m.total_weight_bytes() {
+            lazy_layers_validated_on_touch = false;
+            eprintln!("first inference left the model only partially resident");
+        }
+    }
+    let s_first = Summary::from(&first_samples);
+    rows.push(Row {
+        name: "cold/first_inference".into(),
+        summary: s_first.clone(),
+        decodes: Some(first_decodes),
+    });
+
+    // -- cold/warm_inference: the resident steady state --
+    let warm_model = CompressedModel::load_sham_lazy(kind, &paths[0]).unwrap();
+    let _ = infer_pure_once(&warm_model, input.clone()).unwrap();
+    let warm_decodes = count_decodes(|| {
+        black_box(infer_pure_once(&warm_model, input.clone()).unwrap());
+    });
+    let s_warm = bench(2, bench_iters(), || {
+        black_box(infer_pure_once(&warm_model, black_box(input.clone())).unwrap());
+    });
+    rows.push(Row {
+        name: "cold/warm_inference".into(),
+        summary: s_warm.clone(),
+        decodes: Some(warm_decodes),
+    });
+
+    // -- cold/open_eager: the copying loader decodes everything up front --
+    let eager_decodes = count_decodes(|| {
+        black_box(CompressedModel::load_sham(kind, &paths[0]).unwrap());
+    });
+    let s_eager = bench(2, bench_iters(), || {
+        black_box(CompressedModel::load_sham(kind, black_box(&paths[0])).unwrap());
+    });
+    rows.push(Row {
+        name: "cold/open_eager".into(),
+        summary: s_eager.clone(),
+        decodes: Some(eager_decodes),
+    });
+
+    println!("{:<26} {:>12} {:>12} {:>8}", "section", "median", "p95", "decodes");
+    for r in &rows {
+        println!(
+            "{:<26} {:>12} {:>12} {:>8}",
+            r.name,
+            fmt_ns(r.summary.p50),
+            fmt_ns(r.summary.p95),
+            r.decodes.unwrap_or(0),
+        );
+    }
+    println!(
+        "open_v2 is {:.2}x faster than open_eager; first inference pays \
+         {first_decodes} decode passes ({} resident)",
+        s_eager.p50 / s_open.p50.max(1.0),
+        fmt_bytes(total_bytes as f64),
+    );
+
+    // -- cache/…: N mapped variants behind the byte-budgeted LRU --
+    let mut cache_budget_respected = true;
+    // every variant has the same synthetic shape, so an "N/2 fit"
+    // budget is simply two variants' worth of decoded bytes
+    let half_budget = 2 * total_bytes;
+    for (label, budget) in [
+        ("cache/unbounded_sweep", None),
+        ("cache/budgeted_sweep", Some(half_budget)),
+    ] {
+        let models: Vec<Arc<CompressedModel>> = paths
+            .iter()
+            .map(|p| Arc::new(CompressedModel::load_sham_lazy(kind, p).unwrap()))
+            .collect();
+        let cache = ModelCache::new(budget, Arc::new(Metrics::new()));
+        for (i, m) in models.iter().enumerate() {
+            cache.register(&format!("v{i}"), m);
+        }
+        // randomized access sequence, fixed ahead of timing
+        let seq: Vec<usize> =
+            (0..8 * n_variants).map(|_| rng.gen_range(n_variants)).collect();
+        let mut hits = 0u64;
+        let s = bench(1, bench_iters(), || {
+            for &i in &seq {
+                // admission-time accounting (what `try_submit` does) …
+                if cache.note_access(&format!("v{i}")) {
+                    hits += 1;
+                }
+                // … then the batch the worker runs, materializing on
+                // first kernel touch
+                black_box(infer_pure_once(&models[i], input.clone()).unwrap());
+                if let Some(b) = budget {
+                    let resident: u64 =
+                        models.iter().map(|m| m.resident_weight_bytes()).sum();
+                    if resident > b {
+                        cache_budget_respected = false;
+                        eprintln!(
+                            "budget violated: {resident}B resident > {b}B budget"
+                        );
+                    }
+                }
+            }
+        });
+        let evictions: u64 = cache.stats().iter().map(|v| v.evictions).sum();
+        println!(
+            "{:<26} {:>12} {:>12}   hits={hits} evictions={evictions} budget={}",
+            label,
+            fmt_ns(s.p50),
+            fmt_ns(s.p95),
+            budget.map(|b| fmt_bytes(b as f64)).unwrap_or_else(|| "∞".into()),
+        );
+        rows.push(Row { name: label.into(), summary: s, decodes: None });
+    }
+    println!(
+        "lazy_layers_validated_on_touch={lazy_layers_validated_on_touch} \
+         mmap_used={mmap_used} cache_budget_respected={cache_budget_respected}"
+    );
+
+    // hand-rolled JSON (no serde in the offline registry)
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"cold_start\",\n");
+    json.push_str(&format!("  \"variants\": {n_variants},\n"));
+    json.push_str(&format!("  \"mmap_used\": {mmap_used},\n"));
+    json.push_str(&format!(
+        "  \"lazy_layers_validated_on_touch\": {lazy_layers_validated_on_touch},\n"
+    ));
+    json.push_str(&format!(
+        "  \"cache_budget_respected\": {cache_budget_respected},\n"
+    ));
+    json.push_str("  \"results\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let decodes = r
+            .decodes
+            .map(|d| d.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        json.push_str(&format!(
+            "    \"{}\": {{\"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_ns\": {:.0}, \"decodes\": {}}}{}\n",
+            r.name,
+            r.summary.p50,
+            r.summary.p95,
+            r.summary.mean,
+            decodes,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = "BENCH_cold_start.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -50,6 +50,7 @@ fn main() {
                 queue_cap: 2048,
             },
             fc_threads: 1,
+            cache_bytes: None,
         });
         server
             .add_variant("m", model, kind.features_hlo(&art, 32))

@@ -404,7 +404,7 @@ fn main() {
     );
 
     let mut rng = Prng::seeded(0xC0FFEE);
-    let mut server = Server::new(ServerConfig { policy: Policy::default(), fc_threads: 1 });
+    let mut server = Server::new(ServerConfig { policy: Policy::default(), fc_threads: 1, cache_bytes: None });
     let main_policy = Policy {
         max_batch: 32,
         max_wait: Duration::from_millis(2),

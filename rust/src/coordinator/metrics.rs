@@ -152,6 +152,17 @@ pub struct Metrics {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub queue_depth_peak: AtomicU64,
+    /// Model-cache accesses that found the variant's decoded weights
+    /// resident (or the variant unmanaged/eager — always warm).
+    pub cache_hits_total: AtomicU64,
+    /// Accesses that will pay first-touch materialization.
+    pub cache_misses_total: AtomicU64,
+    /// Lazy variants whose decoded residency was dropped to fit the
+    /// byte budget (the mapping always stays).
+    pub cache_evictions_total: AtomicU64,
+    /// Decoded weight bytes resident across cache-managed variants
+    /// (gauge, accounting bytes — see `LazyMatrix::resident_bytes`).
+    pub cache_resident_bytes: AtomicU64,
     /// Per-request end-to-end latency in ns.
     latency: LogHistogram,
     /// Dispatched batch sizes.
@@ -237,6 +248,17 @@ impl Metrics {
              queue={qd} (peak {qpk})",
             self.mean_batch_size()
         );
+        let (hits, misses, evict) = (
+            self.cache_hits_total.load(Ordering::Relaxed),
+            self.cache_misses_total.load(Ordering::Relaxed),
+            self.cache_evictions_total.load(Ordering::Relaxed),
+        );
+        if hits + misses + evict > 0 {
+            s.push_str(&format!(
+                " cache[hits={hits} misses={misses} evictions={evict} resident={}B]",
+                self.cache_resident_bytes.load(Ordering::Relaxed)
+            ));
+        }
         if let Some(lat) = self.latency_summary() {
             s.push_str(&format!(
                 " latency[p50={} p95={} p99={} p999={} max={}]",
@@ -357,5 +379,18 @@ mod tests {
         assert!(m.latency_summary().is_none());
         assert_eq!(m.mean_batch_size(), 0.0);
         assert!(m.render().contains("requests=0"));
+        // the cache section only appears once the cache saw traffic
+        assert!(!m.render().contains("cache["));
+    }
+
+    #[test]
+    fn cache_counters_render_when_active() {
+        let m = Metrics::new();
+        m.cache_hits_total.fetch_add(5, Ordering::Relaxed);
+        m.cache_misses_total.fetch_add(2, Ordering::Relaxed);
+        m.cache_evictions_total.fetch_add(1, Ordering::Relaxed);
+        m.cache_resident_bytes.store(4096, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("cache[hits=5 misses=2 evictions=1 resident=4096B]"));
     }
 }

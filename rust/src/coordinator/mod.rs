@@ -16,4 +16,7 @@ pub mod tcp;
 pub use batcher::{Input, Policy, Responder};
 pub use metrics::{HistSummary, LogHistogram, Metrics};
 pub use reactor::ReactorConfig;
-pub use server::{Server, ServerConfig, SubmitOutcome, VariantOpts};
+pub use server::{
+    infer_pure_once, CacheVariantStat, ModelCache, Server, ServerConfig, SubmitOutcome,
+    VariantOpts,
+};

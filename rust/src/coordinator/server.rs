@@ -17,7 +17,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -49,11 +49,203 @@ pub struct ServerConfig {
     /// Parallelism used inside each worker for the compressed FC matmul
     /// (chunks dispatched onto the shared persistent `formats::pool`).
     pub fc_threads: usize,
+    /// Byte budget for decoded weight residency across the lazily
+    /// opened (mapped) variants — the `--cache-mib` knob. `None` means
+    /// unbounded: variants stay resident once touched. Eager variants
+    /// are unmanaged (their weights are always decoded) and never count
+    /// against the budget.
+    pub cache_bytes: Option<u64>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { policy: Policy::default(), fc_threads: 1 }
+        ServerConfig { policy: Policy::default(), fc_threads: 1, cache_bytes: None }
+    }
+}
+
+/// Point-in-time cache view of one registered variant, for `sham s8`
+/// and `serve --status-secs` reporting.
+#[derive(Debug, Clone)]
+pub struct CacheVariantStat {
+    pub name: String,
+    /// `"mmap"` / `"heap"` for lazily opened (cache-managed) variants,
+    /// `"eager"` for heap-loaded ones.
+    pub backend: &'static str,
+    /// Decoded weight bytes currently resident (accounting bytes).
+    pub resident_bytes: u64,
+    /// Bytes the variant charges when fully resident.
+    pub total_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct CacheEntry {
+    name: String,
+    model: Arc<CompressedModel>,
+    /// Monotonic access tick — the LRU order without a separate list.
+    last_access: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+struct CacheInner {
+    entries: Vec<CacheEntry>,
+    tick: u64,
+}
+
+/// Byte-budgeted LRU over the *residency* of lazily opened variants
+/// (DESIGN.md §11). The cache never owns models and never drops a
+/// mapping — it only decides which mapped variants keep their decoded
+/// scratch:
+///
+/// - an access to a variant whose weights are resident (or which is
+///   eager/unmanaged) is a **hit**;
+/// - an access to a cold mapped variant is a **miss** — it is charged
+///   at its full weight bytes up front (it materializes during the
+///   following batch), and least-recently-used resident variants are
+///   evicted until the charge fits the budget;
+/// - **eviction** calls `CompressedModel::evict_residency`, dropping
+///   decoded scratch while in-flight batches finish safely on their own
+///   `Arc`s; the next touch re-materializes from the mapping.
+///
+/// With every variant individually within budget, the charged total
+/// never exceeds the budget (pinned by tests under randomized access).
+/// A single variant larger than the whole budget still serves —
+/// correctness over thrash — and is dropped again at the next
+/// enforcement pass.
+pub struct ModelCache {
+    budget: Option<u64>,
+    metrics: Arc<Metrics>,
+    inner: Mutex<CacheInner>,
+}
+
+impl ModelCache {
+    pub fn new(budget: Option<u64>, metrics: Arc<Metrics>) -> ModelCache {
+        ModelCache {
+            budget,
+            metrics,
+            inner: Mutex::new(CacheInner { entries: Vec::new(), tick: 0 }),
+        }
+    }
+
+    /// Track a variant. Eager models are registered too (they show up
+    /// in stats and count hits) but are never budgeted or evicted.
+    pub fn register(&self, name: &str, model: &Arc<CompressedModel>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.push(CacheEntry {
+            name: name.to_string(),
+            model: Arc::clone(model),
+            last_access: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        });
+    }
+
+    /// Record an access to `name`, bump its recency, and enforce the
+    /// byte budget. Returns whether the access was a hit (decoded
+    /// weights already resident / variant unmanaged); unknown names
+    /// return true and change nothing.
+    pub fn note_access(&self, name: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        inner.tick += 1;
+        let tick = inner.tick;
+        let Some(i) = inner.entries.iter().position(|e| e.name == name) else {
+            return true;
+        };
+        let warm = {
+            let e = &mut inner.entries[i];
+            e.last_access = tick;
+            let warm =
+                !e.model.is_mapped() || e.model.resident_weight_bytes() > 0;
+            if warm {
+                e.hits += 1;
+            } else {
+                e.misses += 1;
+            }
+            warm
+        };
+        if warm {
+            self.metrics.cache_hits_total.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.cache_misses_total.fetch_add(1, Ordering::Relaxed);
+        }
+        self.enforce_budget(inner, i);
+        let resident: u64 = inner
+            .entries
+            .iter()
+            .map(|e| e.model.resident_weight_bytes())
+            .sum();
+        self.metrics.cache_resident_bytes.store(resident, Ordering::Relaxed);
+        warm
+    }
+
+    /// Evict least-recently-used resident mapped variants until the
+    /// charged total fits the budget. The just-accessed variant is
+    /// charged at its full weight (it is about to materialize), every
+    /// other mapped variant at its current residency.
+    fn enforce_budget(&self, inner: &mut CacheInner, accessed: usize) {
+        let Some(budget) = self.budget else { return };
+        loop {
+            let mut total = 0u64;
+            let mut victim: Option<usize> = None;
+            for (i, e) in inner.entries.iter().enumerate() {
+                if !e.model.is_mapped() {
+                    continue;
+                }
+                let bytes = if i == accessed {
+                    e.model.total_weight_bytes()
+                } else {
+                    e.model.resident_weight_bytes()
+                };
+                total += bytes;
+                if i != accessed
+                    && bytes > 0
+                    && victim
+                        .map(|v| inner.entries[v].last_access > e.last_access)
+                        .unwrap_or(true)
+                {
+                    victim = Some(i);
+                }
+            }
+            if total <= budget {
+                return;
+            }
+            let v = victim.unwrap_or(accessed);
+            let freed = inner.entries[v].model.evict_residency();
+            if freed > 0 {
+                inner.entries[v].evictions += 1;
+                self.metrics.cache_evictions_total.fetch_add(1, Ordering::Relaxed);
+            }
+            if v == accessed {
+                // no other victim and the accessed variant alone busts
+                // the budget: nothing more the cache can free
+                return;
+            }
+        }
+    }
+
+    /// Snapshot per-variant cache state, sorted by name.
+    pub fn stats(&self) -> Vec<CacheVariantStat> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<CacheVariantStat> = inner
+            .entries
+            .iter()
+            .map(|e| CacheVariantStat {
+                name: e.name.clone(),
+                backend: e.model.mapped_backend().unwrap_or("eager"),
+                resident_bytes: e.model.resident_weight_bytes(),
+                total_bytes: e.model.total_weight_bytes(),
+                hits: e.hits,
+                misses: e.misses,
+                evictions: e.evictions,
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
     }
 }
 
@@ -94,6 +286,7 @@ struct VariantHandle {
 pub struct Server {
     variants: HashMap<String, VariantHandle>,
     pub metrics: Arc<Metrics>,
+    cache: ModelCache,
     cfg: ServerConfig,
 }
 
@@ -107,7 +300,9 @@ impl Server {
         if cfg.fc_threads > 1 {
             let _ = pool::configure_threads(cfg.fc_threads);
         }
-        Server { variants: HashMap::new(), metrics: Arc::new(Metrics::new()), cfg }
+        let metrics = Arc::new(Metrics::new());
+        let cache = ModelCache::new(cfg.cache_bytes, metrics.clone());
+        Server { variants: HashMap::new(), metrics, cache, cfg }
     }
 
     /// Register a model variant: the compressed model plus the HLO path
@@ -171,6 +366,7 @@ impl Server {
         let policy = opts.policy.unwrap_or(self.cfg.policy);
         let fc_threads = self.cfg.fc_threads;
         let model = Arc::new(model);
+        self.cache.register(name, &model);
         let mut queues = Vec::with_capacity(opts.replicas);
         let mut workers = Vec::with_capacity(opts.replicas);
         for r in 0..opts.replicas {
@@ -215,6 +411,10 @@ impl Server {
             Some(v) => v,
             None => return SubmitOutcome::UnknownVariant(resp),
         };
+        // recency + hit/miss accounting + budget enforcement happen at
+        // admission; the miss's materialization is paid inside the
+        // worker's next batch (first kernel touch)
+        self.cache.note_access(variant);
         let n = v.queues.len();
         let start = v.rr.fetch_add(1, Ordering::Relaxed);
         let mut req =
@@ -266,6 +466,33 @@ impl Server {
     pub fn replica_count(&self, variant: &str) -> usize {
         self.variants.get(variant).map(|v| v.queues.len()).unwrap_or(0)
     }
+
+    /// Per-variant cache view (resident bytes, backend, hit/evict
+    /// counts) for the status thread and `sham s8`.
+    pub fn cache_stats(&self) -> Vec<CacheVariantStat> {
+        self.cache.stats()
+    }
+}
+
+/// One-shot pure inference without a server: marshal a single request
+/// through the same `run_batch_pure` path the workers execute. Used by
+/// the `sham s8` cold-start report and the cold-start bench to trigger
+/// (and time) first-touch materialization deterministically on the
+/// calling thread.
+pub fn infer_pure_once(model: &CompressedModel, input: Input) -> Result<Vec<f32>> {
+    let mut scratch = PureScratch {
+        ws: Workspace::new(),
+        imgs: Vec::new(),
+        lig: Vec::new(),
+        prot: Vec::new(),
+    };
+    let req = Request {
+        input,
+        resp: Responder::Callback(Box::new(|_| {})),
+        enqueued: std::time::Instant::now(),
+    };
+    let out = run_batch_pure(model, std::slice::from_ref(&req), 1, &mut scratch)?;
+    Ok(out.row(0).to_vec())
 }
 
 impl Drop for Server {

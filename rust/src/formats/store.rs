@@ -4,7 +4,9 @@
 //! matrices (bitstreams + canonical code lengths + dictionaries),
 //! biases, and the remaining dense tensors of a model.
 //!
-//! Layout (little-endian):
+//! Two container revisions coexist (DESIGN.md §11):
+//!
+//! **v1** (little-endian, the original copying format):
 //!   magic  b"SHAM1\0"
 //!   u32    entry count
 //!   per entry:
@@ -14,6 +16,29 @@
 //!         containers load)
 //!     payload (kind-specific, see the `encode_entry` match)
 //!
+//! **v2** (what [`save`] writes): a section table up front so the file
+//! is `mmap`-able in place —
+//!   magic  b"SHAM2\0\0\0"                      (8 bytes)
+//!   u64    entry count n
+//!   n × 64-byte records, 8 u64s each:
+//!     [name_off, name_len, tag, payload_off, payload_len,
+//!      rows, cols, size_bits]
+//!   packed name bytes, zero-pad to 8
+//!   payloads (each starting at an 8-aligned offset; same per-kind
+//!   encoding as v1 except bit streams carry a 0–7 byte pad so their
+//!   `u64` word arrays land at 8-aligned *file* offsets)
+//!
+//! [`MappedArchive::open`] maps a v2 file and validates only the
+//! *skeleton* — magic, table bounds, shapes, declared lengths, stream
+//! alignment, Kraft-checked code lengths — performing zero entropy
+//! decodes and zero payload copies; [`MappedArchive::materialize`] does
+//! the full per-section decode on first touch, borrowing stream words
+//! zero-copy from the mapping where the alignment contract holds
+//! ([`crate::io::mmap::Mapping::words`]) and copying otherwise.
+//! [`LazyMatrix`] packages that first-touch materialization behind the
+//! [`CompressedMatrix`] trait. v1 containers still load through the
+//! copying path; [`save_v1`] keeps writing them for compatibility.
+//!
 //! Every [`FormatId`] round-trips: the payload stores each format's own
 //! compressed layout verbatim (no recompression on load). Canonical
 //! Huffman codes are rebuilt from code lengths alone, so a k-symbol
@@ -21,6 +46,7 @@
 //! far below the paper's conservative 6·k·b accounting. See DESIGN.md §5.
 
 use std::io::Write;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -30,10 +56,12 @@ use crate::formats::{
     RelIdx, Shac,
 };
 use crate::huffman::Code;
+use crate::io::mmap::Mapping;
 use crate::mat::Mat;
 use crate::util::bits::{BitBuf, BitReader};
 
 pub const MAGIC: &[u8; 6] = b"SHAM1\x00";
+pub const MAGIC2: &[u8; 8] = b"SHAM2\x00\x00\x00";
 
 /// A format instance inside a `.sham` container — one variant per
 /// [`FormatId`] registry entry.
@@ -123,10 +151,30 @@ fn w_u16s(out: &mut Vec<u8>, vs: &[u16]) {
     }
 }
 
+/// v1 stream encoding: header + words, no alignment.
 fn w_bitbuf(out: &mut Vec<u8>, b: &BitBuf) {
-    w_u64(out, b.bitlen as u64);
-    w_u32(out, b.words.len() as u32);
-    for w in &b.words {
+    w_u64(out, b.len() as u64);
+    let words = b.words();
+    w_u32(out, words.len() as u32);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// v2 stream encoding: header, then a self-describing 0–7 byte pad so
+/// the word array starts at an 8-aligned offset of `out`. v2 payloads
+/// are encoded directly into the whole-file buffer, so `out.len()` IS
+/// the absolute file offset — this is what makes the words mappable as
+/// `&[u64]` in place (the alignment contract of DESIGN.md §11).
+fn w_bitbuf_aligned(out: &mut Vec<u8>, b: &BitBuf) {
+    w_u64(out, b.len() as u64);
+    let words = b.words();
+    w_u32(out, words.len() as u32);
+    let pad = (8 - ((out.len() + 1) % 8)) % 8; // +1: the pad-count byte
+    out.push(pad as u8);
+    out.extend(std::iter::repeat(0u8).take(pad));
+    debug_assert_eq!(out.len() % 8, 0);
+    for w in words {
         out.extend_from_slice(&w.to_le_bytes());
     }
 }
@@ -134,9 +182,17 @@ fn w_bitbuf(out: &mut Vec<u8>, b: &BitBuf) {
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// `Some` iff this is a v2 payload: bit streams carry the alignment
+    /// pad and may be borrowed zero-copy from the backing mapping (the
+    /// heap backend declines and the stream is copied instead).
+    map: Option<&'a Arc<Mapping>>,
 }
 
 impl<'a> Reader<'a> {
+    fn v1(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0, map: None }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("truncated container at offset {}", self.pos);
@@ -189,25 +245,68 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
-    fn bitbuf(&mut self) -> Result<BitBuf> {
+    /// Bounds-check and skip a length-prefixed array of `elem`-byte
+    /// items WITHOUT allocating (skeleton validation rejects oversized
+    /// declared lengths before any buffer is sized). Returns the count.
+    fn skip_arr(&mut self, elem: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        self.take(n.checked_mul(elem).context("array length overflow")?)?;
+        Ok(n)
+    }
+
+    /// Parse the common stream header shared by [`Self::bitbuf`] and
+    /// [`Self::skip_stream`]: `(bitlen, n_words)`, plus (v2 only) the
+    /// pad walk leaving the cursor 8-aligned on the first word.
+    fn stream_header(&mut self) -> Result<(usize, usize)> {
         let bitlen = self.u64()? as usize;
         let n = self.u32()? as usize;
-        if bitlen > n * 64 {
+        if bitlen > n.saturating_mul(64) {
             bail!("bitlen exceeds word storage");
         }
-        let raw = self.take(n * 8)?;
+        if self.map.is_some() {
+            let pad = self.u8()? as usize;
+            if pad > 7 {
+                bail!("bad stream padding {pad}");
+            }
+            self.take(pad)?;
+            if self.pos % 8 != 0 {
+                bail!("stream words misaligned at offset {}", self.pos);
+            }
+        }
+        Ok((bitlen, n))
+    }
+
+    /// Bounds- and alignment-check a stream without materializing it.
+    fn skip_stream(&mut self) -> Result<()> {
+        let (_bitlen, n) = self.stream_header()?;
+        self.take(n.checked_mul(8).context("stream length overflow")?)?;
+        Ok(())
+    }
+
+    fn bitbuf(&mut self) -> Result<BitBuf> {
+        let (bitlen, n) = self.stream_header()?;
+        let off = self.pos;
+        let raw = self.take(n.checked_mul(8).context("stream length overflow")?)?;
+        if let Some(map) = self.map {
+            // zero-copy view where the mapping can serve one (mmap
+            // backend, little-endian host); the heap fallback copies
+            if let Some(buf) = BitBuf::from_mapped(map, off, n, bitlen) {
+                return Ok(buf);
+            }
+        }
         let words = raw
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        Ok(BitBuf { words, bitlen })
+        Ok(BitBuf::from_owned(words, bitlen))
     }
 }
 
 // ---- per-kind encoders ----------------------------------------------------
 
-fn encode_entry(out: &mut Vec<u8>, s: &Stored) {
+fn encode_entry(out: &mut Vec<u8>, s: &Stored, aligned: bool) {
     let c = s.as_compressed();
+    let stream = if aligned { w_bitbuf_aligned } else { w_bitbuf };
     w_u32(out, c.rows() as u32);
     w_u32(out, c.cols() as u32);
     match s {
@@ -267,18 +366,18 @@ fn encode_entry(out: &mut Vec<u8>, s: &Stored) {
         Stored::Hac(f) => {
             w_f32s(out, &f.alphabet);
             w_u32s(out, f.code_lengths());
-            w_bitbuf(out, f.stream_ref());
+            stream(out, f.stream_ref());
         }
         Stored::Shac(f) => {
             w_f32s(out, &f.alphabet);
             w_u32s(out, f.code_lengths());
-            w_bitbuf(out, f.stream_ref());
+            stream(out, f.stream_ref());
             w_u32s(out, &f.ri);
             w_u32s(out, &f.cb);
         }
         Stored::LzAc(f) => {
             w_f32s(out, &f.alphabet);
-            w_bitbuf(out, f.stream_ref());
+            stream(out, f.stream_ref());
             w_u32s(out, &f.ri);
             w_u32s(out, &f.cb);
         }
@@ -385,6 +484,32 @@ fn decode_cla_column(r: &mut Reader, rows: usize) -> Result<ColEnc> {
         }
         t => bail!("unknown cla column encoding {t}"),
     }
+}
+
+/// Skeleton walk of one CLA column — bounds-check every declared
+/// length, allocate nothing.
+fn skip_cla_column(r: &mut Reader) -> Result<()> {
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            r.take(n.checked_mul(8).context("cla rle length overflow")?)?;
+        }
+        1 => {
+            let n = r.skip_arr(4)?;
+            for _ in 0..n {
+                r.skip_arr(4)?;
+            }
+        }
+        2 => {
+            r.skip_arr(4)?;
+            r.skip_arr(2)?;
+        }
+        3 => {
+            r.skip_arr(4)?;
+        }
+        t => bail!("unknown cla column encoding {t}"),
+    }
+    Ok(())
 }
 
 fn decode_entry(r: &mut Reader, tag: u8) -> Result<Stored> {
@@ -523,6 +648,395 @@ fn decode_entry(r: &mut Reader, tag: u8) -> Result<Stored> {
     }
 }
 
+/// Skeleton validation of one v2 payload: every declared length is
+/// bounds-checked against the mapping BEFORE anything is allocated,
+/// stream word arrays are checked 8-aligned, and canonical code lengths
+/// are Kraft-validated via `try_from_lengths` — but no entropy stream
+/// is walked and no payload array is copied. The deferred work (stream
+/// walks, index-range checks, the actual copies) happens at
+/// [`MappedArchive::materialize`], which runs the full [`decode_entry`]
+/// over the same bytes.
+fn skeleton_entry(r: &mut Reader, tag: u8, rows: usize, cols: usize) -> Result<()> {
+    let Some(id) = FormatId::from_tag(tag) else {
+        bail!("unknown entry kind {tag}");
+    };
+    match id {
+        FormatId::Dense => {
+            if r.skip_arr(4)? != rows * cols {
+                bail!("dense payload size mismatch");
+            }
+        }
+        FormatId::Csc | FormatId::Csr | FormatId::Coo => {
+            r.skip_arr(4)?;
+            r.skip_arr(4)?;
+            r.skip_arr(4)?;
+        }
+        FormatId::IndexMap => {
+            r.skip_arr(4)?;
+            r.skip_arr(2)?;
+        }
+        FormatId::Cla => {
+            for _ in 0..cols {
+                skip_cla_column(r)?;
+            }
+        }
+        FormatId::Hac | FormatId::Shac => {
+            let n_alpha = r.skip_arr(4)?;
+            let lengths = r.u32s()?;
+            if lengths.len() != n_alpha {
+                bail!("dictionary mismatch");
+            }
+            if Code::try_from_lengths(lengths).is_none() {
+                bail!("invalid code lengths");
+            }
+            r.skip_stream()?;
+            if id == FormatId::Shac {
+                r.skip_arr(4)?;
+                r.skip_arr(4)?;
+            }
+        }
+        FormatId::LzAc => {
+            r.skip_arr(4)?;
+            r.skip_stream()?;
+            r.skip_arr(4)?;
+            r.skip_arr(4)?;
+        }
+        FormatId::RelIdx => {
+            r.skip_arr(4)?;
+            let n = r.u32()? as usize;
+            r.take(n.checked_mul(8).context("dcri length overflow")?)?;
+            r.skip_arr(4)?;
+        }
+    }
+    Ok(())
+}
+
+// ---- v2 mapped archives ---------------------------------------------------
+
+/// One record of a v2 section table — everything a caller can know
+/// about a section without materializing it: identity, shape, and the
+/// paper-accounting size, straight from the 64-byte table entry.
+#[derive(Debug, Clone)]
+pub struct MappedEntry {
+    pub name: String,
+    pub tag: u8,
+    pub rows: usize,
+    pub cols: usize,
+    /// `size_bits()` of the stored format at save time.
+    pub size_bits: u64,
+    payload_off: usize,
+    payload_len: usize,
+}
+
+impl MappedEntry {
+    pub fn id(&self) -> FormatId {
+        FormatId::from_tag(self.tag).expect("tag validated at open")
+    }
+
+    /// On-disk payload footprint of this section.
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_len
+    }
+}
+
+/// A skeleton-validated view of a mapped v2 `.sham` container:
+/// [`open`](Self::open) costs table parsing + per-section bounds/Kraft
+/// checks (zero entropy decodes, zero payload copies — asserted via
+/// `formats::decode_stats` in the store tests), and each section decodes
+/// independently on demand via [`materialize`](Self::materialize).
+pub struct MappedArchive {
+    map: Arc<Mapping>,
+    entries: Vec<MappedEntry>,
+}
+
+impl MappedArchive {
+    /// Map and skeleton-validate a v2 container. Fails on v1 files
+    /// (callers that want transparent compat use [`load`] or
+    /// `CompressedModel::load_sham_lazy`, which sniff the magic).
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<MappedArchive> {
+        let map = Mapping::open(path.as_ref())
+            .with_context(|| format!("map {}", path.as_ref().display()))?;
+        MappedArchive::from_mapping(Arc::new(map))
+    }
+
+    fn from_mapping(map: Arc<Mapping>) -> Result<MappedArchive> {
+        let buf = map.bytes();
+        if buf.len() < 16 || &buf[..8] != MAGIC2 {
+            bail!("not a v2 .sham container");
+        }
+        let count = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        // the declared table must fit the file BEFORE sizing anything
+        // from it — an oversized count dies here, not in with_capacity
+        let table_end = count
+            .checked_mul(64)
+            .and_then(|t| t.checked_add(16))
+            .filter(|&end| end <= buf.len() as u64)
+            .ok_or_else(|| {
+                anyhow::anyhow!("section table overruns container ({count} entries)")
+            })? as usize;
+        let count = count as usize;
+        let mut entries = Vec::with_capacity(count);
+        for i in 0..count {
+            let rec = &buf[16 + i * 64..16 + (i + 1) * 64];
+            let field =
+                |k: usize| u64::from_le_bytes(rec[k * 8..(k + 1) * 8].try_into().unwrap());
+            let (name_off, name_len) = (field(0), field(1));
+            let name_end = name_off
+                .checked_add(name_len)
+                .filter(|&e| name_off >= table_end as u64 && e <= buf.len() as u64)
+                .ok_or_else(|| anyhow::anyhow!("section {i}: name out of bounds"))?;
+            let name =
+                std::str::from_utf8(&buf[name_off as usize..name_end as usize])
+                    .with_context(|| format!("section {i}: name not utf-8"))?
+                    .to_string();
+            let tag = field(2);
+            if tag > u8::MAX as u64 || FormatId::from_tag(tag as u8).is_none() {
+                bail!("section `{name}`: unknown entry kind {tag}");
+            }
+            let (payload_off, payload_len) = (field(3), field(4));
+            if payload_off % 8 != 0 {
+                bail!("section `{name}`: misaligned payload offset {payload_off}");
+            }
+            payload_off
+                .checked_add(payload_len)
+                .filter(|&e| e <= buf.len() as u64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("section `{name}`: payload out of bounds")
+                })?;
+            let (rows, cols) = (field(5), field(6));
+            if rows > u32::MAX as u64 || cols > u32::MAX as u64 {
+                bail!("section `{name}`: implausible shape {rows}x{cols}");
+            }
+            entries.push(MappedEntry {
+                name,
+                tag: tag as u8,
+                rows: rows as usize,
+                cols: cols as usize,
+                size_bits: field(7),
+                payload_off: payload_off as usize,
+                payload_len: payload_len as usize,
+            });
+        }
+        let ar = MappedArchive { map, entries };
+        for i in 0..ar.entries.len() {
+            ar.skeleton_check(i)?;
+        }
+        Ok(ar)
+    }
+
+    fn skeleton_check(&self, idx: usize) -> Result<()> {
+        let e = &self.entries[idx];
+        let mut r = Reader {
+            buf: self.map.bytes(),
+            pos: e.payload_off,
+            map: Some(&self.map),
+        };
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        if rows != e.rows || cols != e.cols {
+            bail!("section `{}`: table/payload shape mismatch", e.name);
+        }
+        skeleton_entry(&mut r, e.tag, rows, cols)
+            .with_context(|| format!("section `{}`", e.name))?;
+        if r.pos != e.payload_off + e.payload_len {
+            bail!(
+                "section `{}`: declared {} payload bytes, skeleton consumed {}",
+                e.name,
+                e.payload_len,
+                r.pos - e.payload_off
+            );
+        }
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[MappedEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// `"mmap"` when sections can be borrowed zero-copy, `"heap"` for
+    /// the portable fallback (still lazy, but streams are copied).
+    pub fn backend_name(&self) -> &'static str {
+        self.map.backend_name()
+    }
+
+    /// Total mapped file size in bytes.
+    pub fn mapped_bytes(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Fully decode one section — the deferred first-touch cost: stream
+    /// walks (`check_huffman` / `validate_stream`), index-range checks,
+    /// and the array copies the skeleton pass skipped. Bit streams
+    /// borrow the mapping zero-copy where the alignment contract holds.
+    pub fn materialize(&self, idx: usize) -> Result<Stored> {
+        let e = &self.entries[idx];
+        let mut r = Reader {
+            buf: self.map.bytes(),
+            pos: e.payload_off,
+            map: Some(&self.map),
+        };
+        let s = decode_entry(&mut r, e.tag)
+            .with_context(|| format!("section `{}`", e.name))?;
+        if r.pos != e.payload_off + e.payload_len {
+            bail!("section `{}`: payload length mismatch", e.name);
+        }
+        Ok(s)
+    }
+}
+
+impl std::fmt::Debug for MappedArchive {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedArchive")
+            .field("backend", &self.backend_name())
+            .field("sections", &self.entries.len())
+            .field("bytes", &self.map.len())
+            .finish()
+    }
+}
+
+// ---- lazy first-touch materialization -------------------------------------
+
+struct LazyInner {
+    archive: Arc<MappedArchive>,
+    idx: usize,
+    /// The decoded representation, populated on first touch. Eviction
+    /// (`ModelCache`) drops this Option — never the mapping — so a
+    /// re-touch re-materializes from the same validated bytes;
+    /// in-flight users keep their own `Arc` until their batch finishes.
+    resident: Mutex<Option<Arc<dyn CompressedMatrix>>>,
+}
+
+/// A [`CompressedMatrix`] that decodes on first touch. Shape, format id
+/// and `size_bits` come straight from the section table, so registering
+/// a variant, checking model geometry, or computing ψ performs zero
+/// decodes; the first kernel call (`vecmat_into` / `matmul_batch_slice`
+/// / `decode_once_into` / `decompress`) materializes the section and
+/// caches it until [`evict`](Self::evict). Clones share the same
+/// residency slot (the model keeps one clone per layer for cache
+/// bookkeeping).
+#[derive(Clone)]
+pub struct LazyMatrix {
+    inner: Arc<LazyInner>,
+}
+
+impl LazyMatrix {
+    pub fn new(archive: Arc<MappedArchive>, idx: usize) -> LazyMatrix {
+        assert!(idx < archive.len(), "lazy section index out of range");
+        LazyMatrix {
+            inner: Arc::new(LazyInner { archive, idx, resident: Mutex::new(None) }),
+        }
+    }
+
+    fn entry(&self) -> &MappedEntry {
+        &self.inner.archive.entries()[self.inner.idx]
+    }
+
+    /// The materialized section, decoding it now if cold. Panics on a
+    /// decode failure: the skeleton was validated at open, so failing
+    /// here means the file mutated under its mapping — not a state the
+    /// serving path can limp through.
+    fn resident(&self) -> Arc<dyn CompressedMatrix> {
+        let mut slot = self.inner.resident.lock().unwrap();
+        if let Some(m) = slot.as_ref() {
+            return Arc::clone(m);
+        }
+        let stored = self
+            .inner
+            .archive
+            .materialize(self.inner.idx)
+            .unwrap_or_else(|e| {
+                panic!("materializing section `{}`: {e:#}", self.entry().name)
+            });
+        let m: Arc<dyn CompressedMatrix> = Arc::from(stored.into_compressed());
+        *slot = Some(Arc::clone(&m));
+        m
+    }
+
+    pub fn is_resident(&self) -> bool {
+        self.inner.resident.lock().unwrap().is_some()
+    }
+
+    /// Residency charge while materialized, else 0. Charged at the
+    /// paper-accounting footprint (`size_bits/8`) — a deterministic
+    /// proxy for the decoded heap cost that the byte-budgeted cache and
+    /// its tests can rely on exactly.
+    pub fn resident_bytes(&self) -> u64 {
+        if self.is_resident() {
+            self.entry().size_bits.div_ceil(8)
+        } else {
+            0
+        }
+    }
+
+    /// Drop the decoded representation (keeping the mapping — the next
+    /// touch re-materializes). Returns the bytes freed. In-flight
+    /// batches holding the old `Arc` finish safely on it.
+    pub fn evict(&self) -> u64 {
+        let freed = self.resident_bytes();
+        *self.inner.resident.lock().unwrap() = None;
+        freed
+    }
+}
+
+impl CompressedMatrix for LazyMatrix {
+    fn id(&self) -> FormatId {
+        self.entry().id()
+    }
+
+    fn rows(&self) -> usize {
+        self.entry().rows
+    }
+
+    fn cols(&self) -> usize {
+        self.entry().cols
+    }
+
+    fn size_bits(&self) -> u64 {
+        self.entry().size_bits
+    }
+
+    fn vecmat_into(&self, x: &[f32], out: &mut [f32]) {
+        self.resident().vecmat_into(x, out);
+    }
+
+    fn decompress(&self) -> Mat {
+        self.resident().decompress()
+    }
+
+    // the two dispatch-critical provided methods MUST forward, or a
+    // lazy layer would silently lose the decode-once batched kernels
+    fn matmul_batch_slice(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        self.resident().matmul_batch_slice(x, batch, out);
+    }
+
+    fn decode_once_into(&self, dec: &mut crate::formats::DecodedWeights) -> bool {
+        self.resident().decode_once_into(dec)
+    }
+}
+
+impl std::fmt::Debug for LazyMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LazyMatrix")
+            .field("section", &self.entry().name)
+            .field("resident", &self.is_resident())
+            .finish()
+    }
+}
+
+// ---- save / load ----------------------------------------------------------
+
 /// Wrap any compressed matrix into its storable form. Every registry
 /// entry has a disk encoding, so this is a total mapping driven by
 /// [`FormatId`] (the matrix is recompressed deterministically into the
@@ -542,8 +1056,55 @@ pub fn to_stored(w: &Mat, f: &dyn CompressedMatrix) -> Stored {
     }
 }
 
-/// Serialize named entries into a `.sham` container.
+fn encode_v2(entries: &[(String, Stored)]) -> Vec<u8> {
+    let n = entries.len();
+    let table_off = 16usize;
+    let names_off = table_off + 64 * n;
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC2);
+    w_u64(&mut out, n as u64);
+    out.resize(names_off, 0); // zeroed table, patched below
+    let mut recs: Vec<[u64; 8]> = Vec::with_capacity(n);
+    for (name, s) in entries {
+        let name_off = out.len() as u64;
+        out.extend_from_slice(name.as_bytes());
+        recs.push([name_off, name.len() as u64, s.tag() as u64, 0, 0, 0, 0, 0]);
+    }
+    for (i, (_, s)) in entries.iter().enumerate() {
+        while out.len() % 8 != 0 {
+            out.push(0);
+        }
+        let payload_off = out.len();
+        // encoded straight into the file buffer: out.len() is the
+        // absolute offset, which is what stream alignment is against
+        encode_entry(&mut out, s, true);
+        let c = s.as_compressed();
+        recs[i][3] = payload_off as u64;
+        recs[i][4] = (out.len() - payload_off) as u64;
+        recs[i][5] = c.rows() as u64;
+        recs[i][6] = c.cols() as u64;
+        recs[i][7] = c.size_bits();
+    }
+    for (i, rec) in recs.iter().enumerate() {
+        for (k, v) in rec.iter().enumerate() {
+            let at = table_off + i * 64 + k * 8;
+            out[at..at + 8].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Serialize named entries into a v2 (mmap-able) `.sham` container.
 pub fn save(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    f.write_all(&encode_v2(entries))?;
+    Ok(())
+}
+
+/// Serialize into the original v1 (copying) container — kept so the
+/// compat path stays exercisable end-to-end.
+pub fn save_v1(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> Result<()> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
     w_u32(&mut out, entries.len() as u32);
@@ -552,7 +1113,7 @@ pub fn save(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> 
         out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
         out.extend_from_slice(nb);
         out.push(s.tag());
-        encode_entry(&mut out, s);
+        encode_entry(&mut out, s, false);
     }
     let mut f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
@@ -560,11 +1121,34 @@ pub fn save(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> 
     Ok(())
 }
 
-/// Load a `.sham` container.
+/// Open a v2 container for lazy access, or `Ok(None)` if the file is a
+/// valid-magic v1 container (which has no section table — callers fall
+/// back to the copying [`load`]). Anything else is an error.
+pub fn open_mapped(path: impl AsRef<std::path::Path>) -> Result<Option<MappedArchive>> {
+    let map = Mapping::open(path.as_ref())
+        .with_context(|| format!("map {}", path.as_ref().display()))?;
+    if map.len() >= MAGIC.len() && &map.bytes()[..MAGIC.len()] == MAGIC {
+        return Ok(None);
+    }
+    MappedArchive::from_mapping(Arc::new(map)).map(Some)
+}
+
+/// Load a `.sham` container, either revision, fully materialized. v2
+/// goes through the mapped skeleton + per-section decode (streams stay
+/// zero-copy views of the mapping, which the returned values keep
+/// alive); v1 takes the original copying path.
 pub fn load(path: impl AsRef<std::path::Path>) -> Result<Vec<(String, Stored)>> {
-    let buf = std::fs::read(path.as_ref())
+    let map = Mapping::open(path.as_ref())
         .with_context(|| format!("read {}", path.as_ref().display()))?;
-    let mut r = Reader { buf: &buf, pos: 0 };
+    if map.len() >= 8 && &map.bytes()[..8] == MAGIC2 {
+        let ar = MappedArchive::from_mapping(Arc::new(map))?;
+        let mut out = Vec::with_capacity(ar.len());
+        for i in 0..ar.len() {
+            out.push((ar.entries()[i].name.clone(), ar.materialize(i)?));
+        }
+        return Ok(out);
+    }
+    let mut r = Reader::v1(map.bytes());
     if r.take(6)? != MAGIC {
         bail!("bad magic");
     }
@@ -583,6 +1167,7 @@ pub fn load(path: impl AsRef<std::path::Path>) -> Result<Vec<(String, Stored)>> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::decode_stats;
     use crate::util::prng::Prng;
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -628,6 +1213,33 @@ mod tests {
         }
     }
 
+    /// The v1 compat writer/reader must keep round-tripping every
+    /// format bit-identically — old archives stay loadable forever.
+    #[test]
+    fn roundtrip_every_format_id_v1_compat() {
+        let mut rng = Prng::seeded(0x570); // same seed: same matrices as v2
+        let m = Mat::sparse_quantized(60, 40, 0.15, 12, &mut rng);
+        let entries: Vec<(String, Stored)> = FormatId::ALL
+            .iter()
+            .map(|id| {
+                let f = id.compress(&m);
+                (id.name().to_string(), to_stored(&m, f.as_ref()))
+            })
+            .collect();
+        let path = tmp("all_ids_v1.sham");
+        save_v1(&path, &entries).unwrap();
+        assert_eq!(
+            &std::fs::read(&path).unwrap()[..6],
+            MAGIC,
+            "save_v1 must write the v1 magic"
+        );
+        for ((name, s), (_, orig)) in load(&path).unwrap().iter().zip(&entries) {
+            let (c, o) = (s.as_compressed(), orig.as_compressed());
+            assert_eq!(c.decompress(), m, "{name}: v1 lossless round-trip");
+            assert_eq!(c.size_bits(), o.size_bits(), "{name}: v1 size drifted");
+        }
+    }
+
     /// Degenerate matrices must survive the disk round-trip for every
     /// format too (all-zero, single cell, single distinct value).
     #[test]
@@ -663,7 +1275,9 @@ mod tests {
     fn disk_size_tracks_accounting_for_hac() {
         // File bytes should be in the ballpark of size_bits/8 (the
         // canonical-lengths dictionary is much cheaper than the paper's
-        // conservative B-tree model, so disk ≤ accounting).
+        // conservative B-tree model, so disk ≤ accounting). The v2
+        // section table adds 64 bytes + padding per entry — noise at
+        // this matrix size.
         let mut rng = Prng::seeded(0x571);
         let m = Mat::sparse_quantized(256, 256, 0.1, 32, &mut rng);
         let hac = Hac::compress(&m);
@@ -685,9 +1299,10 @@ mod tests {
         let m = Mat::sparse_quantized(30, 30, 0.3, 8, &mut rng);
         let path = tmp("corrupt.sham");
         save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        let path2 = tmp("corrupt2.sham");
+        // truncation (cuts payload and/or table)
         let mut bytes = std::fs::read(&path).unwrap();
         bytes.truncate(bytes.len() / 2);
-        let path2 = tmp("corrupt2.sham");
         std::fs::write(&path2, &bytes).unwrap();
         assert!(load(&path2).is_err());
         // bad magic
@@ -695,11 +1310,103 @@ mod tests {
         bad[0] = b'X';
         std::fs::write(&path2, &bad).unwrap();
         assert!(load(&path2).is_err());
-        // unknown kind tag
+        // unknown kind tag: record field 2 of the first table entry
+        // (v2 layout: 16-byte header, then 8-u64 records)
         let mut unk = std::fs::read(&path).unwrap();
-        // tag sits right after magic(6) + count(4) + namelen(2) + "w"(1)
-        unk[13] = 0xEE;
+        unk[16 + 2 * 8] = 0xEE;
         std::fs::write(&path2, &unk).unwrap();
         assert!(load(&path2).is_err());
+        // oversized declared entry count must die at the table bounds
+        // check, before any allocation is sized from it
+        let mut huge = std::fs::read(&path).unwrap();
+        huge[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path2, &huge).unwrap();
+        assert!(load(&path2).is_err());
+    }
+
+    /// The tentpole invariant at the store level: opening a v2 archive
+    /// decodes nothing (skeleton only — `decode_stats` delta is zero),
+    /// and each section decodes exactly when first touched.
+    #[test]
+    fn v2_open_is_lazy_and_zero_decode() {
+        let mut rng = Prng::seeded(0x573);
+        let m = Mat::sparse_quantized(40, 30, 0.2, 8, &mut rng);
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).sin()).collect();
+        let want = m.vecmat(&x);
+        let entries = vec![
+            ("hac".to_string(), Stored::Hac(Hac::compress(&m))),
+            ("shac".to_string(), Stored::Shac(Shac::compress(&m))),
+            ("lzac".to_string(), Stored::LzAc(LzAc::compress(&m))),
+        ];
+        let path = tmp("lazy_open.sham");
+        save(&path, &entries).unwrap();
+
+        let scope = decode_stats::thread_scope();
+        let ar = Arc::new(MappedArchive::open(&path).unwrap());
+        assert_eq!(ar.len(), 3);
+        // shapes/ids/sizes readable from the table alone
+        for ((_, s), e) in entries.iter().zip(ar.entries()) {
+            assert_eq!(e.rows, 40);
+            assert_eq!(e.cols, 30);
+            assert_eq!(e.id(), s.id());
+            assert_eq!(e.size_bits, s.as_compressed().size_bits());
+        }
+        assert_eq!(scope.passes(), 0, "open must not decode any stream");
+
+        for idx in 0..ar.len() {
+            let lazy = LazyMatrix::new(Arc::clone(&ar), idx);
+            assert!(!lazy.is_resident());
+            assert_eq!(lazy.resident_bytes(), 0);
+            let before = decode_stats::local();
+            let got = lazy.vecmat(&x); // first touch materializes
+            crate::util::proptest::assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+            assert!(lazy.is_resident());
+            assert_eq!(
+                lazy.resident_bytes(),
+                ar.entries()[idx].size_bits.div_ceil(8)
+            );
+            assert!(
+                decode_stats::local() > before,
+                "first touch must pay the decode pass"
+            );
+            // eviction drops residency but never the mapping: the next
+            // touch re-materializes to the same values
+            let freed = lazy.evict();
+            assert_eq!(freed, ar.entries()[idx].size_bits.div_ceil(8));
+            assert!(!lazy.is_resident());
+            assert_eq!(lazy.decompress(), m);
+        }
+    }
+
+    /// On the mmap backend every v2 entropy stream must come back as a
+    /// zero-copy view (the writer's alignment contract), and mapped vs
+    /// copied loads must agree bit-identically.
+    #[test]
+    fn v2_streams_are_mapped_in_place() {
+        let mut rng = Prng::seeded(0x574);
+        let m = Mat::sparse_quantized(50, 20, 0.25, 6, &mut rng);
+        let path = tmp("mapped_streams.sham");
+        save(
+            &path,
+            &[
+                ("a".into(), Stored::Hac(Hac::compress(&m))),
+                ("b".into(), Stored::Shac(Shac::compress(&m))),
+                ("c".into(), Stored::LzAc(LzAc::compress(&m))),
+            ],
+        )
+        .unwrap();
+        let ar = MappedArchive::open(&path).unwrap();
+        if ar.backend_name() != "mmap" || !cfg!(target_endian = "little") {
+            return; // portable fallback: zero-copy unavailable by contract
+        }
+        for i in 0..ar.len() {
+            let stream_mapped = match ar.materialize(i).unwrap() {
+                Stored::Hac(f) => f.stream_ref().is_mapped(),
+                Stored::Shac(f) => f.stream_ref().is_mapped(),
+                Stored::LzAc(f) => f.stream_ref().is_mapped(),
+                _ => unreachable!(),
+            };
+            assert!(stream_mapped, "section {i}: stream not zero-copy");
+        }
     }
 }

@@ -25,7 +25,9 @@ Experiment commands (regenerate the paper's tables/figures):
   s7                  conv-only weight sharing (Table S7)
   s8 --net <bench> [--quick]
                       full-net hybrid grids (Tables S8–S11) + measured
-                      per-layer conv-format (Auto) report
+                      per-layer conv-format (Auto) report + mapped
+                      cold-start report (v2 container: decode counts at
+                      open vs first inference, backend, resident bytes)
   fig1 [--k 32|256] [--paper-dims] [--net mnist|cifar]
                       format size + dot-time comparison (Fig. 1 / S2)
   timeratio [--net mnist] [--k 32]
@@ -57,7 +59,7 @@ On-disk compressed models:
 Serving:
   serve [--addr 127.0.0.1:7410] [--pure] [--shards N] [--replicas N]
         [--max-conns N] [--deadline-ms MS] [--queue-cap N] [--max-batch N]
-        [--max-frame-kib KIB] [--status-secs S]
+        [--max-frame-kib KIB] [--status-secs S] [--cache-mib MIB]
                       run the event-driven sharded inference server over
                       TCP: N reactor shards (epoll; SHAM_PORTABLE_POLL=1
                       forces the portable poller), per-variant replica
@@ -69,7 +71,13 @@ Serving:
                       included); --pure skips the PJRT-backed variants
                       entirely. A status line with queue depth, shed
                       counts, and p50/p95/p99/p999 latency prints every
-                      --status-secs seconds (default 30; 0 disables)
+                      --status-secs seconds (default 30; 0 disables).
+                      With --cache-mib the `-full` variants serve from
+                      mapped v2 `.sham` containers (cold variants hold
+                      only the validated mapping) behind a byte-budgeted
+                      LRU of decoded residency; the status line gains
+                      per-variant resident bytes, hit/miss/evict counts,
+                      and backend (mmap vs heap)
 
 Common options:
   --artifacts <dir>   artifacts directory (default: artifacts/ or $SHAM_ARTIFACTS)
@@ -265,6 +273,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
                         report.write_csv(&rpath)?;
                         println!("(conv-format report csv written to {rpath})");
                     }
+                    println!("== mapped cold start (v2 container) ==");
+                    s8_cold_start(&artifacts_dir(&flags), kind)?;
                     Ok(())
                 }
                 _ => unreachable!(),
@@ -452,6 +462,73 @@ fn inspect_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Cold-start report for `sham s8`: write the hybrid compressed model
+/// as a v2 `.sham` container, reopen it mapped, and show where the
+/// entropy decodes are paid — none at open (skeleton validation only),
+/// one pass per entropy layer on the first inference — plus the
+/// backend (mmap vs heap fallback) and decoded residency.
+fn s8_cold_start(art: &std::path::Path, kind: ModelKind) -> Result<()> {
+    use crate::coordinator::{infer_pure_once, server::request_from_test_set};
+    use crate::formats::decode_stats;
+    use crate::nn::compressed::{CompressionCfg, FcFormat};
+    use crate::nn::CompressedModel;
+    use crate::util::prng::Prng;
+    use crate::util::timer::{fmt_bytes, fmt_ns};
+    use std::time::Instant;
+
+    let params = kind.load_weights(art)?;
+    let cfg = CompressionCfg {
+        conv_quant: Some((crate::quant::Kind::Cws, 32)),
+        fc_prune: Some(if kind.is_vgg() { 90.0 } else { 60.0 }),
+        fc_quant: Some((crate::quant::Kind::Cws, 32)),
+        fc_format: FcFormat::Auto,
+        ..Default::default()
+    };
+    let mut rng = Prng::seeded(0x51D);
+    let model = CompressedModel::build(kind, &params, &cfg, &mut rng)?;
+    let dir = std::env::temp_dir().join("sham_s8_cold");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{}.sham", kind.name()));
+    model.save_sham(&path)?;
+
+    let mark = decode_stats::total();
+    let t0 = Instant::now();
+    let lazy = CompressedModel::load_sham_lazy(kind, &path)?;
+    let open = t0.elapsed();
+    let open_decodes = decode_stats::since(mark);
+    let resident_open = lazy.resident_weight_bytes();
+
+    let test = kind.load_test_set(art)?;
+    let input = request_from_test_set(&test, 0)?;
+    let mark = decode_stats::total();
+    let t1 = Instant::now();
+    let _ = infer_pure_once(&lazy, input.clone())?;
+    let first = t1.elapsed();
+    let first_decodes = decode_stats::since(mark);
+    let t2 = Instant::now();
+    let _ = infer_pure_once(&lazy, input)?;
+    let warm = t2.elapsed();
+
+    println!(
+        "container : {} ({} backend, {} compressed weight bytes)",
+        path.display(),
+        lazy.mapped_backend().unwrap_or("eager"),
+        fmt_bytes(lazy.total_weight_bytes() as f64),
+    );
+    println!(
+        "open      : {} — {open_decodes} weight-stream decodes, {} resident",
+        fmt_ns(open.as_nanos() as f64),
+        fmt_bytes(resident_open as f64),
+    );
+    println!(
+        "first inf : {} — {first_decodes} weight-stream decodes, {} resident",
+        fmt_ns(first.as_nanos() as f64),
+        fmt_bytes(lazy.resident_weight_bytes() as f64),
+    );
+    println!("warm inf  : {}", fmt_ns(warm.as_nanos() as f64));
+    Ok(())
+}
+
 /// Parse an integer flag with a default; malformed values are errors.
 fn usize_flag(flags: &Flags, name: &str, default: usize) -> Result<usize> {
     match flags.get(name) {
@@ -497,9 +574,19 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
     };
     let replicas = usize_flag(flags, "replicas", 1)?;
     let status_secs = usize_flag(flags, "status-secs", 30)?;
+    let cache_bytes = match flags.get("cache-mib") {
+        None => None,
+        Some(s) => {
+            let mib: u64 = s.parse().map_err(|_| {
+                anyhow::anyhow!("--cache-mib must be an integer, got `{s}`")
+            })?;
+            Some(mib * 1024 * 1024)
+        }
+    };
     let cfg = ServerConfig {
         policy,
         fc_threads: threads,
+        cache_bytes,
     };
     let vopts = VariantOpts { policy: None, replicas };
     let mut server = Server::new(cfg);
@@ -549,6 +636,26 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
             kind.dataset(),
             full.conv_format_report()
         );
+        // with a cache budget, serve `-full` from a mapped v2 container
+        // instead: write it out once, reopen zero-copy, and let the
+        // byte-budgeted LRU decide which variants keep decoded scratch
+        let full = if cache_bytes.is_some() {
+            let dir = art.join("serve_models");
+            std::fs::create_dir_all(&dir)?;
+            let path = dir.join(format!("{}-full.sham", kind.dataset()));
+            full.save_sham(&path)?;
+            let lazy = CompressedModel::load_sham_lazy(kind, &path)?;
+            println!(
+                "{}-full: mapped from {} ({} backend, {} weight bytes)",
+                kind.dataset(),
+                path.display(),
+                lazy.mapped_backend().unwrap_or("eager"),
+                lazy.total_weight_bytes(),
+            );
+            lazy
+        } else {
+            full
+        };
         server.add_variant_pure_opts(
             &format!("{}-full", kind.dataset()),
             full,
@@ -576,6 +683,9 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
                 if since >= Duration::from_secs(status_secs as u64) {
                     since = Duration::ZERO;
                     println!("status: {}", srv.metrics.render());
+                    for line in cache_lines(&srv) {
+                        println!("{line}");
+                    }
                 }
             }
         }))
@@ -590,7 +700,32 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         let _ = h.join();
     }
     println!("{}", server.metrics.render());
+    for line in cache_lines(&server) {
+        println!("{line}");
+    }
     Ok(())
+}
+
+/// Per-variant cache lines for the serve status output: residency,
+/// hit/miss/evict counts, and whether the variant is mapped or
+/// heap-loaded (eager variants show as `eager`).
+fn cache_lines(server: &crate::coordinator::Server) -> Vec<String> {
+    server
+        .cache_stats()
+        .iter()
+        .map(|s| {
+            format!(
+                "  cache {}: backend={} resident={}/{} hits={} misses={} evictions={}",
+                s.name,
+                s.backend,
+                crate::util::timer::fmt_bytes(s.resident_bytes as f64),
+                crate::util::timer::fmt_bytes(s.total_bytes as f64),
+                s.hits,
+                s.misses,
+                s.evictions,
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -395,7 +395,7 @@ mod tests {
         let code = Code::from_freqs(&freqs);
         let stream = [1u32, 2, 0, 0, 1];
         let buf = code.encode(stream.iter().copied());
-        let mut padded_words = buf.words.clone();
+        let mut padded_words = buf.words().to_vec();
         padded_words.push(0); // extra zero word, like the paper's padding
         let mut r = BitReader::from_words(&padded_words, padded_words.len() * 64);
         let mut out = Vec::new();

@@ -1,0 +1,311 @@
+//! Read-only file mappings for zero-copy `.sham` loading.
+//!
+//! The v2 container (`formats::store`, DESIGN.md §11) lays its
+//! compressed bit streams out so the `u64` word arrays sit at 8-aligned
+//! *file* offsets; mapping the file then lets `BitBuf` borrow the words
+//! in place instead of copying them to the heap. This module provides
+//! that mapping with raw `extern "C"` mmap/munmap in the style of
+//! `coordinator/poll.rs` — no libc crate — behind a [`Mapping`] type
+//! whose fallback backend simply reads the file to a heap buffer.
+//!
+//! Backend selection ([`Mapping::open`]): the real mapping on Linux,
+//! the heap everywhere else, when `SHAM_PORTABLE_MMAP=1` is set (the
+//! escape hatch CI's Miri lane uses — FFI is not interpretable), or
+//! when the syscall fails (empty files, exotic filesystems). The heap
+//! backend returns `None` from [`Mapping::words`] — `Vec<u8>` carries
+//! no 8-byte alignment guarantee, and on big-endian hosts the on-disk
+//! little-endian words need byte-swapping anyway — so store readers
+//! treat a `None` as "copy-decode this stream like v1", keeping lazy
+//! first-touch materialization portable even where zero-copy is not.
+//!
+//! Mapped archives are immutable deployment artifacts: truncating a
+//! file out from under its mapping is undefined at the OS level (SIGBUS
+//! on fault), the same contract every mmap consumer lives with.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[cfg(target_os = "linux")]
+mod linux {
+    /// Raw syscall surface, mirroring `coordinator/poll.rs`: just the
+    /// two symbols needed, no libc dependency.
+    pub(super) mod sys {
+        use std::os::raw::{c_int, c_void};
+
+        pub const PROT_READ: c_int = 0x1;
+        pub const MAP_PRIVATE: c_int = 0x2;
+
+        extern "C" {
+            pub fn mmap(
+                addr: *mut c_void,
+                length: usize,
+                prot: c_int,
+                flags: c_int,
+                fd: c_int,
+                offset: i64,
+            ) -> *mut c_void;
+            pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+        }
+    }
+}
+
+/// Should [`Mapping::open`] skip the mmap backend? Same env idiom as
+/// `SHAM_PORTABLE_POLL` (`coordinator/poll.rs`): set and not `"0"`.
+fn portable_requested() -> bool {
+    std::env::var("SHAM_PORTABLE_MMAP")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+enum Backend {
+    /// A live `PROT_READ`/`MAP_PRIVATE` mapping; unmapped on drop.
+    #[cfg(target_os = "linux")]
+    Mmap { ptr: *const u8, len: usize },
+    /// Portable fallback: the whole file read to the heap.
+    Heap { bytes: Vec<u8> },
+}
+
+/// An immutable byte view of a file — a real memory mapping where the
+/// platform allows, a heap copy everywhere else. The distinction only
+/// shows through [`Mapping::words`] (zero-copy word views exist only on
+/// the mapped backend) and [`Mapping::backend_name`].
+pub struct Mapping {
+    backend: Backend,
+}
+
+// SAFETY: the mapped backend is a private read-only mapping owned
+// exclusively by this value — no interior mutability, no aliasing
+// writers — so moving it to another thread is sound.
+unsafe impl Send for Mapping {}
+// SAFETY: all access through `&Mapping` is read-only (`bytes`/`words`
+// hand out shared slices of memory that nothing mutates until Drop,
+// which requires exclusive ownership).
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only, falling back to a heap read when mmap is
+    /// unavailable (non-Linux, Miri, `SHAM_PORTABLE_MMAP=1`) or fails
+    /// (e.g. empty files cannot be mapped).
+    pub fn open(path: &Path) -> Result<Mapping> {
+        if !(portable_requested() || cfg!(miri)) {
+            #[cfg(target_os = "linux")]
+            if let Ok(m) = Mapping::open_mmap(path) {
+                return Ok(m);
+            }
+        }
+        Mapping::open_portable(path)
+    }
+
+    /// The fallback backend, unconditionally: read the file to a heap
+    /// buffer. Lazy materialization still works (sections decode on
+    /// first touch); zero-copy word views do not.
+    pub fn open_portable(path: &Path) -> Result<Mapping> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mapping { backend: Backend::Heap { bytes } })
+    }
+
+    #[cfg(target_os = "linux")]
+    fn open_mmap(path: &Path) -> Result<Mapping> {
+        use std::os::fd::AsRawFd;
+
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = file.metadata().context("stat for mmap")?.len();
+        let len = usize::try_from(len).context("file too large to map")?;
+        if len == 0 {
+            // zero-length mappings are EINVAL; the heap backend's empty
+            // Vec represents an empty file just fine
+            bail!("empty file");
+        }
+        // SAFETY: null addr lets the kernel pick the placement; fd is a
+        // freshly opened readable file whose length we just measured,
+        // PROT_READ + MAP_PRIVATE never aliases writable memory, and the
+        // returned region is only released by munmap in Drop. The fd may
+        // close right after — the mapping keeps its own reference.
+        let ptr = unsafe {
+            linux::sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                linux::sys::PROT_READ,
+                linux::sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            // MAP_FAILED is (void*)-1
+            bail!("mmap of {} failed", path.display());
+        }
+        Ok(Mapping { backend: Backend::Mmap { ptr: ptr as *const u8, len } })
+    }
+
+    /// The file contents, whatever the backend.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Mmap { ptr, len } => {
+                // SAFETY: ptr/len are exactly the successful mmap result,
+                // live until Drop (which needs &mut), PROT_READ for the
+                // full length, and never written through any alias.
+                unsafe { std::slice::from_raw_parts(*ptr, *len) }
+            }
+            Backend::Heap { bytes } => bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Mmap { len, .. } => *len,
+            Backend::Heap { bytes } => bytes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Zero-copy `&[u64]` view of `n_words` on-disk little-endian words
+    /// starting at byte offset `byte_off`.
+    ///
+    /// `None` unless every leg of the alignment contract (DESIGN.md
+    /// §11) holds: mapped backend (heap `Vec<u8>` guarantees no 8-byte
+    /// alignment), little-endian host (disk words are LE), `byte_off`
+    /// 8-aligned, and the range in bounds. Callers treat `None` as
+    /// "copy-decode this stream" — correctness never depends on the
+    /// fast path existing.
+    pub fn words(&self, byte_off: usize, n_words: usize) -> Option<&[u64]> {
+        let nbytes = n_words.checked_mul(8)?;
+        let end = byte_off.checked_add(nbytes)?;
+        if !cfg!(target_endian = "little") || byte_off % 8 != 0 || end > self.len() {
+            return None;
+        }
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Mmap { ptr, .. } => {
+                // SAFETY: the range [byte_off, byte_off + n_words*8) was
+                // bounds-checked against the mapping above; mmap returns
+                // page-aligned memory so base + 8-aligned offset is
+                // u64-aligned; u64 has no invalid bit patterns; and the
+                // little-endian branch guarantees host order matches the
+                // on-disk order. Lifetime is tied to &self as in bytes().
+                Some(unsafe {
+                    std::slice::from_raw_parts(ptr.add(byte_off) as *const u64, n_words)
+                })
+            }
+            Backend::Heap { .. } => None,
+        }
+    }
+
+    /// `"mmap"` or `"heap"` — surfaced by the CLI and benches so runs
+    /// record which backend they actually measured.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Mmap { .. } => "mmap",
+            Backend::Heap { .. } => "heap",
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Mmap { ptr, len } = &self.backend {
+            // SAFETY: ptr/len are the exact mmap result, not yet
+            // unmapped (Drop runs once), and no view outlives self
+            // (bytes/words borrow &self).
+            let rc = unsafe {
+                linux::sys::munmap(*ptr as *mut std::os::raw::c_void, *len)
+            };
+            debug_assert_eq!(rc, 0, "munmap failed");
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("backend", &self.backend_name())
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sham_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn portable_backend_reads_whole_file() {
+        let p = tmp("portable.bin");
+        let data: Vec<u8> = (0..=255u8).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mapping::open_portable(&p).unwrap();
+        assert_eq!(m.backend_name(), "heap");
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.len(), 256);
+        // the heap backend never hands out word views — callers must
+        // take the copy-decode path
+        assert!(m.words(0, 4).is_none());
+    }
+
+    #[test]
+    fn empty_file_is_heap_backed() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mapping::open(&p).unwrap();
+        assert_eq!(m.backend_name(), "heap");
+        assert!(m.is_empty());
+        assert!(m.bytes().is_empty());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mapping::open(&tmp("does_not_exist.bin")).is_err());
+        assert!(Mapping::open_portable(&tmp("does_not_exist.bin")).is_err());
+    }
+
+    #[test]
+    fn mapped_backend_words_view() {
+        if cfg!(miri) || portable_requested() || !cfg!(target_os = "linux") {
+            return; // mmap path not available in this environment
+        }
+        let p = tmp("words.bin");
+        let mut data = Vec::new();
+        data.extend_from_slice(b"HDR_8B__"); // 8-byte header, words at 8
+        let expect: Vec<u64> = vec![0x0102_0304_0506_0708, u64::MAX, 0, 42];
+        for w in &expect {
+            data.extend_from_slice(&w.to_le_bytes());
+        }
+        data.push(0xAB); // trailing byte: total length not word-multiple
+        std::fs::write(&p, &data).unwrap();
+
+        let m = Mapping::open(&p).unwrap();
+        assert_eq!(m.backend_name(), "mmap");
+        assert_eq!(m.bytes(), &data[..]);
+        if cfg!(target_endian = "little") {
+            assert_eq!(m.words(8, 4).unwrap(), &expect[..]);
+            assert_eq!(m.words(16, 2).unwrap(), &expect[1..3]);
+        }
+        // misaligned offset, out-of-bounds range, overflowing count
+        assert!(m.words(4, 1).is_none());
+        assert!(m.words(8, 5).is_none());
+        assert!(m.words(8, usize::MAX / 2).is_none());
+    }
+
+    #[test]
+    fn open_respects_portable_env_contract() {
+        // can't set the env var here (process-global, tests run in
+        // parallel) — just pin the parsing contract on the helper
+        assert!(!portable_requested() || std::env::var("SHAM_PORTABLE_MMAP").is_ok());
+    }
+}

@@ -1,8 +1,11 @@
 //! Build-path interchange: `.wbin` tensor archives (weights, datasets)
-//! shared with `python/compile/` and the evaluation dataset container.
+//! shared with `python/compile/` and the evaluation dataset container,
+//! plus the read-only file mappings behind zero-copy `.sham` loading.
 
 pub mod dataset;
+pub mod mmap;
 pub mod wbin;
 
 pub use dataset::TestSet;
+pub use mmap::Mapping;
 pub use wbin::{read_archive, write_archive, Archive, Dtype, Tensor};

@@ -5,8 +5,11 @@
 //! (prune → quantize → lower → store) as a reusable configuration
 //! ([`CompressionCfg`]), and whole-model `.sham` persistence.
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::formats::store::{LazyMatrix, MappedArchive};
 use crate::formats::{
     batched_product_into, decode_stats, par_decoded_matmul_batch_into, pool,
     BatchKernel, CompressedMatrix, DecodedWeights, FormatId, Hac, Shac,
@@ -399,6 +402,15 @@ pub struct CompressedModel {
     /// re-derive `conv_bits` after a `.sham` round-trip).
     conv_quantized: bool,
     conv_pruned: bool,
+    /// The mapped v2 container behind a lazily opened model
+    /// ([`Self::load_sham_lazy`]) — `None` for built or eagerly loaded
+    /// models. Kept so the cache/CLI can report the backend.
+    mapped: Option<Arc<MappedArchive>>,
+    /// One handle per lazy fc/conv weight (clones of the boxed layer
+    /// weights, sharing their residency slots) — the hooks the
+    /// byte-budgeted cache uses to account and evict decoded scratch.
+    /// Empty for eager models.
+    lazy: Vec<LazyMatrix>,
 }
 
 impl CompressedModel {
@@ -602,6 +614,8 @@ impl CompressedModel {
             fc_dense_bits,
             conv_quantized: cfg.conv_quant.is_some(),
             conv_pruned: cfg.conv_prune.is_some(),
+            mapped: None,
+            lazy: Vec::new(),
         })
     }
 
@@ -955,7 +969,17 @@ impl CompressedModel {
     /// per conv layer, and the conv accounting flags. [`Self::load_sham`]
     /// restores an executable model with identical ψ accounting.
     pub fn save_sham(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        use crate::formats::store::{save, to_stored, Stored};
+        crate::formats::store::save(path, &self.sham_entries())
+    }
+
+    /// [`Self::save_sham`] through the v1 (copying) container writer —
+    /// keeps the compat load path exercisable end-to-end.
+    pub fn save_sham_v1(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::formats::store::save_v1(path, &self.sham_entries())
+    }
+
+    fn sham_entries(&self) -> Vec<(String, crate::formats::store::Stored)> {
+        use crate::formats::store::{to_stored, Stored};
         use crate::formats::Dense;
         fn dense_row(v: &[f32]) -> Stored {
             Stored::Dense(Dense::from_mat(Mat::from_vec(1, v.len(), v.to_vec())))
@@ -970,6 +994,16 @@ impl CompressedModel {
                 if self.conv_quantized { 1.0 } else { 0.0 },
                 if self.conv_pruned { 1.0 } else { 0.0 },
             ]),
+        ));
+        // precomputed ψ-accounting totals, so the lazy loader never has
+        // to decompress conv values; eager loads ignore the entry
+        entries.push((
+            "meta/acct".to_string(),
+            dense_row(&acct_to_f32([
+                self.conv_bits,
+                self.conv_dense_bits,
+                self.fc_dense_bits,
+            ])),
         ));
         for l in &self.fc {
             let w = l.w.decompress();
@@ -1009,7 +1043,7 @@ impl CompressedModel {
                 ))),
             ));
         }
-        save(path, &entries)
+        entries
     }
 
     /// Load a model persisted by [`Self::save_sham`]: every layer comes
@@ -1164,8 +1198,224 @@ impl CompressedModel {
             fc_dense_bits,
             conv_quantized,
             conv_pruned,
+            mapped: None,
+            lazy: Vec::new(),
         })
     }
+
+    /// Open a `.sham` container for **lazy first-touch serving**: the
+    /// file is mapped (or heap-read on the portable fallback), only the
+    /// skeleton is validated, and every fc/conv weight becomes a
+    /// [`LazyMatrix`] whose entropy stream decodes on its first kernel
+    /// call — opening performs **zero** entropy-stream decodes
+    /// (`formats::decode_stats` delta == 0, pinned by tests). Small
+    /// dense sections (biases, kshape sidecars, embeddings, meta rows)
+    /// are materialized eagerly; they decode nothing.
+    ///
+    /// Falls back to the eager [`Self::load_sham`] when the file is a
+    /// v1 container or predates the `meta/acct` entry (ψ accounting
+    /// then needs decompressed conv values).
+    ///
+    /// A lazy model serves the **pure backend only**: `params` is left
+    /// empty (rebuilding it would decompress every layer), so drivers
+    /// that need the PJRT feature graph must load eagerly.
+    pub fn load_sham_lazy(
+        kind: ModelKind,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<CompressedModel> {
+        use crate::formats::store;
+        let Some(ar) = store::open_mapped(path.as_ref())? else {
+            return Self::load_sham(kind, path); // v1: copying compat path
+        };
+        let ar = Arc::new(ar);
+        if ar.find(&format!("meta/kind/{}", kind.name())).is_none() {
+            let saved: Vec<&str> = ar
+                .entries()
+                .iter()
+                .filter_map(|e| e.name.strip_prefix("meta/kind/"))
+                .collect();
+            bail!("container was saved for {:?}, not {}", saved, kind.name());
+        }
+        let Some(acct_idx) = ar.find("meta/acct") else {
+            return Self::load_sham(kind, path); // pre-acct v2: eager
+        };
+        let row = |idx: usize| -> Result<Vec<f32>> {
+            Ok(ar.materialize(idx)?.as_compressed().decompress().data)
+        };
+        let take_row = |name: &str| -> Result<Vec<f32>> {
+            row(ar.find(name).with_context(|| format!("container missing {name}"))?)
+        };
+        let [conv_bits, conv_dense_bits, fc_dense_bits] =
+            acct_from_f32(&row(acct_idx)?).context("bad meta/acct entry")?;
+        let flags = take_row("meta/conv_cfg")?;
+        ensure!(flags.len() == 2, "bad meta/conv_cfg entry");
+        let (conv_quantized, conv_pruned) = (flags[0] != 0.0, flags[1] != 0.0);
+
+        let mut lazy = Vec::new();
+        let mut lazy_weight = |name: &str| -> Result<LazyMatrix> {
+            let idx = ar
+                .find(name)
+                .with_context(|| format!("container missing {name}"))?;
+            let lm = LazyMatrix::new(Arc::clone(&ar), idx);
+            lazy.push(lm.clone());
+            Ok(lm)
+        };
+        let mut fc = Vec::new();
+        for name in kind.fc_names() {
+            let w = lazy_weight(&format!("fc/{name}.w"))?;
+            let b = take_row(&format!("fc/{name}.b"))?;
+            fc.push(FcLayer { name: name.to_string(), w: Box::new(w), b });
+        }
+
+        let steps = kind.conv_steps();
+        ensure!(steps.len() == kind.conv_names().len(), "layer plan out of sync");
+        let mut conv = Vec::new();
+        let mut conv_choices = Vec::new();
+        for (name, two_d, _) in steps {
+            let w = lazy_weight(&format!("conv/{name}.w"))?;
+            let b = take_row(&format!("conv/{name}.b"))?;
+            let ks = take_row(&format!("conv/{name}.kshape"))?;
+            ensure!(ks.len() == 4 || ks.len() == 7, "{name}: bad kshape sidecar");
+            let (kh, kw, cin, cout) =
+                (ks[0] as usize, ks[1] as usize, ks[2] as usize, ks[3] as usize);
+            let (stride, padding) = if ks.len() == 7 {
+                let pad = match ks[6] as usize {
+                    0 => Padding::Same,
+                    1 => Padding::Valid,
+                    other => bail!("{name}: unknown padding tag {other}"),
+                };
+                ((ks[4] as usize, ks[5] as usize), pad)
+            } else {
+                ((1, 1), Padding::Same)
+            };
+            ensure!(
+                kh > 0 && kw > 0 && stride.0 > 0 && stride.1 > 0,
+                "{name}: degenerate kshape sidecar"
+            );
+            // shape checks run off the section table — still no decode
+            ensure!(
+                w.rows() == kh * kw * cin && w.cols() == cout,
+                "{name}: lowered matrix does not match kshape"
+            );
+            ensure!(two_d || kh == 1, "{name}: conv1d layer with kh > 1");
+            ensure!(b.len() == cout, "{name}: bias/cout mismatch");
+            conv_choices.push(ConvChoice {
+                name: name.to_string(),
+                format: w.id(),
+                size_bits: w.size_bits(),
+                measured_ns: None,
+                decodes_per_call: None,
+                kernel: None,
+            });
+            conv.push(ConvLayer {
+                name: name.to_string(),
+                w: Box::new(w),
+                b,
+                spec: ConvSpec::new(kh, kw, stride, padding),
+                cin,
+                cout,
+            });
+        }
+
+        let mut embeds = Vec::new();
+        for branch in kind.layer_plan().branches {
+            for step in branch.steps {
+                if let Step::Embed(name) = *step {
+                    let idx = ar
+                        .find(&format!("embed/{name}"))
+                        .with_context(|| format!("container missing embed/{name}"))?;
+                    let d = ar.materialize(idx)?.as_compressed().decompress();
+                    embeds.push(EmbedTable {
+                        name: name.to_string(),
+                        dim: d.cols,
+                        table: d.data,
+                    });
+                }
+            }
+        }
+
+        Ok(CompressedModel {
+            kind,
+            params: Archive::new(), // pure backend only — see doc above
+            fc,
+            conv,
+            embeds,
+            conv_choices,
+            conv_bits,
+            conv_dense_bits,
+            fc_dense_bits,
+            conv_quantized,
+            conv_pruned,
+            mapped: Some(ar),
+            lazy,
+        })
+    }
+
+    /// Was this model opened lazily from a mapped v2 container?
+    pub fn is_mapped(&self) -> bool {
+        self.mapped.is_some()
+    }
+
+    /// `Some("mmap")` / `Some("heap")` for lazily opened models, `None`
+    /// for built or eagerly loaded ones.
+    pub fn mapped_backend(&self) -> Option<&'static str> {
+        self.mapped.as_deref().map(MappedArchive::backend_name)
+    }
+
+    /// Bytes of decoded weight scratch currently resident across the
+    /// lazy layers (0 for eager models, whose weights are always decoded
+    /// and never cache-managed). Charged at the accounting footprint —
+    /// see [`LazyMatrix::resident_bytes`].
+    pub fn resident_weight_bytes(&self) -> u64 {
+        self.lazy.iter().map(LazyMatrix::resident_bytes).sum()
+    }
+
+    /// Total weight bytes if every layer were resident — the charge the
+    /// byte-budgeted cache admits a variant at.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.fc
+            .iter()
+            .map(|l| l.w.size_bits())
+            .chain(self.conv.iter().map(|l| l.w.size_bits()))
+            .map(|bits| bits.div_ceil(8))
+            .sum()
+    }
+
+    /// Drop every lazy layer's decoded scratch (the mapping stays —
+    /// next touch re-materializes). Returns the bytes freed; no-op 0
+    /// for eager models. In-flight batches holding `Arc`s to the old
+    /// scratch finish safely on it.
+    pub fn evict_residency(&self) -> u64 {
+        self.lazy.iter().map(LazyMatrix::evict).sum()
+    }
+}
+
+/// Encode the three ψ-accounting totals (`conv_bits`,
+/// `conv_dense_bits`, `fc_dense_bits`) as f32 rows for the `meta/acct`
+/// section: 4 × 16-bit limbs per u64, least-significant first. 16-bit
+/// limbs are exact in f32 (24-bit mantissa), so the totals round-trip
+/// bit-identically — which lets the lazy loader skip decompressing conv
+/// values just to re-derive accounting.
+fn acct_to_f32(vals: [u64; 3]) -> Vec<f32> {
+    vals.iter()
+        .flat_map(|v| (0..4).map(move |i| ((v >> (16 * i)) & 0xFFFF) as f32))
+        .collect()
+}
+
+fn acct_from_f32(row: &[f32]) -> Option<[u64; 3]> {
+    if row.len() != 12 {
+        return None;
+    }
+    let mut out = [0u64; 3];
+    for (k, limbs) in row.chunks_exact(4).enumerate() {
+        for (i, &l) in limbs.iter().enumerate() {
+            if l < 0.0 || l > 0xFFFF as f32 || l.fract() != 0.0 {
+                return None;
+            }
+            out[k] |= (l as u64) << (16 * i);
+        }
+    }
+    Some(out)
 }
 
 #[cfg(test)]
@@ -1541,5 +1791,79 @@ mod tests {
             FcFormat::parse("dcri"),
             Some(FcFormat::Fixed(FormatId::RelIdx))
         );
+    }
+
+    #[test]
+    fn acct_limbs_roundtrip_exactly() {
+        for vals in [
+            [0u64, 0, 0],
+            [1, 2, 3],
+            [u64::from(u32::MAX) * 64, 0xFFFF_FFFF_FFFF, 12345],
+            [(1u64 << 62) + 7, u64::MAX, u64::MAX - 1],
+        ] {
+            assert_eq!(acct_from_f32(&acct_to_f32(vals)), Some(vals));
+        }
+        assert_eq!(acct_from_f32(&[1.0; 11]), None, "wrong arity");
+        assert_eq!(acct_from_f32(&[0.5; 12]), None, "non-integer limb");
+        assert_eq!(acct_from_f32(&[70000.0; 12]), None, "limb overflow");
+    }
+
+    /// The tentpole at the model level: a lazy open decodes nothing,
+    /// accounting round-trips exactly via `meta/acct`, the forward is
+    /// bit-identical to the eager build, and eviction frees exactly the
+    /// admitted bytes. The v1 writer still loads via the compat path.
+    #[test]
+    fn lazy_load_sham_matches_eager() {
+        let mut rng = Prng::seeded(0xF00);
+        let a = chain_archive(&mut rng);
+        let cfg = CompressionCfg {
+            fc_quant: Some((Kind::Cws, 8)),
+            conv_quant: Some((Kind::Cws, 8)),
+            fc_format: FcFormat::Fixed(FormatId::Hac),
+            conv_format: ConvFormat::Fixed(FormatId::Shac),
+            ..Default::default()
+        };
+        let m =
+            CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap();
+        let dir = std::env::temp_dir().join("sham_compressed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lazy_roundtrip.sham");
+        m.save_sham(&path).unwrap();
+
+        let scope = decode_stats::thread_scope();
+        let lazy =
+            CompressedModel::load_sham_lazy(ModelKind::VggMnist, &path).unwrap();
+        assert!(lazy.is_mapped());
+        assert!(matches!(lazy.mapped_backend(), Some("mmap") | Some("heap")));
+        assert_eq!(scope.passes(), 0, "lazy open must not decode any stream");
+        assert_eq!(lazy.resident_weight_bytes(), 0);
+        // ψ accounting round-trips exactly without any decompression
+        assert_eq!(lazy.psi_total(), m.psi_total());
+        assert_eq!(lazy.psi_fc(), m.psi_fc());
+
+        let images = chain_input(&mut rng, 2);
+        let input = PlanInput::Images { n: 2, h: 8, w: 8, c: 1, data: &images };
+        let mut ws1 = Workspace::new();
+        let mut ws2 = Workspace::new();
+        let want = m.forward_into(&input, 1, &mut ws1).unwrap().clone();
+        let got = lazy.forward_into(&input, 1, &mut ws2).unwrap();
+        assert_eq!(got.data, want.data, "lazy forward must be bit-identical");
+        // first inference materialized every layer; eviction frees it all
+        assert_eq!(lazy.resident_weight_bytes(), lazy.total_weight_bytes());
+        assert_eq!(lazy.evict_residency(), lazy.total_weight_bytes());
+        assert_eq!(lazy.resident_weight_bytes(), 0);
+        let got_again = lazy.forward_into(&input, 1, &mut ws2).unwrap();
+        assert_eq!(got_again.data, want.data, "post-eviction re-touch diverged");
+
+        // v1 container: the compat path loads eagerly, bit-identically
+        let p1 = dir.join("lazy_roundtrip_v1.sham");
+        m.save_sham_v1(&p1).unwrap();
+        let v1 = CompressedModel::load_sham_lazy(ModelKind::VggMnist, &p1).unwrap();
+        assert!(!v1.is_mapped());
+        assert_eq!(v1.mapped_backend(), None);
+        let mut ws3 = Workspace::new();
+        let got1 = v1.forward_into(&input, 1, &mut ws3).unwrap();
+        assert_eq!(got1.data, want.data, "v1 compat forward diverged");
+        assert_eq!(v1.psi_total(), m.psi_total());
     }
 }

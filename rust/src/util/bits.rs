@@ -4,18 +4,87 @@
 //! memory words (Sect. IV-B); we use 64-bit words. Bits are addressed
 //! MSB-first within each word so that the stream reads left-to-right in
 //! the same order the paper's `getBinarySeq` produces.
+//!
+//! A [`BitBuf`] either *owns* its words (everything built through
+//! [`BitWriter`]) or *borrows* them zero-copy from a mapped `.sham` v2
+//! container (`io::mmap`, DESIGN.md §11) — readers and kernels only
+//! ever see `&[u64]` through [`BitBuf::words`], so the two backings are
+//! indistinguishable past construction.
 
-/// An owned, immutable bit buffer produced by [`BitWriter::finish`].
-#[derive(Debug, Clone, PartialEq, Eq)]
+use crate::io::mmap::Mapping;
+use std::sync::Arc;
+
+/// The backing words of a [`BitBuf`].
+#[derive(Clone)]
+enum Words {
+    Owned(Vec<u64>),
+    /// `n_words` little-endian words at byte offset `byte_off` of a
+    /// shared file mapping. Construction ([`BitBuf::from_mapped`])
+    /// proved the view valid (aligned, in bounds, little-endian host),
+    /// so dereferencing it later cannot fail.
+    Mapped {
+        map: Arc<Mapping>,
+        byte_off: usize,
+        n_words: usize,
+    },
+}
+
+/// An immutable bit buffer: owned (produced by [`BitWriter::finish`])
+/// or a zero-copy view into a mapped container.
+#[derive(Clone)]
 pub struct BitBuf {
-    pub words: Vec<u64>,
-    pub bitlen: usize,
+    words: Words,
+    bitlen: usize,
 }
 
 impl BitBuf {
     /// Empty buffer.
     pub fn new() -> Self {
-        BitBuf { words: Vec::new(), bitlen: 0 }
+        BitBuf { words: Words::Owned(Vec::new()), bitlen: 0 }
+    }
+
+    /// An owned buffer over `words`, the first `bitlen` bits valid.
+    pub fn from_owned(words: Vec<u64>, bitlen: usize) -> Self {
+        debug_assert!(bitlen <= words.len() * 64);
+        BitBuf { words: Words::Owned(words), bitlen }
+    }
+
+    /// A zero-copy buffer borrowing `n_words` words at `byte_off` of
+    /// `map`. `None` when the mapping cannot serve an aligned in-bounds
+    /// little-endian word view there (heap backend, misalignment, out
+    /// of bounds — see [`Mapping::words`]) or `bitlen` overruns the
+    /// words; callers then fall back to an owned copy.
+    pub fn from_mapped(
+        map: &Arc<Mapping>,
+        byte_off: usize,
+        n_words: usize,
+        bitlen: usize,
+    ) -> Option<Self> {
+        if bitlen > n_words.checked_mul(64)? {
+            return None;
+        }
+        map.words(byte_off, n_words)?; // proves the view dereferences
+        Some(BitBuf {
+            words: Words::Mapped { map: Arc::clone(map), byte_off, n_words },
+            bitlen,
+        })
+    }
+
+    /// The backing words (owned or mapped), MSB-first bit order.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        match &self.words {
+            Words::Owned(w) => w,
+            Words::Mapped { map, byte_off, n_words } => map
+                .words(*byte_off, *n_words)
+                .expect("mapped BitBuf view validated at construction"),
+        }
+    }
+
+    /// Does this buffer borrow its words from a file mapping?
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.words, Words::Mapped { .. })
     }
 
     /// Number of bits stored.
@@ -34,7 +103,11 @@ impl BitBuf {
     /// accounting charges for the stream `C_HAC(W)`.
     #[inline]
     pub fn size_bits(&self) -> usize {
-        self.words.len() * 64
+        let n = match &self.words {
+            Words::Owned(w) => w.len(),
+            Words::Mapped { n_words, .. } => *n_words,
+        };
+        n * 64
     }
 
     /// Read the bit at absolute position `pos` (0-based, MSB-first).
@@ -43,13 +116,31 @@ impl BitBuf {
         debug_assert!(pos < self.bitlen);
         let w = pos >> 6;
         let off = pos & 63;
-        (self.words[w] >> (63 - off)) & 1 == 1
+        (self.words()[w] >> (63 - off)) & 1 == 1
     }
 }
 
 impl Default for BitBuf {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl PartialEq for BitBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.bitlen == other.bitlen && self.words() == other.words()
+    }
+}
+
+impl Eq for BitBuf {}
+
+impl std::fmt::Debug for BitBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BitBuf")
+            .field("bitlen", &self.bitlen)
+            .field("n_words", &(self.size_bits() / 64))
+            .field("mapped", &self.is_mapped())
+            .finish()
     }
 }
 
@@ -107,7 +198,7 @@ impl BitWriter {
     }
 
     pub fn finish(self) -> BitBuf {
-        BitBuf { words: self.words, bitlen: self.bitlen }
+        BitBuf::from_owned(self.words, self.bitlen)
     }
 }
 
@@ -128,7 +219,7 @@ pub struct BitReader<'a> {
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a BitBuf) -> Self {
-        BitReader { words: &buf.words, bitlen: buf.bitlen, pos: 0 }
+        BitReader { words: buf.words(), bitlen: buf.len(), pos: 0 }
     }
 
     pub fn from_words(words: &'a [u64], bitlen: usize) -> Self {
@@ -321,6 +412,50 @@ mod tests {
                 assert_eq!(r.read_bits(nb), Some(v), "chunk nbits={}", nb);
             }
             assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn mapped_bitbuf_roundtrips_against_owned() {
+        // write an owned stream, persist its words LE at an 8-aligned
+        // offset, reopen through a Mapping, and require the mapped view
+        // to compare equal and read identically
+        let mut w = BitWriter::new();
+        for i in 0..300u64 {
+            w.write_bits(i.wrapping_mul(0x9E37_79B9_7F4A_7C15), (i % 64 + 1) as u32);
+        }
+        let owned = w.finish();
+
+        let dir = std::env::temp_dir().join("sham_bits_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("mapped_roundtrip.bin");
+        let mut bytes = vec![0u8; 16]; // words start at absolute offset 16
+        for word in owned.words() {
+            bytes.extend_from_slice(&word.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+
+        let map = std::sync::Arc::new(Mapping::open(&p).unwrap());
+        let n_words = owned.words().len();
+        match BitBuf::from_mapped(&map, 16, n_words, owned.len()) {
+            Some(mapped) => {
+                assert!(mapped.is_mapped());
+                assert_eq!(mapped, owned);
+                assert_eq!(mapped.size_bits(), owned.size_bits());
+                let mut a = BitReader::new(&owned);
+                let mut b = BitReader::new(&mapped);
+                while let Some(bit) = a.read_bit() {
+                    assert_eq!(b.read_bit(), Some(bit));
+                }
+                assert_eq!(b.read_bit(), None);
+                // bitlen overrunning the words must be rejected
+                assert!(BitBuf::from_mapped(&map, 16, n_words, n_words * 64 + 1).is_none());
+                // misaligned byte offset must be rejected
+                assert!(BitBuf::from_mapped(&map, 17, n_words, owned.len()).is_none());
+            }
+            // heap backend (Miri / SHAM_PORTABLE_MMAP / non-Linux):
+            // zero-copy views are unavailable by contract
+            None => assert_eq!(map.backend_name(), "heap"),
         }
     }
 }

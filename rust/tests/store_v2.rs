@@ -1,0 +1,250 @@
+//! Integration tests for the v2 mapped `.sham` container (DESIGN.md
+//! §11): corruption hardening on the skeleton validator, the
+//! zero-decode-at-open / one-decode-per-entropy-layer-at-first-touch
+//! contract, the byte-budgeted residency cache invariant under a
+//! randomized access sequence, and bit-identical v1 compatibility.
+//!
+//! Under Miri (`SHAM_PORTABLE_MMAP=1` in the CI lane) the mapping falls
+//! back to the heap backend; every assertion here holds on both
+//! backends — only `backend_name()` differs.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use common::synthetic_vgg_archive;
+use sham::coordinator::{infer_pure_once, Input, Metrics, ModelCache};
+use sham::formats::store;
+use sham::formats::{decode_stats, FormatId};
+use sham::nn::compressed::{CompressionCfg, ConvFormat, FcFormat};
+use sham::nn::{CompressedModel, ModelKind};
+use sham::util::prng::Prng;
+
+/// Entropy-everything compression: 3 FC matrices in HAC, 5 lowered conv
+/// matrices in sHAC — 8 entropy-coded weight streams total.
+const ENTROPY_LAYERS: u64 = 8;
+
+/// `decode_stats` counters are process-global and the harness runs
+/// tests on parallel threads — serialize every test that decodes so the
+/// exact-count assertions can't see a neighbor's passes.
+static DECODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn decode_guard() -> std::sync::MutexGuard<'static, ()> {
+    DECODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn build_model(seed: u64) -> CompressedModel {
+    let mut rng = Prng::seeded(seed);
+    let a = synthetic_vgg_archive(&mut rng);
+    let cfg = CompressionCfg {
+        fc_quant: Some((sham::quant::Kind::Cws, 8)),
+        conv_quant: Some((sham::quant::Kind::Cws, 8)),
+        fc_format: FcFormat::Fixed(FormatId::Hac),
+        conv_format: ConvFormat::Fixed(FormatId::Shac),
+        ..Default::default()
+    };
+    CompressedModel::build(ModelKind::VggMnist, &a, &cfg, &mut rng).unwrap()
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("sham_store_v2_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn image_input(rng: &mut Prng) -> Input {
+    Input::Image((0..64).map(|_| rng.next_f32()).collect())
+}
+
+/// Acceptance criterion of the v2 layout: opening performs zero
+/// entropy-stream decode passes (skeleton validation only — the Kraft
+/// check walks code lengths, never the stream), and the first inference
+/// pays exactly one counted decode pass per entropy layer. Outputs are
+/// bit-identical to the in-memory model's.
+#[test]
+fn v2_open_decodes_nothing_first_inference_once_per_entropy_layer() {
+    let _g = decode_guard();
+    let m = build_model(0x901);
+    let path = temp_path("zero_decode.sham");
+    m.save_sham(&path).unwrap();
+
+    let mark = decode_stats::total();
+    let lazy = CompressedModel::load_sham_lazy(ModelKind::VggMnist, &path).unwrap();
+    assert_eq!(
+        decode_stats::since(mark),
+        0,
+        "v2 open must not decode any entropy stream"
+    );
+    assert!(lazy.is_mapped());
+    assert_eq!(lazy.resident_weight_bytes(), 0);
+
+    let mut rng = Prng::seeded(0x902);
+    let input = image_input(&mut rng);
+    let mark = decode_stats::total();
+    let got = infer_pure_once(&lazy, input.clone()).unwrap();
+    assert_eq!(
+        decode_stats::since(mark),
+        ENTROPY_LAYERS,
+        "first inference must decode each entropy layer exactly once"
+    );
+    assert_eq!(
+        lazy.resident_weight_bytes(),
+        lazy.total_weight_bytes(),
+        "first inference materializes every layer"
+    );
+    let want = infer_pure_once(&m, input).unwrap();
+    assert_eq!(got, want, "mapped forward must be bit-identical to eager");
+}
+
+/// Truncated section tables, misaligned payload offsets, and absurd
+/// declared sizes must be rejected by the skeleton validator — before
+/// any allocation sized from attacker-controlled fields.
+#[test]
+fn v2_corrupt_containers_rejected_before_allocation() {
+    let m = build_model(0x911);
+    let path = temp_path("corrupt_base.sham");
+    m.save_sham(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let reject = |bytes: &[u8], what: &str| {
+        let p = temp_path("corrupt_case.sham");
+        std::fs::write(&p, bytes).unwrap();
+        assert!(
+            store::open_mapped(&p).is_err(),
+            "{what}: corrupt container must be rejected"
+        );
+    };
+
+    // truncated mid-table: the declared entry count no longer fits
+    reject(&good[..40.min(good.len())], "truncated section table");
+
+    // payload offset knocked off 8-byte alignment (record 0, field 3)
+    let mut bad = good.clone();
+    let off = 16 + 3 * 8;
+    bad[off] = bad[off].wrapping_add(1);
+    reject(&bad, "misaligned section offset");
+
+    // oversized entry count: must die at the u64 table-bounds check,
+    // not inside a count*64 Vec::with_capacity
+    let mut bad = good.clone();
+    bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    reject(&bad, "oversized entry count");
+
+    // oversized payload length (record 0, field 4): bounds-checked
+    // against the file before any decode
+    let mut bad = good.clone();
+    let off = 16 + 4 * 8;
+    bad[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    reject(&bad, "oversized payload length");
+
+    // the untouched original still opens and skeleton-checks
+    assert!(store::open_mapped(&path).unwrap().is_some());
+}
+
+/// The byte-budgeted LRU never exceeds its budget under a randomized
+/// multi-tenant access sequence, and an unbounded cache keeps every
+/// touched variant resident.
+#[test]
+fn model_cache_respects_byte_budget_under_random_access() {
+    let _g = decode_guard();
+    const N: usize = 4;
+    let mut rng = Prng::seeded(0x921);
+    // one seed for all tenants: equal weight-byte totals keep the
+    // half-fit budget arithmetic exact
+    let paths: Vec<PathBuf> = (0..N)
+        .map(|i| {
+            let m = build_model(0x930);
+            let p = temp_path(&format!("cache_v{i}.sham"));
+            m.save_sham(&p).unwrap();
+            p
+        })
+        .collect();
+    let models: Vec<Arc<CompressedModel>> = paths
+        .iter()
+        .map(|p| {
+            Arc::new(CompressedModel::load_sham_lazy(ModelKind::VggMnist, p).unwrap())
+        })
+        .collect();
+    let per_variant = models[0].total_weight_bytes();
+    assert!(per_variant > 0);
+    // two variants' worth of decoded residency: half the tenants fit
+    let budget = 2 * per_variant;
+    let input = image_input(&mut rng);
+
+    let cache = ModelCache::new(Some(budget), Arc::new(Metrics::new()));
+    for (i, m) in models.iter().enumerate() {
+        cache.register(&format!("v{i}"), m);
+    }
+    let mut evicted_total = 0u64;
+    for step in 0..64 {
+        let i = rng.gen_range(N);
+        cache.note_access(&format!("v{i}"));
+        // the batch the worker would run: materializes on first touch
+        let _ = infer_pure_once(&models[i], input.clone()).unwrap();
+        let resident: u64 = models.iter().map(|m| m.resident_weight_bytes()).sum();
+        assert!(
+            resident <= budget,
+            "step {step}: {resident}B resident exceeds {budget}B budget"
+        );
+        evicted_total = cache.stats().iter().map(|v| v.evictions).sum();
+    }
+    assert!(evicted_total > 0, "a half-fit budget must evict under churn");
+    let stats = cache.stats();
+    assert_eq!(stats.len(), N);
+    let accesses: u64 = stats.iter().map(|v| v.hits + v.misses).sum();
+    assert_eq!(accesses, 64, "every access is a hit or a miss");
+    for v in &stats {
+        assert!(matches!(v.backend, "mmap" | "heap"));
+        assert_eq!(v.total_bytes, per_variant);
+    }
+
+    // unbounded: everything touched stays resident
+    let unbounded = ModelCache::new(None, Arc::new(Metrics::new()));
+    let models2: Vec<Arc<CompressedModel>> = paths
+        .iter()
+        .map(|p| {
+            Arc::new(CompressedModel::load_sham_lazy(ModelKind::VggMnist, p).unwrap())
+        })
+        .collect();
+    for (i, m) in models2.iter().enumerate() {
+        unbounded.register(&format!("v{i}"), m);
+        unbounded.note_access(&format!("v{i}"));
+        let _ = infer_pure_once(m, input.clone()).unwrap();
+    }
+    let resident: u64 = models2.iter().map(|m| m.resident_weight_bytes()).sum();
+    assert_eq!(resident, per_variant * N as u64);
+}
+
+/// v1 containers stay first-class: `load` → `save_v1` reproduces the
+/// file byte-for-byte, and the lazy loader transparently falls back to
+/// the eager path with identical outputs.
+#[test]
+fn v1_archive_roundtrips_bit_identically() {
+    let _g = decode_guard();
+    let m = build_model(0x941);
+    let p1 = temp_path("v1_roundtrip.sham");
+    m.save_sham_v1(&p1).unwrap();
+    let original = std::fs::read(&p1).unwrap();
+    assert_eq!(&original[..6], b"SHAM1\0");
+
+    // decode + re-encode is byte-identical (deterministic encoder,
+    // order-preserving loader)
+    let entries = store::load(&p1).unwrap();
+    let p2 = temp_path("v1_roundtrip_copy.sham");
+    store::save_v1(&p2, &entries).unwrap();
+    assert_eq!(
+        std::fs::read(&p2).unwrap(),
+        original,
+        "v1 re-encode must be bit-identical"
+    );
+
+    // the lazy entry point on a v1 file falls back to the copying path
+    let lazy = CompressedModel::load_sham_lazy(ModelKind::VggMnist, &p1).unwrap();
+    assert!(!lazy.is_mapped());
+    assert_eq!(lazy.mapped_backend(), None);
+    let mut rng = Prng::seeded(0x942);
+    let input = image_input(&mut rng);
+    let want = infer_pure_once(&m, input.clone()).unwrap();
+    let got = infer_pure_once(&lazy, input).unwrap();
+    assert_eq!(got, want, "v1 fallback must evaluate bit-identically");
+}

@@ -35,6 +35,7 @@ BENCHES = [
     "BENCH_serving_hot_path.json",
     "BENCH_compressed_conv.json",
     "BENCH_coordinator.json",
+    "BENCH_cold_start.json",
 ]
 
 # Key prefixes whose p50 regressions gate the build (the hot-path
@@ -53,6 +54,10 @@ HOT_PREFIXES = {
     ],
     "BENCH_coordinator.json": [
         "closed/", "open/",              # reactor end-to-end latency
+    ],
+    "BENCH_cold_start.json": [
+        "cold/",                         # mapped open / first / warm / eager
+        "cache/",                        # budgeted residency sweeps
     ],
 }
 
@@ -73,6 +78,14 @@ REQUIRED_TRUE = {
         # reactor's thread count must stay O(shards+pool)
         "sheds_on_overload",
         "bounded_threads",
+    ],
+    "BENCH_cold_start.json": [
+        # v2 containers must be served by the real mmap backend, opens
+        # must decode nothing (materialization happens on first kernel
+        # touch), and the budgeted LRU must never exceed its byte budget
+        "mmap_used",
+        "lazy_layers_validated_on_touch",
+        "cache_budget_respected",
     ],
 }
 

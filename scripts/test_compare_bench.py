@@ -22,6 +22,7 @@ import compare_bench  # noqa: E402
 SHP = "BENCH_serving_hot_path.json"
 CONV = "BENCH_compressed_conv.json"
 COORD = "BENCH_coordinator.json"
+COLD = "BENCH_cold_start.json"
 
 
 def run(bench, baseline, current, threshold=1.25):
@@ -145,6 +146,27 @@ class StructuralBooleans(unittest.TestCase):
                    centroid_kernel_used=True)
         regressions, _ = run(CONV, None, cur)
         self.assertEqual(regressions, [])
+
+    def test_cold_start_policy_pinned(self):
+        # the cold-start bench's structural claims and hot sections are
+        # part of the PR-9 contract: mapped opens, touch-time decode,
+        # and the LRU byte-budget invariant all gate the build
+        self.assertEqual(
+            compare_bench.REQUIRED_TRUE[COLD],
+            ["mmap_used", "lazy_layers_validated_on_touch",
+             "cache_budget_respected"])
+        self.assertTrue(compare_bench.is_hot(COLD, "cold/open_v2"))
+        self.assertTrue(compare_bench.is_hot(COLD, "cold/first_inference"))
+        self.assertTrue(compare_bench.is_hot(COLD, "cache/budgeted_sweep"))
+
+    def test_cold_start_budget_violation_fails_even_provisional(self):
+        base = dict(results(), provisional=True)
+        cur = dict(results(), mmap_used=True,
+                   lazy_layers_validated_on_touch=True,
+                   cache_budget_respected=False)
+        regressions, _ = run(COLD, base, cur)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("cache_budget_respected", regressions[0])
 
     def test_required_true_covers_all_benches(self):
         # every gated bench declares its structural booleans — a bench
