@@ -50,7 +50,7 @@ fn main() {
                 queue_cap: 2048,
             },
             fc_threads: 1,
-            cache_bytes: None,
+            ..Default::default()
         });
         server
             .add_variant("m", model, kind.features_hlo(&art, 32))

@@ -12,10 +12,17 @@
 //! server instead of silently omitted.
 //!
 //! Writes `BENCH_coordinator.json` (gated by `scripts/compare_bench.py`
-//! on the `closed/` and `open/` sections plus the `sheds_on_overload`
-//! and `bounded_threads` structural booleans). `SHAM_BENCH_QUICK=1`
-//! shrinks the sweep for CI; the full run drives ≥ 1024 open-loop
-//! connections.
+//! on the `closed/` and `open/` sections plus the `sheds_on_overload`,
+//! `bounded_threads`, and `supervised_recovery` structural booleans).
+//! `SHAM_BENCH_QUICK=1` shrinks the sweep for CI; the full run drives
+//! ≥ 1024 open-loop connections.
+//!
+//! The `supervised_recovery` segment arms the deterministic fault
+//! registry ([`sham::testing::faults`]), injects one mid-batch worker
+//! panic, and proves end to end — over the wire, with the blocking
+//! [`Client`]'s timeouts and status-2-aware retries — that every
+//! request is answered, the supervisor restarts the worker, and the
+//! variant reports healthy afterwards.
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -27,7 +34,9 @@ use std::time::{Duration, Instant};
 use sham::coordinator::frame::{self, STATUS_OK, STATUS_OVERLOADED};
 use sham::coordinator::poll::{fd_of, Event, Interest, Poller};
 use sham::coordinator::reactor::{self, ReactorConfig};
+use sham::coordinator::tcp::{Client, ClientConfig, Response};
 use sham::coordinator::{Input, LogHistogram, Policy, Server, ServerConfig, VariantOpts};
+use sham::testing::faults::{self, Trigger};
 use sham::nn::compressed::{CompressionCfg, FcFormat};
 use sham::nn::{CompressedModel, ModelKind};
 use sham::quant::Kind;
@@ -392,6 +401,73 @@ fn build_model(rng: &mut Prng) -> CompressedModel {
     CompressedModel::build(ModelKind::VggMnist, &a, &ccfg, rng).unwrap()
 }
 
+/// Injected-fault recovery proof: arm the registry, panic one worker
+/// batch, and verify over the wire that (a) every request is answered
+/// — the panicked batch with a clean error, later ones ok, restart-
+/// window sheds retried away by `infer_retry` — (b) the supervisor
+/// counted a restart, and (c) the variant reports healthy afterwards.
+/// Returns `(supervised_recovery, restarts_observed)`.
+fn recovery_segment(addr: SocketAddr, server: &Arc<Server>) -> (bool, u64) {
+    let cfg = ClientConfig {
+        connect_timeout: Some(Duration::from_secs(2)),
+        read_timeout: Some(Duration::from_secs(5)),
+        write_timeout: Some(Duration::from_secs(5)),
+        attempts: 6,
+        ..Default::default()
+    };
+    let input = Input::Image(vec![0.125f32; PER]);
+    let restarts_before = server.metrics.worker_restarts_total.load(Ordering::Relaxed);
+    let _guard = faults::arm_guard(faults::seed_from_env(0xFA17));
+    faults::set("worker.batch", Trigger::Once);
+    let mut client =
+        Client::connect_retry(&addr.to_string(), &cfg).expect("connect for recovery");
+    let (mut oks, mut errs, mut sheds, mut lost) = (0u64, 0u64, 0u64, 0u64);
+    for _ in 0..32 {
+        match client.infer_retry("vgg", &input, &cfg) {
+            Ok(Response::Ok(_)) => oks += 1,
+            Ok(Response::Err(_)) => errs += 1,
+            Ok(Response::Overloaded(_)) => sheds += 1,
+            Err(e) => {
+                // timed out / connection dropped: a response was lost
+                eprintln!("  recovery client error: {e:#}");
+                lost += 1;
+                match Client::connect_retry(&addr.to_string(), &cfg) {
+                    Ok(c) => client = c,
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    faults::clear("worker.batch");
+    // post-incident: the variant must serve cleanly again
+    let mut post_ok = true;
+    for _ in 0..8 {
+        if !matches!(client.infer_retry("vgg", &input, &cfg), Ok(Response::Ok(_))) {
+            post_ok = false;
+        }
+    }
+    let restarts =
+        server.metrics.worker_restarts_total.load(Ordering::Relaxed) - restarts_before;
+    let panics = server.metrics.worker_panics_total.load(Ordering::Relaxed);
+    let healthy = matches!(
+        client.health("vgg"),
+        Ok(Response::Ok(v)) if v.first() == Some(&1.0)
+    );
+    let recovered = lost == 0
+        && errs >= 1 // the panicked batch answered with an error, not a hang
+        && oks >= 16
+        && post_ok
+        && restarts >= 1
+        && panics >= 1
+        && healthy;
+    println!(
+        "  answered: ok={oks} err={errs} shed={sheds} lost={lost}; \
+         restarts={restarts} panics={panics} healthy={healthy} post_ok={post_ok} \
+         -> supervised_recovery: {recovered}"
+    );
+    (recovered, restarts)
+}
+
 fn main() {
     let quick = std::env::var("SHAM_BENCH_QUICK")
         .map(|v| !v.is_empty() && v != "0")
@@ -404,7 +480,7 @@ fn main() {
     );
 
     let mut rng = Prng::seeded(0xC0FFEE);
-    let mut server = Server::new(ServerConfig { policy: Policy::default(), fc_threads: 1, cache_bytes: None });
+    let mut server = Server::new(ServerConfig::default());
     let main_policy = Policy {
         max_batch: 32,
         max_wait: Duration::from_millis(2),
@@ -486,6 +562,9 @@ fn main() {
         shed.sheds > 0 && server.metrics.rejected_total.load(Ordering::Relaxed) > 0;
     results.push(("overload/tiny_c32".into(), stats_json(&shed, 32)));
 
+    println!("-- supervised recovery (injected mid-batch worker panic) --");
+    let (supervised_recovery, recovery_restarts) = recovery_segment(addr, &server);
+
     stop.store(true, Ordering::SeqCst);
     handle.join().unwrap();
 
@@ -499,6 +578,8 @@ fn main() {
     ));
     json.push_str(&format!("  \"bounded_threads\": {bounded_threads},\n"));
     json.push_str(&format!("  \"sheds_on_overload\": {sheds_on_overload},\n"));
+    json.push_str(&format!("  \"supervised_recovery\": {supervised_recovery},\n"));
+    json.push_str(&format!("  \"recovery_restarts\": {recovery_restarts},\n"));
     json.push_str("  \"results\": {\n");
     for (i, (k, v)) in results.iter().enumerate() {
         let sep = if i + 1 < results.len() { "," } else { "" };

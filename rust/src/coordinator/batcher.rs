@@ -19,6 +19,27 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 
+/// Marker error for a request that was *shed* — declined because of
+/// capacity or variant health, not failed by the model. Front ends that
+/// can express the distinction (the wire protocol's status 2) downcast
+/// the `anyhow::Error` chain to this type and answer "overloaded, retry
+/// later" instead of a hard error.
+#[derive(Debug, Clone)]
+pub struct Shed(pub String);
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Shed {}
+
+/// True when `e`'s chain carries a [`Shed`] marker (status-2 semantics).
+pub fn is_shed(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.is::<Shed>())
+}
+
 /// One inference request's input payload.
 #[derive(Debug, Clone)]
 pub enum Input {
@@ -80,6 +101,12 @@ impl QueueHandle {
     /// matter how many replicas it probes). On a full or closed queue
     /// the whole request is handed back.
     pub fn try_enqueue(&self, req: Request) -> Result<(), Request> {
+        // injection point `batcher.enqueue` (testing::faults): a fired
+        // probe behaves exactly like a full queue, exercising the
+        // caller's shed/failover path without actually filling it.
+        if crate::testing::faults::fire("batcher.enqueue") {
+            return Err(req);
+        }
         match self.tx.try_send(req) {
             Ok(()) => {
                 self.metrics.queue_enter();
@@ -156,6 +183,12 @@ pub fn queue(policy: Policy, metrics: Arc<Metrics>) -> (QueueHandle, Receiver<Re
 /// drained — on shutdown every queued request is still formed into
 /// batches and answered before the worker exits.
 pub fn next_batch(rx: &Receiver<Request>, policy: &Policy) -> Option<Vec<Request>> {
+    // injection point `batcher.batch` (testing::faults): panics *before*
+    // the first recv so no request is popped-then-lost — the unwind hits
+    // the worker supervisor's incarnation guard and forces a restart.
+    if crate::testing::faults::fire("batcher.batch") {
+        panic!("injected fault: batcher.batch");
+    }
     let first = rx.recv().ok()?;
     let opened = Instant::now();
     let mut batch = vec![first];

@@ -3,9 +3,12 @@
 //!
 //! Request frame (little-endian, unchanged from v1):
 //!   u16  variant-name length, then the name bytes
-//!   u8   input kind: 0 = image, 1 = tokens
+//!   u8   input kind: 0 = image, 1 = tokens, 2 = health probe
 //!   kind 0: u32 n, then n f32
 //!   kind 1: u32 n_lig, n_lig i32, u32 n_prot, n_prot i32
+//!   kind 2: no payload — the reactor answers locally with the named
+//!           variant's supervision state (an empty name aggregates all
+//!           variants); see [`Parse::Health`]
 //! Response frame (v2 adds status 2):
 //!   u8   status: 0 = ok, 1 = error, 2 = overloaded (load shed)
 //!   ok:         u32 n, then n f32 (model outputs)
@@ -135,6 +138,12 @@ pub enum Parse {
         input: Input,
         consumed: usize,
     },
+    /// A health probe (kind 2): answered by the front end itself, never
+    /// queued. The reply is a `STATUS_OK` frame whose f32 payload is
+    /// `[healthy, replicas, restarts, trips]` for a named variant, or
+    /// an aggregate `[healthy_variants, unhealthy_variants, restarts,
+    /// trips]` when the name is empty; unknown names get `STATUS_ERR`.
+    Health { name: String, consumed: usize },
     /// A protocol violation. `consumed` buffer bytes belong to the bad
     /// frame's header; `resync` (when `Some`) tells the connection how
     /// to skip the rest of the frame and keep serving. `None` means
@@ -257,6 +266,7 @@ pub fn parse_request(buf: &[u8], max_frame_bytes: usize) -> Parse {
                 consumed: c.pos,
             }
         }
+        2 => Parse::Health { name, consumed: c.pos },
         k => Parse::Malformed {
             // the payload length depends on the kind — framing is lost
             reason: format!("unknown input kind {k}"),
@@ -291,6 +301,15 @@ pub fn encode_request(out: &mut Vec<u8>, variant: &str, input: &Input) {
             }
         }
     }
+}
+
+/// Append a health-probe request frame (kind 2, no payload). An empty
+/// `variant` asks for the server-wide aggregate.
+pub fn encode_health_request(out: &mut Vec<u8>, variant: &str) {
+    let nb = variant.as_bytes();
+    out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+    out.extend_from_slice(nb);
+    out.push(2);
 }
 
 /// Append an ok-response frame.
@@ -382,6 +401,35 @@ mod tests {
             Parse::Request { name, consumed, .. } => {
                 assert_eq!(name, "a");
                 assert_eq!(consumed, first);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn health_probe_roundtrip_and_prefixes() {
+        let mut buf = Vec::new();
+        encode_health_request(&mut buf, "vgg");
+        match parse_request(&buf, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Health { name, consumed } => {
+                assert_eq!(name, "vgg");
+                assert_eq!(consumed, buf.len());
+            }
+            p => panic!("{p:?}"),
+        }
+        for cut in 0..buf.len() {
+            match parse_request(&buf[..cut], DEFAULT_MAX_FRAME_BYTES) {
+                Parse::Incomplete => {}
+                p => panic!("prefix of {cut} bytes parsed as {p:?}"),
+            }
+        }
+        // empty name = server-wide aggregate
+        let mut agg = Vec::new();
+        encode_health_request(&mut agg, "");
+        match parse_request(&agg, DEFAULT_MAX_FRAME_BYTES) {
+            Parse::Health { name, consumed } => {
+                assert_eq!(name, "");
+                assert_eq!(consumed, agg.len());
             }
             p => panic!("{p:?}"),
         }

@@ -163,6 +163,20 @@ pub struct Metrics {
     /// Decoded weight bytes resident across cache-managed variants
     /// (gauge, accounting bytes — see `LazyMatrix::resident_bytes`).
     pub cache_resident_bytes: AtomicU64,
+    /// Worker incarnations restarted by the supervisor (panic or init
+    /// failure, any variant/replica).
+    pub worker_restarts_total: AtomicU64,
+    /// Worker incarnations that ended in a panic (subset of restarts'
+    /// causes; an init error restarts without a panic).
+    pub worker_panics_total: AtomicU64,
+    /// Reactor shards restarted after a shard-loop panic.
+    pub shard_restarts_total: AtomicU64,
+    /// Circuit-breaker trips: a variant exhausted its restart budget
+    /// inside the budget window and was marked unhealthy.
+    pub breaker_trips_total: AtomicU64,
+    /// Variants currently marked unhealthy (gauge; monotone under the
+    /// terminal breaker — a tripped variant stays open).
+    pub variants_unhealthy: AtomicU64,
     /// Per-request end-to-end latency in ns.
     latency: LogHistogram,
     /// Dispatched batch sizes.
@@ -257,6 +271,19 @@ impl Metrics {
             s.push_str(&format!(
                 " cache[hits={hits} misses={misses} evictions={evict} resident={}B]",
                 self.cache_resident_bytes.load(Ordering::Relaxed)
+            ));
+        }
+        let (restarts, panics, strat, trips, sick) = (
+            self.worker_restarts_total.load(Ordering::Relaxed),
+            self.worker_panics_total.load(Ordering::Relaxed),
+            self.shard_restarts_total.load(Ordering::Relaxed),
+            self.breaker_trips_total.load(Ordering::Relaxed),
+            self.variants_unhealthy.load(Ordering::Relaxed),
+        );
+        if restarts + panics + strat + trips + sick > 0 {
+            s.push_str(&format!(
+                " supervisor[restarts={restarts} panics={panics} \
+                 shard_restarts={strat} trips={trips} unhealthy={sick}]"
             ));
         }
         if let Some(lat) = self.latency_summary() {
@@ -381,6 +408,24 @@ mod tests {
         assert!(m.render().contains("requests=0"));
         // the cache section only appears once the cache saw traffic
         assert!(!m.render().contains("cache["));
+        // likewise the supervisor section only appears after an incident
+        assert!(!m.render().contains("supervisor["));
+    }
+
+    #[test]
+    fn supervisor_counters_render_when_active() {
+        let m = Metrics::new();
+        m.worker_restarts_total.fetch_add(3, Ordering::Relaxed);
+        m.worker_panics_total.fetch_add(2, Ordering::Relaxed);
+        m.breaker_trips_total.fetch_add(1, Ordering::Relaxed);
+        m.variants_unhealthy.fetch_add(1, Ordering::Relaxed);
+        let text = m.render();
+        assert!(
+            text.contains(
+                "supervisor[restarts=3 panics=2 shard_restarts=0 trips=1 unhealthy=1]"
+            ),
+            "render: {text}"
+        );
     }
 
     #[test]

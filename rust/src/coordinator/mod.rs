@@ -13,10 +13,11 @@ pub mod reactor;
 pub mod server;
 pub mod tcp;
 
-pub use batcher::{Input, Policy, Responder};
+pub use batcher::{is_shed, Input, Policy, Responder, Shed};
 pub use metrics::{HistSummary, LogHistogram, Metrics};
 pub use reactor::ReactorConfig;
 pub use server::{
     infer_pure_once, CacheVariantStat, ModelCache, Server, ServerConfig, SubmitOutcome,
-    VariantOpts,
+    SupervisorPolicy, VariantHealthStat, VariantOpts,
 };
+pub use tcp::{Client, ClientConfig, Response};

@@ -31,18 +31,19 @@
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::batcher::Responder;
+use crate::coordinator::batcher::{is_shed, Responder};
 use crate::coordinator::frame::{self, advance_discard, Discard, Parse};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::poll::{fd_of, Event, Interest, Poller, Waker};
-use crate::coordinator::server::{Server, SubmitOutcome};
+use crate::coordinator::server::{panic_message, Server, SubmitOutcome};
 
 /// Reactor knobs. `Default` is sized for tests and modest hosts; the
 /// CLI exposes each as a flag.
@@ -98,10 +99,32 @@ enum ShardMsg {
 /// the accept loop and with worker completion callbacks.
 struct ShardShared {
     inbox: Mutex<Vec<ShardMsg>>,
-    waker: Waker,
+    /// Behind a mutex because the shard supervisor replaces it when a
+    /// panicked shard incarnation is respawned with a fresh poller —
+    /// completion callbacks created before the restart must wake the
+    /// *new* poller, not the dead one.
+    waker: Mutex<Waker>,
     /// Connections currently assigned to this shard (for least-loaded
     /// placement).
     conns: AtomicUsize,
+}
+
+impl ShardShared {
+    /// Poison-recovering inbox lock: a shard incarnation that panicked
+    /// while holding it must not wedge the callbacks that outlive it
+    /// (`Vec<ShardMsg>` has no invariant a partial push can break — the
+    /// push either happened or it did not).
+    fn inbox(&self) -> MutexGuard<'_, Vec<ShardMsg>> {
+        self.inbox.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wake(&self) {
+        self.waker.lock().unwrap_or_else(|p| p.into_inner()).wake();
+    }
+
+    fn set_waker(&self, w: Waker) {
+        *self.waker.lock().unwrap_or_else(|p| p.into_inner()) = w;
+    }
 }
 
 /// One connection's state machine.
@@ -156,6 +179,11 @@ impl Conn {
 
     /// Non-blocking read until `WouldBlock`/EOF or the buffer cap.
     fn read_some(&mut self, cap: usize) -> io::Result<()> {
+        // injection point `reactor.read` (testing::faults): behaves as a
+        // hard socket read error — the connection closes cleanly
+        if crate::testing::faults::fire("reactor.read") {
+            return Err(io::Error::other("injected fault: reactor.read"));
+        }
         let mut tmp = [0u8; 16384];
         loop {
             if self.rbuf.len() - self.rpos >= cap {
@@ -213,17 +241,22 @@ impl Conn {
                         let mut f = Vec::new();
                         match r {
                             Ok(v) => frame::encode_ok(&mut f, &v),
+                            // a shed after queueing (replica restart /
+                            // breaker) keeps status-2 semantics on the
+                            // wire: the client may retry
+                            Err(e) if is_shed(&e) => frame::encode_status(
+                                &mut f,
+                                frame::STATUS_OVERLOADED,
+                                &format!("{e:#}"),
+                            ),
                             Err(e) => frame::encode_status(
                                 &mut f,
                                 frame::STATUS_ERR,
                                 &format!("{e:#}"),
                             ),
                         }
-                        sh.inbox
-                            .lock()
-                            .unwrap()
-                            .push(ShardMsg::Done { slot, gen, seq, frame: f });
-                        sh.waker.wake();
+                        sh.inbox().push(ShardMsg::Done { slot, gen, seq, frame: f });
+                        sh.wake();
                     }));
                     match server.try_submit(&name, input, resp) {
                         SubmitOutcome::Accepted => {}
@@ -246,6 +279,46 @@ impl Conn {
                             self.fill(seq, f);
                         }
                     }
+                }
+                Parse::Health { name, consumed } => {
+                    // answered locally — a health probe must work even
+                    // when every worker is down or the breaker is open
+                    self.rpos += consumed;
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    self.pending.push_back(None);
+                    let mut f = Vec::new();
+                    if name.is_empty() {
+                        let stats = server.health_stats();
+                        let healthy =
+                            stats.iter().filter(|s| s.healthy).count() as f32;
+                        let sick =
+                            stats.iter().filter(|s| !s.healthy).count() as f32;
+                        let restarts: u64 = stats.iter().map(|s| s.restarts).sum();
+                        let trips: u64 = stats.iter().map(|s| s.trips).sum();
+                        frame::encode_ok(
+                            &mut f,
+                            &[healthy, sick, restarts as f32, trips as f32],
+                        );
+                    } else {
+                        match server.health_of(&name) {
+                            Some(h) => frame::encode_ok(
+                                &mut f,
+                                &[
+                                    if h.healthy { 1.0 } else { 0.0 },
+                                    h.replicas as f32,
+                                    h.restarts as f32,
+                                    h.trips as f32,
+                                ],
+                            ),
+                            None => frame::encode_status(
+                                &mut f,
+                                frame::STATUS_ERR,
+                                &format!("unknown variant `{name}`"),
+                            ),
+                        }
+                    }
+                    self.fill(seq, f);
                 }
                 Parse::Malformed { reason, consumed, resync } => {
                     metrics.protocol_errors_total.fetch_add(1, Ordering::Relaxed);
@@ -272,6 +345,11 @@ impl Conn {
     /// Move contiguously-ready responses into the write buffer and
     /// write until `WouldBlock` or empty.
     fn flush(&mut self) -> io::Result<()> {
+        // injection point `reactor.write` (testing::faults): behaves as
+        // a hard socket write error — the connection closes cleanly
+        if crate::testing::faults::fire("reactor.write") {
+            return Err(io::Error::other("injected fault: reactor.write"));
+        }
         loop {
             while matches!(self.pending.front(), Some(Some(_))) {
                 let f = self.pending.pop_front().unwrap().unwrap();
@@ -463,7 +541,12 @@ impl Shard {
                 eprintln!("reactor shard poll: {e}");
                 break;
             }
-            let msgs = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            // injection point `reactor.inbox` (testing::faults): panics
+            // the shard loop — the unwind the shard supervisor absorbs
+            if crate::testing::faults::fire("reactor.inbox") {
+                panic!("injected fault: reactor.inbox");
+            }
+            let msgs = std::mem::take(&mut *self.shared.inbox());
             for msg in msgs {
                 match msg {
                     ShardMsg::Accept(stream) => {
@@ -497,6 +580,88 @@ impl Shard {
         for slot in 0..self.slots.len() {
             if self.slots[slot].is_some() {
                 self.close(slot);
+            }
+        }
+    }
+}
+
+/// Build a shard poller, falling back to the portable scan poller when
+/// the OS-backed one cannot be created (a respawning supervisor must
+/// not die on a transient fd shortage).
+fn make_poller(cfg: &ReactorConfig) -> Poller {
+    if cfg.portable_poll {
+        return Poller::portable();
+    }
+    match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!(
+                "reactor: create poller failed ({e}); using portable scan poller"
+            );
+            Poller::portable()
+        }
+    }
+}
+
+/// Run shard `i`'s loop under supervision: a panicked incarnation is
+/// respawned with a fresh poller (its waker swapped into the shared
+/// handle so pre-restart completion callbacks reach the new poller).
+/// The dead incarnation's connections are gone — clients see a closed
+/// socket and reconnect — but the accept loop, the other shards, and
+/// the workers keep serving; the connection gauges are reconciled here.
+fn supervise_shard(
+    i: usize,
+    initial_poller: Poller,
+    shared: Arc<ShardShared>,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    cfg: ReactorConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut poller = Some(initial_poller);
+    let mut restarts: u32 = 0;
+    loop {
+        let p = poller.take().unwrap_or_else(|| {
+            let p = make_poller(&cfg);
+            shared.set_waker(p.waker());
+            p
+        });
+        let shard = Shard {
+            poller: p,
+            shared: shared.clone(),
+            server: server.clone(),
+            metrics: metrics.clone(),
+            cfg: cfg.clone(),
+            slots: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        };
+        let stop2 = stop.clone();
+        // SUPERVISED: shard guard — a panicking shard loop is respawned
+        // with a fresh poller under linear backoff; it never silently
+        // kills the front end.
+        match catch_unwind(AssertUnwindSafe(move || shard.run(stop2))) {
+            Ok(()) => return, // clean stop/drain
+            Err(payload) => {
+                metrics.shard_restarts_total.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "reactor shard {i} panicked: {}; restarting",
+                    panic_message(payload.as_ref())
+                );
+                // the dead incarnation dropped its connections without
+                // running `close`: reconcile the open-connection gauges
+                let stale = shared.conns.swap(0, Ordering::SeqCst) as u64;
+                if stale > 0 {
+                    metrics.conns_open.fetch_sub(stale, Ordering::Relaxed);
+                }
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                restarts += 1;
+                std::thread::sleep(Duration::from_millis(
+                    25 * restarts.min(40) as u64,
+                ));
             }
         }
     }
@@ -538,25 +703,20 @@ pub fn serve(
         };
         let shared = Arc::new(ShardShared {
             inbox: Mutex::new(Vec::new()),
-            waker: poller.waker(),
+            waker: Mutex::new(poller.waker()),
             conns: AtomicUsize::new(0),
         });
-        let shard = Shard {
-            poller,
-            shared: shared.clone(),
-            server: server.clone(),
-            metrics: metrics.clone(),
-            cfg: cfg.clone(),
-            slots: Vec::new(),
-            gens: Vec::new(),
-            free: Vec::new(),
-            live: 0,
-        };
+        let shared2 = shared.clone();
+        let server2 = server.clone();
+        let metrics2 = metrics.clone();
+        let cfg2 = cfg.clone();
         let stop2 = stop.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("sham-shard-{i}"))
-                .spawn(move || shard.run(stop2))
+                .spawn(move || {
+                    supervise_shard(i, poller, shared2, server2, metrics2, cfg2, stop2)
+                })
                 .context("spawn shard")?,
         );
         shareds.push(shared);
@@ -597,8 +757,8 @@ pub fn serve(
                         .expect("at least one shard");
                     metrics.conns_open.fetch_add(1, Ordering::Relaxed);
                     shareds[si].conns.fetch_add(1, Ordering::Relaxed);
-                    shareds[si].inbox.lock().unwrap().push(ShardMsg::Accept(stream));
-                    shareds[si].waker.wake();
+                    shareds[si].inbox().push(ShardMsg::Accept(stream));
+                    shareds[si].wake();
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -610,7 +770,7 @@ pub fn serve(
         }
     }
     for s in &shareds {
-        s.waker.wake();
+        s.wake();
     }
     for h in handles {
         let _ = h.join();

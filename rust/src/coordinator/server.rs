@@ -13,16 +13,35 @@
 //! private queue + worker, and submissions round-robin across them —
 //! falling over to the next replica when one queue is full, shedding
 //! only when *all* replicas are saturated.
+//!
+//! ## Supervision (DESIGN.md §12)
+//!
+//! Each replica thread is a *supervisor* around successive worker
+//! *incarnations*. A panic mid-batch answers every request of that
+//! batch with an error (responders are held outside the unwind), ends
+//! the incarnation, and restarts the worker — fresh engine, fresh
+//! scratch — after a jittered exponential backoff. Restarts across a
+//! variant's replicas share a sliding-window budget
+//! ([`SupervisorPolicy`]); exhausting it trips the variant's circuit
+//! breaker: the variant is marked unhealthy, new submissions shed with
+//! status 2 at admission, and already-queued requests are drained and
+//! shed instead of waiting on a queue nobody drains.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::batcher::{self, Input, Policy, QueueHandle, Request, Responder};
+use crate::coordinator::batcher::{
+    self, Input, Policy, QueueHandle, Request, Responder, Shed,
+};
+use crate::util::prng::Prng;
 use crate::coordinator::metrics::Metrics;
 use crate::formats::{pool, Workspace};
 use crate::io::TestSet;
@@ -55,11 +74,47 @@ pub struct ServerConfig {
     /// are unmanaged (their weights are always decoded) and never count
     /// against the budget.
     pub cache_bytes: Option<u64>,
+    /// Worker restart/backoff/breaker policy (module docs, §12).
+    pub supervisor: SupervisorPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { policy: Policy::default(), fc_threads: 1, cache_bytes: None }
+        ServerConfig {
+            policy: Policy::default(),
+            fc_threads: 1,
+            cache_bytes: None,
+            supervisor: SupervisorPolicy::default(),
+        }
+    }
+}
+
+/// Restart and circuit-breaker policy for the worker supervisors.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorPolicy {
+    /// Backoff before the first restart; doubles per consecutive
+    /// failure up to [`SupervisorPolicy::backoff_max`].
+    pub backoff_base: Duration,
+    /// Backoff ceiling (also caps the jittered value).
+    pub backoff_max: Duration,
+    /// Restarts tolerated per variant (across its replicas) inside
+    /// [`SupervisorPolicy::window`] before the breaker trips. The
+    /// breaker is *terminal*: a variant that burns through its budget
+    /// is treated as poisoned (bad weights, deterministic crash), not
+    /// transient — it sheds until the operator restarts the process.
+    pub restart_budget: u32,
+    /// Sliding window over which restarts are counted.
+    pub window: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            backoff_base: Duration::from_millis(25),
+            backoff_max: Duration::from_secs(2),
+            restart_budget: 5,
+            window: Duration::from_secs(30),
+        }
     }
 }
 
@@ -276,10 +331,81 @@ pub enum SubmitOutcome {
     UnknownVariant(Responder),
 }
 
+/// Shared supervision state for one variant (all replicas).
+struct VariantHealth {
+    name: String,
+    /// Cleared when the breaker trips; checked at admission.
+    healthy: AtomicBool,
+    restarts: AtomicU64,
+    trips: AtomicU64,
+    /// Restart timestamps inside the sliding budget window, shared
+    /// across the variant's replicas so a variant-wide crash storm
+    /// trips the breaker no matter how the panics spread over queues.
+    window: Mutex<VecDeque<Instant>>,
+}
+
+impl VariantHealth {
+    fn new(name: &str) -> VariantHealth {
+        VariantHealth {
+            name: name.to_string(),
+            healthy: AtomicBool::new(true),
+            restarts: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            window: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Record one restart; returns true when the variant has now
+    /// exceeded its budget for the window (caller should trip).
+    fn note_restart(&self, sup: &SupervisorPolicy) -> bool {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        let mut w = self.window.lock().unwrap_or_else(|p| p.into_inner());
+        let now = Instant::now();
+        w.push_back(now);
+        while w
+            .front()
+            .map(|t| now.duration_since(*t) > sup.window)
+            .unwrap_or(false)
+        {
+            w.pop_front();
+        }
+        w.len() as u64 > sup.restart_budget as u64
+    }
+
+    /// Open the breaker (idempotent; only the first trip counts).
+    fn trip(&self, metrics: &Metrics) {
+        if self.healthy.swap(false, Ordering::SeqCst) {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            metrics.breaker_trips_total.fetch_add(1, Ordering::Relaxed);
+            metrics.variants_unhealthy.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "variant `{}`: circuit breaker OPEN — restart budget \
+                 exhausted; shedding requests",
+                self.name
+            );
+        }
+    }
+}
+
+/// Point-in-time supervision view of one variant, for the status
+/// thread, `health_stats`, and the wire health frame.
+#[derive(Debug, Clone)]
+pub struct VariantHealthStat {
+    pub name: String,
+    pub healthy: bool,
+    pub replicas: usize,
+    /// Worker incarnations restarted (panic or init failure).
+    pub restarts: u64,
+    /// Times the circuit breaker tripped (0 or 1 per variant — the
+    /// breaker is terminal).
+    pub trips: u64,
+}
+
 struct VariantHandle {
     queues: Vec<QueueHandle>,
     workers: Vec<JoinHandle<()>>,
     rr: AtomicUsize,
+    health: Arc<VariantHealth>,
 }
 
 /// Multi-variant inference server.
@@ -367,36 +493,33 @@ impl Server {
         let fc_threads = self.cfg.fc_threads;
         let model = Arc::new(model);
         self.cache.register(name, &model);
+        let health = Arc::new(VariantHealth::new(name));
         let mut queues = Vec::with_capacity(opts.replicas);
         let mut workers = Vec::with_capacity(opts.replicas);
         for r in 0..opts.replicas {
             let (queue, rx) = batcher::queue(policy, self.metrics.clone());
-            let metrics = self.metrics.clone();
-            let vname = name.to_string();
-            let model = model.clone();
-            let backend = backend.clone();
+            let ctx = ReplicaCtx {
+                vname: name.to_string(),
+                replica: r,
+                model: model.clone(),
+                backend: backend.clone(),
+                rx,
+                policy,
+                metrics: self.metrics.clone(),
+                fc_threads,
+                health: health.clone(),
+                sup: self.cfg.supervisor,
+            };
             let worker = std::thread::Builder::new()
                 .name(format!("sham-worker-{name}-{r}"))
-                .spawn(move || {
-                    let result = match backend {
-                        Backend::Pjrt(hlo) => {
-                            worker_loop(&model, &hlo, rx, policy, metrics, fc_threads)
-                        }
-                        Backend::Pure => {
-                            worker_loop_pure(&model, rx, policy, metrics, fc_threads)
-                        }
-                    };
-                    if let Err(e) = result {
-                        eprintln!("worker `{vname}`/{r} exited with error: {e:#}");
-                    }
-                })
+                .spawn(move || supervise_worker(ctx))
                 .context("spawn worker")?;
             queues.push(queue);
             workers.push(worker);
         }
         self.variants.insert(
             name.to_string(),
-            VariantHandle { queues, workers, rr: AtomicUsize::new(0) },
+            VariantHandle { queues, workers, rr: AtomicUsize::new(0), health },
         );
         Ok(())
     }
@@ -411,6 +534,12 @@ impl Server {
             Some(v) => v,
             None => return SubmitOutcome::UnknownVariant(resp),
         };
+        // breaker check before any queueing: an unhealthy variant sheds
+        // at admission with status 2 — never into a queue nobody drains
+        if !v.health.healthy.load(Ordering::Acquire) {
+            self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+            return SubmitOutcome::Overloaded(resp);
+        }
         // recency + hit/miss accounting + budget enforcement happen at
         // admission; the miss's materialization is paid inside the
         // worker's next batch (first kernel touch)
@@ -472,6 +601,34 @@ impl Server {
     pub fn cache_stats(&self) -> Vec<CacheVariantStat> {
         self.cache.stats()
     }
+
+    /// Supervision snapshot of every variant, sorted by name.
+    pub fn health_stats(&self) -> Vec<VariantHealthStat> {
+        let mut out: Vec<VariantHealthStat> = self
+            .variants
+            .iter()
+            .map(|(name, v)| VariantHealthStat {
+                name: name.clone(),
+                healthy: v.health.healthy.load(Ordering::Acquire),
+                replicas: v.queues.len(),
+                restarts: v.health.restarts.load(Ordering::Relaxed),
+                trips: v.health.trips.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Supervision snapshot of one variant (`None` when unknown).
+    pub fn health_of(&self, variant: &str) -> Option<VariantHealthStat> {
+        self.variants.get(variant).map(|v| VariantHealthStat {
+            name: variant.to_string(),
+            healthy: v.health.healthy.load(Ordering::Acquire),
+            replicas: v.queues.len(),
+            restarts: v.health.restarts.load(Ordering::Relaxed),
+            trips: v.health.trips.load(Ordering::Relaxed),
+        })
+    }
 }
 
 /// One-shot pure inference without a server: marshal a single request
@@ -513,16 +670,185 @@ impl Drop for Server {
     }
 }
 
+/// Everything one replica's supervisor owns across worker incarnations.
+/// The `Receiver` in particular outlives any single incarnation: a
+/// restart never loses the queue.
+struct ReplicaCtx {
+    vname: String,
+    replica: usize,
+    model: Arc<CompressedModel>,
+    backend: Backend,
+    rx: Receiver<Request>,
+    policy: Policy,
+    metrics: Arc<Metrics>,
+    fc_threads: usize,
+    health: Arc<VariantHealth>,
+    sup: SupervisorPolicy,
+}
+
+/// How a worker incarnation ended (panics are reported separately by
+/// the incarnation guard).
+enum WorkerExit {
+    /// Queue closed and drained — the server is shutting down.
+    Shutdown,
+    /// A batch panicked; every request of that batch was already
+    /// answered with an error. Restart the worker.
+    Panicked,
+}
+
+/// Best-effort text of a panic payload for operator logs.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Answer one request with a status-2 shed (counted as rejected, not as
+/// a response — the request was declined, not served).
+fn shed_request(req: Request, why: &str, metrics: &Metrics) {
+    metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+    req.resp.respond(Err(anyhow::Error::new(Shed(why.to_string()))));
+}
+
+/// Sleep `backoff` in short slices, shedding anything that lands on the
+/// queue meanwhile (a restarting replica must not sit on requests that
+/// only time out). Returns false when the queue closed — shutdown.
+fn sleep_draining(ctx: &ReplicaCtx, backoff: Duration, why: &str) -> bool {
+    let slice = Duration::from_millis(5);
+    let start = Instant::now();
+    loop {
+        match ctx.rx.try_recv() {
+            Ok(req) => {
+                ctx.metrics.queue_leave(1);
+                shed_request(req, why, &ctx.metrics);
+            }
+            Err(TryRecvError::Disconnected) => return false,
+            Err(TryRecvError::Empty) => {
+                let left = backoff.saturating_sub(start.elapsed());
+                if left.is_zero() {
+                    return true;
+                }
+                std::thread::sleep(left.min(slice));
+            }
+        }
+    }
+}
+
+/// Terminal breaker-open state: shed everything until the queue closes.
+fn drain_and_shed(ctx: &ReplicaCtx, why: &str) {
+    while let Ok(req) = ctx.rx.recv() {
+        ctx.metrics.queue_leave(1);
+        shed_request(req, why, &ctx.metrics);
+    }
+}
+
+/// Exponential backoff with multiplicative jitter in [0.5, 1.5), so
+/// replicas that crashed together do not restart in lockstep.
+fn jittered_backoff(rng: &mut Prng, sup: &SupervisorPolicy, attempt: u32) -> Duration {
+    let exp = attempt.saturating_sub(1).min(6);
+    let base = sup
+        .backoff_base
+        .saturating_mul(1u32 << exp)
+        .min(sup.backoff_max);
+    let jittered = base.as_secs_f64() * (0.5 + rng.next_f64());
+    Duration::from_secs_f64(jittered).min(sup.backoff_max)
+}
+
+/// The per-replica supervisor: runs worker incarnations until clean
+/// shutdown, restarting after panics/init failures with jittered
+/// exponential backoff under the variant's shared restart budget.
+fn supervise_worker(ctx: ReplicaCtx) {
+    // deterministic per-replica jitter stream (FNV-1a over the name)
+    let mut seed = 0xcbf2_9ce4_8422_2325u64;
+    for b in ctx.vname.bytes() {
+        seed = (seed ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    let mut rng = Prng::seeded(seed ^ ctx.replica as u64);
+    let mut attempt: u32 = 0;
+    loop {
+        let born = Instant::now();
+        // SUPERVISED: incarnation guard — any panic escaping the worker
+        // loop (engine init, batch formation) restarts this replica
+        // under the jittered-backoff budget instead of killing the
+        // thread and orphaning its queue.
+        let exit = catch_unwind(AssertUnwindSafe(|| match &ctx.backend {
+            Backend::Pjrt(hlo) => worker_loop(
+                &ctx.model, hlo, &ctx.rx, ctx.policy, &ctx.metrics, ctx.fc_threads,
+            ),
+            Backend::Pure => worker_loop_pure(
+                &ctx.model, &ctx.rx, ctx.policy, &ctx.metrics, ctx.fc_threads,
+            ),
+        }));
+        match exit {
+            Ok(Ok(WorkerExit::Shutdown)) => return,
+            Ok(Ok(WorkerExit::Panicked)) => {
+                ctx.metrics.worker_panics_total.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "worker `{}`/{} panicked mid-batch; restarting",
+                    ctx.vname, ctx.replica
+                );
+            }
+            Ok(Err(e)) => {
+                eprintln!(
+                    "worker `{}`/{} failed: {e:#}; restarting",
+                    ctx.vname, ctx.replica
+                );
+            }
+            Err(payload) => {
+                ctx.metrics.worker_panics_total.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "worker `{}`/{} panicked outside a batch: {}; restarting",
+                    ctx.vname,
+                    ctx.replica,
+                    panic_message(payload.as_ref())
+                );
+            }
+        }
+        // an incarnation that served a full budget window counts as
+        // recovered: reset the consecutive-failure backoff shaping
+        if born.elapsed() > ctx.sup.window {
+            attempt = 0;
+        }
+        attempt += 1;
+        ctx.metrics.worker_restarts_total.fetch_add(1, Ordering::Relaxed);
+        if ctx.health.note_restart(&ctx.sup) {
+            ctx.health.trip(&ctx.metrics);
+        }
+        if !ctx.health.healthy.load(Ordering::Acquire) {
+            // breaker open (possibly tripped by a sibling replica):
+            // stop restarting, shed until the queue closes
+            let why = format!(
+                "variant `{}` unhealthy (circuit breaker open) — request shed",
+                ctx.vname
+            );
+            drain_and_shed(&ctx, &why);
+            return;
+        }
+        let backoff = jittered_backoff(&mut rng, &ctx.sup, attempt);
+        let why = format!(
+            "variant `{}` replica {} restarting — request shed",
+            ctx.vname, ctx.replica
+        );
+        if !sleep_draining(&ctx, backoff, &why) {
+            return; // queue closed during backoff: shutdown
+        }
+    }
+}
+
 /// Per-replica worker: builds its own PJRT engine, then loops forming
 /// batches and answering requests.
 fn worker_loop(
     model: &CompressedModel,
     features_hlo: &PathBuf,
-    rx: std::sync::mpsc::Receiver<Request>,
+    rx: &Receiver<Request>,
     policy: Policy,
-    metrics: Arc<Metrics>,
+    metrics: &Metrics,
     fc_threads: usize,
-) -> Result<()> {
+) -> Result<WorkerExit> {
     let client = PjRtClient::cpu().context("create PJRT client")?;
     let engine = Engine::load(&client, features_hlo)?;
     let feat_dim = model.kind.feature_dim();
@@ -552,16 +878,32 @@ fn worker_loop(
     // Per-worker reusable FC workspace: after warm-up the whole FC stack
     // runs with zero output allocations per batch.
     let mut ws = Workspace::new();
-    while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+    while let Some(reqs) = batcher::next_batch(rx, &policy) {
         metrics.queue_leave(reqs.len());
         metrics.record_batch(reqs.len());
-        let result = run_batch(
-            model, &engine, &const_inputs, &reqs, batch, feat_dim, fc_threads,
-            &mut ws,
-        );
-        answer_batch(reqs, result, &metrics);
+        // SUPERVISED: per-batch guard — `reqs` lives outside the
+        // closure, so a panicking batch still answers every request
+        // with an error before the supervisor restarts this replica.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run_batch(
+                model, &engine, &const_inputs, &reqs, batch, feat_dim,
+                fc_threads, &mut ws,
+            )
+        }));
+        match caught {
+            Ok(result) => answer_batch(reqs, result, metrics),
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                answer_batch(
+                    reqs,
+                    Err(anyhow!("worker panicked mid-batch: {msg}")),
+                    metrics,
+                );
+                return Ok(WorkerExit::Panicked);
+            }
+        }
     }
-    Ok(())
+    Ok(WorkerExit::Shutdown)
 }
 
 /// Grow-only per-worker buffers for the pure backend: the forward
@@ -579,24 +921,40 @@ struct PureScratch {
 /// worker's reusable workspace.
 fn worker_loop_pure(
     model: &CompressedModel,
-    rx: std::sync::mpsc::Receiver<Request>,
+    rx: &Receiver<Request>,
     policy: Policy,
-    metrics: Arc<Metrics>,
+    metrics: &Metrics,
     fc_threads: usize,
-) -> Result<()> {
+) -> Result<WorkerExit> {
     let mut scratch = PureScratch {
         ws: Workspace::new(),
         imgs: Vec::new(),
         lig: Vec::new(),
         prot: Vec::new(),
     };
-    while let Some(reqs) = batcher::next_batch(&rx, &policy) {
+    while let Some(reqs) = batcher::next_batch(rx, &policy) {
         metrics.queue_leave(reqs.len());
         metrics.record_batch(reqs.len());
-        let result = run_batch_pure(model, &reqs, fc_threads, &mut scratch);
-        answer_batch(reqs, result, &metrics);
+        // SUPERVISED: per-batch guard — `reqs` lives outside the
+        // closure, so a panicking batch still answers every request
+        // with an error before the supervisor restarts this replica.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run_batch_pure(model, &reqs, fc_threads, &mut scratch)
+        }));
+        match caught {
+            Ok(result) => answer_batch(reqs, result, metrics),
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                answer_batch(
+                    reqs,
+                    Err(anyhow!("worker panicked mid-batch: {msg}")),
+                    metrics,
+                );
+                return Ok(WorkerExit::Panicked);
+            }
+        }
     }
-    Ok(())
+    Ok(WorkerExit::Shutdown)
 }
 
 /// Fan one batch result out to its requests (per-request rows on
@@ -631,6 +989,12 @@ fn run_batch_pure<'w>(
 ) -> Result<&'w Mat> {
     let PureScratch { ref mut ws, ref mut imgs, ref mut lig, ref mut prot } =
         *scratch;
+    // injection point `worker.batch` (testing::faults): the canonical
+    // mid-batch crash — panics inside the per-batch guard, after the
+    // batch was formed and before any request is answered
+    if crate::testing::faults::fire("worker.batch") {
+        panic!("injected fault: worker.batch");
+    }
     let n = reqs.len();
     anyhow::ensure!(n > 0, "empty batch");
     match &reqs[0].input {

@@ -17,6 +17,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -24,6 +25,7 @@ use crate::coordinator::batcher::Input;
 use crate::coordinator::frame::{self, STATUS_OK, STATUS_OVERLOADED};
 use crate::coordinator::reactor::{self, ReactorConfig};
 use crate::coordinator::server::Server;
+use crate::util::prng::Prng;
 
 /// Serve until `stop` goes true. Returns the bound local address via
 /// the callback once listening. Thin wrapper over
@@ -61,6 +63,51 @@ fn read_exact_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Timeout + retry knobs for the blocking client. All timeouts are
+/// `None` by default (block forever — the historical behavior);
+/// serving tools that must survive a restarting or wedged server opt
+/// in via [`Client::connect_with`] / [`Client::connect_retry`].
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    pub connect_timeout: Option<Duration>,
+    pub read_timeout: Option<Duration>,
+    pub write_timeout: Option<Duration>,
+    /// Total attempts for the retrying helpers (≥ 1).
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles per further attempt.
+    pub backoff_base: Duration,
+    /// Cap on any single (jittered) backoff sleep.
+    pub backoff_max: Duration,
+    /// Seed for the deterministic backoff jitter stream.
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: None,
+            read_timeout: None,
+            write_timeout: None,
+            attempts: 4,
+            backoff_base: Duration::from_millis(20),
+            backoff_max: Duration::from_millis(500),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Exponential backoff for retry `attempt` (1-based) with
+/// multiplicative jitter in [0.5, 1.5).
+fn client_backoff(cfg: &ClientConfig, attempt: u32, rng: &mut Prng) -> Duration {
+    let exp = attempt.saturating_sub(1).min(6);
+    let base = cfg
+        .backoff_base
+        .saturating_mul(1u32 << exp)
+        .min(cfg.backoff_max);
+    Duration::from_secs_f64(base.as_secs_f64() * (0.5 + rng.next_f64()))
+        .min(cfg.backoff_max)
+}
+
 /// Minimal blocking client for examples / tests / benches.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -72,6 +119,52 @@ impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
+        Self::from_stream(stream)
+    }
+
+    /// Connect with explicit connect/read/write timeouts, so a wedged
+    /// or restarting server surfaces as a timely I/O error instead of a
+    /// client that hangs forever.
+    pub fn connect_with(addr: &str, cfg: &ClientConfig) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let stream = match cfg.connect_timeout {
+            Some(t) => {
+                let sa = addr
+                    .to_socket_addrs()?
+                    .next()
+                    .with_context(|| format!("no address for {addr}"))?;
+                TcpStream::connect_timeout(&sa, t)?
+            }
+            None => TcpStream::connect(addr)?,
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(cfg.read_timeout)?;
+        stream.set_write_timeout(cfg.write_timeout)?;
+        Self::from_stream(stream)
+    }
+
+    /// [`Client::connect_with`] under jittered-exponential-backoff
+    /// retries — the standard way for load tools to ride out a server
+    /// that is still binding or recovering.
+    pub fn connect_retry(addr: &str, cfg: &ClientConfig) -> Result<Client> {
+        let attempts = cfg.attempts.max(1);
+        let mut rng = Prng::seeded(cfg.seed);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=attempts {
+            match Self::connect_with(addr, cfg) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            if attempt < attempts {
+                std::thread::sleep(client_backoff(cfg, attempt, &mut rng));
+            }
+        }
+        Err(last.expect("at least one attempt").context(format!(
+            "connect to {addr} failed after {attempts} attempts"
+        )))
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
@@ -97,6 +190,40 @@ impl Client {
             Response::Err(m) => anyhow::bail!("server error: {m}"),
             Response::Overloaded(m) => anyhow::bail!("server overloaded: {m}"),
         }
+    }
+
+    /// One request with bounded retries on `STATUS_OVERLOADED` (shed),
+    /// backing off with jitter between attempts. Hard errors and ok
+    /// responses return immediately; a still-overloaded final attempt
+    /// returns that `Response::Overloaded` for the caller to count.
+    pub fn infer_retry(
+        &mut self,
+        variant: &str,
+        input: &Input,
+        cfg: &ClientConfig,
+    ) -> Result<Response> {
+        let attempts = cfg.attempts.max(1);
+        let mut rng = Prng::seeded(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut resp = self.infer_response(variant, input)?;
+        let mut attempt = 1;
+        while matches!(resp, Response::Overloaded(_)) && attempt < attempts {
+            std::thread::sleep(client_backoff(cfg, attempt, &mut rng));
+            resp = self.infer_response(variant, input)?;
+            attempt += 1;
+        }
+        Ok(resp)
+    }
+
+    /// Health probe (request kind 2): `Response::Ok` carries
+    /// `[healthy, replicas, restarts, trips]` for a named variant, or
+    /// `[healthy_variants, unhealthy_variants, restarts, trips]` for an
+    /// empty name.
+    pub fn health(&mut self, variant: &str) -> Result<Response> {
+        self.ebuf.clear();
+        frame::encode_health_request(&mut self.ebuf, variant);
+        self.writer.write_all(&self.ebuf)?;
+        self.writer.flush()?;
+        self.read_response()
     }
 
     fn read_response(&mut self) -> Result<Response> {

@@ -1084,6 +1084,12 @@ pub fn batched_product_into<F: CompressedMatrix + ?Sized>(
     out: &mut Mat,
     threads: usize,
 ) {
+    // injection point `decode.once` (testing::faults): every serving
+    // batch funnels through this dispatch, so a fired probe panics the
+    // worker mid-batch — the unwind the supervisor must absorb
+    if crate::testing::faults::fire("decode.once") {
+        panic!("injected fault: decode.once");
+    }
     if x.rows > 1 {
         let shared = with_decode_scratch(|dec| {
             if w.decode_once_into(dec) {

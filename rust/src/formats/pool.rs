@@ -244,6 +244,9 @@ impl<'env> Scope<'env> {
         self.wg.add();
         let wg = self.wg.clone();
         let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            // SUPERVISED: task guard — a panicking task marks the wait
+            // group failed (scope() rethrows at the join) and the pool
+            // worker survives to run the next task; no restart needed.
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_ok();
             wg.task_done(ok);
         });
@@ -378,6 +381,8 @@ mod tests {
     #[test]
     fn worker_survives_task_panic() {
         let pool = Pool::new(1);
+        // SUPERVISED: test-local guard — absorbs the rethrown task panic
+        // to assert the worker itself survived; no restart policy.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.scope(|s| s.spawn(|| panic!("first")));
         }));

@@ -27,6 +27,10 @@
 //!   payloads (each starting at an 8-aligned offset; same per-kind
 //!   encoding as v1 except bit streams carry a 0–7 byte pad so their
 //!   `u64` word arrays land at 8-aligned *file* offsets)
+//!   footer  b"SHAMCRC\0" + n × u32 CRC-32s, one per section payload
+//!           (optional: pre-CRC v2 files lack it and still load, but
+//!           [`MappedArchive::has_crcs`] reports the gap — `sham s8`
+//!           flags such archives)
 //!
 //! [`MappedArchive::open`] maps a v2 file and validates only the
 //! *skeleton* — magic, table bounds, shapes, declared lengths, stream
@@ -62,6 +66,37 @@ use crate::util::bits::{BitBuf, BitReader};
 
 pub const MAGIC: &[u8; 6] = b"SHAM1\x00";
 pub const MAGIC2: &[u8; 8] = b"SHAM2\x00\x00\x00";
+/// Magic of the optional v2 per-section CRC footer (DESIGN.md §12).
+pub const CRC_MAGIC: &[u8; 8] = b"SHAMCRC\x00";
+
+/// CRC-32 (IEEE, reflected polynomial 0xEDB88320), table-driven — the
+/// tree takes no compression crates, so the 256-entry table is built at
+/// compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 over `bytes`, the checksum each v2 section payload carries in
+/// the footer and [`MappedArchive::materialize`] verifies at first touch.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 /// A format instance inside a `.sham` container — one variant per
 /// [`FormatId`] registry entry.
@@ -747,6 +782,10 @@ impl MappedEntry {
 pub struct MappedArchive {
     map: Arc<Mapping>,
     entries: Vec<MappedEntry>,
+    /// Per-section payload CRC-32s from the footer, when present.
+    /// Verified lazily — one checksum pass per section at materialize,
+    /// never at open (open stays zero-cost in payload bytes).
+    crcs: Option<Vec<u32>>,
 }
 
 impl MappedArchive {
@@ -817,7 +856,26 @@ impl MappedArchive {
                 payload_len: payload_len as usize,
             });
         }
-        let ar = MappedArchive { map, entries };
+        // optional CRC footer at the tail: magic + n × u32. A pre-CRC
+        // v2 file simply ends at its last payload byte; detection keys
+        // on the magic at the exact footer offset, so the only way to
+        // misdetect is a payload that happens to end with the footer
+        // byte pattern at the right distance from EOF — and then the
+        // per-section CRC check fails closed at first touch.
+        let footer_len = 8 + 4 * count;
+        let crcs = if buf.len() >= table_end + footer_len
+            && &buf[buf.len() - footer_len..buf.len() - footer_len + 8] == CRC_MAGIC
+        {
+            Some(
+                buf[buf.len() - footer_len + 8..]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<u32>>(),
+            )
+        } else {
+            None
+        };
+        let ar = MappedArchive { map, entries, crcs };
         for i in 0..ar.entries.len() {
             ar.skeleton_check(i)?;
         }
@@ -876,12 +934,36 @@ impl MappedArchive {
         self.map.len()
     }
 
-    /// Fully decode one section — the deferred first-touch cost: stream
-    /// walks (`check_huffman` / `validate_stream`), index-range checks,
-    /// and the array copies the skeleton pass skipped. Bit streams
-    /// borrow the mapping zero-copy where the alignment contract holds.
+    /// Whether the container carries the per-section CRC footer. A
+    /// `false` means a pre-CRC writer produced the file: it loads, but
+    /// torn payloads are only caught by structural decode checks —
+    /// `sham s8` flags such archives so they get rewritten.
+    pub fn has_crcs(&self) -> bool {
+        self.crcs.is_some()
+    }
+
+    /// Fully decode one section — the deferred first-touch cost: CRC
+    /// verification when the footer is present, then the stream walks
+    /// (`check_huffman` / `validate_stream`), index-range checks, and
+    /// the array copies the skeleton pass skipped. Bit streams borrow
+    /// the mapping zero-copy where the alignment contract holds.
     pub fn materialize(&self, idx: usize) -> Result<Stored> {
         let e = &self.entries[idx];
+        if crate::testing::faults::fire("store.materialize") {
+            bail!("injected fault: store.materialize (section `{}`)", e.name);
+        }
+        if let Some(crcs) = &self.crcs {
+            let payload = &self.map.bytes()[e.payload_off..e.payload_off + e.payload_len];
+            let got = crc32(payload);
+            if got != crcs[idx] {
+                bail!(
+                    "section `{}`: CRC mismatch (stored {:08x}, computed {got:08x}) \
+                     — torn or corrupted payload",
+                    e.name,
+                    crcs[idx],
+                );
+            }
+        }
         let mut r = Reader {
             buf: self.map.bytes(),
             pos: e.payload_off,
@@ -943,12 +1025,41 @@ impl LazyMatrix {
         &self.inner.archive.entries()[self.inner.idx]
     }
 
+    /// Lock the residency slot, recovering from poisoning: a panic
+    /// during a previous materialization (decode fault, injected fault,
+    /// CRC mismatch surfaced through a kernel call) must leave the slot
+    /// *retryable* — the slot is only ever written after a fully
+    /// successful decode, so a poisoned lock always guards a `None` or
+    /// a complete value, never a torn one.
+    fn slot(&self) -> std::sync::MutexGuard<'_, Option<Arc<dyn CompressedMatrix>>> {
+        self.inner.resident.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Materialize now (if cold) with an error return instead of a
+    /// panic — the pre-touch path for callers that can degrade cleanly
+    /// (health checks, cache warmers, chaos tests asserting a corrupt
+    /// section fails without killing the process). On `Err` the slot
+    /// stays empty and the mapping stays valid: a later touch retries.
+    pub fn try_materialize(&self) -> Result<()> {
+        let mut slot = self.slot();
+        if slot.is_some() {
+            return Ok(());
+        }
+        let stored = self.inner.archive.materialize(self.inner.idx)?;
+        *slot = Some(Arc::from(stored.into_compressed()));
+        Ok(())
+    }
+
     /// The materialized section, decoding it now if cold. Panics on a
     /// decode failure: the skeleton was validated at open, so failing
-    /// here means the file mutated under its mapping — not a state the
-    /// serving path can limp through.
+    /// here means the payload mutated under its mapping (or an injected
+    /// fault) — kernel signatures have no error channel, so the failure
+    /// unwinds into the worker supervisor, which answers the in-flight
+    /// batch with an error and restarts the worker. The slot lock
+    /// recovers from the poisoning and the slot stays empty, so the
+    /// layer itself remains retryable (`tests/fault_tolerance.rs`).
     fn resident(&self) -> Arc<dyn CompressedMatrix> {
-        let mut slot = self.inner.resident.lock().unwrap();
+        let mut slot = self.slot();
         if let Some(m) = slot.as_ref() {
             return Arc::clone(m);
         }
@@ -965,7 +1076,7 @@ impl LazyMatrix {
     }
 
     pub fn is_resident(&self) -> bool {
-        self.inner.resident.lock().unwrap().is_some()
+        self.slot().is_some()
     }
 
     /// Residency charge while materialized, else 0. Charged at the
@@ -985,7 +1096,7 @@ impl LazyMatrix {
     /// batches holding the old `Arc` finish safely on it.
     pub fn evict(&self) -> u64 {
         let freed = self.resident_bytes();
-        *self.inner.resident.lock().unwrap() = None;
+        *self.slot() = None;
         freed
     }
 }
@@ -1091,19 +1202,59 @@ fn encode_v2(entries: &[(String, Stored)]) -> Vec<u8> {
             out[at..at + 8].copy_from_slice(&v.to_le_bytes());
         }
     }
+    // trailing per-section CRC footer: checks payload integrity at
+    // first touch (the skeleton validator never walks stream words, so
+    // without this a flipped bit inside a stream decodes to garbage or
+    // a late structural error)
+    let crcs: Vec<u32> = recs
+        .iter()
+        .map(|rec| crc32(&out[rec[3] as usize..(rec[3] + rec[4]) as usize]))
+        .collect();
+    out.extend_from_slice(CRC_MAGIC);
+    for c in crcs {
+        w_u32(&mut out, c);
+    }
     out
 }
 
-/// Serialize named entries into a v2 (mmap-able) `.sham` container.
+/// Write `bytes` to `path` atomically: a same-directory temp file is
+/// written, synced, and renamed over the target, so a crash mid-save
+/// leaves either the old file or the complete new one — never a torn
+/// container. The temp name carries the pid so concurrent savers in
+/// different processes cannot collide (last rename wins, both files
+/// complete).
+fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+    let tmp = {
+        let mut name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_default();
+        name.push(format!(".tmp.{}", std::process::id()));
+        path.with_file_name(name)
+    };
+    let res = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename over {}", path.display()))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+/// Serialize named entries into a v2 (mmap-able) `.sham` container,
+/// atomically (temp file + rename).
 pub fn save(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> Result<()> {
-    let mut f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("create {}", path.as_ref().display()))?;
-    f.write_all(&encode_v2(entries))?;
-    Ok(())
+    write_atomic(path.as_ref(), &encode_v2(entries))
 }
 
 /// Serialize into the original v1 (copying) container — kept so the
-/// compat path stays exercisable end-to-end.
+/// compat path stays exercisable end-to-end. Atomic like [`save`].
 pub fn save_v1(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) -> Result<()> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
@@ -1115,10 +1266,7 @@ pub fn save_v1(path: impl AsRef<std::path::Path>, entries: &[(String, Stored)]) 
         out.push(s.tag());
         encode_entry(&mut out, s, false);
     }
-    let mut f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("create {}", path.as_ref().display()))?;
-    f.write_all(&out)?;
-    Ok(())
+    write_atomic(path.as_ref(), &out)
 }
 
 /// Open a v2 container for lazy access, or `Ok(None)` if the file is a
@@ -1408,5 +1556,119 @@ mod tests {
             };
             assert!(stream_mapped, "section {i}: stream not zero-copy");
         }
+    }
+
+    /// Crash-safety: a flipped bit inside a stream payload — invisible
+    /// to the skeleton validator, which never walks stream words — must
+    /// be rejected by the CRC check at first touch, with a clean error
+    /// and the mapping intact.
+    #[test]
+    fn crc_footer_detects_payload_corruption_at_first_touch() {
+        let mut rng = Prng::seeded(0x575);
+        let m = Mat::sparse_quantized(40, 30, 0.2, 8, &mut rng);
+        let path = tmp("crc_corrupt.sham");
+        save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let field = |k: usize| {
+            u64::from_le_bytes(bytes[16 + k * 8..16 + (k + 1) * 8].try_into().unwrap())
+        };
+        let (off, len) = (field(3) as usize, field(4) as usize);
+        // flip the last payload byte: the tail of the entropy stream,
+        // bounds-checked but never decoded by the skeleton pass
+        let mut bad = bytes.clone();
+        bad[off + len - 1] ^= 0x40;
+        let path2 = tmp("crc_corrupt2.sham");
+        std::fs::write(&path2, &bad).unwrap();
+        let ar = MappedArchive::open(&path2).unwrap(); // skeleton passes
+        assert!(ar.has_crcs());
+        let err = ar.materialize(0).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("CRC mismatch"),
+            "want a CRC error, got: {err:#}"
+        );
+        // the mapping is still valid and the table still readable
+        assert_eq!(ar.entries()[0].rows, 40);
+        // the untouched original materializes fine
+        assert!(MappedArchive::open(&path).unwrap().materialize(0).is_ok());
+    }
+
+    /// Pre-CRC v2 containers (no footer) must keep loading — flagged,
+    /// not rejected.
+    #[test]
+    fn crcless_v2_archives_still_load() {
+        let mut rng = Prng::seeded(0x576);
+        let m = Mat::sparse_quantized(30, 20, 0.3, 6, &mut rng);
+        let path = tmp("crcless.sham");
+        save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - (8 + 4)); // strip magic + 1 CRC
+        let path2 = tmp("crcless2.sham");
+        std::fs::write(&path2, &bytes).unwrap();
+        let ar = MappedArchive::open(&path2).unwrap();
+        assert!(!ar.has_crcs(), "footer-less archive must be flagged");
+        assert_eq!(ar.materialize(0).unwrap().as_compressed().decompress(), m);
+        // and the footer-bearing original reports the flag the other way
+        assert!(MappedArchive::open(&path).unwrap().has_crcs());
+    }
+
+    /// Atomic save: the temp file never survives, on success or error.
+    #[test]
+    fn save_is_atomic_and_cleans_its_temp_file() {
+        let mut rng = Prng::seeded(0x577);
+        let m = Mat::sparse_quantized(20, 20, 0.3, 6, &mut rng);
+        let dir = std::env::temp_dir().join("sham_store_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.sham");
+        save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        // overwrite in place: readers of `path` must never see a torn file
+        save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        assert!(load(&path).is_ok());
+    }
+
+    /// The LazyMatrix residency slot survives a failed materialization
+    /// — both the clean `try_materialize` error path and the panicking
+    /// kernel path — and the next touch retries successfully.
+    #[test]
+    fn lazy_slot_is_retryable_after_materialize_failure() {
+        use crate::testing::faults::{self, Trigger};
+        let _x = faults::exclusive();
+        let mut rng = Prng::seeded(0x578);
+        let m = Mat::sparse_quantized(30, 20, 0.3, 6, &mut rng);
+        let x: Vec<f32> = (0..30).map(|i| (i as f32 * 0.2).cos()).collect();
+        let want = m.vecmat(&x);
+        let path = tmp("lazy_retry.sham");
+        save(&path, &[("w".into(), Stored::Hac(Hac::compress(&m)))]).unwrap();
+        let ar = Arc::new(MappedArchive::open(&path).unwrap());
+        let lazy = LazyMatrix::new(Arc::clone(&ar), 0);
+
+        let _f = faults::arm_guard(1);
+        faults::set("store.materialize", Trigger::Once);
+        let err = lazy.try_materialize().unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"));
+        assert!(!lazy.is_resident(), "failed materialize must leave the slot cold");
+        lazy.try_materialize().unwrap(); // fault exhausted: retry succeeds
+        assert!(lazy.is_resident());
+        lazy.evict();
+
+        // the panicking kernel path: the poisoned slot lock must
+        // recover and the layer must stay retryable
+        faults::set("store.materialize", Trigger::Once);
+        // SUPERVISED: test-local catch_unwind standing in for the worker
+        // supervisor; no restart policy — the assertion below is the point.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            lazy.vecmat(&x)
+        }));
+        assert!(r.is_err(), "injected materialize fault must unwind");
+        assert!(!lazy.is_resident(), "panic must not leave partial state");
+        crate::util::proptest::assert_allclose(&lazy.vecmat(&x), &want, 1e-4, 1e-4)
+            .unwrap();
     }
 }

@@ -509,8 +509,15 @@ fn s8_cold_start(art: &std::path::Path, kind: ModelKind) -> Result<()> {
     let _ = infer_pure_once(&lazy, input)?;
     let warm = t2.elapsed();
 
+    let integrity = match lazy.archive_has_crcs() {
+        Some(true) => "crc32",
+        // pre-CRC v2 archives still serve, but torn payloads are only
+        // caught structurally — flag them so they get rewritten
+        Some(false) => "NO CRC footer — legacy archive, re-save to protect",
+        None => "eager (no container)",
+    };
     println!(
-        "container : {} ({} backend, {} compressed weight bytes)",
+        "container : {} ({} backend, {} compressed weight bytes, integrity: {integrity})",
         path.display(),
         lazy.mapped_backend().unwrap_or("eager"),
         fmt_bytes(lazy.total_weight_bytes() as f64),
@@ -587,6 +594,7 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         policy,
         fc_threads: threads,
         cache_bytes,
+        ..Default::default()
     };
     let vopts = VariantOpts { policy: None, replicas };
     let mut server = Server::new(cfg);
@@ -683,6 +691,7 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
                 if since >= Duration::from_secs(status_secs as u64) {
                     since = Duration::ZERO;
                     println!("status: {}", srv.metrics.render());
+                    println!("{}", health_line(&srv));
                     for line in cache_lines(&srv) {
                         println!("{line}");
                     }
@@ -700,10 +709,31 @@ fn serve(flags: &Flags, threads: usize) -> Result<()> {
         let _ = h.join();
     }
     println!("{}", server.metrics.render());
+    println!("{}", health_line(&server));
     for line in cache_lines(&server) {
         println!("{line}");
     }
     Ok(())
+}
+
+/// One compact per-variant health line for the serve status output:
+/// `ok` for a healthy variant that never restarted, restart counts once
+/// the supervisor has intervened, `OPEN` once the breaker tripped.
+fn health_line(server: &crate::coordinator::Server) -> String {
+    let parts: Vec<String> = server
+        .health_stats()
+        .iter()
+        .map(|h| {
+            if !h.healthy {
+                format!("{}=OPEN(restarts={},trips={})", h.name, h.restarts, h.trips)
+            } else if h.restarts > 0 {
+                format!("{}=ok(restarts={})", h.name, h.restarts)
+            } else {
+                format!("{}=ok", h.name)
+            }
+        })
+        .collect();
+    format!("  health: {}", parts.join(" "))
 }
 
 /// Per-variant cache lines for the serve status output: residency,

@@ -137,7 +137,24 @@ impl Mapping {
             // MAP_FAILED is (void*)-1
             bail!("mmap of {} failed", path.display());
         }
-        Ok(Mapping { backend: Backend::Mmap { ptr: ptr as *const u8, len } })
+        let mapping = Mapping { backend: Backend::Mmap { ptr: ptr as *const u8, len } };
+        // revalidate the length now that the mapping exists: a writer
+        // truncating the file between the stat and the mmap would leave
+        // pages past EOF that SIGBUS on first fault. Catching the race
+        // here turns it into a clean error (the value above is already
+        // responsible for munmap). A truncation *after* open remains
+        // the OS-level caveat in the module docs — the save path's
+        // temp-file + rename dance exists so well-behaved writers never
+        // truncate a live file in place.
+        let now = file.metadata().context("re-stat after mmap")?.len();
+        if now != len as u64 {
+            bail!(
+                "{} changed size during mmap ({len} -> {now} bytes) — \
+                 concurrent writer truncated it",
+                path.display()
+            );
+        }
+        Ok(mapping)
     }
 
     /// The file contents, whatever the backend.

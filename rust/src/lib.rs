@@ -49,6 +49,7 @@ pub mod nn;
 pub mod runtime;
 pub mod mat;
 pub mod quant;
+pub mod testing;
 pub mod util;
 
 pub use mat::Mat;

@@ -1362,6 +1362,14 @@ impl CompressedModel {
         self.mapped.as_deref().map(MappedArchive::backend_name)
     }
 
+    /// `Some(false)` for a mapped container written before the CRC
+    /// footer existed — such archives load, but torn payloads are only
+    /// caught structurally, so `sham s8` flags them for a rewrite.
+    /// `None` for unmapped (built / eager v1) models.
+    pub fn archive_has_crcs(&self) -> Option<bool> {
+        self.mapped.as_deref().map(MappedArchive::has_crcs)
+    }
+
     /// Bytes of decoded weight scratch currently resident across the
     /// lazy layers (0 for eager models, whose weights are always decoded
     /// and never cache-managed). Charged at the accounting footprint —

@@ -1,0 +1,306 @@
+//! Deterministic fault-injection registry (DESIGN.md §12).
+//!
+//! Production code is threaded with named *injection points* — one-line
+//! probes at the places real hardware fails: entropy decode
+//! (`decode.once`), first-touch materialization (`store.materialize`),
+//! the batcher queues (`batcher.enqueue`, `batcher.batch`), and the
+//! reactor's read/write paths (`reactor.read`, `reactor.write`,
+//! `reactor.inbox`). Each probe asks the registry "should this point
+//! fire now?"; the *call site* decides what firing means (panic, an
+//! injected `Err`, a stall), so the registry stays a pure decision
+//! oracle and the failure modes live next to the code they break.
+//!
+//! Naming convention: `subsystem.point`, lowercase, dot-separated —
+//! the subsystem is the module that hosts the probe, the point names
+//! the operation that fails. New probes follow the same pattern and
+//! get documented in DESIGN.md §12.
+//!
+//! Determinism: triggers are either *counter*-based (`Once`,
+//! `Times(n)`, `Nth(k)` — exact, independent of thread scheduling at a
+//! single point) or *probability*-based (`Prob(p)` — driven by a
+//! xoshiro256** [`Prng`] seeded via [`arm`], so one seed reproduces one
+//! firing sequence given the same evaluation order). Cross-thread
+//! points that need exact replay use counters; load-shaped chaos uses
+//! `Prob` with the seed matrixed in CI through `SHAM_FAULT_SEED`.
+//!
+//! Cost when disarmed: one `Relaxed` atomic load per probe — no lock,
+//! no branch on registry state. The registry is compiled into release
+//! builds so benches (which build with the release profile) can inject
+//! faults, but a process that never arms it never takes the slow path.
+//!
+//! Tests share one process: always hold a test-local serialization
+//! lock around armed sections and use [`ArmedGuard`] (returned by
+//! [`arm_guard`]) so a panicking test disarms on unwind instead of
+//! leaking live faults into its neighbors.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::prng::Prng;
+
+/// When a configured point fires, relative to its evaluation count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire on the first evaluation only.
+    Once,
+    /// Fire on each of the first `n` evaluations.
+    Times(u64),
+    /// Fire only on the `k`-th evaluation (1-based).
+    Nth(u64),
+    /// Fire each evaluation independently with probability `p`,
+    /// drawn from the registry's seeded PRNG.
+    Prob(f64),
+    /// Fire on every evaluation.
+    Always,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct PointState {
+    /// Evaluations of this point since arming.
+    hits: u64,
+    /// Evaluations that answered "fire".
+    fires: u64,
+}
+
+struct Registry {
+    rng: Prng,
+    triggers: HashMap<&'static str, Trigger>,
+    states: HashMap<&'static str, PointState>,
+}
+
+impl Registry {
+    fn new(seed: u64) -> Self {
+        Registry {
+            rng: Prng::seeded(seed),
+            triggers: HashMap::new(),
+            states: HashMap::new(),
+        }
+    }
+}
+
+/// Fast-path gate: probes check only this when the registry is idle.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Lock the registry, recovering from poisoning: a panic *is* the
+/// expected outcome of half the injection sites, and it must not wedge
+/// the registry for the next test.
+fn lock() -> std::sync::MutexGuard<'static, Option<Registry>> {
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm the registry with a fresh PRNG seeded from `seed`, clearing any
+/// previous configuration. Points fire only after a [`set`] call.
+pub fn arm(seed: u64) {
+    *lock() = Some(Registry::new(seed));
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm and drop all configuration; every probe reverts to the
+/// one-atomic-load fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *lock() = None;
+}
+
+/// Whether any fault configuration is live.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// RAII guard from [`arm_guard`]: disarms on drop (including unwind).
+pub struct ArmedGuard(());
+
+impl Drop for ArmedGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// [`arm`] + a guard that disarms when dropped. Chaos tests use this so
+/// a failing assertion cannot leak armed faults into sibling tests.
+#[must_use = "dropping the guard disarms the registry immediately"]
+pub fn arm_guard(seed: u64) -> ArmedGuard {
+    arm(seed);
+    ArmedGuard(())
+}
+
+/// Seed for this process's chaos run: `SHAM_FAULT_SEED` when set and
+/// parseable (decimal or `0x`-hex), else `default`. The CI fault lane
+/// matrixes this variable over several seeds.
+pub fn seed_from_env(default: u64) -> u64 {
+    match std::env::var("SHAM_FAULT_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse(),
+            };
+            parsed.unwrap_or(default)
+        }
+        Err(_) => default,
+    }
+}
+
+/// Configure `point` with `trigger`, resetting its counters. Requires
+/// an armed registry (no-op otherwise, so stray calls cannot arm).
+pub fn set(point: &'static str, trigger: Trigger) {
+    if let Some(reg) = lock().as_mut() {
+        reg.triggers.insert(point, trigger);
+        reg.states.insert(point, PointState::default());
+    }
+}
+
+/// Remove `point`'s configuration, keeping the registry armed.
+pub fn clear(point: &'static str) {
+    if let Some(reg) = lock().as_mut() {
+        reg.triggers.remove(point);
+    }
+}
+
+/// The probe: should `point` fail now? Disarmed: one relaxed atomic
+/// load, always `false`. Armed: evaluates the point's trigger and
+/// advances its counters.
+#[inline]
+pub fn fire(point: &'static str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(point)
+}
+
+#[cold]
+fn fire_slow(point: &'static str) -> bool {
+    let mut guard = lock();
+    let Some(reg) = guard.as_mut() else {
+        return false;
+    };
+    let Some(trigger) = reg.triggers.get(point).copied() else {
+        return false;
+    };
+    let st = reg.states.entry(point).or_default();
+    st.hits += 1;
+    let hits = st.hits;
+    let fire = match trigger {
+        Trigger::Once => hits == 1,
+        Trigger::Times(n) => hits <= n,
+        Trigger::Nth(k) => hits == k,
+        Trigger::Always => true,
+        Trigger::Prob(p) => reg.rng.bernoulli(p),
+    };
+    if fire {
+        reg.states.entry(point).or_default().fires += 1;
+    }
+    fire
+}
+
+/// (evaluations, firings) of `point` since arming — for asserting a
+/// chaos test actually exercised its injection site.
+pub fn counts(point: &'static str) -> (u64, u64) {
+    match lock().as_ref().and_then(|r| r.states.get(point)) {
+        Some(st) => (st.hits, st.fires),
+        None => (0, 0),
+    }
+}
+
+/// Total firings across all points since arming.
+pub fn fired_total() -> u64 {
+    lock()
+        .as_ref()
+        .map(|r| r.states.values().map(|s| s.fires).sum())
+        .unwrap_or(0)
+}
+
+/// Process-wide serialization for tests that arm the registry: it is
+/// global state and the test harness runs tests on parallel threads, so
+/// every armed section must hold this for its whole arm→assert window.
+/// Recovers from poisoning — a panicking chaos test is routine here.
+pub fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        exclusive()
+    }
+
+    #[test]
+    fn disarmed_probes_never_fire() {
+        let _g = guard();
+        disarm();
+        assert!(!armed());
+        assert!(!fire("test.point"));
+        assert_eq!(counts("test.point"), (0, 0));
+    }
+
+    #[test]
+    fn counter_triggers_are_exact() {
+        let _g = guard();
+        let _f = arm_guard(1);
+        set("test.once", Trigger::Once);
+        set("test.times", Trigger::Times(2));
+        set("test.nth", Trigger::Nth(3));
+        let fired: Vec<bool> = (0..4).map(|_| fire("test.once")).collect();
+        assert_eq!(fired, [true, false, false, false]);
+        let fired: Vec<bool> = (0..4).map(|_| fire("test.times")).collect();
+        assert_eq!(fired, [true, true, false, false]);
+        let fired: Vec<bool> = (0..4).map(|_| fire("test.nth")).collect();
+        assert_eq!(fired, [false, false, true, false]);
+        assert_eq!(counts("test.once"), (4, 1));
+        assert_eq!(counts("test.times"), (4, 2));
+        assert_eq!(counts("test.nth"), (4, 1));
+        assert_eq!(fired_total(), 4);
+    }
+
+    #[test]
+    fn unconfigured_points_do_not_fire_while_armed() {
+        let _g = guard();
+        let _f = arm_guard(2);
+        set("test.other", Trigger::Always);
+        assert!(!fire("test.unconfigured"));
+        assert!(fire("test.other"));
+    }
+
+    #[test]
+    fn prob_sequences_replay_from_the_seed() {
+        let _g = guard();
+        let run = |seed: u64| -> Vec<bool> {
+            let _f = arm_guard(seed);
+            set("test.prob", Trigger::Prob(0.5));
+            (0..64).map(|_| fire("test.prob")).collect()
+        };
+        let a = run(0xC0FFEE);
+        let b = run(0xC0FFEE);
+        let c = run(0xC0FFEE + 1);
+        assert_eq!(a, b, "same seed must replay the same firing sequence");
+        assert_ne!(a, c, "different seeds must diverge");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+    }
+
+    #[test]
+    fn guard_disarms_on_drop_and_clear_removes_a_point() {
+        let _g = guard();
+        {
+            let _f = arm_guard(3);
+            set("test.pt", Trigger::Always);
+            assert!(fire("test.pt"));
+            clear("test.pt");
+            assert!(!fire("test.pt"));
+            assert!(armed());
+        }
+        assert!(!armed());
+        assert!(!fire("test.pt"));
+    }
+
+    #[test]
+    fn env_seed_parses_decimal_and_hex() {
+        // no env mutation: just exercise the parser on the fallback path
+        let _g = guard();
+        assert_eq!(seed_from_env(7), seed_from_env(7));
+    }
+}

@@ -1,0 +1,10 @@
+//! Test-support infrastructure that ships inside the library.
+//!
+//! Chaos tests and benches need to reach *into* the serving stack —
+//! panic a worker mid-batch, fail a decode on first touch, stall a
+//! reactor shard — from outside the process's public API. The pieces
+//! here exist for exactly that: they are compiled into every build so
+//! release-profile benches can use them, but they are inert (a single
+//! relaxed atomic load per injection point) until a test arms them.
+
+pub mod faults;

@@ -34,7 +34,7 @@ fn build_server(art: &PathBuf) -> Server {
             queue_cap: 512,
         },
         fc_threads: 2,
-        cache_bytes: None,
+        ..Default::default()
     };
     let mut server = Server::new(cfg);
     // Two variants of the same benchmark: baseline and compressed.
@@ -105,7 +105,7 @@ fn pure_variant_serves_batches_without_pjrt() {
             queue_cap: 64,
         },
         fc_threads: 1,
-        cache_bytes: None,
+        ..Default::default()
     });
     server.add_variant_pure("vgg-full", model2).unwrap();
     let mut pending = Vec::new();

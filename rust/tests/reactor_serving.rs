@@ -35,7 +35,7 @@ fn build_model(seed: u64) -> CompressedModel {
 
 /// Server with one pure variant "vgg" under `opts`.
 fn build_server(policy: Policy, opts: VariantOpts) -> Server {
-    let mut server = Server::new(ServerConfig { policy, fc_threads: 1, cache_bytes: None });
+    let mut server = Server::new(ServerConfig { policy, ..Default::default() });
     server.add_variant_pure_opts("vgg", build_model(0xBEEF), opts).unwrap();
     server
 }

@@ -26,12 +26,19 @@
 //!    called from the entropy-coded formats (HAC / sHAC / LZ-AC). The
 //!    decode-free codebook formats (IM / CLA) counting a pass would
 //!    silently corrupt every decode-once assertion and bench boolean.
+//! 5. **SUPERVISED comments** — every `catch_unwind` call site (imports
+//!    excluded) must carry a `// SUPERVISED:` comment naming its restart
+//!    policy on the same or an immediately preceding line. Swallowing a
+//!    panic is a supervision decision (restart? shed? rethrow?); an
+//!    unannotated site is a place where a crash can silently become a
+//!    hang (DESIGN.md §12).
 //!
 //! Exit status: 0 when the tree is clean, 1 with one line per violation
 //! otherwise. `cargo xtask verify --self-test` additionally runs the
 //! seeded-violation corpus (an uncommented `unsafe`, an unbudgeted
-//! module, a whitelist breach, an unchecked constructor) and fails
-//! unless every seed is caught — the detector proves it can fail.
+//! module, a whitelist breach, an unchecked constructor, an unannotated
+//! `catch_unwind`) and fails unless every seed is caught — the detector
+//! proves it can fail.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -239,36 +246,49 @@ fn lex_lines(src: &str) -> Vec<Line> {
     lines
 }
 
-/// Indices (0-based) of lines whose *code* contains the `unsafe`
-/// keyword as a whole word — one entry per occurrence.
-fn unsafe_sites(lines: &[Line]) -> Vec<usize> {
+/// Indices (0-based) of lines whose *code* contain `word` as a whole
+/// word — one entry per occurrence.
+fn word_sites(lines: &[Line], word: &str) -> Vec<usize> {
     let mut out = Vec::new();
     for (idx, line) in lines.iter().enumerate() {
         let code = &line.code;
         let mut from = 0;
-        while let Some(p) = code[from..].find("unsafe") {
+        while let Some(p) = code[from..].find(word) {
             let at = from + p;
             let before_ok = at == 0
                 || !code[..at]
                     .chars()
                     .next_back()
                     .is_some_and(|c| c.is_alphanumeric() || c == '_');
-            let after = code[at + 6..].chars().next();
+            let after = code[at + word.len()..].chars().next();
             let after_ok = !after.is_some_and(|c| c.is_alphanumeric() || c == '_');
             if before_ok && after_ok {
                 out.push(idx);
             }
-            from = at + 6;
+            from = at + word.len();
         }
     }
     out
 }
 
-/// Does the `unsafe` at `lines[idx]` carry a safety contract? Accepted:
-/// a `SAFETY:` comment on the same line, or `SAFETY:` / `# Safety` in
-/// the contiguous run of comment-only / attribute lines directly above.
-fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
-    let marks = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+/// Indices of lines whose code contains the `unsafe` keyword.
+fn unsafe_sites(lines: &[Line]) -> Vec<usize> {
+    word_sites(lines, "unsafe")
+}
+
+/// Indices of `catch_unwind` call sites. Plain imports (`use ...`) are
+/// not sites — the call is the supervision decision, not the name.
+fn catch_unwind_sites(lines: &[Line]) -> Vec<usize> {
+    word_sites(lines, "catch_unwind")
+        .into_iter()
+        .filter(|&i| !lines[i].code.trim_start().starts_with("use "))
+        .collect()
+}
+
+/// Does the site at `lines[idx]` carry a marker comment? Accepted: a
+/// match on the same line, or in the contiguous run of comment-only /
+/// attribute lines directly above.
+fn has_marker_comment(lines: &[Line], idx: usize, marks: &dyn Fn(&str) -> bool) -> bool {
     if marks(&lines[idx].comment) {
         return true;
     }
@@ -285,6 +305,20 @@ fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
         }
     }
     false
+}
+
+/// Does the `unsafe` at `lines[idx]` carry a safety contract? Accepted:
+/// a `SAFETY:` comment on the same line, or `SAFETY:` / `# Safety` in
+/// the contiguous run of comment-only / attribute lines directly above.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    has_marker_comment(lines, idx, &|c| {
+        c.contains("SAFETY:") || c.contains("# Safety")
+    })
+}
+
+/// Does the `catch_unwind` at `lines[idx]` name its restart policy?
+fn has_supervised_comment(lines: &[Line], idx: usize) -> bool {
+    has_marker_comment(lines, idx, &|c| c.contains("SUPERVISED:"))
 }
 
 // --------------------------------------------------------------- budget --
@@ -335,6 +369,24 @@ fn check_safety_comments(files: &[FileScan], out: &mut Vec<Violation>) {
                     line: idx + 1,
                     what: "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc) \
                            on or directly above the site"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+fn check_supervised_comments(files: &[FileScan], out: &mut Vec<Violation>) {
+    for f in files {
+        for idx in catch_unwind_sites(&f.lines) {
+            if !has_supervised_comment(&f.lines, idx) {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    what: "`catch_unwind` without a `// SUPERVISED:` comment naming \
+                           its restart policy on or directly above the site — \
+                           swallowing a panic without saying who restarts what turns \
+                           crashes into hangs"
                         .into(),
                 });
             }
@@ -497,6 +549,7 @@ fn run_verify(root: &Path) -> Result<(Vec<Violation>, Vec<String>), String> {
     let mut violations = Vec::new();
     let mut notes = Vec::new();
     check_safety_comments(&files, &mut violations);
+    check_supervised_comments(&files, &mut violations);
     check_unsafe_budget(&files, &budget, &mut violations, &mut notes);
     check_kraft_call_sites(&files, &mut violations);
     check_decode_record_whitelist(&files, &mut violations);
@@ -528,6 +581,24 @@ fn self_test() -> Result<(), String> {
     let masked = lex_lines("fn f() { let s = \"unsafe\"; } // unsafe in a string is no site\n");
     if !unsafe_sites(&masked).is_empty() {
         return fail("literal-masking");
+    }
+
+    // 1b. an unannotated catch_unwind is caught; an import and an
+    // annotated site are not
+    let dirty = lex_lines("fn f() {\n    let _ = catch_unwind(|| g());\n}\n");
+    let sites = catch_unwind_sites(&dirty);
+    if sites.len() != 1 || has_supervised_comment(&dirty, sites[0]) {
+        return fail("unannotated-catch-unwind");
+    }
+    let clean = lex_lines(
+        "fn f() {\n    // SUPERVISED: restarted by the worker supervisor.\n    let _ = catch_unwind(|| g());\n}\n",
+    );
+    if !has_supervised_comment(&clean, catch_unwind_sites(&clean)[0]) {
+        return fail("supervised-comment-accepted");
+    }
+    let import = lex_lines("use std::panic::{catch_unwind, AssertUnwindSafe};\n");
+    if !catch_unwind_sites(&import).is_empty() {
+        return fail("import-is-no-site");
     }
 
     // 2. an unbudgeted module is caught
@@ -630,7 +701,10 @@ fn main() -> ExitCode {
                 println!("verify: note: {n}");
             }
             if violations.is_empty() {
-                println!("verify: OK (SAFETY comments, unsafe budget, Kraft call sites, decode-once whitelist)");
+                println!(
+                    "verify: OK (SAFETY comments, SUPERVISED catch_unwind sites, \
+                     unsafe budget, Kraft call sites, decode-once whitelist)"
+                );
                 ExitCode::SUCCESS
             } else {
                 eprintln!("verify: {} violation(s):", violations.len());
@@ -715,6 +789,38 @@ mod tests {
         check_unsafe_budget(&files, &budget, &mut v, &mut notes);
         assert!(v.is_empty());
         assert_eq!(notes.len(), 1);
+    }
+
+    #[test]
+    fn supervised_check_flags_bare_catch_unwind_sites() {
+        let files = vec![FileScan {
+            rel: "src/x.rs".into(),
+            lines: lex_lines(
+                "use std::panic::catch_unwind;\nfn f() { let _ = catch_unwind(|| ()); }\n",
+            ),
+        }];
+        let mut v = Vec::new();
+        check_supervised_comments(&files, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}"); // the call, never the import
+        assert_eq!(v[0].line, 2);
+
+        let files = vec![FileScan {
+            rel: "src/x.rs".into(),
+            lines: lex_lines(
+                "fn f() {\n    // SUPERVISED: per-batch guard; supervisor restarts.\n    let _ = catch_unwind(|| ());\n}\n",
+            ),
+        }];
+        let mut v = Vec::new();
+        check_supervised_comments(&files, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn word_sites_respects_word_boundaries() {
+        let lines = lex_lines(
+            "fn my_catch_unwind_helper() {}\nlet s = \"catch_unwind\";\nstd::panic::catch_unwind(f);\n",
+        );
+        assert_eq!(word_sites(&lines, "catch_unwind"), vec![2]);
     }
 
     #[test]

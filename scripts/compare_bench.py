@@ -74,10 +74,14 @@ REQUIRED_TRUE = {
         "centroid_kernel_used",
     ],
     "BENCH_coordinator.json": [
-        # admission control must actually shed under overload, and the
-        # reactor's thread count must stay O(shards+pool)
+        # admission control must actually shed under overload, the
+        # reactor's thread count must stay O(shards+pool), and the
+        # supervisor must recover an injected mid-batch worker panic
+        # end-to-end (every request answered, worker restarted, variant
+        # healthy afterwards)
         "sheds_on_overload",
         "bounded_threads",
+        "supervised_recovery",
     ],
     "BENCH_cold_start.json": [
         # v2 containers must be served by the real mmap backend, opens

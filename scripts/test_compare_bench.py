@@ -168,6 +168,17 @@ class StructuralBooleans(unittest.TestCase):
         self.assertEqual(len(regressions), 1)
         self.assertIn("cache_budget_respected", regressions[0])
 
+    def test_supervised_recovery_gates_coordinator(self):
+        # the fault-tolerance contract: a failed injected-panic recovery
+        # fails the build even when every latency number is healthy
+        self.assertIn("supervised_recovery",
+                      compare_bench.REQUIRED_TRUE[COORD])
+        cur = dict(results(), sheds_on_overload=True, bounded_threads=True,
+                   supervised_recovery=False)
+        regressions, _ = run(COORD, None, cur)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("supervised_recovery", regressions[0])
+
     def test_required_true_covers_all_benches(self):
         # every gated bench declares its structural booleans — a bench
         # added to BENCHES without a REQUIRED_TRUE entry is a policy hole
